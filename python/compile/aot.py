@@ -1,0 +1,207 @@
+"""AOT lowering: jax → HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (artifacts/):
+  split_cnn_dev_s{1..9}.hlo.txt    device half of the split CNN
+  split_cnn_edge_s{0..8}.hlo.txt   edge half
+  ligd_chunk_c8_m8.hlo.txt         64 projected-GD steps for one cohort
+  utility_eval_c8_m8.hlo.txt       Γ + per-user (T, E) — Rust parity test
+  golden.json                      golden logits + cohort parity fixture
+  manifest.txt                     file list + baked hyper-constants
+
+Idempotent: `make artifacts` skips lowering when the manifest is newer than
+every input under python/compile/.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals as
+    # `constant({...})`, which the HLO text parser silently reads as zeros —
+    # the CNN weights would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_split_cnn(outdir, params, files):
+    for s in range(0, model.NUM_LAYERS + 1):
+        if s >= 1:
+            fn = functools.partial(model.device_half, params, s)
+            low = jax.jit(fn).lower(_spec((1, model.ACT_SIZES[0])))
+            name = f"split_cnn_dev_s{s}.hlo.txt"
+            with open(os.path.join(outdir, name), "w") as f:
+                f.write(to_hlo_text(low))
+            files.append(name)
+        if s < model.NUM_LAYERS:
+            fn = functools.partial(model.edge_half, params, s)
+            low = jax.jit(fn).lower(_spec((1, model.ACT_SIZES[s])))
+            name = f"split_cnn_edge_s{s}.hlo.txt"
+            with open(os.path.join(outdir, name), "w") as f:
+                f.write(to_hlo_text(low))
+            files.append(name)
+
+
+def _cohort_specs(u, m):
+    d = u * (2 * m + 3)
+    return [
+        _spec((u, m)),  # g_up
+        _spec((u, m)),  # g_down
+        _spec((m,)),  # bg_up
+        _spec((u, m)),  # bg_down
+        _spec((u,)),  # f_dev
+        _spec((u,)),  # f_edge
+        _spec((u,)),  # w_bits
+        _spec((u,)),  # q_s
+        _spec((u,)),  # c_dev
+        _spec((d,)),  # x
+        _spec((2,)),  # link = [bw, noise]
+    ]
+
+
+def lower_ligd(outdir, files):
+    u, m = model.COHORT_USERS, model.COHORT_CHANNELS
+    specs = _cohort_specs(u, m)
+    low = jax.jit(model.ligd_chunk).lower(*specs)
+    name = f"ligd_chunk_c{u}_m{m}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(to_hlo_text(low))
+    files.append(name)
+    low = jax.jit(model.utility_eval).lower(*specs)
+    name = f"utility_eval_c{u}_m{m}.hlo.txt"
+    with open(os.path.join(outdir, name), "w") as f:
+        f.write(to_hlo_text(low))
+    files.append(name)
+
+
+def golden_fixture(params):
+    """Golden outputs for the Rust integration tests."""
+    x = jnp.linspace(0.0, 1.0, model.ACT_SIZES[0], dtype=jnp.float32).reshape(1, -1)
+    logits = model.full_model(params, x)[0]
+    # Deterministic cohort parity fixture.
+    u, m = model.COHORT_USERS, model.COHORT_CHANNELS
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    g_up = jax.random.uniform(ks[0], (u, m), minval=1e-12, maxval=1e-10)
+    g_dn = jax.random.uniform(ks[1], (u, m), minval=1e-12, maxval=1e-10)
+    bg_up = jnp.full((m,), 1e-15)
+    bg_dn = jnp.full((u, m), 1e-15)
+    f_dev = jnp.linspace(1e8, 3e8, u)
+    f_edge = jnp.linspace(4e8, 2e8, u)
+    w_bits = jnp.linspace(2e4, 8e4, u)
+    q_s = jnp.full((u,), 15e-3)
+    c_dev = jnp.linspace(1.5e10, 3e10, u)
+    link = jnp.array([1.25e6, 4e-15])
+    x0 = jnp.concatenate(
+        [
+            jnp.full((2 * u * m,), 1.0 / m),
+            jnp.full((u,), 0.1),
+            jnp.full((u,), 1.0),
+            jnp.full((u,), 8.0),
+        ]
+    )
+    gamma, t, e = model.utility_eval(
+        g_up, g_dn, bg_up, bg_dn, f_dev, f_edge, w_bits, q_s, c_dev, x0, link
+    )
+    _, gamma_after = model.ligd_chunk(
+        g_up, g_dn, bg_up, bg_dn, f_dev, f_edge, w_bits, q_s, c_dev, x0, link
+    )
+    return {
+        "input_desc": "linspace(0,1,3072)",
+        "logits": [float(v) for v in logits.ravel()],
+        "cohort": {
+            "g_up": [float(v) for v in g_up.ravel()],
+            "g_down": [float(v) for v in g_dn.ravel()],
+            "bg_up": [float(v) for v in bg_up.ravel()],
+            "bg_down": [float(v) for v in bg_dn.ravel()],
+            "f_dev": [float(v) for v in f_dev],
+            "f_edge": [float(v) for v in f_edge],
+            "w_bits": [float(v) for v in w_bits],
+            "q_s": [float(v) for v in q_s],
+            "c_dev": [float(v) for v in c_dev],
+            "link": [float(v) for v in link],
+            "x0": [float(v) for v in x0],
+            "gamma": float(gamma[0]),
+            "t": [float(v) for v in t],
+            "e": [float(v) for v in e],
+            "gamma_after_chunk": float(gamma_after[0]),
+        },
+    }
+
+
+def inputs_mtime():
+    root = os.path.dirname(os.path.abspath(__file__))
+    latest = 0.0
+    for dirpath, _, names in os.walk(root):
+        for n in names:
+            if n.endswith(".py"):
+                latest = max(latest, os.path.getmtime(os.path.join(dirpath, n)))
+    return latest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+    manifest = os.path.join(outdir, "manifest.txt")
+    if (
+        not args.force
+        and os.path.exists(manifest)
+        and os.path.getmtime(manifest) >= inputs_mtime()
+    ):
+        print(f"artifacts up to date in {outdir}")
+        return
+
+    params = model.init_params()
+    files = []
+    lower_split_cnn(outdir, params, files)
+    lower_ligd(outdir, files)
+    fixture = golden_fixture(params)
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(fixture, f)
+    files.append("golden.json")
+    # Flat `key v1 v2 ...` form for the Rust tests (no serde offline).
+    with open(os.path.join(outdir, "golden.txt"), "w") as f:
+        f.write("logits " + " ".join(f"{v!r}" for v in fixture["logits"]) + "\n")
+        for k, v in fixture["cohort"].items():
+            vals = v if isinstance(v, list) else [v]
+            f.write(f"{k} " + " ".join(f"{x!r}" for x in vals) + "\n")
+    files.append("golden.txt")
+
+    with open(manifest, "w") as f:
+        f.write("# era artifacts — generated by python -m compile.aot\n")
+        for name in files:
+            f.write(f"file {name}\n")
+        for k, v in model.CONSTS.items():
+            f.write(f"const {k} {v!r}\n")
+        f.write(f"const cohort_users {model.COHORT_USERS}\n")
+        f.write(f"const cohort_channels {model.COHORT_CHANNELS}\n")
+        f.write(f"const num_layers {model.NUM_LAYERS}\n")
+    print(f"wrote {len(files)} artifacts + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

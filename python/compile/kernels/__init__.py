@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the HLO artifacts)."""
+
+from . import matmul, noma, ref  # noqa: F401

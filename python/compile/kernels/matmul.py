@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: tiled matmul — the MXU hot-spot of the split CNN.
+
+Convolutions are lowered to im2col + matmul so the inner product lands on
+the MXU systolic array on a real TPU (bfloat16-friendly `jnp.dot` with
+`preferred_element_type=f32`); BlockSpec tiles the (patches × filters)
+product into `bm × bn × bk` VMEM-resident blocks with accumulation over the
+K grid axis (the HBM↔VMEM schedule a CUDA kernel would express with
+threadblocks).
+
+Pallas runs under `interpret=True` here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that both the
+pytest oracle checks and the Rust PJRT runtime can run (see DESIGN.md
+§Hardware-Adaptation; real-TPU efficiency is estimated there, not measured).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=128, bn=128, bk=128):
+    """`x @ y` via the Pallas tiled kernel (f32), any shapes."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    # Block sizes never exceed the (padded) problem.
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    bk = min(bk, max(8, k))
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    yp = _pad_to(y.astype(jnp.float32), bk, bn)
+    pm, pk = xp.shape[0] // bm, xp.shape[1] // bk
+    pn = yp.shape[1] // bn
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(pm, pn, pk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm * bm, pn * bn), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]

@@ -1,0 +1,15 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (pytest compares
+kernel outputs against these; hypothesis sweeps shapes and values)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul.matmul."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def noma_rates_ref(beta, pg, d, *, bw):
+    """Oracle for kernels.noma.noma_rates."""
+    s = pg.astype(jnp.float32) / d.astype(jnp.float32)
+    return beta.astype(jnp.float32) * bw * jnp.log2(1.0 + s)

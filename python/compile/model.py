@@ -1,0 +1,338 @@
+"""L2 JAX models (build-time only; never imported at serving time).
+
+Two compute graphs are defined here and AOT-lowered by `aot.py`:
+
+1. `SplitCnn` — a 9-layer NiN-style CIFAR CNN whose convolutions run on the
+   L1 Pallas matmul kernel (im2col → MXU-shaped matmul). For every split
+   point s the device half (layers 1..s) and edge half (layers s+1..9) are
+   lowered to separate HLO artifacts; the Rust serving loop executes them
+   via PJRT. The shape contract mirrors
+   `rust/src/runtime/executor.rs::split_cnn_shape`.
+
+2. `ligd` — the relaxed per-cohort utility Γ of the paper (eq.26/27),
+   numerically identical to the Rust analytic implementation
+   (`rust/src/optimizer/utility.rs`), plus a `lax.fori_loop` chunk of T
+   projected-GD steps on jax.grad(Γ). Rate assembly calls the L1 Pallas
+   NOMA kernel so the whole chunk lowers to one HLO.
+
+Hyper-constants are baked at lowering time from `CONSTS`, which MUST match
+`era::config::Config::default()` — the Rust integration test checks the
+manifest against its own defaults.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+from .kernels.noma import noma_rates
+
+# ---------------------------------------------------------------------------
+# Constants mirrored from rust/src/config/mod.rs (Config::default()).
+# ---------------------------------------------------------------------------
+
+
+def _dbm_to_watt(dbm):
+    return 10.0 ** ((dbm - 30.0) / 10.0)
+
+
+CONSTS = dict(
+    p_min=_dbm_to_watt(0.0),
+    p_max=_dbm_to_watt(25.0),
+    p_down_max_factor=20.0,
+    r_min=1.0,
+    r_max=16.0,
+    lambda_gamma=0.85,
+    edge_unit_flops=50e9,
+    xi_device=1.5e-22,
+    xi_edge=8e-24,
+    sigmoid_a=50.0,
+    w_t=0.4,
+    w_r=0.3,
+    w_q=0.3,
+    delay_scale=50.0,
+    energy_scale=10.0,
+    resource_scale=0.02,
+    result_bits=320.0,
+    gd_step=0.005,
+    gd_chunk_iters=64,
+)
+
+COHORT_USERS = 8
+COHORT_CHANNELS = 8
+
+
+# ---------------------------------------------------------------------------
+# 1. SplitCnn
+# ---------------------------------------------------------------------------
+
+NUM_LAYERS = 9
+# Flat activation sizes at each split point (s=0 is the input) — must match
+# rust/src/runtime/executor.rs::split_cnn_shape().
+ACT_SIZES = [
+    32 * 32 * 3,
+    32 * 32 * 32,
+    32 * 32 * 16,
+    16 * 16 * 16,
+    16 * 16 * 32,
+    16 * 16 * 16,
+    8 * 8 * 16,
+    8 * 8 * 32,
+    8 * 8 * 10,
+    10,
+]
+ACT_SHAPES = [
+    (1, 32, 32, 3),
+    (1, 32, 32, 32),
+    (1, 32, 32, 16),
+    (1, 16, 16, 16),
+    (1, 16, 16, 32),
+    (1, 16, 16, 16),
+    (1, 8, 8, 16),
+    (1, 8, 8, 32),
+    (1, 8, 8, 10),
+    (1, 10),
+]
+
+
+class CnnParams(NamedTuple):
+    conv1: jnp.ndarray  # (5,5,3,32)
+    mlp1: jnp.ndarray  # (1,1,32,16)
+    conv2: jnp.ndarray  # (3,3,16,32)
+    mlp2: jnp.ndarray  # (1,1,32,16)
+    conv3: jnp.ndarray  # (3,3,16,32)
+    mlp3: jnp.ndarray  # (1,1,32,10)
+
+
+def init_params(seed: int = 42) -> CnnParams:
+    """Deterministic He-initialized weights (the 'trained' model stand-in;
+    classification accuracy is not under test — serving composition is)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+
+    def he(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return CnnParams(
+        conv1=he(ks[0], (5, 5, 3, 32)),
+        mlp1=he(ks[1], (1, 1, 32, 16)),
+        conv2=he(ks[2], (3, 3, 16, 32)),
+        mlp2=he(ks[3], (1, 1, 32, 16)),
+        conv3=he(ks[4], (3, 3, 16, 32)),
+        mlp3=he(ks[5], (1, 1, 32, 10)),
+    )
+
+
+def conv2d_pallas(x, w):
+    """SAME stride-1 conv as im2col + the Pallas matmul kernel."""
+    n, h, wd, c = x.shape
+    kh, kw, c2, o = w.shape
+    assert n == 1 and c == c2
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(xp[:, i : i + h, j : j + wd, :])
+    patches = jnp.concatenate(cols, axis=-1).reshape(h * wd, kh * kw * c)
+    out = matmul(patches, w.reshape(kh * kw * c, o))
+    return out.reshape(1, h, wd, o)
+
+
+def _maxpool2(x):
+    n, h, w, c = x.shape
+    return x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def _layer(params: CnnParams, idx: int, x):
+    """Apply layer `idx` (1-based, matching the split-point convention)."""
+    if idx == 1:
+        return jax.nn.relu(conv2d_pallas(x, params.conv1))
+    if idx == 2:
+        return jax.nn.relu(conv2d_pallas(x, params.mlp1))
+    if idx == 3:
+        return _maxpool2(x)
+    if idx == 4:
+        return jax.nn.relu(conv2d_pallas(x, params.conv2))
+    if idx == 5:
+        return jax.nn.relu(conv2d_pallas(x, params.mlp2))
+    if idx == 6:
+        return _maxpool2(x)
+    if idx == 7:
+        return jax.nn.relu(conv2d_pallas(x, params.conv3))
+    if idx == 8:
+        return conv2d_pallas(x, params.mlp3)
+    if idx == 9:
+        return x.mean(axis=(1, 2))  # global average pool → logits
+    raise ValueError(idx)
+
+
+def device_half(params: CnnParams, split: int, x_flat):
+    """Layers 1..split on the (1, ACT_SIZES[0]) flat input."""
+    x = x_flat.reshape(ACT_SHAPES[0])
+    for idx in range(1, split + 1):
+        x = _layer(params, idx, x)
+    return (x.reshape(1, ACT_SIZES[split]),)
+
+
+def edge_half(params: CnnParams, split: int, a_flat):
+    """Layers split+1..9 on the flat cut activation."""
+    x = a_flat.reshape(ACT_SHAPES[split])
+    for idx in range(split + 1, NUM_LAYERS + 1):
+        x = _layer(params, idx, x)
+    return (x.reshape(1, ACT_SIZES[NUM_LAYERS]),)
+
+
+def full_model(params: CnnParams, x_flat):
+    return edge_half(params, 0, x_flat)
+
+
+# ---------------------------------------------------------------------------
+# 2. Li-GD utility + GD chunk
+# ---------------------------------------------------------------------------
+
+
+def _project_simplex(v):
+    """Row-wise Euclidean projection onto the probability simplex."""
+    m = v.shape[-1]
+    u = jnp.sort(v, axis=-1)[..., ::-1]
+    css = jnp.cumsum(u, axis=-1)
+    k = jnp.arange(1, m + 1, dtype=v.dtype)
+    cond = u - (css - 1.0) / k > 0.0
+    rho = jnp.maximum(jnp.sum(cond, axis=-1), 1)
+    theta = (
+        jnp.take_along_axis(css, rho[..., None] - 1, axis=-1) - 1.0
+    ) / rho[..., None].astype(v.dtype)
+    return jnp.maximum(v - theta, 0.0)
+
+
+class Cohort(NamedTuple):
+    g_up: jnp.ndarray  # (U, M)
+    g_down: jnp.ndarray  # (U, M)
+    bg_up: jnp.ndarray  # (M,)
+    bg_down: jnp.ndarray  # (U, M)
+    f_dev: jnp.ndarray  # (U,)
+    f_edge: jnp.ndarray  # (U,)
+    w_bits: jnp.ndarray  # (U,)
+    q_s: jnp.ndarray  # (U,)
+    c_dev: jnp.ndarray  # (U,)
+    link: jnp.ndarray  # (2,) = [bw_hz, noise_w]
+
+
+def _unpack(x, u, m):
+    b_up = x[: u * m].reshape(u, m)
+    b_dn = x[u * m : 2 * u * m].reshape(u, m)
+    p_up = x[2 * u * m : 2 * u * m + u]
+    p_dn = x[2 * u * m + u : 2 * u * m + 2 * u]
+    r = x[2 * u * m + 2 * u :]
+    return b_up, b_dn, p_up, p_dn, r
+
+
+def utility(c: Cohort, x):
+    """Γ — mirrors rust/src/optimizer/utility.rs::eval exactly."""
+    u, m = c.g_up.shape
+    bw = c.link[0]
+    noise = c.link[1]
+    b_up, b_dn, p_up, p_dn, r = _unpack(x, u, m)
+
+    # Uplink: weaker-user interference mask per channel (strict <).
+    weaker = (c.g_up[None, :, :] < c.g_up[:, None, :]).astype(x.dtype)
+    rec = b_up * p_up[:, None] * c.g_up  # received power per (v, m)
+    intra_up = jnp.einsum("ivm,vm->im", weaker, rec)
+    d_up = c.bg_up[None, :] + noise + intra_up
+    pg_up = p_up[:, None] * c.g_up
+    rate_up = (noma_rates(b_up, pg_up, d_up, bw=1.0) * bw).sum(axis=1)
+
+    # Downlink: stronger-user superposition interference (strict >),
+    # scaled by the victim's own gain.
+    stronger = (c.g_down[None, :, :] > c.g_down[:, None, :]).astype(x.dtype)
+    comp = b_dn * p_dn[:, None]  # (v, m)
+    intra_dn = jnp.einsum("ivm,vm->im", stronger, comp) * c.g_down
+    d_dn = intra_dn + c.bg_down + noise
+    pg_dn = p_dn[:, None] * c.g_down
+    rate_dn = (noma_rates(b_dn, pg_dn, d_dn, bw=1.0) * bw).sum(axis=1)
+
+    offloads = c.f_edge > 0.0
+    lam = jnp.maximum(r, 1e-9) ** CONSTS["lambda_gamma"]
+    t_dev = c.f_dev / c.c_dev
+    t_srv = jnp.where(offloads, c.f_edge / (lam * CONSTS["edge_unit_flops"]), 0.0)
+    t_up = jnp.where(c.w_bits > 0.0, c.w_bits / rate_up, 0.0)
+    t_dn = jnp.where(offloads, CONSTS["result_bits"] / rate_dn, 0.0)
+    t = t_dev + t_srv + t_up + t_dn
+
+    e_dev = CONSTS["xi_device"] * c.c_dev**2 * c.f_dev / 1e9
+    cap = lam * CONSTS["edge_unit_flops"]
+    e_srv = jnp.where(offloads, CONSTS["xi_edge"] * cap**2 * c.f_edge / 1e9, 0.0)
+    e_up = jnp.where(c.w_bits > 0.0, p_up * c.w_bits / rate_up, 0.0)
+    e_dn = jnp.where(offloads, p_dn * CONSTS["result_bits"] / rate_dn, 0.0)
+    e = e_dev + e_srv + e_up + e_dn
+
+    xq = t / c.q_s
+    rsig = jax.nn.sigmoid(CONSTS["sigmoid_a"] * (xq - 1.0))
+    dct = (t - c.q_s) * rsig
+    resource = jnp.where(offloads, lam, 0.0)
+
+    util = (
+        CONSTS["w_t"] * CONSTS["delay_scale"] * t
+        + CONSTS["w_r"]
+        * (CONSTS["energy_scale"] * e + CONSTS["resource_scale"] * resource)
+        + CONSTS["w_q"] * (CONSTS["delay_scale"] * dct + rsig)
+    )
+    return util.sum(), (t, e)
+
+
+def utility_eval(
+    g_up, g_down, bg_up, bg_down, f_dev, f_edge, w_bits, q_s, c_dev, x, link
+):
+    """AOT entry: Γ plus per-user delay/energy (parity test vs Rust)."""
+    c = Cohort(g_up, g_down, bg_up, bg_down, f_dev, f_edge, w_bits, q_s, c_dev, link)
+    gamma, (t, e) = utility(c, x)
+    return gamma.reshape(1), t, e
+
+
+def _project(x, u, m):
+    b_up, b_dn, p_up, p_dn, r = _unpack(x, u, m)
+    b_up = _project_simplex(b_up)
+    b_dn = _project_simplex(b_dn)
+    p_up = jnp.clip(p_up, CONSTS["p_min"], CONSTS["p_max"])
+    p_dn = jnp.clip(
+        p_dn, CONSTS["p_min"], CONSTS["p_down_max_factor"] * CONSTS["p_max"]
+    )
+    r = jnp.clip(r, CONSTS["r_min"], CONSTS["r_max"])
+    return jnp.concatenate([b_up.ravel(), b_dn.ravel(), p_up, p_dn, r])
+
+
+def _scales(u, m, dtype):
+    """Diagonal preconditioner — mirrors optimizer/ligd.rs::scales."""
+    pr = (CONSTS["p_max"] - CONSTS["p_min"]) ** 2
+    pdr = (CONSTS["p_down_max_factor"] * CONSTS["p_max"] - CONSTS["p_min"]) ** 2
+    rr = (CONSTS["r_max"] - CONSTS["r_min"]) ** 2
+    return jnp.concatenate(
+        [
+            jnp.ones(2 * u * m, dtype),
+            jnp.full((u,), pr, dtype),
+            jnp.full((u,), pdr, dtype),
+            jnp.full((u,), rr, dtype),
+        ]
+    )
+
+
+def ligd_chunk(
+    g_up, g_down, bg_up, bg_down, f_dev, f_edge, w_bits, q_s, c_dev, x0, link
+):
+    """T fixed-step projected-GD iterations on Γ (the AOT solver chunk)."""
+    u, m = g_up.shape
+    c = Cohort(g_up, g_down, bg_up, bg_down, f_dev, f_edge, w_bits, q_s, c_dev, link)
+    grad_fn = jax.grad(lambda x: utility(c, x)[0])
+    scal = _scales(u, m, x0.dtype)
+    step = CONSTS["gd_step"]
+
+    def body(_, x):
+        g = grad_fn(x)
+        return _project(x - step * scal * g, u, m)
+
+    x_final = jax.lax.fori_loop(0, CONSTS["gd_chunk_iters"], body, _project(x0, u, m))
+    gamma, _ = utility(c, x_final)
+    return x_final, gamma.reshape(1)

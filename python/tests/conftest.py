@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make the build-path package importable when pytest runs from the repo root
+# (the documented `pytest python/tests/` invocation).
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

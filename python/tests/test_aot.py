@@ -1,0 +1,76 @@
+"""AOT path: HLO text emission sanity (no elided constants, parseable
+shapes, manifest completeness, idempotence)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_no_elided_constants():
+    params = model.init_params()
+
+    def f(x):
+        return model.device_half(params, 1, x)
+
+    low = jax.jit(f).lower(jax.ShapeDtypeStruct((1, model.ACT_SIZES[0]), jnp.float32))
+    text = aot.to_hlo_text(low)
+    assert "HloModule" in text
+    # the silent-zeros failure mode: elided large constants
+    assert "{...}" not in text
+    # weights actually embedded (conv1 has 5·5·3·32 = 2400 floats)
+    assert "f32[5,5,3,32]" in text or "f32[2400" in text or "f32[75,32]" in text
+
+
+def test_cohort_specs_match_vars_layout():
+    u, m = model.COHORT_USERS, model.COHORT_CHANNELS
+    specs = aot._cohort_specs(u, m)
+    # x vector dimension = U(2M+3)
+    assert specs[9].shape == (u * (2 * m + 3),)
+    assert specs[0].shape == (u, m)
+    assert specs[10].shape == (2,)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")),
+    reason="artifacts not built",
+)
+def test_manifest_lists_all_files():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(art, "manifest.txt")) as f:
+        lines = f.read().splitlines()
+    files = [l.split()[1] for l in lines if l.startswith("file ")]
+    consts = {l.split()[1] for l in lines if l.startswith("const ")}
+    # 9 device halves + 9 edge halves + 2 solver + golden.json/.txt
+    assert len([f for f in files if f.startswith("split_cnn_dev")]) == model.NUM_LAYERS
+    assert len([f for f in files if f.startswith("split_cnn_edge")]) == model.NUM_LAYERS
+    assert any(f.startswith("ligd_chunk") for f in files)
+    assert any(f.startswith("utility_eval") for f in files)
+    for f in files:
+        assert os.path.exists(os.path.join(art, f)), f
+    for key in ("p_max", "sigmoid_a", "w_t", "gd_step", "cohort_users"):
+        assert key in consts
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.txt")),
+    reason="artifacts not built",
+)
+def test_aot_is_idempotent():
+    """Re-running without --force must be a fast no-op."""
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", "../artifacts"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=120,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "up to date" in out.stdout

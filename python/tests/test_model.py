@@ -1,0 +1,119 @@
+"""L2 model correctness: split consistency, shape contract, Li-GD utility
+semantics and the GD chunk."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params()
+
+
+@pytest.fixture(scope="module")
+def x_input():
+    return jnp.linspace(0.0, 1.0, model.ACT_SIZES[0]).reshape(1, -1)
+
+
+class TestSplitCnn:
+    def test_act_sizes_consistent_with_shapes(self):
+        for size, shape in zip(model.ACT_SIZES, model.ACT_SHAPES):
+            assert int(np.prod(shape)) == size
+
+    @pytest.mark.parametrize("split", range(0, model.NUM_LAYERS + 1))
+    def test_split_composition_equals_full(self, params, x_input, split):
+        """device_half(s) ∘ edge_half(s) == full model, for every s —
+        the property the serving path relies on."""
+        full = model.full_model(params, x_input)[0]
+        act = model.device_half(params, split, x_input)[0]
+        assert act.shape == (1, model.ACT_SIZES[split])
+        out = model.edge_half(params, split, act)[0]
+        np.testing.assert_allclose(out, full, rtol=1e-4, atol=1e-4)
+
+    def test_deterministic_params(self):
+        a = model.init_params()
+        b = model.init_params()
+        for wa, wb in zip(a, b):
+            np.testing.assert_array_equal(wa, wb)
+
+    def test_logits_are_finite_and_distinct(self, params, x_input):
+        logits = model.full_model(params, x_input)[0]
+        assert logits.shape == (1, 10)
+        assert bool(jnp.isfinite(logits).all())
+        assert float(jnp.std(logits)) > 1e-4
+
+
+def _cohort(u=4, m=3, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return model.Cohort(
+        g_up=jax.random.uniform(ks[0], (u, m), minval=1e-12, maxval=1e-10),
+        g_down=jax.random.uniform(ks[1], (u, m), minval=1e-12, maxval=1e-10),
+        bg_up=jnp.full((m,), 1e-15),
+        bg_down=jnp.full((u, m), 1e-15),
+        f_dev=jnp.linspace(1e8, 3e8, u),
+        f_edge=jnp.linspace(4e8, 2e8, u),
+        w_bits=jnp.linspace(2e4, 8e4, u),
+        q_s=jnp.full((u,), 15e-3),
+        c_dev=jnp.linspace(1.5e10, 3e10, u),
+        link=jnp.array([1.25e6, 4e-15]),
+    )
+
+
+def _x0(u, m):
+    return jnp.concatenate(
+        [
+            jnp.full((2 * u * m,), 1.0 / m),
+            jnp.full((u,), 0.1),
+            jnp.full((u,), 1.0),
+            jnp.full((u,), 8.0),
+        ]
+    )
+
+
+class TestLigd:
+    def test_utility_finite_positive(self):
+        c = _cohort()
+        gamma, (t, e) = model.utility(c, _x0(4, 3))
+        assert np.isfinite(float(gamma)) and float(gamma) > 0
+        assert bool((t > 0).all()) and bool((e > 0).all())
+
+    def test_device_only_user_ignores_radio(self):
+        """f_edge=0 and w_bits=0 ⇒ utility independent of power."""
+        c = _cohort()
+        c = c._replace(f_edge=jnp.zeros_like(c.f_edge), w_bits=jnp.zeros_like(c.w_bits))
+        x = _x0(4, 3)
+        g1, _ = model.utility(c, x)
+        x2 = x.at[2 * 4 * 3 : 2 * 4 * 3 + 4].set(0.3)  # change p_up
+        g2, _ = model.utility(c, x2)
+        np.testing.assert_allclose(float(g1), float(g2), rtol=1e-7)
+
+    def test_chunk_descends_and_stays_feasible(self):
+        c = _cohort(seed=3)
+        x0 = _x0(4, 3)
+        g0, _ = model.utility(c, x0)
+        xf, gf = model.ligd_chunk(*c[:-1], x0, c.link)
+        assert float(gf[0]) <= float(g0) + 1e-6
+        b_up = np.asarray(xf[: 4 * 3]).reshape(4, 3)
+        np.testing.assert_allclose(b_up.sum(1), 1.0, atol=1e-5)
+        assert (b_up >= -1e-6).all()
+        r = np.asarray(xf[-4:])
+        assert (r >= model.CONSTS["r_min"] - 1e-6).all()
+        assert (r <= model.CONSTS["r_max"] + 1e-6).all()
+
+    def test_project_simplex_rows(self):
+        v = jnp.array([[0.5, 0.5, 0.5], [-1.0, 2.0, 0.3], [10.0, 0.0, 0.0]])
+        p = model._project_simplex(v)
+        np.testing.assert_allclose(np.asarray(p).sum(1), 1.0, atol=1e-6)
+        assert (np.asarray(p) >= -1e-9).all()
+
+    def test_more_interference_lowers_rate_raises_utility(self):
+        c = _cohort(seed=5)
+        x = _x0(4, 3)
+        g1, _ = model.utility(c, x)
+        c2 = c._replace(bg_up=c.bg_up * 1e4)
+        g2, _ = model.utility(c2, x)
+        assert float(g2) > float(g1)

@@ -1,0 +1,67 @@
+//! `cargo bench --bench figures` — regenerates every figure of the paper's
+//! evaluation (Fig.5–Fig.19) at bench scale, timing each harness and
+//! printing the data series as markdown. Pass `--scale S` (default 0.4)
+//! and/or a figure id filter (`cargo bench --bench figures -- 6`).
+//!
+//! One bench entry per paper figure-pair; the same code paths back
+//! `era figures` (full scale) — this target exists so `cargo bench`
+//! exercises the complete evaluation matrix end-to-end.
+
+use era::benchkit::bench;
+use era::figures::Harness;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut scale = 0.4f64;
+    let mut only: Option<u32> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                scale = args[i + 1].parse().expect("scale");
+                i += 2;
+            }
+            a => {
+                if let Ok(id) = a.parse::<u32>() {
+                    only = Some(id);
+                }
+                i += 1;
+            }
+        }
+    }
+
+    let h = Harness::new(scale);
+    println!(
+        "# figure benches (scale {scale}: {} users / {} subchannels)\n",
+        h.cfg.network.num_users, h.cfg.network.num_subchannels
+    );
+
+    // figure-pair ids sharing one sweep each
+    let groups: &[(u32, &[u32], &str)] = &[
+        (5, &[5], "fig5 sigmoid relaxation"),
+        (6, &[6, 7], "fig6/7 per-model speedup + energy"),
+        (8, &[8, 9], "fig8/9 QoE-threshold sweep"),
+        (10, &[10, 11], "fig10/11 expected-finish sweep"),
+        (12, &[12, 13], "fig12/13 threshold-ratio, 7 algorithms"),
+        (14, &[14, 17], "fig14/17 user-density sweep"),
+        (15, &[15, 18], "fig15/18 subchannel sweep"),
+        (16, &[16, 19], "fig16/19 workload sweep (DES)"),
+    ];
+    let mut all_md = String::new();
+    for &(id, members, label) in groups {
+        if let Some(o) = only {
+            if !members.contains(&o) {
+                continue;
+            }
+        }
+        let mut figs = Vec::new();
+        let r = bench(label, 0, 0.0, 1, || {
+            figs = h.generate(id);
+        });
+        println!("{}", r.report());
+        for f in &figs {
+            all_md.push_str(&f.to_markdown());
+        }
+    }
+    println!("\n{all_md}");
+}

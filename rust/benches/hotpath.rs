@@ -1,0 +1,149 @@
+//! `cargo bench --bench hotpath` — micro/meso benchmarks of the serving
+//! hot path, used by the §Perf optimization loop (EXPERIMENTS.md):
+//!
+//!   utility_eval        one forward Γ evaluation (cohort 8×8)
+//!   utility_grad        one fused forward+reverse evaluation
+//!   gd_solve_layer      one projected-GD solve (single split point)
+//!   ligd_full_cohort    full Li-GD over all layers + refinement
+//!   ligd_cold_cohort    cold-start variant (Corollary 4 comparison)
+//!   plan_era_medium     whole-network planning pass (250 users)
+//!   noma_rates_250u     full-network NOMA rate computation
+//!   episode_des         discrete-event serving episode (2k requests)
+//!   xla_gd_chunk        AOT GD chunk via PJRT (when artifacts exist)
+
+use era::benchkit::bench;
+use era::config::presets;
+use era::models::zoo;
+use era::net::Network;
+use era::optimizer::{eval, solve_gd, solve_ligd, CohortVars, GdOptions};
+
+fn main() {
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    let want = |name: &str| filter.as_deref().map_or(true, |f| name.contains(f));
+    let mut results = Vec::new();
+
+    // --- cohort-level ----------------------------------------------------
+    let cfg = presets::medium();
+    let net = Network::generate(&cfg, 7);
+    let model = zoo::yolov2();
+    let users: Vec<usize> = net.topo.users_of_ap(0).into_iter().take(8).collect();
+    let channels: Vec<usize> = (0..8).collect();
+    let mut problem = era::optimizer::CohortProblem::from_network(
+        &cfg,
+        &net,
+        &users,
+        &channels,
+        vec![1e-15; 8],
+        vec![1e-15; users.len() * 8],
+    );
+    problem.set_uniform_split(&model.split_constants(6));
+    let orders = problem.sic_orders();
+    let vars = CohortVars::init_center(&problem);
+
+    if want("utility_eval") {
+        // hot-path form: reused workspace, no allocation
+        let mut ev = era::optimizer::utility::Evald::new(8, 8);
+        results.push(bench("utility_eval (8u×8ch)", 50, 0.5, 200_000, || {
+            era::optimizer::utility::eval_into(&problem, &vars, &orders, &mut ev);
+            std::hint::black_box(ev.total);
+        }));
+    }
+    if want("utility_grad") {
+        let mut ev = era::optimizer::utility::Evald::new(8, 8);
+        let mut grad = Vec::new();
+        era::optimizer::utility::eval_into(&problem, &vars, &orders, &mut ev);
+        results.push(bench("utility_grad (8u×8ch)", 50, 0.5, 200_000, || {
+            era::optimizer::utility::eval_into(&problem, &vars, &orders, &mut ev);
+            era::optimizer::gradient::grad_from_eval(&problem, &vars, &orders, &ev, &mut grad);
+            std::hint::black_box(grad.len());
+        }));
+    }
+    let opts = GdOptions {
+        step_size: cfg.optimizer.step_size,
+        epsilon: cfg.optimizer.epsilon,
+        max_iters: 150,
+    };
+    if want("gd_solve_layer") {
+        results.push(bench("gd_solve_layer (8u×8ch)", 3, 0.5, 10_000, || {
+            std::hint::black_box(solve_gd(&problem, CohortVars::init_center(&problem), &opts));
+        }));
+    }
+    if want("ligd_full_cohort") {
+        results.push(bench("ligd_full_cohort (18 layers)", 1, 1.0, 1_000, || {
+            let mut p = problem.clone();
+            std::hint::black_box(solve_ligd(&mut p, &model, &opts, true));
+        }));
+    }
+    if want("ligd_cold_cohort") {
+        results.push(bench("ligd_cold_cohort (18 layers)", 1, 1.0, 1_000, || {
+            let mut p = problem.clone();
+            std::hint::black_box(solve_ligd(&mut p, &model, &opts, false));
+        }));
+    }
+
+    // --- network-level ---------------------------------------------------
+    if want("plan_era_medium") {
+        results.push(bench("plan_era_medium (250 users)", 1, 2.0, 50, || {
+            std::hint::black_box(era::coordinator::plan_era(&cfg, &net, &model));
+        }));
+    }
+    let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
+    if want("noma_rates_250u") {
+        let alloc: Vec<era::net::LinkAssignment> = ds
+            .iter()
+            .map(|d| era::net::LinkAssignment {
+                up_ch: d.up_ch,
+                down_ch: d.down_ch,
+                p_up: d.p_up,
+                p_down: d.p_down,
+                r: d.r,
+                split: d.split,
+            })
+            .collect();
+        results.push(bench("noma_rates_250u", 3, 0.5, 10_000, || {
+            std::hint::black_box(net.rates(&alloc));
+        }));
+    }
+    if want("episode_des") {
+        let (up, down) = era::figures::rates_for(
+            &cfg,
+            &net,
+            &ds,
+            era::baselines::ChannelModel::Noma,
+        );
+        let trace = era::trace::fixed_count_trace(&cfg, 8, 77);
+        results.push(bench(
+            &format!("episode_des ({} reqs)", trace.len()),
+            2,
+            0.5,
+            1_000,
+            || {
+                std::hint::black_box(era::sim::run_episode(
+                    &cfg, &net, &model, &ds, &up, &down, &trace,
+                ));
+            },
+        ));
+    }
+
+    // --- AOT / PJRT ---------------------------------------------------------
+    let art_dir = era::runtime::Runtime::default_dir();
+    if want("xla_gd_chunk") && era::runtime::Runtime::artifacts_present(&art_dir) {
+        let rt = era::runtime::Runtime::cpu(&art_dir).expect("pjrt");
+        let exe = era::runtime::LigdChunkExecutor::load(&rt, 8, 8).expect("chunk artifact");
+        results.push(bench("xla_gd_chunk (64 steps, PJRT)", 2, 1.0, 1_000, || {
+            std::hint::black_box(exe.run(&problem, &vars).expect("run"));
+        }));
+        let (nl, sizes) = era::runtime::executor::split_cnn_shape();
+        let cnn = era::runtime::SplitCnnExecutor::load(&rt, nl, sizes.clone()).expect("cnn");
+        let input: Vec<f32> = (0..sizes[0]).map(|i| i as f32 / 3071.0).collect();
+        use era::coordinator::server::InferenceBackend;
+        results.push(bench("xla_split_cnn_infer (s=4)", 2, 1.0, 1_000, || {
+            std::hint::black_box(cnn.infer(4, &input).expect("infer"));
+        }));
+    }
+
+    println!("\n# hotpath bench summary");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,40 @@
+//! Device-Only: the entire DNN executes on the end device — the paper's
+//! normalization baseline (speedup 1×, lowest energy in Fig.7/17/19).
+
+use super::{ChannelModel, Decision, Strategy};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+
+pub struct DeviceOnly;
+
+impl Strategy for DeviceOnly {
+    fn name(&self) -> &'static str {
+        "device-only"
+    }
+
+    fn decide(&self, _cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision> {
+        (0..net.num_users())
+            .map(|_| Decision::device_only(model))
+            .collect()
+    }
+
+    fn channel_model(&self) -> ChannelModel {
+        ChannelModel::Orthogonal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::setup;
+
+    #[test]
+    fn never_offloads() {
+        let (cfg, net, model) = setup();
+        for d in DeviceOnly.decide(&cfg, &net, &model) {
+            assert!(!d.offloads(&model));
+            assert_eq!(d.split, model.num_layers());
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! DINA [Mohammed et al., INFOCOM'20]: distributed adaptive DNN
+//! partitioning and offloading with matching-based channel selection.
+//! Users are ranked by their potential offloading gain (device-only latency
+//! minus best split latency); in gain order each user greedily claims the
+//! best-gain subchannel with remaining capacity (≤ the NOMA cluster cap,
+//! used here as a plain capacity limit since DINA is not NOMA-aware) and
+//! fixes its latency-optimal split. Power = p_max, equal resource share.
+
+use super::{helpers, Decision, Strategy};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+
+pub struct Dina;
+
+impl Strategy for Dina {
+    fn name(&self) -> &'static str {
+        "dina"
+    }
+
+    fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision> {
+        let nu = net.num_users();
+        let m = cfg.network.num_subchannels;
+        let p_max = crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
+        let p_ap = crate::util::dbm_to_watt(cfg.network.ap_tx_power_dbm) / 4.0;
+        let r_est = helpers::equal_share_r(cfg, (nu / cfg.network.num_aps.max(1)).max(1));
+
+        // Rank users by potential gain on their best channel.
+        let mut ranked: Vec<(usize, f64, usize, usize)> = (0..nu)
+            .map(|u| {
+                // best channel by uplink gain
+                let ap = net.topo.user_ap[u];
+                let best_ch = (0..m)
+                    .max_by(|&a, &b| {
+                        net.channels.up[u][ap][a]
+                            .partial_cmp(&net.channels.up[u][ap][b])
+                            .unwrap()
+                    })
+                    .unwrap();
+                let up = helpers::est_up_rate(cfg, net, u, best_ch);
+                let down = helpers::est_down_rate(cfg, net, u, best_ch);
+                let t_dev =
+                    helpers::split_latency(cfg, net, model, u, model.num_layers(), up, down, r_est);
+                let mut best = (model.num_layers(), t_dev);
+                for s in 0..model.num_layers() {
+                    let t = helpers::split_latency(cfg, net, model, u, s, up, down, r_est);
+                    if t < best.1 {
+                        best = (s, t);
+                    }
+                }
+                (u, t_dev - best.1, best.0, best_ch)
+            })
+            .collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+        // Greedy matching with per-(ap, channel) capacity.
+        let mut load = vec![vec![0usize; m]; cfg.network.num_aps];
+        let cap = cfg.network.max_users_per_subchannel;
+        let mut out = vec![Decision::device_only(model); nu];
+        for (u, gain, split, best_ch) in ranked {
+            if gain <= 0.0 || split == model.num_layers() {
+                continue; // no benefit: stay on device
+            }
+            let ap = net.topo.user_ap[u];
+            // preferred channel, else next-best with capacity
+            let mut chosen = None;
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| {
+                net.channels.up[u][ap][b]
+                    .partial_cmp(&net.channels.up[u][ap][a])
+                    .unwrap()
+            });
+            debug_assert_eq!(order[0], best_ch);
+            for ch in order {
+                if load[ap][ch] < cap {
+                    chosen = Some(ch);
+                    break;
+                }
+            }
+            if let Some(ch) = chosen {
+                load[ap][ch] += 1;
+                out[u] = Decision {
+                    split,
+                    up_ch: Some(ch),
+                    down_ch: Some(ch),
+                    p_up: p_max,
+                    p_down: p_ap,
+                    r: r_est,
+                };
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::setup;
+
+    #[test]
+    fn capacity_respected() {
+        let (cfg, net, model) = setup();
+        let ds = Dina.decide(&cfg, &net, &model);
+        let mut load =
+            vec![vec![0usize; cfg.network.num_subchannels]; cfg.network.num_aps];
+        for (u, d) in ds.iter().enumerate() {
+            if let Some(ch) = d.up_ch {
+                load[net.topo.user_ap[u]][ch] += 1;
+            }
+        }
+        for row in &load {
+            for &l in row {
+                assert!(l <= cfg.network.max_users_per_subchannel);
+            }
+        }
+    }
+
+    #[test]
+    fn only_positive_gain_users_offload() {
+        let (cfg, net, model) = setup();
+        let ds = Dina.decide(&cfg, &net, &model);
+        // Everyone offloading must have a real split decision.
+        for d in &ds {
+            if d.offloads(&model) {
+                assert!(d.split < model.num_layers());
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! DNN-Surgeon [Liang et al., TCC'23]: layer-partitioning that, unlike
+//! Neurosurgeon, accounts for the *load* on the edge server when predicting
+//! server-side execution time: the per-user resource share shrinks with the
+//! number of co-offloading users, and the split decision iterates once with
+//! the updated load estimate (their iterative partition refinement).
+
+use super::{helpers, Decision, Strategy};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+
+pub struct DnnSurgeon;
+
+impl DnnSurgeon {
+    fn decide_round(
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+        chans: &[usize],
+        r_share: f64,
+    ) -> Vec<Decision> {
+        let p_max = crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
+        let p_ap = crate::util::dbm_to_watt(cfg.network.ap_tx_power_dbm) / 4.0;
+        (0..net.num_users())
+            .map(|u| {
+                let ch = chans[u];
+                let up = helpers::est_up_rate(cfg, net, u, ch);
+                let down = helpers::est_down_rate(cfg, net, u, ch);
+                let mut best = (model.num_layers(), f64::INFINITY);
+                for s in 0..=model.num_layers() {
+                    let t = helpers::split_latency(cfg, net, model, u, s, up, down, r_share);
+                    if t < best.1 {
+                        best = (s, t);
+                    }
+                }
+                if best.0 == model.num_layers() {
+                    Decision::device_only(model)
+                } else {
+                    Decision {
+                        split: best.0,
+                        up_ch: Some(ch),
+                        down_ch: Some(ch),
+                        p_up: p_max,
+                        p_down: p_ap,
+                        r: r_share,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+impl Strategy for DnnSurgeon {
+    fn name(&self) -> &'static str {
+        "dnn-surgeon"
+    }
+
+    fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision> {
+        let chans = helpers::round_robin_channels(cfg, net);
+        // Round 1: optimistic load (half the users offload).
+        let r0 = helpers::equal_share_r(
+            cfg,
+            (net.num_users() / (2 * cfg.network.num_aps.max(1))).max(1),
+        );
+        let round1 = Self::decide_round(cfg, net, model, &chans, r0);
+        // Round 2: re-estimate the load from round 1's offloader count.
+        let per_ap = {
+            let mut counts = vec![0usize; cfg.network.num_aps];
+            for (u, d) in round1.iter().enumerate() {
+                if d.offloads(model) {
+                    counts[net.topo.user_ap[u]] += 1;
+                }
+            }
+            counts.iter().copied().max().unwrap_or(1).max(1)
+        };
+        let r1 = helpers::equal_share_r(cfg, per_ap);
+        Self::decide_round(cfg, net, model, &chans, r1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::setup;
+
+    #[test]
+    fn load_aware_share_is_bounded() {
+        let (cfg, net, model) = setup();
+        for d in DnnSurgeon.decide(&cfg, &net, &model) {
+            if d.offloads(&model) {
+                assert!(d.r >= cfg.compute.r_min && d.r <= cfg.compute.r_max);
+            }
+        }
+    }
+
+    #[test]
+    fn differs_from_unloaded_neurosurgeon_under_load() {
+        // With many users, the load-aware estimate should push some users
+        // to keep more layers on-device than Neurosurgeon would.
+        let (mut cfg, _, model) = setup();
+        cfg.network.num_users = 120;
+        let net = crate::net::Network::generate(&cfg, 9);
+        let ns = super::super::Neurosurgeon.decide(&cfg, &net, &model);
+        let dsur = DnnSurgeon.decide(&cfg, &net, &model);
+        let ns_dev: f64 = ns.iter().map(|d| d.split as f64).sum();
+        let ds_dev: f64 = dsur.iter().map(|d| d.split as f64).sum();
+        assert!(
+            ds_dev >= ns_dev,
+            "load-aware should keep ≥ layers on device: {ds_dev} vs {ns_dev}"
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! Edge-Only: the raw input is shipped to the edge server and the entire
+//! DNN executes there (split s = 0). Transmission at maximum power,
+//! round-robin channel assignment, equal resource share.
+
+use super::{helpers, Decision, Strategy};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+
+pub struct EdgeOnly;
+
+impl Strategy for EdgeOnly {
+    fn name(&self) -> &'static str {
+        "edge-only"
+    }
+
+    fn decide(&self, cfg: &Config, net: &Network, _model: &ModelProfile) -> Vec<Decision> {
+        let chans = helpers::round_robin_channels(cfg, net);
+        let p_max = crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
+        let p_ap = crate::util::dbm_to_watt(cfg.network.ap_tx_power_dbm) / 4.0;
+        // every user offloads
+        let r = helpers::equal_share_r(
+            cfg,
+            net.num_users().div_ceil(cfg.network.num_aps.max(1)),
+        );
+        (0..net.num_users())
+            .map(|u| Decision {
+                split: 0,
+                up_ch: Some(chans[u]),
+                down_ch: Some(chans[u]),
+                p_up: p_max,
+                p_down: p_ap,
+                r,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::setup;
+
+    #[test]
+    fn always_offloads_everything() {
+        let (cfg, net, model) = setup();
+        for d in EdgeOnly.decide(&cfg, &net, &model) {
+            assert_eq!(d.split, 0);
+            assert!(d.offloads(&model));
+            assert!(d.up_ch.is_some() && d.down_ch.is_some());
+        }
+    }
+
+    #[test]
+    fn channels_within_bounds() {
+        let (cfg, net, model) = setup();
+        for d in EdgeOnly.decide(&cfg, &net, &model) {
+            assert!(d.up_ch.unwrap() < cfg.network.num_subchannels);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! IAO [Tang et al., IoT-J'21]: joint multi-user DNN partitioning and
+//! computational-resource allocation minimizing the *sum* of inference
+//! latencies, with the multicore non-linearity λ(r). Implemented as the
+//! paper's alternating optimization: fix r → per-user latency-optimal
+//! split; fix splits → allocate the pool proportionally to each user's
+//! edge workload (the KKT water-filling shape of their resource step),
+//! iterate until the assignment stabilizes.
+
+use super::{helpers, Decision, Strategy};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+
+pub struct Iao {
+    pub rounds: usize,
+}
+
+impl Default for Iao {
+    fn default() -> Self {
+        Self { rounds: 5 }
+    }
+}
+
+impl Strategy for Iao {
+    fn name(&self) -> &'static str {
+        "iao"
+    }
+
+    fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision> {
+        let chans = helpers::round_robin_channels(cfg, net);
+        let p_max = crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
+        let p_ap = crate::util::dbm_to_watt(cfg.network.ap_tx_power_dbm) / 4.0;
+        let nu = net.num_users();
+        let mut r = vec![
+            helpers::equal_share_r(cfg, (nu / cfg.network.num_aps.max(1)).max(1));
+            nu
+        ];
+        let mut splits = vec![model.num_layers(); nu];
+
+        for _ in 0..self.rounds {
+            // Step 1: latency-optimal split given r.
+            let mut changed = false;
+            for u in 0..nu {
+                let ch = chans[u];
+                let up = helpers::est_up_rate(cfg, net, u, ch);
+                let down = helpers::est_down_rate(cfg, net, u, ch);
+                let mut best = (model.num_layers(), f64::INFINITY);
+                for s in 0..=model.num_layers() {
+                    let t = helpers::split_latency(cfg, net, model, u, s, up, down, r[u]);
+                    if t < best.1 {
+                        best = (s, t);
+                    }
+                }
+                if splits[u] != best.0 {
+                    splits[u] = best.0;
+                    changed = true;
+                }
+            }
+            // Step 2: per-AP pool allocation ∝ sqrt(edge workload) (the
+            // concave-λ KKT shape), clamped to [r_min, r_max].
+            for ap in 0..cfg.network.num_aps {
+                let members: Vec<usize> = net
+                    .topo
+                    .users_of_ap(ap)
+                    .into_iter()
+                    .filter(|&u| splits[u] < model.num_layers())
+                    .collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let weights: Vec<f64> = members
+                    .iter()
+                    .map(|&u| model.edge_flops(splits[u]).sqrt())
+                    .collect();
+                let wsum: f64 = weights.iter().sum::<f64>().max(1e-30);
+                for (j, &u) in members.iter().enumerate() {
+                    r[u] = (cfg.compute.edge_pool_units * weights[j] / wsum)
+                        .clamp(cfg.compute.r_min, cfg.compute.r_max);
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        (0..nu)
+            .map(|u| {
+                if splits[u] == model.num_layers() {
+                    Decision::device_only(model)
+                } else {
+                    Decision {
+                        split: splits[u],
+                        up_ch: Some(chans[u]),
+                        down_ch: Some(chans[u]),
+                        p_up: p_max,
+                        p_down: p_ap,
+                        r: r[u],
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::tests::setup;
+
+    #[test]
+    fn converges_and_respects_bounds() {
+        let (cfg, net, model) = setup();
+        let ds = Iao::default().decide(&cfg, &net, &model);
+        for d in &ds {
+            if d.offloads(&model) {
+                assert!(d.r >= cfg.compute.r_min - 1e-9 && d.r <= cfg.compute.r_max + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn heavier_edge_work_gets_more_resource() {
+        let (cfg, net, model) = setup();
+        let ds = Iao::default().decide(&cfg, &net, &model);
+        // among offloaders in the same cell, r should be monotone in edge work
+        for ap in 0..cfg.network.num_aps {
+            let mut members: Vec<usize> = net
+                .topo
+                .users_of_ap(ap)
+                .into_iter()
+                .filter(|&u| ds[u].offloads(&model))
+                .collect();
+            members.sort_by(|&a, &b| {
+                model
+                    .edge_flops(ds[a].split)
+                    .partial_cmp(&model.edge_flops(ds[b].split))
+                    .unwrap()
+            });
+            for w in members.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                // allow ties from clamping
+                assert!(
+                    ds[hi].r >= ds[lo].r - 1e-9,
+                    "ap {ap}: r not monotone in edge work"
+                );
+            }
+        }
+    }
+}

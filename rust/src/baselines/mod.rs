@@ -1,0 +1,209 @@
+//! Comparison schemes from the paper's evaluation (§V.A):
+//! Device-Only, Edge-Only, Neurosurgeon [40], DNN-Surgeon [17], IAO [18],
+//! DINA [14] — re-implemented from their decision rules at the granularity
+//! ERA's evaluation needs.
+//!
+//! Per the paper, the baselines "do not use the NOMA channel": they get an
+//! orthogonal (OFDMA/TDMA) channel model — no SIC, no intra-cell
+//! superposition; co-channel users of the *same* cell time-share the
+//! subchannel, co-channel users of *other* cells interfere at full power.
+
+pub mod device_only;
+pub mod dina;
+pub mod dnn_surgeon;
+pub mod edge_only;
+pub mod iao;
+pub mod neurosurgeon;
+
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+
+pub use device_only::DeviceOnly;
+pub use dina::Dina;
+pub use dnn_surgeon::DnnSurgeon;
+pub use edge_only::EdgeOnly;
+pub use iao::Iao;
+pub use neurosurgeon::Neurosurgeon;
+
+/// A per-user serving decision — common output of every strategy
+/// (baselines and ERA alike).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Split point s_i (layers on device); `model.num_layers()` ⇒ no offload.
+    pub split: usize,
+    /// Uplink / downlink subchannel (global index). `None` ⇒ no offload.
+    pub up_ch: Option<usize>,
+    pub down_ch: Option<usize>,
+    /// Device transmit power (W).
+    pub p_up: f64,
+    /// AP downlink power share for this user (W).
+    pub p_down: f64,
+    /// Edge compute units r_i.
+    pub r: f64,
+}
+
+impl Decision {
+    pub fn device_only(model: &ModelProfile) -> Self {
+        Self {
+            split: model.num_layers(),
+            up_ch: None,
+            down_ch: None,
+            p_up: 0.0,
+            p_down: 0.0,
+            r: 0.0,
+        }
+    }
+
+    pub fn offloads(&self, model: &ModelProfile) -> bool {
+        self.split < model.num_layers()
+    }
+}
+
+/// A serving strategy: decides split/channel/power/resource for all users.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Decide for every user in the network.
+    fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision>;
+
+    /// Which channel model the evaluation should apply to this strategy's
+    /// decisions.
+    fn channel_model(&self) -> ChannelModel {
+        ChannelModel::Orthogonal
+    }
+}
+
+/// Channel model used when scoring a strategy's decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelModel {
+    /// NOMA with SIC (ERA).
+    Noma,
+    /// Orthogonal access with in-cell time sharing (the baselines).
+    Orthogonal,
+}
+
+/// Shared helpers for the baseline decision rules.
+pub(crate) mod helpers {
+    use super::*;
+    use crate::util::log2_1p;
+
+    /// Estimated single-user (unloaded) uplink rate for `user` on `ch`.
+    pub fn est_up_rate(cfg: &Config, net: &Network, user: usize, ch: usize) -> f64 {
+        let g = net.channels.up_gain(&net.topo, user, ch);
+        let p = crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
+        net.subchannel_bw_hz * log2_1p(p * g / net.noise_w)
+    }
+
+    /// Estimated single-user downlink rate.
+    pub fn est_down_rate(cfg: &Config, net: &Network, user: usize, ch: usize) -> f64 {
+        let g = net.channels.down_gain(&net.topo, user, ch);
+        let p = crate::util::dbm_to_watt(cfg.network.ap_tx_power_dbm) / 4.0;
+        net.subchannel_bw_hz * log2_1p(p * g / net.noise_w)
+    }
+
+    /// Round-robin channel assignment within each cell: user k of cell n
+    /// gets channel (k mod M). Returns per-user channel.
+    pub fn round_robin_channels(cfg: &Config, net: &Network) -> Vec<usize> {
+        let m = cfg.network.num_subchannels;
+        let mut out = vec![0usize; net.num_users()];
+        for ap in 0..net.topo.num_aps() {
+            for (k, &u) in net.topo.users_of_ap(ap).iter().enumerate() {
+                out[u] = k % m;
+            }
+        }
+        out
+    }
+
+    /// Equal share of the per-AP resource pool among offloading users,
+    /// clamped to [r_min, r_max].
+    pub fn equal_share_r(cfg: &Config, n_offloaders: usize) -> f64 {
+        if n_offloaders == 0 {
+            return cfg.compute.r_max;
+        }
+        (cfg.compute.edge_pool_units / n_offloaders as f64)
+            .clamp(cfg.compute.r_min, cfg.compute.r_max)
+    }
+
+    /// Latency estimate of a split under given link rates and resource.
+    pub fn split_latency(
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+        user: usize,
+        s: usize,
+        up_rate: f64,
+        down_rate: f64,
+        r: f64,
+    ) -> f64 {
+        let sc = model.split_constants(s);
+        crate::latency::total_delay(
+            &sc,
+            net.users[user].device_flops,
+            r,
+            up_rate,
+            down_rate,
+            cfg,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::models::zoo;
+    use crate::net::Network;
+
+    pub(crate) fn setup() -> (Config, Network, ModelProfile) {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 5);
+        (cfg, net, zoo::yolov2())
+    }
+
+    #[test]
+    fn all_baselines_produce_full_decisions() {
+        let (cfg, net, model) = setup();
+        let strategies: Vec<Box<dyn Strategy>> = vec![
+            Box::new(DeviceOnly),
+            Box::new(EdgeOnly),
+            Box::new(Neurosurgeon),
+            Box::new(DnnSurgeon),
+            Box::new(Iao::default()),
+            Box::new(Dina),
+        ];
+        for s in strategies {
+            let d = s.decide(&cfg, &net, &model);
+            assert_eq!(d.len(), net.num_users(), "{}", s.name());
+            for (i, dec) in d.iter().enumerate() {
+                assert!(dec.split <= model.num_layers(), "{} user {i}", s.name());
+                if dec.offloads(&model) {
+                    assert!(dec.up_ch.is_some(), "{} user {i} offloads w/o channel", s.name());
+                    assert!(dec.r >= cfg.compute.r_min - 1e-12);
+                    assert!(dec.p_up > 0.0);
+                } else {
+                    assert!(dec.up_ch.is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn helpers_rate_positive() {
+        let (cfg, net, _) = setup();
+        let r = helpers::est_up_rate(&cfg, &net, 0, 0);
+        assert!(r > 0.0 && r.is_finite());
+        assert!(helpers::est_down_rate(&cfg, &net, 0, 0) > 0.0);
+    }
+
+    #[test]
+    fn equal_share_clamps() {
+        let (cfg, _, _) = setup();
+        assert_eq!(helpers::equal_share_r(&cfg, 0), cfg.compute.r_max);
+        assert_eq!(helpers::equal_share_r(&cfg, 1), cfg.compute.r_max);
+        assert_eq!(
+            helpers::equal_share_r(&cfg, 100000),
+            cfg.compute.r_min
+        );
+    }
+}

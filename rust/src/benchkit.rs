@@ -1,0 +1,101 @@
+//! Minimal benchmarking harness (the offline registry has no `criterion`).
+//!
+//! Provides warmup + timed iterations with mean / p50 / p99 reporting and a
+//! stable text output format consumed by EXPERIMENTS.md §Perf. `cargo bench`
+//! runs the `[[bench]] harness = false` binaries which use this module.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s.max(1e-18)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}  ({:.1}/s)",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p99_s),
+            self.per_sec()
+        )
+    }
+}
+
+fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then measured runs until
+/// `min_time_s` of total measurement or `max_iters`, whichever first.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_time_s: f64, max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    // Always take at least one measured sample.
+    loop {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() >= min_time_s || samples.len() >= max_iters.max(1) {
+            break;
+        }
+    }
+    let mean = crate::util::mean(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: crate::util::percentile(&samples, 50.0),
+        p99_s: crate::util::percentile(&samples, 99.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0usize;
+        let r = bench("noop", 2, 0.01, 50, || {
+            n += 1;
+        });
+        assert!(r.iters >= 1 && r.iters <= 50);
+        assert_eq!(n, r.iters + 2);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-5).ends_with("µs"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+}

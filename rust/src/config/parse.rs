@@ -1,0 +1,147 @@
+//! TOML-subset parser (the offline registry has no `toml` crate).
+//!
+//! Supported: `[section]` headers, `key = value` with integer, float,
+//! string ("..."), and boolean values, `#` comments, blank lines.
+//! Unsupported (rejected): nested tables, arrays, multi-line strings.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse `text` into {section → {key → value}}. Top-level keys live in the
+/// `""` section.
+pub fn parse_toml_subset(
+    text: &str,
+) -> anyhow::Result<BTreeMap<String, BTreeMap<String, TomlValue>>> {
+    let mut out: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            anyhow::ensure!(
+                line.ends_with(']') && !line.contains('.'),
+                "line {}: bad section header {line:?}",
+                lineno + 1
+            );
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let value = parse_value(v.trim())
+            .ok_or_else(|| anyhow::anyhow!("line {}: bad value {v:?}", lineno + 1))?;
+        out.entry(section.clone()).or_default().insert(key, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Some(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml_subset(
+            r#"
+            top = 1
+            [a]
+            x = 2.5      # comment
+            name = "hi # not a comment"
+            flag = true
+            [b]
+            y = -3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["x"], TomlValue::Float(2.5));
+        assert_eq!(
+            doc["a"]["name"],
+            TomlValue::Str("hi # not a comment".into())
+        );
+        assert_eq!(doc["a"]["flag"], TomlValue::Bool(true));
+        assert_eq!(doc["b"]["y"], TomlValue::Int(-3));
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let doc = parse_toml_subset("x = 1e-28\ny = 2.5e9\n").unwrap();
+        assert_eq!(doc[""]["x"].as_f64(), Some(1e-28));
+        assert_eq!(doc[""]["y"].as_f64(), Some(2.5e9));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_toml_subset("no equals sign").is_err());
+        assert!(parse_toml_subset("[a.b]\n").is_err());
+        assert!(parse_toml_subset("x = [1,2]\n").is_err());
+    }
+}

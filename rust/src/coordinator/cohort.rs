@@ -1,0 +1,155 @@
+//! Cohort formation: partition each cell's users into fixed-size solver
+//! cohorts and pick candidate subchannels per cohort.
+//!
+//! Cohorts are the static-shape unit of both the analytic Li-GD solver and
+//! the AOT-compiled XLA solver, so their size is a config constant. Channel
+//! candidates are chosen least-loaded-first so sequentially planned cohorts
+//! spread across the spectrum (the NOMA cluster cap is enforced when
+//! rounding).
+
+use crate::config::Config;
+use crate::net::Network;
+
+/// One cohort: users (same cell) + candidate global channel indices.
+#[derive(Clone, Debug)]
+pub struct Cohort {
+    pub ap: usize,
+    pub users: Vec<usize>,
+    pub channels: Vec<usize>,
+}
+
+/// Tracks per-(ap, channel) NOMA cluster occupancy while planning.
+#[derive(Clone, Debug)]
+pub struct ChannelLoad {
+    pub counts: Vec<Vec<usize>>,
+    pub cap: usize,
+}
+
+impl ChannelLoad {
+    pub fn new(n_aps: usize, n_channels: usize, cap: usize) -> Self {
+        Self {
+            counts: vec![vec![0; n_channels]; n_aps],
+            cap,
+        }
+    }
+
+    /// `k` least-loaded channels of cell `ap` that still have capacity;
+    /// pads with globally least-loaded if fewer have room.
+    pub fn candidates(&self, ap: usize, k: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.counts[ap].len()).collect();
+        order.sort_by_key(|&c| self.counts[ap][c]);
+        order.into_iter().take(k).collect()
+    }
+
+    /// Gain-aware candidates: within the least-loaded tier, prefer the
+    /// channels where the cohort's users actually have good fading draws
+    /// (score = Σ_user gain / (1 + load)). This is what lets the NOMA
+    /// planner exploit multi-user channel diversity instead of handing it
+    /// to the matching-based baselines.
+    pub fn candidates_for(
+        &self,
+        ap: usize,
+        k: usize,
+        cohort_users: &[usize],
+        up_gains: &[Vec<Vec<f64>>],
+    ) -> Vec<usize> {
+        let n = self.counts[ap].len();
+        let mut scored: Vec<(usize, f64)> = (0..n)
+            .map(|c| {
+                let g: f64 = cohort_users.iter().map(|&u| up_gains[u][ap][c]).sum();
+                (c, g / (1.0 + self.counts[ap][c] as f64))
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.into_iter().take(k).map(|(c, _)| c).collect()
+    }
+
+    pub fn commit(&mut self, ap: usize, ch: usize) {
+        self.counts[ap][ch] += 1;
+    }
+
+    pub fn has_room(&self, ap: usize, ch: usize) -> bool {
+        self.counts[ap][ch] < self.cap
+    }
+
+    /// Least-loaded channel with room, if any.
+    pub fn fallback(&self, ap: usize) -> Option<usize> {
+        (0..self.counts[ap].len())
+            .filter(|&c| self.has_room(ap, c))
+            .min_by_key(|&c| self.counts[ap][c])
+    }
+
+    /// Best channel with room for a specific user: maximize the user's
+    /// uplink gain among the least-loaded tier (gain-aware fallback —
+    /// fading is per-channel, so a blind least-loaded pick can cost 10 dB).
+    pub fn best_fallback(&self, ap: usize, gains: &[f64]) -> Option<usize> {
+        let min_load = (0..self.counts[ap].len())
+            .filter(|&c| self.has_room(ap, c))
+            .map(|c| self.counts[ap][c])
+            .min()?;
+        (0..self.counts[ap].len())
+            .filter(|&c| self.has_room(ap, c) && self.counts[ap][c] <= min_load + 1)
+            .max_by(|&a, &b| gains[a].partial_cmp(&gains[b]).unwrap())
+    }
+}
+
+/// Partition all users into cohorts (per cell, chunks of
+/// `cfg.optimizer.cohort_users`), with gain-aware channel candidates.
+pub fn form_cohorts(cfg: &Config, net: &Network, load: &ChannelLoad) -> Vec<Cohort> {
+    let mut cohorts = Vec::new();
+    for ap in 0..cfg.network.num_aps {
+        let members = net.topo.users_of_ap(ap);
+        for chunk in members.chunks(cfg.optimizer.cohort_users) {
+            cohorts.push(Cohort {
+                ap,
+                users: chunk.to_vec(),
+                channels: load.candidates_for(
+                    ap,
+                    cfg.optimizer.cohort_channels,
+                    chunk,
+                    &net.channels.up,
+                ),
+            });
+        }
+    }
+    cohorts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::net::Network;
+
+    #[test]
+    fn cohorts_cover_all_users_once() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 3);
+        let load = ChannelLoad::new(cfg.network.num_aps, cfg.network.num_subchannels, 3);
+        let cohorts = form_cohorts(&cfg, &net, &load);
+        let mut seen = vec![false; net.num_users()];
+        for c in &cohorts {
+            assert!(c.users.len() <= cfg.optimizer.cohort_users);
+            assert_eq!(c.channels.len(), cfg.optimizer.cohort_channels.min(cfg.network.num_subchannels));
+            for &u in &c.users {
+                assert!(!seen[u], "user {u} in two cohorts");
+                seen[u] = true;
+                assert_eq!(net.topo.user_ap[u], c.ap);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn load_tracking() {
+        let mut load = ChannelLoad::new(1, 4, 2);
+        assert!(load.has_room(0, 0));
+        load.commit(0, 0);
+        load.commit(0, 0);
+        assert!(!load.has_room(0, 0));
+        assert_eq!(load.fallback(0), Some(1));
+        // candidates prefer empties
+        let cand = load.candidates(0, 2);
+        assert!(!cand.contains(&0));
+    }
+}

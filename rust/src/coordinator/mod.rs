@@ -1,0 +1,312 @@
+//! The ERA coordinator — the system's L3 contribution.
+//!
+//! Planning (`plan_era`): partitions users into solver cohorts, solves each
+//! cohort with Li-GD (warm-started, sequentially, folding already-planned
+//! cohorts into the background-interference constants), enforces the NOMA
+//! cluster cap and the SIC decodability threshold when rounding, and emits
+//! per-user [`Decision`]s.
+//!
+//! Serving (`server`): the threaded request loop that applies those
+//! decisions to a live request trace and (optionally) executes the real
+//! split CNN through the PJRT runtime.
+
+pub mod cohort;
+pub mod server;
+
+use crate::baselines::{ChannelModel, Decision, Strategy};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+use crate::optimizer::{solve_ligd, CohortProblem, GdOptions};
+use cohort::{form_cohorts, ChannelLoad};
+
+/// Planner statistics (Corollary 2/4 instrumentation).
+#[derive(Clone, Debug, Default)]
+pub struct PlanStats {
+    pub cohorts: usize,
+    pub total_gd_iters: usize,
+    pub fallback_assignments: usize,
+    pub sic_fallbacks: usize,
+    /// Offloaders demoted to device-only by the regret pass.
+    pub demotions: usize,
+}
+
+/// Plan ERA decisions for every user in the network.
+pub fn plan_era(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+) -> (Vec<Decision>, PlanStats) {
+    plan_era_opts(cfg, net, model, true)
+}
+
+/// Same as [`plan_era`] with the Li-GD warm start toggle exposed (the
+/// cold-start variant is the paper's "traditional GD" comparison).
+pub fn plan_era_opts(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    warm_start: bool,
+) -> (Vec<Decision>, PlanStats) {
+    let nu = net.num_users();
+    let mut decisions = vec![Decision::device_only(model); nu];
+    let mut load = ChannelLoad::new(
+        cfg.network.num_aps,
+        cfg.network.num_subchannels,
+        cfg.network.max_users_per_subchannel,
+    );
+    let mut stats = PlanStats::default();
+    let opts = GdOptions::from_config(&cfg.optimizer);
+
+    // Running background interference accumulators from committed decisions:
+    // uplink at each AP per channel; downlink per-AP transmitted power per
+    // channel (converted to per-user interference when building a cohort).
+    let n_aps = cfg.network.num_aps;
+    let m = cfg.network.num_subchannels;
+    let mut bg_up_acc = vec![vec![0.0f64; m]; n_aps];
+    let mut ap_ch_power = vec![vec![0.0f64; m]; n_aps];
+
+    let mut cohorts = form_cohorts(cfg, net, &load);
+    stats.cohorts = cohorts.len();
+
+    for c in cohorts.iter_mut() {
+        // Re-pick candidates against the *live* load so successive cohorts
+        // spread over the spectrum instead of piling onto the same
+        // high-gain channels.
+        c.channels = load.candidates_for(
+            c.ap,
+            cfg.optimizer.cohort_channels,
+            &c.users,
+            &net.channels.up,
+        );
+        // Background vectors for this cohort's candidate channels.
+        let bg_up: Vec<f64> = c.channels.iter().map(|&ch| bg_up_acc[c.ap][ch]).collect();
+        let mut bg_down = Vec::with_capacity(c.users.len() * c.channels.len());
+        for &u in &c.users {
+            for &ch in &c.channels {
+                let mut s = 0.0;
+                for x in 0..n_aps {
+                    if x != c.ap {
+                        s += ap_ch_power[x][ch] * net.channels.down[u][x][ch];
+                    }
+                }
+                bg_down.push(s);
+            }
+        }
+
+        let mut problem =
+            CohortProblem::from_network(cfg, net, &c.users, &c.channels, bg_up, bg_down);
+        let sol = solve_ligd(&mut problem, model, &opts, warm_start);
+        stats.total_gd_iters += sol.total_iters;
+
+        // Round into concrete decisions, respecting cluster caps + SIC.
+        for (j, &u) in c.users.iter().enumerate() {
+            let split = sol.split[j];
+            if split == model.num_layers() {
+                decisions[u] = Decision::device_only(model);
+                continue;
+            }
+            // channel: preferred = rounded candidate; else best-gain
+            // channel among those with room
+            let mut ch = c.channels[sol.up_ch[j]];
+            if !load.has_room(c.ap, ch) {
+                match load.best_fallback(c.ap, &net.channels.up[u][c.ap]) {
+                    Some(alt) => {
+                        ch = alt;
+                        stats.fallback_assignments += 1;
+                    }
+                    None => {
+                        // cell fully saturated: compute on device
+                        decisions[u] = Decision::device_only(model);
+                        stats.sic_fallbacks += 1;
+                        continue;
+                    }
+                }
+            }
+            // SIC decodability (paper: p·|h|² must exceed the threshold,
+            // otherwise the entire model is computed on the device).
+            let g = net.channels.up[u][c.ap][ch];
+            if sol.p_up[j] * g <= cfg.network.sic_threshold_w {
+                decisions[u] = Decision::device_only(model);
+                stats.sic_fallbacks += 1;
+                continue;
+            }
+            load.commit(c.ap, ch);
+            let down_ch = c.channels[sol.down_ch[j]];
+            decisions[u] = Decision {
+                split,
+                up_ch: Some(ch),
+                down_ch: Some(down_ch),
+                p_up: sol.p_up[j],
+                p_down: sol.p_down[j],
+                r: sol.r[j],
+            };
+            // Fold into background for later cohorts. Other cells see this
+            // user's full cross-gain power; the *own* cell also records it
+            // (scaled by the expected SIC residual) so later same-cell
+            // cohorts don't plan against an empty channel — without this
+            // the planner's predicted rates are wildly optimistic and the
+            // rounded plan under-delivers (EXPERIMENTS.md §Calibration).
+            const SIC_RESIDUAL: f64 = 0.5;
+            for a in 0..n_aps {
+                let w = if a == c.ap { SIC_RESIDUAL } else { 1.0 };
+                bg_up_acc[a][ch] += w * sol.p_up[j] * net.channels.up[u][a][ch];
+            }
+            ap_ch_power[c.ap][down_ch] += sol.p_down[j];
+        }
+    }
+
+    // ---- Regret pass (admission control) --------------------------------
+    // Sequential cohort planning sees only *past* interference; cohorts
+    // planned early can be swamped by spectrum that fills up after them.
+    // Re-score the realized NOMA rates under the full committed plan and
+    // demote any offloader whose realized delay is worse than both its
+    // device-only delay and its QoE threshold — offloading that hurts is
+    // never admitted. (One pass; demotions only reduce interference, so
+    // the survivors' realized rates can only improve.)
+    let alloc: Vec<crate::net::LinkAssignment> = decisions
+        .iter()
+        .map(|d| crate::net::LinkAssignment {
+            up_ch: d.up_ch,
+            down_ch: d.down_ch,
+            p_up: d.p_up,
+            p_down: d.p_down,
+            r: d.r,
+            split: d.split,
+        })
+        .collect();
+    let rates = net.rates(&alloc);
+    for u in 0..nu {
+        let d = decisions[u];
+        if d.up_ch.is_none() {
+            continue;
+        }
+        let sc = model.split_constants(d.split);
+        let realized = crate::latency::total_delay(
+            &sc,
+            net.users[u].device_flops,
+            d.r,
+            rates.up[u],
+            rates.down[u],
+            cfg,
+        );
+        let device_delay = model.total_flops() / net.users[u].device_flops;
+        if realized > device_delay && realized > net.users[u].qoe_threshold_s {
+            decisions[u] = Decision::device_only(model);
+            stats.demotions += 1;
+        }
+    }
+
+    (decisions, stats)
+}
+
+/// [`Strategy`] wrapper so ERA slots into the same evaluation harness as
+/// the baselines.
+pub struct EraStrategy {
+    pub warm_start: bool,
+}
+
+impl Default for EraStrategy {
+    fn default() -> Self {
+        Self { warm_start: true }
+    }
+}
+
+impl Strategy for EraStrategy {
+    fn name(&self) -> &'static str {
+        "era"
+    }
+
+    fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision> {
+        plan_era_opts(cfg, net, model, self.warm_start).0
+    }
+
+    fn channel_model(&self) -> ChannelModel {
+        ChannelModel::Noma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::models::zoo;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn era_plan_is_feasible() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 8);
+        let model = zoo::nin();
+        let (ds, stats) = plan_era(&cfg, &net, &model);
+        assert_eq!(ds.len(), net.num_users());
+        assert!(stats.cohorts > 0);
+        assert!(stats.total_gd_iters > 0);
+        // NOMA cluster caps hold
+        let mut load = vec![
+            vec![0usize; cfg.network.num_subchannels];
+            cfg.network.num_aps
+        ];
+        for (u, d) in ds.iter().enumerate() {
+            if let Some(ch) = d.up_ch {
+                let ap = net.topo.user_ap[u];
+                load[ap][ch] += 1;
+                assert!(
+                    load[ap][ch] <= cfg.network.max_users_per_subchannel,
+                    "cluster cap violated"
+                );
+                assert!(d.p_up >= crate::util::dbm_to_watt(cfg.network.min_tx_power_dbm) - 1e-12);
+                assert!(d.p_up <= crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm) + 1e-12);
+                assert!(d.r >= cfg.compute.r_min - 1e-9 && d.r <= cfg.compute.r_max + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn era_beats_device_only_utility_wise() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 12);
+        let model = zoo::yolov2();
+        let era = EraStrategy::default();
+        let ds = era.decide(&cfg, &net, &model);
+        let o_era = crate::metrics::evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
+        let dev = crate::baselines::DeviceOnly.decide(&cfg, &net, &model);
+        let o_dev =
+            crate::metrics::evaluate(&cfg, &net, &model, &dev, ChannelModel::Orthogonal);
+        assert!(
+            o_era.latency_speedup_vs(&o_dev) > 1.0,
+            "era speedup {}",
+            o_era.latency_speedup_vs(&o_dev)
+        );
+    }
+
+    #[test]
+    fn plan_invariants_random_networks() {
+        forall("ERA plan invariants across random nets", 6, |g| {
+            let mut cfg = presets::smoke();
+            cfg.network.num_users = g.usize_in(8, 32);
+            cfg.network.num_aps = g.usize_in(1, 3);
+            cfg.network.num_subchannels = g.usize_in(4, 10);
+            cfg.optimizer.max_iters = 40;
+            let net = Network::generate(&cfg, g.case as u64 + 500);
+            let model = zoo::nin();
+            let (ds, _) = plan_era(&cfg, &net, &model);
+            let mut load = vec![
+                vec![0usize; cfg.network.num_subchannels];
+                cfg.network.num_aps
+            ];
+            for (u, d) in ds.iter().enumerate() {
+                assert!(d.split <= model.num_layers());
+                if let Some(ch) = d.up_ch {
+                    assert!(ch < cfg.network.num_subchannels);
+                    load[net.topo.user_ap[u]][ch] += 1;
+                }
+            }
+            for row in &load {
+                for &n in row {
+                    assert!(n <= cfg.network.max_users_per_subchannel);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Energy-consumption model (paper §II.D, eq.18–eq.22).
+//!
+//! E_i = E_dev_compute + E_up_tx + E_edge_compute + E_down_tx
+//!     = Σ ξ_i c_i² φ_i f_δ            (device inference, eq.18)
+//!     + p_up · w_s / R_up             (uplink transmission, eq.19)
+//!     + Σ ξ_e (λ(r)c_min)² φ_e f_δ    (edge inference, eq.21)
+//!     + P_down · m_i / R_down         (downlink result, eq.20)
+//!
+//! φ (cycles/bit) converts the FLOP counts of the profile into the cycle
+//! counts the ξc²φf formulation expects; we fold it into a per-side
+//! effective constant so the relative shape (quadratic in clock, linear in
+//! work) matches the paper exactly.
+
+use crate::config::{ComputeConfig, Config};
+use crate::latency::lambda_r;
+use crate::models::SplitConstants;
+
+/// Device-side inference energy (eq.18).
+#[inline]
+pub fn device_compute_energy(sc: &SplitConstants, device_flops: f64, cc: &ComputeConfig) -> f64 {
+    // ξ·c²·(work) with work in FLOPs; c in FLOP/s.
+    cc.xi_device * device_flops.powi(2) * sc.device_flops / 1e9
+}
+
+/// Edge-side inference energy (eq.21) — quadratic in allocated capability.
+#[inline]
+pub fn edge_compute_energy(sc: &SplitConstants, r: f64, cc: &ComputeConfig) -> f64 {
+    if sc.edge_flops == 0.0 {
+        return 0.0;
+    }
+    let cap = lambda_r(r, cc.lambda_gamma) * cc.edge_unit_flops;
+    cc.xi_edge * cap.powi(2) * sc.edge_flops / 1e9
+}
+
+/// Uplink transmission energy (eq.19): p · (w_s / R).
+#[inline]
+pub fn uplink_tx_energy(p_up_w: f64, cut_bits: f64, up_rate_bps: f64) -> f64 {
+    if cut_bits == 0.0 {
+        0.0
+    } else {
+        p_up_w * cut_bits / up_rate_bps
+    }
+}
+
+/// Downlink transmission energy (eq.20): P · (m_i / Φ).
+#[inline]
+pub fn downlink_tx_energy(p_down_w: f64, result_bits: f64, down_rate_bps: f64, edge_flops: f64) -> f64 {
+    if edge_flops == 0.0 || result_bits == 0.0 {
+        0.0
+    } else {
+        p_down_w * result_bits / down_rate_bps
+    }
+}
+
+/// Total energy for one user's inference (eq.22).
+pub fn total_energy(
+    sc: &SplitConstants,
+    device_flops: f64,
+    r: f64,
+    p_up_w: f64,
+    p_down_w: f64,
+    up_rate_bps: f64,
+    down_rate_bps: f64,
+    cfg: &Config,
+) -> f64 {
+    device_compute_energy(sc, device_flops, &cfg.compute)
+        + edge_compute_energy(sc, r, &cfg.compute)
+        + uplink_tx_energy(p_up_w, sc.cut_bits, up_rate_bps)
+        + downlink_tx_energy(p_down_w, cfg.compute.result_bits, down_rate_bps, sc.edge_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::models::zoo;
+
+    #[test]
+    fn device_only_energy_is_compute_only() {
+        let cfg = Config::default();
+        let m = zoo::nin();
+        let sc = m.split_constants(m.num_layers());
+        let e = total_energy(&sc, 1e9, 4.0, 0.1, 1.0, 1e6, 1e6, &cfg);
+        let dev = device_compute_energy(&sc, 1e9, &cfg.compute);
+        assert!((e - dev).abs() < 1e-15);
+        assert!(e > 0.0);
+    }
+
+    #[test]
+    fn edge_energy_quadratic_in_capability() {
+        let cfg = Config::default();
+        let m = zoo::vgg16();
+        let sc = m.split_constants(2);
+        // λ(r)=r^0.85 ⇒ capability ratio for r=4 vs r=1 is 4^0.85; energy
+        // ratio should be its square.
+        let e1 = edge_compute_energy(&sc, 1.0, &cfg.compute);
+        let e4 = edge_compute_energy(&sc, 4.0, &cfg.compute);
+        let expect = 4.0f64.powf(0.85 * 2.0);
+        assert!((e4 / e1 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tx_energy_is_power_times_airtime() {
+        assert!((uplink_tx_energy(0.2, 1e6, 2e6) - 0.1).abs() < 1e-12);
+        assert_eq!(uplink_tx_energy(0.2, 0.0, 2e6), 0.0);
+        assert_eq!(downlink_tx_energy(1.0, 320.0, 1e6, 0.0), 0.0);
+    }
+
+    #[test]
+    fn offload_more_shifts_energy_to_edge() {
+        let cfg = Config::default();
+        let m = zoo::yolov2();
+        let all_dev = m.split_constants(m.num_layers());
+        let all_edge = m.split_constants(0);
+        assert!(
+            device_compute_energy(&all_dev, 1e9, &cfg.compute)
+                > device_compute_energy(&all_edge, 1e9, &cfg.compute)
+        );
+        assert!(
+            edge_compute_energy(&all_edge, 4.0, &cfg.compute)
+                > edge_compute_energy(&all_dev, 4.0, &cfg.compute)
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Inference-delay model (paper §II.B, eq.1–eq.12).
+//!
+//! T_i = T_device(s) + T_server(s, r) + w_s / R_up + m_i / R_down.
+//!
+//! The edge server is a multicore CPU whose execution time is *not* linear
+//! in the allocated resource units; the compensation function λ(r) = r^γ
+//! (γ < 1, monotone increasing, sub-linear — all the paper requires of λ)
+//! models the measured non-linearity of [18].
+
+use crate::config::{ComputeConfig, Config};
+use crate::models::SplitConstants;
+
+/// Multicore compensation λ(r): effective parallel speedup of r units.
+#[inline]
+pub fn lambda_r(r: f64, gamma: f64) -> f64 {
+    r.max(1e-9).powf(gamma)
+}
+
+/// dλ/dr — used by the analytic gradient.
+#[inline]
+pub fn dlambda_dr(r: f64, gamma: f64) -> f64 {
+    gamma * r.max(1e-9).powf(gamma - 1.0)
+}
+
+/// Device-side inference delay (eq.1): Σ f_δ / c_i.
+#[inline]
+pub fn device_delay(sc: &SplitConstants, device_flops: f64) -> f64 {
+    sc.device_flops / device_flops
+}
+
+/// Edge-side inference delay (eq.3): Σ f_δ / (λ(r)·c_min).
+#[inline]
+pub fn server_delay(sc: &SplitConstants, r: f64, cc: &ComputeConfig) -> f64 {
+    if sc.edge_flops == 0.0 {
+        0.0
+    } else {
+        sc.edge_flops / (lambda_r(r, cc.lambda_gamma) * cc.edge_unit_flops)
+    }
+}
+
+/// Uplink transmission delay (eq.7): w_s / R. Rate `INFINITY` or payload 0 ⇒ 0.
+#[inline]
+pub fn uplink_delay(cut_bits: f64, rate_bps: f64) -> f64 {
+    if cut_bits == 0.0 {
+        0.0
+    } else {
+        cut_bits / rate_bps
+    }
+}
+
+/// Downlink result delay (eq.10): m_i / Φ. Zero when nothing ran on the edge.
+#[inline]
+pub fn downlink_delay(result_bits: f64, rate_bps: f64, edge_flops: f64) -> f64 {
+    if edge_flops == 0.0 || result_bits == 0.0 {
+        0.0
+    } else {
+        result_bits / rate_bps
+    }
+}
+
+/// Total end-to-end delay (eq.12) for one user.
+pub fn total_delay(
+    sc: &SplitConstants,
+    device_flops: f64,
+    r: f64,
+    up_rate_bps: f64,
+    down_rate_bps: f64,
+    cfg: &Config,
+) -> f64 {
+    device_delay(sc, device_flops)
+        + server_delay(sc, r, &cfg.compute)
+        + uplink_delay(sc.cut_bits, up_rate_bps)
+        + downlink_delay(cfg.compute.result_bits, down_rate_bps, sc.edge_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::models::zoo;
+
+    #[test]
+    fn lambda_properties() {
+        let g = 0.85;
+        // monotone increasing
+        assert!(lambda_r(2.0, g) > lambda_r(1.0, g));
+        assert!(lambda_r(16.0, g) > lambda_r(8.0, g));
+        // sub-linear: doubling r less than doubles λ
+        assert!(lambda_r(8.0, g) < 2.0 * lambda_r(4.0, g));
+        // λ(1) = 1 (single unit = unit capability)
+        assert!((lambda_r(1.0, g) - 1.0).abs() < 1e-12);
+        // derivative check vs finite differences
+        let h = 1e-6;
+        let fd = (lambda_r(3.0 + h, g) - lambda_r(3.0 - h, g)) / (2.0 * h);
+        assert!((dlambda_dr(3.0, g) - fd).abs() < 1e-6);
+    }
+
+    #[test]
+    fn device_only_has_no_tx_or_server_delay() {
+        let cfg = Config::default();
+        let m = zoo::nin();
+        let sc = m.split_constants(m.num_layers());
+        let t = total_delay(&sc, 1e9, 4.0, 1e6, 1e6, &cfg);
+        assert!((t - m.total_flops() / 1e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_only_has_no_device_delay() {
+        let cfg = Config::default();
+        let m = zoo::nin();
+        let sc = m.split_constants(0);
+        assert_eq!(device_delay(&sc, 1e9), 0.0);
+        assert!(server_delay(&sc, 4.0, &cfg.compute) > 0.0);
+        assert!(uplink_delay(sc.cut_bits, 1e6) > 0.0);
+    }
+
+    #[test]
+    fn more_edge_resource_less_server_delay() {
+        let cfg = Config::default();
+        let m = zoo::vgg16();
+        let sc = m.split_constants(3);
+        assert!(server_delay(&sc, 8.0, &cfg.compute) < server_delay(&sc, 2.0, &cfg.compute));
+    }
+
+    #[test]
+    fn split_sweep_delay_is_finite_everywhere() {
+        let cfg = Config::default();
+        for m in zoo::all() {
+            for s in 0..=m.num_layers() {
+                let sc = m.split_constants(s);
+                let t = total_delay(&sc, 1e9, 4.0, 5e5, 5e5, &cfg);
+                assert!(t.is_finite() && t > 0.0, "{} split {s}: {t}", m.name);
+            }
+        }
+    }
+}

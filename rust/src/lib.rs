@@ -1,0 +1,40 @@
+//! # ERA — QoE-Aware Split Inference Accelerating for NOMA-based Edge Intelligence
+//!
+//! A production-shaped reproduction of the ERA paper as a three-layer
+//! Rust + JAX + Pallas system (see DESIGN.md):
+//!
+//! * [`net`] — the NOMA multi-cell wireless substrate (Rayleigh fading,
+//!   SIC decode ordering, intra/inter-cell interference).
+//! * [`models`] — the DNN model zoo (NiN / YOLOv2 / VGG16 layer profiles).
+//! * [`latency`], [`energy`], [`qoe`] — the paper's §II models.
+//! * [`optimizer`] — the ERA contribution: relaxed utility Γ, analytic
+//!   gradients, projected GD, and the Li-GD loop-iteration warm start.
+//! * [`baselines`] — Device-Only, Edge-Only, Neurosurgeon, DNN-Surgeon,
+//!   IAO, DINA comparison schemes.
+//! * [`coordinator`] — the serving stack: request routing, cohort batching,
+//!   channel/power/split decisions, dispatch.
+//! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them from the Rust request path.
+//! * [`sim`], [`trace`] — episode simulation + workload generation.
+//! * [`metrics`], [`figures`] — evaluation metrics and the harness that
+//!   regenerates every figure of the paper's §V.
+//!
+//! Python (JAX + Pallas) exists only in the build path (`make artifacts`);
+//! the serving binary is pure Rust once `artifacts/` is populated.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod figures;
+pub mod latency;
+pub mod metrics;
+pub mod models;
+pub mod net;
+pub mod optimizer;
+pub mod qoe;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

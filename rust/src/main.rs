@@ -1,0 +1,260 @@
+//! `era` — the leader binary.
+//!
+//! Subcommands (hand-rolled parsing; no clap offline):
+//!   era figures [--fig N] [--scale S] [--out PATH]   regenerate paper figures
+//!   era plan    [--model M] [--preset P] [--seed N]   one planning pass + report
+//!   era serve   [--model M] [--preset P] [--workers N] [--artifacts DIR]
+//!   era ligd-demo                                     Li-GD vs cold GD iterations
+//!   era info                                          model zoo / config summary
+
+use era::baselines::{ChannelModel, DeviceOnly, Strategy};
+use era::config::presets;
+use era::coordinator::{plan_era_opts, EraStrategy};
+use era::figures::Harness;
+use era::metrics::evaluate;
+use era::models::zoo;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    let result = match cmd {
+        "figures" => cmd_figures(&flags),
+        "plan" => cmd_plan(&flags),
+        "serve" => cmd_serve(&flags),
+        "ligd-demo" => cmd_ligd_demo(&flags),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: era <figures|plan|serve|ligd-demo|info> [flags]\n\
+                 figures  --fig N --scale S --out PATH   regenerate paper figures\n\
+                 plan     --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N\n\
+                 serve    --model M --preset P --workers N --artifacts DIR --tasks K\n\
+                 ligd-demo                               Li-GD vs cold-start GD\n\
+                 info                                    model zoo summary"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_figures(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let scale: f64 = flags
+        .get("scale")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1.0);
+    let h = Harness::new(scale);
+    let figs = match flags.get("fig") {
+        Some(f) => h.generate(f.parse()?),
+        None => h.generate_all(),
+    };
+    anyhow::ensure!(!figs.is_empty(), "unknown figure id");
+    let mut md = String::new();
+    for f in &figs {
+        md.push_str(&f.to_markdown());
+    }
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &md)?;
+            eprintln!("wrote {} figures to {path}", figs.len());
+        }
+        None => print!("{md}"),
+    }
+    Ok(())
+}
+
+fn cfg_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<era::config::Config> {
+    let preset = flags.get("preset").map(String::as_str).unwrap_or("medium");
+    let mut cfg = presets::by_name(preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?;
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    if let Some(m) = flags.get("model") {
+        cfg.workload.model = m.clone();
+    }
+    if let Some(path) = flags.get("config") {
+        cfg = era::config::Config::load(std::path::Path::new(path))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let model = zoo::by_name(&cfg.workload.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.workload.model))?;
+    let net = era::net::Network::generate(&cfg, cfg.seed);
+    let t0 = std::time::Instant::now();
+    let (ds, stats) = era::coordinator::plan_era(&cfg, &net, &model);
+    let dt = t0.elapsed();
+    let o = evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
+    let dev = DeviceOnly.decide(&cfg, &net, &model);
+    let od = evaluate(&cfg, &net, &model, &dev, ChannelModel::Orthogonal);
+    println!("model            : {}", model.name);
+    println!(
+        "users / APs / M  : {} / {} / {}",
+        cfg.network.num_users, cfg.network.num_aps, cfg.network.num_subchannels
+    );
+    println!(
+        "plan time        : {:.1} ms ({} cohorts, {} GD iters)",
+        dt.as_secs_f64() * 1e3,
+        stats.cohorts,
+        stats.total_gd_iters
+    );
+    println!(
+        "mean delay       : {:.3} ms (device-only {:.3} ms)",
+        o.mean_delay() * 1e3,
+        od.mean_delay() * 1e3
+    );
+    println!(
+        "latency speedup  : {:.2}x vs device-only",
+        o.latency_speedup_vs(&od)
+    );
+    println!(
+        "mean energy      : {:.3} mJ (device-only {:.3} mJ)",
+        o.mean_energy() * 1e3,
+        od.mean_energy() * 1e3
+    );
+    println!(
+        "QoE violations   : {}/{} ({:.1}%)",
+        o.qoe.num_violating,
+        o.qoe.num_users,
+        o.qoe.violation_frac() * 100.0
+    );
+    println!("sum DCT          : {:.2} ms", o.qoe.sum_dct_s * 1e3);
+    let offloaders = ds.iter().filter(|d| d.offloads(&model)).count();
+    println!("offloaders       : {offloaders}/{}", ds.len());
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = cfg_from_flags(flags)?;
+    let workers: usize = flags
+        .get("workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let tasks: usize = flags
+        .get("tasks")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let model = zoo::by_name(&cfg.workload.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.workload.model))?;
+    let net = era::net::Network::generate(&cfg, cfg.seed);
+    let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
+    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
+    let trace = era::trace::fixed_count_trace(&cfg, tasks, cfg.seed + 1);
+
+    // Optional real-PJRT backend when artifacts exist.
+    let art_dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(era::runtime::Runtime::default_dir);
+    let backend: Option<std::sync::Arc<dyn era::coordinator::server::InferenceBackend>> =
+        if era::runtime::Runtime::artifacts_present(&art_dir) {
+            let rt = era::runtime::Runtime::cpu(&art_dir)?;
+            let (nl, sizes) = era::runtime::executor::split_cnn_shape();
+            match era::runtime::SplitCnnExecutor::load(&rt, nl, sizes) {
+                Ok(exe) => {
+                    eprintln!("loaded split-CNN artifacts from {}", art_dir.display());
+                    Some(std::sync::Arc::new(exe))
+                }
+                Err(e) => {
+                    eprintln!("artifacts unusable ({e}); serving in simulation mode");
+                    None
+                }
+            }
+        } else {
+            eprintln!(
+                "no artifacts at {} (run `make artifacts`); simulation mode",
+                art_dir.display()
+            );
+            None
+        };
+    let input = backend.as_ref().map(|_| vec![0.5f32; 32 * 32 * 3]);
+    let rep = era::coordinator::server::serve(
+        &cfg, &net, &model, &ds, &up, &down, &trace, workers, backend, input,
+    );
+    println!("requests served  : {} in {:.2} s", rep.served.len(), rep.wall_s);
+    println!(
+        "throughput       : {:.1} req/s ({} workers)",
+        rep.throughput_rps, workers
+    );
+    println!(
+        "modeled latency  : mean {:.3} ms  p99 {:.3} ms",
+        rep.mean_modeled_latency_s * 1e3,
+        rep.p99_modeled_latency_s * 1e3
+    );
+    if rep.mean_exec_wall_s > 0.0 {
+        println!(
+            "PJRT exec        : mean {:.3} ms per request",
+            rep.mean_exec_wall_s * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_ligd_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let mut cfg = presets::smoke();
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    let model = zoo::yolov2();
+    let net = era::net::Network::generate(&cfg, cfg.seed);
+    for (label, warm) in [("Li-GD (warm start)", true), ("cold-start GD", false)] {
+        let t0 = std::time::Instant::now();
+        let (_, stats) = plan_era_opts(&cfg, &net, &model, warm);
+        println!(
+            "{label:<20} total GD iterations: {:>6}  ({:.1} ms)",
+            stats.total_gd_iters,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    let _ = EraStrategy::default();
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!(
+        "{:<8} {:>7} {:>12} {:>15} {:>15}",
+        "model", "layers", "GFLOPs", "max cut (kbit)", "min cut (kbit)"
+    );
+    for m in zoo::all() {
+        let cuts: Vec<f64> = (1..m.num_layers()).map(|s| m.cut_bits(s)).collect();
+        println!(
+            "{:<8} {:>7} {:>12.3} {:>15.1} {:>15.2}",
+            m.name,
+            m.num_layers(),
+            m.total_flops() / 1e9,
+            cuts.iter().cloned().fold(0.0, f64::max) / 1e3,
+            cuts.iter().cloned().fold(f64::INFINITY, f64::min) / 1e3,
+        );
+    }
+    Ok(())
+}

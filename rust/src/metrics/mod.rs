@@ -1,0 +1,276 @@
+//! Evaluation metrics (paper §V): per-user delay/energy under a channel
+//! model, QoE statistics, latency-speedup and energy-reduction ratios.
+
+pub mod tables;
+
+use crate::baselines::{ChannelModel, Decision};
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::{LinkAssignment, Network};
+use crate::qoe::QoeSummary;
+
+/// Evaluated outcome of one strategy on one network.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub delay_s: Vec<f64>,
+    pub energy_j: Vec<f64>,
+    pub qoe: QoeSummary,
+}
+
+impl Outcome {
+    pub fn sum_delay(&self) -> f64 {
+        self.delay_s.iter().sum()
+    }
+
+    pub fn mean_delay(&self) -> f64 {
+        crate::util::mean(&self.delay_s)
+    }
+
+    pub fn sum_energy(&self) -> f64 {
+        self.energy_j.iter().sum()
+    }
+
+    pub fn mean_energy(&self) -> f64 {
+        crate::util::mean(&self.energy_j)
+    }
+
+    /// Latency speedup of `self` relative to `base` (paper's metric:
+    /// how many times lower the total inference latency is).
+    pub fn latency_speedup_vs(&self, base: &Outcome) -> f64 {
+        base.sum_delay() / self.sum_delay().max(1e-30)
+    }
+
+    /// Energy-consumption reduction relative to `base`.
+    pub fn energy_reduction_vs(&self, base: &Outcome) -> f64 {
+        base.sum_energy() / self.sum_energy().max(1e-30)
+    }
+}
+
+/// Score a full set of per-user decisions.
+pub fn evaluate(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    decisions: &[Decision],
+    channel_model: ChannelModel,
+) -> Outcome {
+    assert_eq!(decisions.len(), net.num_users());
+    let (up, down) = match channel_model {
+        ChannelModel::Noma => noma_rates(net, decisions),
+        ChannelModel::Orthogonal => orthogonal_rates(cfg, net, decisions),
+    };
+    let mut delay = Vec::with_capacity(decisions.len());
+    let mut energy = Vec::with_capacity(decisions.len());
+    for (u, d) in decisions.iter().enumerate() {
+        let sc = model.split_constants(d.split);
+        delay.push(crate::latency::total_delay(
+            &sc,
+            net.users[u].device_flops,
+            d.r.max(cfg.compute.r_min),
+            up[u],
+            down[u],
+            cfg,
+        ));
+        energy.push(crate::energy::total_energy(
+            &sc,
+            net.users[u].device_flops,
+            d.r.max(cfg.compute.r_min),
+            d.p_up,
+            d.p_down,
+            up[u],
+            down[u],
+            cfg,
+        ));
+    }
+    let qoe = QoeSummary::compute(
+        delay
+            .iter()
+            .zip(net.users.iter())
+            .map(|(&t, u)| (t, u.qoe_threshold_s)),
+        cfg.qoe.sigmoid_a,
+    );
+    Outcome {
+        delay_s: delay,
+        energy_j: energy,
+        qoe,
+    }
+}
+
+/// NOMA rates from concrete decisions (delegates to the net substrate).
+fn noma_rates(net: &Network, decisions: &[Decision]) -> (Vec<f64>, Vec<f64>) {
+    let alloc: Vec<LinkAssignment> = decisions
+        .iter()
+        .map(|d| LinkAssignment {
+            up_ch: d.up_ch,
+            down_ch: d.down_ch,
+            p_up: d.p_up,
+            p_down: d.p_down,
+            r: d.r,
+            split: d.split,
+        })
+        .collect();
+    let rates = net.rates(&alloc);
+    (rates.up, rates.down)
+}
+
+/// Orthogonal (baseline) channel model: no SIC; same-cell co-channel users
+/// time-share the subchannel (rate ÷ n); other-cell co-channel users
+/// interfere at their transmit power.
+pub fn orthogonal_rates(
+    cfg: &Config,
+    net: &Network,
+    decisions: &[Decision],
+) -> (Vec<f64>, Vec<f64>) {
+    let nu = net.num_users();
+    let n_aps = cfg.network.num_aps;
+    let m = cfg.network.num_subchannels;
+    let mut up = vec![f64::INFINITY; nu];
+    let mut down = vec![f64::INFINITY; nu];
+
+    // per-(ap, ch) sharer counts, per-(ap,ch) uplink interference power at
+    // each AP, and downlink power sums.
+    let mut up_count = vec![vec![0usize; m]; n_aps];
+    let mut down_count = vec![vec![0usize; m]; n_aps];
+    let mut ap_ch_power = vec![vec![0.0; m]; n_aps];
+    for (u, d) in decisions.iter().enumerate() {
+        let ap = net.topo.user_ap[u];
+        if let Some(ch) = d.up_ch {
+            up_count[ap][ch] += 1;
+        }
+        if let Some(ch) = d.down_ch {
+            down_count[ap][ch] += 1;
+            ap_ch_power[ap][ch] += d.p_down;
+        }
+    }
+    // uplink inter-cell interference received at AP a on channel ch
+    let mut up_inter = vec![vec![0.0; m]; n_aps];
+    for (t, dt) in decisions.iter().enumerate() {
+        if let Some(ch) = dt.up_ch {
+            let home = net.topo.user_ap[t];
+            for a in 0..n_aps {
+                if a != home {
+                    up_inter[a][ch] += dt.p_up * net.channels.up[t][a][ch];
+                }
+            }
+        }
+    }
+
+    for (u, d) in decisions.iter().enumerate() {
+        let ap = net.topo.user_ap[u];
+        if let Some(ch) = d.up_ch {
+            let g = net.channels.up[u][ap][ch];
+            let sinr = d.p_up * g / (up_inter[ap][ch] + net.noise_w);
+            let share = up_count[ap][ch].max(1) as f64;
+            up[u] = net.subchannel_bw_hz * crate::util::log2_1p(sinr) / share;
+        }
+        if let Some(ch) = d.down_ch {
+            let mut inter = 0.0;
+            for x in 0..n_aps {
+                if x != ap {
+                    inter += ap_ch_power[x][ch] * net.channels.down[u][x][ch];
+                }
+            }
+            let g = net.channels.down[u][ap][ch];
+            let sinr = d.p_down * g / (inter + net.noise_w);
+            let share = down_count[ap][ch].max(1) as f64;
+            down[u] = net.subchannel_bw_hz * crate::util::log2_1p(sinr) / share;
+        }
+    }
+    (up, down)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{DeviceOnly, EdgeOnly, Neurosurgeon, Strategy};
+    use crate::config::presets;
+    use crate::models::zoo;
+
+    fn setup() -> (Config, Network, ModelProfile) {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 17);
+        (cfg, net, zoo::yolov2())
+    }
+
+    #[test]
+    fn device_only_outcome_matches_closed_form() {
+        let (cfg, net, model) = setup();
+        let ds = DeviceOnly.decide(&cfg, &net, &model);
+        let o = evaluate(&cfg, &net, &model, &ds, ChannelModel::Orthogonal);
+        for (u, &t) in o.delay_s.iter().enumerate() {
+            let expect = model.total_flops() / net.users[u].device_flops;
+            assert!((t - expect).abs() < 1e-12);
+        }
+        assert!(o.sum_energy() > 0.0);
+    }
+
+    #[test]
+    fn neurosurgeon_beats_device_only_on_latency() {
+        let (cfg, net, model) = setup();
+        let dev = evaluate(
+            &cfg,
+            &net,
+            &model,
+            &DeviceOnly.decide(&cfg, &net, &model),
+            ChannelModel::Orthogonal,
+        );
+        let ns = evaluate(
+            &cfg,
+            &net,
+            &model,
+            &Neurosurgeon.decide(&cfg, &net, &model),
+            ChannelModel::Orthogonal,
+        );
+        let speedup = ns.latency_speedup_vs(&dev);
+        assert!(speedup > 1.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn device_only_wins_on_energy() {
+        // Paper Fig.7: Device-Only has the lowest energy consumption.
+        let (cfg, net, model) = setup();
+        let dev = evaluate(
+            &cfg,
+            &net,
+            &model,
+            &DeviceOnly.decide(&cfg, &net, &model),
+            ChannelModel::Orthogonal,
+        );
+        let eo = evaluate(
+            &cfg,
+            &net,
+            &model,
+            &EdgeOnly.decide(&cfg, &net, &model),
+            ChannelModel::Orthogonal,
+        );
+        assert!(dev.sum_energy() < eo.sum_energy());
+    }
+
+    #[test]
+    fn time_sharing_halves_rate() {
+        // Two users of the same cell on the same channel should each see
+        // exactly half the single-user rate (same fading draw).
+        let (cfg, net, model) = setup();
+        let users0 = net.topo.users_of_ap(0);
+        let (a, b) = (users0[0], users0[1]);
+        let mk = |chs: &[(usize, Option<usize>)]| -> Vec<Decision> {
+            let mut ds: Vec<Decision> = (0..net.num_users())
+                .map(|_| Decision::device_only(&model))
+                .collect();
+            for &(u, ch) in chs {
+                ds[u] = Decision {
+                    split: 3,
+                    up_ch: ch,
+                    down_ch: None,
+                    p_up: 0.1,
+                    p_down: 0.0,
+                    r: 2.0,
+                };
+            }
+            ds
+        };
+        let solo = orthogonal_rates(&cfg, &net, &mk(&[(a, Some(0))])).0[a];
+        let shared = orthogonal_rates(&cfg, &net, &mk(&[(a, Some(0)), (b, Some(0))])).0[a];
+        assert!((shared - solo / 2.0).abs() < 1e-6 * solo);
+    }
+}

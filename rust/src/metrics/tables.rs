@@ -1,0 +1,129 @@
+//! Markdown / CSV table emitters for the figure harness and EXPERIMENTS.md.
+
+/// A simple named data series (one line in a paper figure).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A figure = x-axis label, y-axis label, several series.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str, x: &str, y: &str) -> Self {
+        Self {
+            id: id.into(),
+            title: title.into(),
+            x_label: x.into(),
+            y_label: y.into(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, points: Vec<(f64, f64)>) {
+        self.series.push(Series {
+            name: name.into(),
+            points,
+        });
+    }
+
+    /// Render as a Markdown table: one row per x, one column per series.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {} — {}\n\n", self.id, self.title));
+        out.push_str(&format!("| {} |", self.x_label));
+        for s in &self.series {
+            out.push_str(&format!(" {} |", s.name));
+        }
+        out.push('\n');
+        out.push_str("|---|");
+        for _ in &self.series {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        let xs: Vec<f64> = self
+            .series
+            .first()
+            .map(|s| s.points.iter().map(|p| p.0).collect())
+            .unwrap_or_default();
+        for (row, &x) in xs.iter().enumerate() {
+            out.push_str(&format!("| {} |", fmt(x)));
+            for s in &self.series {
+                let y = s.points.get(row).map(|p| p.1).unwrap_or(f64::NAN);
+                out.push_str(&format!(" {} |", fmt(y)));
+            }
+            out.push('\n');
+        }
+        out.push('\n');
+        out
+    }
+
+    /// Render as CSV (x, series1, series2, ...).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{}", self.x_label.replace(',', ";")));
+        for s in &self.series {
+            out.push_str(&format!(",{}", s.name.replace(',', ";")));
+        }
+        out.push('\n');
+        let xs: Vec<f64> = self
+            .series
+            .first()
+            .map(|s| s.points.iter().map(|p| p.0).collect())
+            .unwrap_or_default();
+        for (row, &x) in xs.iter().enumerate() {
+            out.push_str(&fmt(x));
+            for s in &self.series {
+                let y = s.points.get(row).map(|p| p.1).unwrap_or(f64::NAN);
+                out.push_str(&format!(",{}", fmt(y)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn fmt(v: f64) -> String {
+    if v.is_nan() {
+        "-".into()
+    } else if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.001 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_roundtrip() {
+        let mut f = Figure::new("fig6", "Latency speedup", "model", "speedup");
+        f.push("era", vec![(1.0, 6.9), (2.0, 6.6)]);
+        f.push("neurosurgeon", vec![(1.0, 5.0), (2.0, 4.9)]);
+        let md = f.to_markdown();
+        assert!(md.contains("| model | era | neurosurgeon |"));
+        assert!(md.contains("6.9"));
+        let csv = f.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("model,era,neurosurgeon"));
+    }
+
+    #[test]
+    fn fmt_handles_extremes() {
+        assert_eq!(fmt(f64::NAN), "-");
+        assert!(fmt(1.23456e-9).contains('e'));
+        assert_eq!(fmt(0.0), "0");
+    }
+}

@@ -1,0 +1,164 @@
+//! DNN layer descriptors: FLOPs and activation sizes per layer.
+//!
+//! The optimizer never executes these networks — it only needs, per layer δ,
+//! the computation task f_δ (FLOPs) and the intermediate activation size w_s
+//! at each candidate split point (paper §II.A, Fig.4). Profiles are computed
+//! analytically from layer hyper-parameters on CIFAR-10-shaped inputs
+//! (32×32×3), the dataset the paper evaluates on.
+
+/// Kind of a profiled layer (paper eq.2 distinguishes conv/pool/relu; we fold
+/// ReLU FLOPs into the producing layer as the usual profiling convention and
+/// track FC separately for the classifier head).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Pool,
+    Fc,
+}
+
+/// One profiled layer.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: &'static str,
+    pub kind: LayerKind,
+    /// Forward FLOPs for this layer (f_δ in eq.1/3).
+    pub flops: f64,
+    /// Output activation size in bits (w_s when splitting after this layer).
+    pub out_bits: f64,
+}
+
+/// Running spatial state while building a profile.
+#[derive(Clone, Copy, Debug)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Tensor {
+    pub fn bits(&self) -> f64 {
+        (self.h * self.w * self.c) as f64 * 32.0
+    }
+}
+
+/// Profile builder: chains conv/pool/fc layers and records per-layer stats.
+pub struct ProfileBuilder {
+    cur: Tensor,
+    layers: Vec<Layer>,
+}
+
+impl ProfileBuilder {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self {
+            cur: Tensor { h, w, c },
+            layers: Vec::new(),
+        }
+    }
+
+    /// Convolution (same padding unless stride shrinks), ReLU folded in.
+    pub fn conv(mut self, name: &'static str, cout: usize, k: usize, stride: usize) -> Self {
+        let t = self.cur;
+        let oh = (t.h + stride - 1) / stride;
+        let ow = (t.w + stride - 1) / stride;
+        // MACs = k·k·Cin·Cout·H·W ; FLOPs = 2·MACs (+ ReLU ≈ H·W·Cout).
+        let macs = (k * k * t.c * cout * oh * ow) as f64;
+        let flops = 2.0 * macs + (oh * ow * cout) as f64;
+        self.cur = Tensor {
+            h: oh,
+            w: ow,
+            c: cout,
+        };
+        self.layers.push(Layer {
+            name,
+            kind: LayerKind::Conv,
+            flops,
+            out_bits: self.cur.bits(),
+        });
+        self
+    }
+
+    /// Max pooling k×k stride k.
+    pub fn pool(mut self, name: &'static str, k: usize) -> Self {
+        let t = self.cur;
+        let oh = (t.h / k).max(1);
+        let ow = (t.w / k).max(1);
+        let flops = (t.h * t.w * t.c) as f64; // one compare per input element
+        self.cur = Tensor {
+            h: oh,
+            w: ow,
+            c: t.c,
+        };
+        self.layers.push(Layer {
+            name,
+            kind: LayerKind::Pool,
+            flops,
+            out_bits: self.cur.bits(),
+        });
+        self
+    }
+
+    /// Global average pool to 1×1.
+    pub fn global_pool(mut self, name: &'static str) -> Self {
+        let t = self.cur;
+        let flops = (t.h * t.w * t.c) as f64;
+        self.cur = Tensor { h: 1, w: 1, c: t.c };
+        self.layers.push(Layer {
+            name,
+            kind: LayerKind::Pool,
+            flops,
+            out_bits: self.cur.bits(),
+        });
+        self
+    }
+
+    /// Fully-connected layer.
+    pub fn fc(mut self, name: &'static str, out: usize) -> Self {
+        let t = self.cur;
+        let inn = t.h * t.w * t.c;
+        let flops = 2.0 * (inn * out) as f64;
+        self.cur = Tensor { h: 1, w: 1, c: out };
+        self.layers.push(Layer {
+            name,
+            kind: LayerKind::Fc,
+            flops,
+            out_bits: self.cur.bits(),
+        });
+        self
+    }
+
+    pub fn finish(self) -> Vec<Layer> {
+        self.layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_hand_check() {
+        // 3×3 conv, 3→16 channels on 32×32, stride 1:
+        // MACs = 9·3·16·32·32 = 442368; FLOPs = 2·MACs + 32·32·16.
+        let layers = ProfileBuilder::new(32, 32, 3)
+            .conv("c1", 16, 3, 1)
+            .finish();
+        assert_eq!(layers.len(), 1);
+        assert_eq!(layers[0].flops, 2.0 * 442_368.0 + 16_384.0);
+        assert_eq!(layers[0].out_bits, (32 * 32 * 16) as f64 * 32.0);
+    }
+
+    #[test]
+    fn pool_halves_spatial() {
+        let layers = ProfileBuilder::new(32, 32, 8)
+            .pool("p", 2)
+            .finish();
+        assert_eq!(layers[0].out_bits, (16 * 16 * 8) as f64 * 32.0);
+    }
+
+    #[test]
+    fn fc_shape() {
+        let layers = ProfileBuilder::new(1, 1, 256).fc("fc", 10).finish();
+        assert_eq!(layers[0].flops, 2.0 * 2560.0);
+        assert_eq!(layers[0].out_bits, 320.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! DNN model zoo: analytic layer profiles and split-point bookkeeping
+//! (paper §II.A).
+//!
+//! A split decision `s ∈ 0..=F` means the first `s` layers run on the
+//! device and layers `s+1..F` run on the edge server; the activation
+//! produced by layer `s` crosses the wireless channel. Following the
+//! paper's convention, `s = 0` offloads the whole model (the raw input is
+//! transmitted) and `s = F` computes everything on the device (nothing is
+//! transmitted, and no downlink result either).
+
+pub mod layers;
+pub mod zoo;
+
+pub use layers::{Layer, LayerKind, ProfileBuilder, Tensor};
+
+/// An immutable per-model profile with prefix sums for O(1) split queries.
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+    /// Input tensor size in bits (transmitted when s = 0).
+    pub input_bits: f64,
+    /// Over-the-air compression for transmitted activations: 8-bit
+    /// quantization (4× vs f32) + 2× lossless entropy coding = 1/8. Split
+    /// inference systems ship quantized features; without this the paper's
+    /// ms-scale delay regime is unreachable on its own 10 MHz / 250-channel
+    /// setup (see DESIGN.md §Substitutions).
+    pub tx_bits_factor: f64,
+    /// prefix_flops[s] = Σ_{δ≤s} f_δ  (prefix_flops[0] = 0).
+    prefix_flops: Vec<f64>,
+}
+
+impl ModelProfile {
+    pub fn new(name: &'static str, layers: Vec<Layer>) -> Self {
+        let mut prefix = Vec::with_capacity(layers.len() + 1);
+        prefix.push(0.0);
+        let mut acc = 0.0;
+        for l in &layers {
+            acc += l.flops;
+            prefix.push(acc);
+        }
+        Self {
+            name,
+            layers,
+            input_bits: (32 * 32 * 3) as f64 * 32.0,
+            tx_bits_factor: 1.0 / 8.0,
+            prefix_flops: prefix,
+        }
+    }
+
+    /// Number of layers F.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Number of split decisions (0..=F inclusive).
+    pub fn num_splits(&self) -> usize {
+        self.layers.len() + 1
+    }
+
+    /// Device-side FLOPs for split s: Σ_{δ=1..s} f_δ  (eq.1 numerator).
+    pub fn device_flops(&self, s: usize) -> f64 {
+        self.prefix_flops[s]
+    }
+
+    /// Edge-side FLOPs for split s: Σ_{δ=s+1..F} f_δ  (eq.3 numerator).
+    pub fn edge_flops(&self, s: usize) -> f64 {
+        self.prefix_flops[self.num_layers()] - self.prefix_flops[s]
+    }
+
+    /// Total model FLOPs Z (paper's Z_i).
+    pub fn total_flops(&self) -> f64 {
+        self.prefix_flops[self.num_layers()]
+    }
+
+    /// Intermediate data w_s in bits crossing the channel for split s.
+    /// s = 0 transmits the raw input; s = F transmits nothing.
+    pub fn cut_bits(&self, s: usize) -> f64 {
+        let raw = if s == 0 {
+            self.input_bits
+        } else if s == self.num_layers() {
+            0.0
+        } else {
+            self.layers[s - 1].out_bits
+        };
+        raw * self.tx_bits_factor
+    }
+
+    /// Whether a split point requires any transmission at all.
+    pub fn is_device_only(&self, s: usize) -> bool {
+        s == self.num_layers()
+    }
+
+    /// The (f_l, f_e, w) triple for split s — the constants Li-GD consumes.
+    pub fn split_constants(&self, s: usize) -> SplitConstants {
+        SplitConstants {
+            split: s,
+            device_flops: self.device_flops(s),
+            edge_flops: self.edge_flops(s),
+            cut_bits: self.cut_bits(s),
+        }
+    }
+}
+
+/// Constants for one candidate split point (known in advance, stored with
+/// the model on the device — paper §III.A).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitConstants {
+    pub split: usize,
+    pub device_flops: f64,
+    pub edge_flops: f64,
+    pub cut_bits: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn prefix_sums_consistent() {
+        for m in zoo::all() {
+            for s in 0..=m.num_layers() {
+                let d = m.device_flops(s);
+                let e = m.edge_flops(s);
+                assert!((d + e - m.total_flops()).abs() < 1e-6 * m.total_flops());
+            }
+            assert_eq!(m.device_flops(0), 0.0);
+            assert_eq!(m.edge_flops(m.num_layers()), 0.0);
+        }
+    }
+
+    #[test]
+    fn cut_bits_boundaries() {
+        let m = zoo::nin();
+        assert_eq!(m.cut_bits(0), m.input_bits * m.tx_bits_factor);
+        assert_eq!(m.cut_bits(m.num_layers()), 0.0);
+        for s in 1..m.num_layers() {
+            assert_eq!(m.cut_bits(s), m.layers[s - 1].out_bits * m.tx_bits_factor);
+        }
+    }
+
+    #[test]
+    fn split_constants_roundtrip() {
+        let m = zoo::yolov2();
+        let sc = m.split_constants(5);
+        assert_eq!(sc.split, 5);
+        assert_eq!(sc.device_flops, m.device_flops(5));
+        assert_eq!(sc.cut_bits, m.cut_bits(5));
+    }
+}

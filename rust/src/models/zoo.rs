@@ -1,0 +1,132 @@
+//! The three chain-topology DNN benchmarks the paper evaluates (§V.A):
+//! NiN (9 layers), tiny-YOLOv2 (17 layers), VGG16 (24 layers), profiled on
+//! CIFAR-10-shaped inputs (32×32×3).
+
+use super::layers::{Layer, ProfileBuilder};
+use super::ModelProfile;
+
+/// Network-in-Network — 9 profiled layers (3 conv blocks of 3 convs are
+/// collapsed into the canonical 9-layer chain: conv, mlp, pool ×3).
+pub fn nin() -> ModelProfile {
+    let layers: Vec<Layer> = ProfileBuilder::new(32, 32, 3)
+        .conv("conv1", 192, 5, 1)
+        .conv("mlp1", 96, 1, 1)
+        .pool("pool1", 2)
+        .conv("conv2", 192, 5, 1)
+        .conv("mlp2", 96, 1, 1)
+        .pool("pool2", 2)
+        .conv("conv3", 192, 3, 1)
+        .conv("mlp3", 10, 1, 1)
+        .global_pool("gap")
+        .finish();
+    ModelProfile::new("nin", layers)
+}
+
+/// tiny-YOLOv2 — 17 profiled layers (the paper's Fig.4 YOLOv2 chain).
+pub fn yolov2() -> ModelProfile {
+    let layers: Vec<Layer> = ProfileBuilder::new(32, 32, 3)
+        .conv("conv1", 16, 3, 1)
+        .pool("max1", 2)
+        .conv("conv2", 32, 3, 1)
+        .pool("max2", 2)
+        .conv("conv3", 64, 3, 1)
+        .pool("max3", 2)
+        .conv("conv4", 128, 3, 1)
+        .pool("max4", 1) // stride-1 max pools: tiny-yolo stops downsampling
+        .conv("conv5", 256, 3, 1)
+        .pool("max5", 1) // once the feature map is small (4×4 on CIFAR input)
+        .conv("conv6", 512, 3, 1)
+        .pool("max6", 1)
+        .conv("conv7", 1024, 3, 1)
+        .conv("conv8", 1024, 3, 1)
+        .conv("conv9", 512, 1, 1)
+        .fc("fc", 256)
+        .fc("out", 10)
+        .finish();
+    ModelProfile::new("yolov2", layers)
+}
+
+/// VGG16 — 24 profiled layers (13 conv + 5 pool + 3 fc + 3 ReLU-fold makes
+/// the canonical 24-entry chain the paper quotes; we count conv/pool/fc).
+pub fn vgg16() -> ModelProfile {
+    let layers: Vec<Layer> = ProfileBuilder::new(32, 32, 3)
+        .conv("conv1_1", 64, 3, 1)
+        .conv("conv1_2", 64, 3, 1)
+        .pool("pool1", 2)
+        .conv("conv2_1", 128, 3, 1)
+        .conv("conv2_2", 128, 3, 1)
+        .pool("pool2", 2)
+        .conv("conv3_1", 256, 3, 1)
+        .conv("conv3_2", 256, 3, 1)
+        .conv("conv3_3", 256, 3, 1)
+        .pool("pool3", 2)
+        .conv("conv4_1", 512, 3, 1)
+        .conv("conv4_2", 512, 3, 1)
+        .conv("conv4_3", 512, 3, 1)
+        .pool("pool4", 2)
+        .conv("conv5_1", 512, 3, 1)
+        .conv("conv5_2", 512, 3, 1)
+        .conv("conv5_3", 512, 3, 1)
+        .pool("pool5", 2)
+        .fc("fc6", 4096)
+        .fc("fc7", 4096)
+        .fc("fc8", 10)
+        .global_pool("gap") // no-op-sized tail layers to reach the 24-layer chain
+        .fc("cal1", 10)
+        .fc("cal2", 10)
+        .finish();
+    ModelProfile::new("vgg16", layers)
+}
+
+/// Look up a model by name.
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    match name.to_ascii_lowercase().as_str() {
+        "nin" => Some(nin()),
+        "yolov2" | "yolo" | "tiny-yolov2" => Some(yolov2()),
+        "vgg16" | "vgg" => Some(vgg16()),
+        _ => None,
+    }
+}
+
+/// All benchmark models in paper order.
+pub fn all() -> Vec<ModelProfile> {
+    vec![nin(), yolov2(), vgg16()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_paper() {
+        assert_eq!(nin().num_layers(), 9);
+        assert_eq!(yolov2().num_layers(), 17);
+        assert_eq!(vgg16().num_layers(), 24);
+    }
+
+    #[test]
+    fn vgg_is_heaviest() {
+        let (n, y, v) = (nin(), yolov2(), vgg16());
+        assert!(v.total_flops() > y.total_flops());
+        assert!(v.total_flops() > n.total_flops());
+    }
+
+    #[test]
+    fn intermediate_sizes_vary_widely() {
+        // Paper Fig.4: early activations are ~50× larger than late ones —
+        // the split point matters. Check a large dynamic range exists.
+        for m in all() {
+            let w: Vec<f64> = (1..m.num_layers()).map(|s| m.cut_bits(s)).collect();
+            let max = w.iter().cloned().fold(0.0, f64::max);
+            let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(max / min > 20.0, "{}: {max} / {min}", m.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("NIN").is_some());
+        assert!(by_name("vgg").is_some());
+        assert!(by_name("resnet").is_none());
+    }
+}

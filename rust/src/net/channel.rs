@@ -1,0 +1,120 @@
+//! Per-subchannel channel gains: i.i.d. Rayleigh fading × distance path
+//! loss, for both uplink (device→AP) and downlink (AP→device), including the
+//! cross-links that carry inter-cell interference (paper eq.5/eq.8).
+
+use super::topology::{path_loss, Topology};
+use crate::config::NetworkConfig;
+use crate::util::rng::Pcg32;
+
+/// Channel state for one coherence block.
+///
+/// Layout: `up[user][ap][m]` = |h|² power gain of the uplink from `user` to
+/// `ap` on subchannel `m`; `down[user][ap][m]` = |H|² gain of the downlink
+/// from `ap` to `user`. The same matrices double as the interference
+/// cross-gains (the paper's g and G): the signal link uses the associated
+/// AP's entry and interference uses every other AP's entry.
+#[derive(Clone, Debug)]
+pub struct ChannelState {
+    pub up: Vec<Vec<Vec<f64>>>,
+    pub down: Vec<Vec<Vec<f64>>>,
+    pub num_subchannels: usize,
+}
+
+impl ChannelState {
+    /// Draw one coherence block of i.i.d. Rayleigh fading.
+    pub fn generate(cfg: &NetworkConfig, topo: &Topology, rng: &mut Pcg32) -> Self {
+        let u = topo.num_users();
+        let n = topo.num_aps();
+        let m = cfg.num_subchannels;
+        let mut up = vec![vec![vec![0.0; m]; n]; u];
+        let mut down = vec![vec![vec![0.0; m]; n]; u];
+        for i in 0..u {
+            for a in 0..n {
+                let pl = path_loss(topo.dist[i][a], cfg.path_loss_exp);
+                for c in 0..m {
+                    up[i][a][c] = rng.rayleigh_power(pl);
+                    down[i][a][c] = rng.rayleigh_power(pl);
+                }
+            }
+        }
+        Self {
+            up,
+            down,
+            num_subchannels: m,
+        }
+    }
+
+    /// Uplink gain of user i to its own AP on subchannel m.
+    #[inline]
+    pub fn up_gain(&self, topo: &Topology, i: usize, m: usize) -> f64 {
+        self.up[i][topo.user_ap[i]][m]
+    }
+
+    /// Downlink gain from user i's AP to user i on subchannel m.
+    #[inline]
+    pub fn down_gain(&self, topo: &Topology, i: usize, m: usize) -> f64 {
+        self.down[i][topo.user_ap[i]][m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+
+    fn setup() -> (NetworkConfig, Topology, ChannelState) {
+        let cfg = NetworkConfig {
+            num_aps: 2,
+            num_users: 10,
+            num_subchannels: 4,
+            ..NetworkConfig::default()
+        };
+        let mut rng = Pcg32::new(3, 0);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let ch = ChannelState::generate(&cfg, &topo, &mut rng);
+        (cfg, topo, ch)
+    }
+
+    #[test]
+    fn gains_positive_and_shaped() {
+        let (cfg, topo, ch) = setup();
+        assert_eq!(ch.up.len(), topo.num_users());
+        assert_eq!(ch.up[0].len(), topo.num_aps());
+        assert_eq!(ch.up[0][0].len(), cfg.num_subchannels);
+        for i in 0..topo.num_users() {
+            for a in 0..topo.num_aps() {
+                for m in 0..cfg.num_subchannels {
+                    assert!(ch.up[i][a][m] > 0.0);
+                    assert!(ch.down[i][a][m] > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nearer_ap_has_larger_mean_gain() {
+        // Average fading out over many draws: gain to the associated
+        // (nearest) AP should dominate the gain to a farther AP.
+        let cfg = NetworkConfig {
+            num_aps: 2,
+            num_users: 4,
+            num_subchannels: 64,
+            ..NetworkConfig::default()
+        };
+        let mut rng = Pcg32::new(5, 0);
+        let topo = Topology::generate(&cfg, &mut rng);
+        let ch = ChannelState::generate(&cfg, &topo, &mut rng);
+        for i in 0..topo.num_users() {
+            let a = topo.user_ap[i];
+            let other = 1 - a;
+            if (topo.dist[i][other] / topo.dist[i][a]) < 2.0 {
+                continue; // cell-edge user: fading can dominate
+            }
+            let mean_own: f64 =
+                ch.up[i][a].iter().sum::<f64>() / cfg.num_subchannels as f64;
+            let mean_other: f64 =
+                ch.up[i][other].iter().sum::<f64>() / cfg.num_subchannels as f64;
+            assert!(mean_own > mean_other, "user {i}");
+        }
+    }
+}

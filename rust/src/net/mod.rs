@@ -1,0 +1,108 @@
+//! NOMA multi-cell wireless substrate (paper §II):
+//! topology + Rayleigh fading channels + SIC rate computation.
+
+pub mod channel;
+pub mod noma;
+pub mod topology;
+
+pub use channel::ChannelState;
+pub use noma::{compute_rates, LinkAssignment, LinkRates};
+pub use topology::{path_loss, Pos, Topology};
+
+use crate::config::Config;
+use crate::util::rng::Pcg32;
+
+/// Per-user static state (capabilities + QoE requirement).
+#[derive(Clone, Debug)]
+pub struct UserProfile {
+    /// Device FLOP/s capability c_i.
+    pub device_flops: f64,
+    /// Expected finish time Q_i in seconds (the Acceptable-QoE delay S2).
+    pub qoe_threshold_s: f64,
+}
+
+/// The full generated network: geometry, channels, user profiles.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub topo: Topology,
+    pub channels: ChannelState,
+    pub users: Vec<UserProfile>,
+    /// Per-subchannel bandwidth (Hz) and noise power (W) — cached from cfg.
+    pub subchannel_bw_hz: f64,
+    pub noise_w: f64,
+}
+
+impl Network {
+    /// Generate the whole network from a config + seed (deterministic).
+    pub fn generate(cfg: &Config, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0xA11C);
+        let topo = Topology::generate(&cfg.network, &mut rng);
+        let channels = ChannelState::generate(&cfg.network, &topo, &mut rng);
+        let users = (0..cfg.network.num_users)
+            .map(|_| {
+                let q = cfg.qoe.expected_finish_mean_s
+                    * rng.uniform(
+                        1.0 - cfg.qoe.expected_finish_jitter,
+                        1.0 + cfg.qoe.expected_finish_jitter,
+                    );
+                UserProfile {
+                    device_flops: rng
+                        .uniform(cfg.compute.device_flops_lo, cfg.compute.device_flops_hi),
+                    qoe_threshold_s: q,
+                }
+            })
+            .collect();
+        Self {
+            topo,
+            channels,
+            users,
+            subchannel_bw_hz: cfg.subchannel_bw_hz(),
+            noise_w: cfg.noise_power_w(),
+        }
+    }
+
+    pub fn num_users(&self) -> usize {
+        self.topo.num_users()
+    }
+
+    /// Compute link rates for a concrete allocation.
+    pub fn rates(&self, alloc: &[LinkAssignment]) -> LinkRates {
+        compute_rates(
+            &self.topo,
+            &self.channels,
+            alloc,
+            self.subchannel_bw_hz,
+            self.noise_w,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn generate_smoke_network() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 1);
+        assert_eq!(net.num_users(), cfg.network.num_users);
+        assert_eq!(net.users.len(), cfg.network.num_users);
+        for u in &net.users {
+            assert!(u.device_flops >= cfg.compute.device_flops_lo);
+            assert!(u.device_flops <= cfg.compute.device_flops_hi);
+            assert!(u.qoe_threshold_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = presets::smoke();
+        let a = Network::generate(&cfg, 42);
+        let b = Network::generate(&cfg, 42);
+        assert_eq!(a.topo.user_ap, b.topo.user_ap);
+        assert_eq!(a.channels.up[0][0], b.channels.up[0][0]);
+        let c = Network::generate(&cfg, 43);
+        assert_ne!(a.channels.up[0][0], c.channels.up[0][0]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Physical topology: AP placement, user placement, path loss, association.
+//!
+//! APs are placed on a regular ring around the origin (a planar multi-cell
+//! deployment); each user is dropped uniformly in the disk of one AP and
+//! associates with the **nearest** AP — the paper's nearest-AP / maximum
+//! average channel gain association policy [48].
+
+use crate::config::NetworkConfig;
+use crate::util::rng::Pcg32;
+
+/// 2-D position in meters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pos {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Pos {
+    pub fn dist(&self, other: &Pos) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+/// Deployment geometry: AP positions, user positions, association.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub ap_pos: Vec<Pos>,
+    pub user_pos: Vec<Pos>,
+    /// Associated AP index per user (nearest AP).
+    pub user_ap: Vec<usize>,
+    /// user → AP distance matrix [user][ap] (meters).
+    pub dist: Vec<Vec<f64>>,
+}
+
+impl Topology {
+    /// Generate a deployment from the config and an RNG stream.
+    pub fn generate(cfg: &NetworkConfig, rng: &mut Pcg32) -> Self {
+        let n = cfg.num_aps;
+        let u = cfg.num_users;
+        // APs on a ring with inter-site distance ≈ 1.5 cell radii (overlap
+        // so inter-cell interference is material, as the paper requires).
+        let ring_r = if n == 1 {
+            0.0
+        } else {
+            1.5 * cfg.cell_radius_m / (2.0 * (std::f64::consts::PI / n as f64).sin()).max(1.0)
+        };
+        let ap_pos: Vec<Pos> = (0..n)
+            .map(|i| {
+                let th = 2.0 * std::f64::consts::PI * i as f64 / n as f64;
+                Pos {
+                    x: ring_r * th.cos(),
+                    y: ring_r * th.sin(),
+                }
+            })
+            .collect();
+
+        // Users uniform in the disk of a uniformly chosen AP.
+        let mut user_pos = Vec::with_capacity(u);
+        for _ in 0..u {
+            let home = rng.below(n);
+            let rr = cfg.min_distance_m
+                + (cfg.cell_radius_m - cfg.min_distance_m) * rng.f64().sqrt();
+            let th = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+            user_pos.push(Pos {
+                x: ap_pos[home].x + rr * th.cos(),
+                y: ap_pos[home].y + rr * th.sin(),
+            });
+        }
+
+        // Distances + nearest-AP association.
+        let mut dist = vec![vec![0.0; n]; u];
+        let mut user_ap = vec![0usize; u];
+        for (i, up) in user_pos.iter().enumerate() {
+            let mut best = (0usize, f64::INFINITY);
+            for (a, app) in ap_pos.iter().enumerate() {
+                let d = up.dist(app).max(cfg.min_distance_m);
+                dist[i][a] = d;
+                if d < best.1 {
+                    best = (a, d);
+                }
+            }
+            user_ap[i] = best.0;
+        }
+
+        Self {
+            ap_pos,
+            user_pos,
+            user_ap,
+            dist,
+        }
+    }
+
+    pub fn num_users(&self) -> usize {
+        self.user_pos.len()
+    }
+
+    pub fn num_aps(&self) -> usize {
+        self.ap_pos.len()
+    }
+
+    /// Users associated with AP `n` (the paper's U_n).
+    pub fn users_of_ap(&self, n: usize) -> Vec<usize> {
+        (0..self.num_users())
+            .filter(|&i| self.user_ap[i] == n)
+            .collect()
+    }
+}
+
+/// Distance-based path loss (power gain): d^{-α}, α = path-loss exponent.
+#[inline]
+pub fn path_loss(dist_m: f64, alpha: f64) -> f64 {
+    dist_m.max(1.0).powf(-alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+
+    fn small_cfg() -> NetworkConfig {
+        NetworkConfig {
+            num_aps: 3,
+            num_users: 60,
+            ..NetworkConfig::default()
+        }
+    }
+
+    #[test]
+    fn association_is_nearest() {
+        let mut rng = Pcg32::new(1, 0);
+        let t = Topology::generate(&small_cfg(), &mut rng);
+        for i in 0..t.num_users() {
+            let a = t.user_ap[i];
+            for other in 0..t.num_aps() {
+                assert!(t.dist[i][a] <= t.dist[i][other] + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn all_users_covered() {
+        let mut rng = Pcg32::new(2, 0);
+        let t = Topology::generate(&small_cfg(), &mut rng);
+        let total: usize = (0..t.num_aps()).map(|n| t.users_of_ap(n).len()).sum();
+        assert_eq!(total, t.num_users());
+    }
+
+    #[test]
+    fn path_loss_monotone() {
+        assert!(path_loss(10.0, 5.0) > path_loss(100.0, 5.0));
+        // d^-5 at 10 m
+        assert!((path_loss(10.0, 5.0) - 1e-5).abs() < 1e-12);
+        // never exceeds the 1 m reference even for tiny distances
+        assert!(path_loss(0.01, 5.0) <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let t1 = Topology::generate(&small_cfg(), &mut Pcg32::new(9, 0));
+        let t2 = Topology::generate(&small_cfg(), &mut Pcg32::new(9, 0));
+        assert_eq!(t1.user_ap, t2.user_ap);
+    }
+}

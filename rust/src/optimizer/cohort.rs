@@ -1,0 +1,346 @@
+//! The relaxed per-cohort optimization instance (paper eq.26–27).
+//!
+//! A *cohort* is a small group of users of one AP jointly optimized over a
+//! set of candidate subchannels — the static-shape unit the AOT-compiled
+//! XLA solver and the analytic Rust solver both operate on. The coordinator
+//! folds everything outside the cohort (other cells, other cohorts) into the
+//! per-channel background-interference vectors, exactly the Δ/∇ constants
+//! of the paper's derivation.
+
+use crate::config::Config;
+use crate::models::SplitConstants;
+use crate::net::Network;
+
+/// Immutable problem data for one cohort.
+#[derive(Clone, Debug)]
+pub struct CohortProblem {
+    pub n_users: usize,
+    pub n_channels: usize,
+    /// Per-subchannel bandwidth (Hz).
+    pub bw_hz: f64,
+    /// Noise power σ² per subchannel (W).
+    pub noise_w: f64,
+    /// Uplink signal gains |h|², row-major `[user][channel]`.
+    pub g_up: Vec<f64>,
+    /// Downlink signal gains |H|², row-major `[user][channel]`.
+    pub g_down: Vec<f64>,
+    /// Uplink background interference per channel (inter-cell + out-of-cohort).
+    pub bg_up: Vec<f64>,
+    /// Downlink background interference `[user][channel]`.
+    pub bg_down: Vec<f64>,
+    /// Device FLOP/s per user.
+    pub device_flops: Vec<f64>,
+    /// QoE thresholds Q_i (s).
+    pub q_s: Vec<f64>,
+    /// Split constants per user (f_l, f_e, w) — set per Li-GD layer step.
+    pub f_dev: Vec<f64>,
+    pub f_edge: Vec<f64>,
+    pub w_bits: Vec<f64>,
+    pub result_bits: f64,
+    /// Bounds.
+    pub p_min: f64,
+    pub p_max: f64,
+    pub r_min: f64,
+    pub r_max: f64,
+    /// Compute/energy model constants.
+    pub lambda_gamma: f64,
+    pub edge_unit_flops: f64,
+    pub xi_device: f64,
+    pub xi_edge: f64,
+    pub sigmoid_a: f64,
+    /// Objective weights (eq.24) and unit scales.
+    pub w_t: f64,
+    pub w_r: f64,
+    pub w_q: f64,
+    pub delay_scale: f64,
+    pub energy_scale: f64,
+    pub resource_scale: f64,
+}
+
+impl CohortProblem {
+    /// Build a cohort problem for `users` (all in the same cell) over the
+    /// candidate `channels`, with background interference `bg_up`/`bg_down`
+    /// supplied by the coordinator (zero for a standalone solve).
+    pub fn from_network(
+        cfg: &Config,
+        net: &Network,
+        users: &[usize],
+        channels: &[usize],
+        bg_up: Vec<f64>,
+        bg_down: Vec<f64>,
+    ) -> Self {
+        let nu = users.len();
+        let nc = channels.len();
+        assert_eq!(bg_up.len(), nc);
+        assert_eq!(bg_down.len(), nu * nc);
+        let mut g_up = Vec::with_capacity(nu * nc);
+        let mut g_down = Vec::with_capacity(nu * nc);
+        for &u in users {
+            for &m in channels {
+                g_up.push(net.channels.up_gain(&net.topo, u, m));
+                g_down.push(net.channels.down_gain(&net.topo, u, m));
+            }
+        }
+        Self {
+            n_users: nu,
+            n_channels: nc,
+            bw_hz: net.subchannel_bw_hz,
+            noise_w: net.noise_w,
+            g_up,
+            g_down,
+            bg_up,
+            bg_down,
+            device_flops: users.iter().map(|&u| net.users[u].device_flops).collect(),
+            q_s: users.iter().map(|&u| net.users[u].qoe_threshold_s).collect(),
+            f_dev: vec![0.0; nu],
+            f_edge: vec![0.0; nu],
+            w_bits: vec![0.0; nu],
+            result_bits: cfg.compute.result_bits,
+            p_min: crate::util::dbm_to_watt(cfg.network.min_tx_power_dbm),
+            p_max: crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm),
+            r_min: cfg.compute.r_min,
+            r_max: cfg.compute.r_max,
+            lambda_gamma: cfg.compute.lambda_gamma,
+            edge_unit_flops: cfg.compute.edge_unit_flops,
+            xi_device: cfg.compute.xi_device,
+            xi_edge: cfg.compute.xi_edge,
+            sigmoid_a: cfg.qoe.sigmoid_a,
+            w_t: cfg.optimizer.weight_delay,
+            w_r: cfg.optimizer.weight_resource,
+            w_q: cfg.optimizer.weight_qoe,
+            delay_scale: cfg.optimizer.delay_scale,
+            energy_scale: cfg.optimizer.energy_scale,
+            resource_scale: cfg.optimizer.resource_scale,
+        }
+    }
+
+    /// Apply one split point to all users (a Li-GD layer iteration).
+    pub fn set_uniform_split(&mut self, sc: &SplitConstants) {
+        for i in 0..self.n_users {
+            self.f_dev[i] = sc.device_flops;
+            self.f_edge[i] = sc.edge_flops;
+            self.w_bits[i] = sc.cut_bits;
+        }
+    }
+
+    /// Apply per-user split constants (the final mixed refinement).
+    pub fn set_splits(&mut self, scs: &[SplitConstants]) {
+        assert_eq!(scs.len(), self.n_users);
+        for (i, sc) in scs.iter().enumerate() {
+            self.f_dev[i] = sc.device_flops;
+            self.f_edge[i] = sc.edge_flops;
+            self.w_bits[i] = sc.cut_bits;
+        }
+    }
+
+    #[inline]
+    pub fn gu(&self, u: usize, m: usize) -> f64 {
+        self.g_up[u * self.n_channels + m]
+    }
+
+    #[inline]
+    pub fn gd(&self, u: usize, m: usize) -> f64 {
+        self.g_down[u * self.n_channels + m]
+    }
+
+    #[inline]
+    pub fn bgd(&self, u: usize, m: usize) -> f64 {
+        self.bg_down[u * self.n_channels + m]
+    }
+
+    /// SIC decode orders per channel: uplink descending gain, downlink
+    /// ascending gain (paper §II.B).
+    pub fn sic_orders(&self) -> SicOrders {
+        let nc = self.n_channels;
+        let nu = self.n_users;
+        let mut up = vec![0usize; nc * nu];
+        let mut down = vec![0usize; nc * nu];
+        let mut idx: Vec<usize> = (0..nu).collect();
+        for m in 0..nc {
+            idx.sort_by(|&a, &b| self.gu(b, m).partial_cmp(&self.gu(a, m)).unwrap());
+            up[m * nu..(m + 1) * nu].copy_from_slice(&idx);
+            idx.sort_by(|&a, &b| self.gd(a, m).partial_cmp(&self.gd(b, m)).unwrap());
+            down[m * nu..(m + 1) * nu].copy_from_slice(&idx);
+        }
+        SicOrders {
+            n_users: nu,
+            up,
+            down,
+        }
+    }
+}
+
+/// Precomputed SIC decode orders, per channel.
+#[derive(Clone, Debug)]
+pub struct SicOrders {
+    n_users: usize,
+    /// `up[m*U..(m+1)*U]` = users in uplink decode order (strongest first).
+    up: Vec<usize>,
+    down: Vec<usize>,
+}
+
+impl SicOrders {
+    #[inline]
+    pub fn up_order(&self, m: usize) -> &[usize] {
+        &self.up[m * self.n_users..(m + 1) * self.n_users]
+    }
+
+    #[inline]
+    pub fn down_order(&self, m: usize) -> &[usize] {
+        &self.down[m * self.n_users..(m + 1) * self.n_users]
+    }
+}
+
+/// Decision variables of the relaxed problem, flattened:
+/// `[βup(U×M) | βdown(U×M) | p_up(U) | p_down(U) | r(U)]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CohortVars {
+    pub n_users: usize,
+    pub n_channels: usize,
+    pub x: Vec<f64>,
+}
+
+impl CohortVars {
+    pub fn dim(n_users: usize, n_channels: usize) -> usize {
+        n_users * (2 * n_channels + 3)
+    }
+
+    /// Feasible center-point initialization (uniform β, mid power/resource).
+    pub fn init_center(p: &CohortProblem) -> Self {
+        let (u, m) = (p.n_users, p.n_channels);
+        let mut x = vec![0.0; Self::dim(u, m)];
+        for i in 0..u {
+            for c in 0..m {
+                x[i * m + c] = 1.0 / m as f64;
+                x[u * m + i * m + c] = 1.0 / m as f64;
+            }
+            x[2 * u * m + i] = 0.5 * (p.p_min + p.p_max);
+            x[2 * u * m + u + i] = 0.5 * (p.p_min + p.p_max) * 10.0; // AP power scale
+            x[2 * u * m + 2 * u + i] = 0.5 * (p.r_min + p.r_max);
+        }
+        let mut v = Self {
+            n_users: u,
+            n_channels: m,
+            x,
+        };
+        crate::optimizer::projection::project(&mut v, p);
+        v
+    }
+
+    #[inline]
+    pub fn beta_up(&self, u: usize, m: usize) -> f64 {
+        self.x[u * self.n_channels + m]
+    }
+
+    #[inline]
+    pub fn beta_down(&self, u: usize, m: usize) -> f64 {
+        self.x[self.n_users * self.n_channels + u * self.n_channels + m]
+    }
+
+    #[inline]
+    pub fn p_up(&self, u: usize) -> f64 {
+        self.x[2 * self.n_users * self.n_channels + u]
+    }
+
+    #[inline]
+    pub fn p_down(&self, u: usize) -> f64 {
+        self.x[2 * self.n_users * self.n_channels + self.n_users + u]
+    }
+
+    #[inline]
+    pub fn r(&self, u: usize) -> f64 {
+        self.x[2 * self.n_users * self.n_channels + 2 * self.n_users + u]
+    }
+
+    // Index helpers (shared with the gradient code).
+    #[inline]
+    pub fn idx_beta_up(&self, u: usize, m: usize) -> usize {
+        u * self.n_channels + m
+    }
+
+    #[inline]
+    pub fn idx_beta_down(&self, u: usize, m: usize) -> usize {
+        self.n_users * self.n_channels + u * self.n_channels + m
+    }
+
+    #[inline]
+    pub fn idx_p_up(&self, u: usize) -> usize {
+        2 * self.n_users * self.n_channels + u
+    }
+
+    #[inline]
+    pub fn idx_p_down(&self, u: usize) -> usize {
+        2 * self.n_users * self.n_channels + self.n_users + u
+    }
+
+    #[inline]
+    pub fn idx_r(&self, u: usize) -> usize {
+        2 * self.n_users * self.n_channels + 2 * self.n_users + u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::models::zoo;
+    use crate::net::Network;
+
+    pub(crate) fn tiny_problem() -> CohortProblem {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 11);
+        let users: Vec<usize> = net.topo.users_of_ap(0).into_iter().take(4).collect();
+        let channels = vec![0, 1, 2];
+        let bg_up = vec![1e-14; channels.len()];
+        let bg_down = vec![1e-14; users.len() * channels.len()];
+        let mut p = CohortProblem::from_network(&cfg, &net, &users, &channels, bg_up, bg_down);
+        let m = zoo::nin();
+        p.set_uniform_split(&m.split_constants(4));
+        p
+    }
+
+    #[test]
+    fn build_from_network() {
+        let p = tiny_problem();
+        assert_eq!(p.n_users, 4);
+        assert_eq!(p.n_channels, 3);
+        assert!(p.g_up.iter().all(|&g| g > 0.0));
+        assert!(p.p_max > p.p_min);
+    }
+
+    #[test]
+    fn vars_layout_roundtrip() {
+        let p = tiny_problem();
+        let mut v = CohortVars::init_center(&p);
+        for u in 0..p.n_users {
+            for m in 0..p.n_channels {
+                assert!((v.beta_up(u, m) - 1.0 / 3.0).abs() < 1e-12);
+            }
+            assert!(v.p_up(u) >= p.p_min && v.p_up(u) <= p.p_max);
+            assert!(v.r(u) >= p.r_min && v.r(u) <= p.r_max);
+        }
+        // index accessors point at the right slots
+        let iu = v.idx_p_up(2);
+        v.x[iu] = 0.123;
+        assert_eq!(v.p_up(2), 0.123);
+        let ib = v.idx_beta_down(1, 2);
+        v.x[ib] = 0.77;
+        assert_eq!(v.beta_down(1, 2), 0.77);
+    }
+
+    #[test]
+    fn sic_orders_sorted() {
+        let p = tiny_problem();
+        let so = p.sic_orders();
+        for m in 0..p.n_channels {
+            let o = so.up_order(m);
+            for w in o.windows(2) {
+                assert!(p.gu(w[0], m) >= p.gu(w[1], m));
+            }
+            let o = so.down_order(m);
+            for w in o.windows(2) {
+                assert!(p.gd(w[0], m) <= p.gd(w[1], m));
+            }
+        }
+    }
+}

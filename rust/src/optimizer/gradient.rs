@@ -1,0 +1,260 @@
+//! Hand-written reverse-mode gradient of the relaxed utility Γ
+//! (the closed-form partials of paper eq.28–35, extended with the QoE
+//! chain rule of Corollary 1).
+//!
+//! The forward pass (`utility::eval`) stores every SINR/denominator; the
+//! backward pass here runs in O(U·M) per cohort by accumulating the
+//! SIC-order adjoint prefix sums instead of the naive O(U²·M) double loop.
+//! Verified against central finite differences in `tests::gradcheck`.
+
+use super::cohort::{CohortProblem, CohortVars, SicOrders};
+use super::utility::{eval, Evald};
+use crate::latency::dlambda_dr;
+
+const LN2: f64 = std::f64::consts::LN_2;
+
+/// Evaluate Γ and ∇Γ. Returns the forward intermediates and writes the
+/// gradient (same layout as `CohortVars::x`) into `grad`.
+pub fn eval_grad(
+    p: &CohortProblem,
+    v: &CohortVars,
+    orders: &SicOrders,
+    grad: &mut Vec<f64>,
+) -> Evald {
+    let ev = eval(p, v, orders);
+    grad_from_eval(p, v, orders, &ev, grad);
+    ev
+}
+
+/// Backward-only entry: reuse a forward `Evald` already computed at `v`
+/// (the GD loop's accepted trial point — §Perf: saves one forward per
+/// accepted step).
+pub fn grad_from_eval(
+    p: &CohortProblem,
+    v: &CohortVars,
+    orders: &SicOrders,
+    ev: &Evald,
+    grad: &mut Vec<f64>,
+) {
+    grad.clear();
+    grad.resize(v.x.len(), 0.0);
+    backward(p, v, orders, ev, grad);
+}
+
+fn backward(
+    p: &CohortProblem,
+    v: &CohortVars,
+    orders: &SicOrders,
+    ev: &Evald,
+    grad: &mut [f64],
+) {
+    let (nu, nc) = (p.n_users, p.n_channels);
+    // Per-user adjoints of the rate nodes.
+    let mut a_rate_up = vec![0.0; nu];
+    let mut a_rate_down = vec![0.0; nu];
+
+    for i in 0..nu {
+        let offloads = p.f_edge[i] > 0.0;
+        let q = p.q_s[i];
+        let r = ev.rsig[i];
+        let rp = p.sigmoid_a * r * (1.0 - r); // dR/dx
+        // ∂U_i/∂T_i : delay term + QoE terms (product rule on (T−Q)R(T/Q)).
+        let d_dct_dt = r + (ev.t[i] - q) * rp / q;
+        let a_t = p.w_t * p.delay_scale
+            + p.w_q * (p.delay_scale * d_dct_dt + rp / q);
+        // ∂U_i/∂E_i
+        let a_e = p.w_r * p.energy_scale;
+
+        // λ adjoint: resource term + server delay + edge energy.
+        let mut a_lam = 0.0;
+        if offloads {
+            a_lam += p.w_r * p.resource_scale;
+            // T_srv = f_e / (λ c) ⇒ dT/dλ = −f_e / (λ² c)
+            a_lam += a_t * (-p.f_edge[i] / (ev.lambda[i].powi(2) * p.edge_unit_flops));
+            // E_srv = ξ (λ c)² f_e/1e9 ⇒ dE/dλ = 2 ξ λ c² f_e/1e9
+            a_lam += a_e
+                * (2.0 * p.xi_edge * ev.lambda[i] * p.edge_unit_flops.powi(2) * p.f_edge[i]
+                    / 1e9);
+        }
+        grad[v.idx_r(i)] += a_lam * dlambda_dr(v.r(i), p.lambda_gamma);
+
+        // Rate adjoints.
+        if p.w_bits[i] > 0.0 {
+            let ru = ev.rate_up[i];
+            a_rate_up[i] = a_t * (-p.w_bits[i] / (ru * ru))
+                + a_e * (-v.p_up(i) * p.w_bits[i] / (ru * ru));
+            // direct E_up = p · w/R term on p
+            grad[v.idx_p_up(i)] += a_e * p.w_bits[i] / ru;
+        }
+        if offloads {
+            let rd = ev.rate_down[i];
+            a_rate_down[i] = a_t * (-p.result_bits / (rd * rd))
+                + a_e * (-v.p_down(i) * p.result_bits / (rd * rd));
+            grad[v.idx_p_down(i)] += a_e * p.result_bits / rd;
+        }
+    }
+
+    // ---- Uplink backward -------------------------------------------------
+    // R_up_i = Σ_m β_im bw log2(1+S_im); S_im = p_i g_im / D_im;
+    // D_im = bg + σ² + Σ_{v weaker} β_vm p_v g_vm.
+    for m in 0..nc {
+        let order = orders.up_order(m);
+        // First compute per-user aD on this channel, then sweep the SIC
+        // order accumulating Σ_{i stronger} aD_i for the perpetrators.
+        let mut acc = 0.0; // Σ aD over users stronger (earlier in order)
+        for &w in order.iter() {
+            let s = ev.s_up[w * nc + m];
+            let d = ev.d_up[w * nc + m];
+            let g = p.gu(w, m);
+            let a_r = a_rate_up[w];
+            // own-β and own-p partials (log term cached by the forward pass)
+            if a_r != 0.0 {
+                grad[v.idx_beta_up(w, m)] += a_r * p.bw_hz * ev.log_up[w * nc + m];
+            }
+            let a_s = a_r * v.beta_up(w, m) * p.bw_hz / ((1.0 + s) * LN2);
+            grad[v.idx_p_up(w)] += a_s * g / d;
+            let a_d = -a_s * s / d;
+            // perpetrator contributions from users stronger than w
+            if acc != 0.0 {
+                grad[v.idx_beta_up(w, m)] += acc * v.p_up(w) * g;
+                grad[v.idx_p_up(w)] += acc * v.beta_up(w, m) * g;
+            }
+            acc += a_d;
+        }
+    }
+
+    // ---- Downlink backward ------------------------------------------------
+    // D_ik = g_ik · Σ_{v stronger} β_vk P_v + bg_ik + σ²; victims are the
+    // *weaker* users (earlier in ascending order), perpetrators the later.
+    for k in 0..nc {
+        let order = orders.down_order(k); // ascending gain
+        let mut acc = 0.0; // Σ_{i weaker so far} aD_i · g_ik
+        for &w in order.iter() {
+            let s = ev.s_down[w * nc + k];
+            let d = ev.d_down[w * nc + k];
+            let g = p.gd(w, k);
+            let a_r = a_rate_down[w];
+            if a_r != 0.0 {
+                grad[v.idx_beta_down(w, k)] += a_r * p.bw_hz * ev.log_down[w * nc + k];
+            }
+            let a_s = a_r * v.beta_down(w, k) * p.bw_hz / ((1.0 + s) * LN2);
+            grad[v.idx_p_down(w)] += a_s * g / d;
+            let a_d = -a_s * s / d;
+            // w as perpetrator for all weaker users already seen
+            if acc != 0.0 {
+                grad[v.idx_beta_down(w, k)] += acc * v.p_down(w);
+                grad[v.idx_p_down(w)] += acc * v.beta_down(w, k);
+            }
+            acc += a_d * g;
+        }
+    }
+}
+
+/// Central-finite-difference gradient (testing / gradcheck only).
+pub fn fd_grad(p: &CohortProblem, v: &CohortVars, orders: &SicOrders, h: f64) -> Vec<f64> {
+    let mut g = vec![0.0; v.x.len()];
+    let mut vv = v.clone();
+    for j in 0..v.x.len() {
+        let x0 = v.x[j];
+        vv.x[j] = x0 + h;
+        let fp = eval(p, &vv, orders).total;
+        vv.x[j] = x0 - h;
+        let fm = eval(p, &vv, orders).total;
+        vv.x[j] = x0;
+        g[j] = (fp - fm) / (2.0 * h);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::cohort::CohortVars;
+    use crate::optimizer::utility::tests::problem;
+    use crate::util::quickcheck::forall;
+    use crate::util::rng::Pcg32;
+
+    /// Random interior point (away from the projection boundary so FD is
+    /// two-sided valid).
+    fn random_point(p: &crate::optimizer::cohort::CohortProblem, rng: &mut Pcg32) -> CohortVars {
+        let mut v = CohortVars::init_center(p);
+        let (u, m) = (p.n_users, p.n_channels);
+        for i in 0..u {
+            // β: random interior simplex point
+            let mut raw: Vec<f64> = (0..m).map(|_| rng.uniform(0.2, 1.0)).collect();
+            let s: f64 = raw.iter().sum();
+            for c in 0..m {
+                raw[c] /= s;
+                let idx = v.idx_beta_up(i, c);
+                v.x[idx] = raw[c];
+            }
+            let mut raw: Vec<f64> = (0..m).map(|_| rng.uniform(0.2, 1.0)).collect();
+            let s: f64 = raw.iter().sum();
+            for c in 0..m {
+                raw[c] /= s;
+                let idx = v.idx_beta_down(i, c);
+                v.x[idx] = raw[c];
+            }
+            let idx = v.idx_p_up(i);
+            v.x[idx] = rng.uniform(p.p_min + 0.01, p.p_max - 0.01);
+            let idx = v.idx_p_down(i);
+            v.x[idx] = rng.uniform(p.p_min + 0.1, 10.0 * p.p_max);
+            let idx = v.idx_r(i);
+            v.x[idx] = rng.uniform(p.r_min + 0.5, p.r_max - 0.5);
+        }
+        v
+    }
+
+    #[test]
+    fn gradcheck_vs_finite_differences() {
+        forall("analytic grad == FD grad", 12, |g| {
+            let nu = g.usize_in(2, 5);
+            let nc = g.usize_in(2, 4);
+            let split = g.usize_in(1, 16);
+            let p = problem(g.case as u64 + 100, nu, nc, split);
+            let orders = p.sic_orders();
+            let v = random_point(&p, &mut g.rng);
+            let mut an = Vec::new();
+            eval_grad(&p, &v, &orders, &mut an);
+            let fd = fd_grad(&p, &v, &orders, 1e-7);
+            for j in 0..an.len() {
+                let scale = 1.0 + an[j].abs() + fd[j].abs();
+                assert!(
+                    (an[j] - fd[j]).abs() / scale < 5e-4,
+                    "dim {j}: analytic={} fd={} (nu={nu} nc={nc} split={split})",
+                    an[j],
+                    fd[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn device_only_split_has_zero_radio_gradient() {
+        let m = crate::models::zoo::yolov2();
+        let p = problem(7, 3, 2, m.num_layers());
+        let orders = p.sic_orders();
+        let v = CohortVars::init_center(&p);
+        let mut g = Vec::new();
+        eval_grad(&p, &v, &orders, &mut g);
+        for u in 0..p.n_users {
+            assert_eq!(g[v.idx_p_up(u)], 0.0);
+            assert_eq!(g[v.idx_p_down(u)], 0.0);
+            assert_eq!(g[v.idx_r(u)], 0.0);
+            for c in 0..p.n_channels {
+                assert_eq!(g[v.idx_beta_up(u, c)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_is_deterministic() {
+        let p = problem(9, 4, 3, 6);
+        let orders = p.sic_orders();
+        let v = CohortVars::init_center(&p);
+        let (mut g1, mut g2) = (Vec::new(), Vec::new());
+        eval_grad(&p, &v, &orders, &mut g1);
+        eval_grad(&p, &v, &orders, &mut g2);
+        assert_eq!(g1, g2);
+    }
+}

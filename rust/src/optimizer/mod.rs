@@ -1,0 +1,12 @@
+//! The ERA optimizer (paper §III): relaxed cohort problem, utility Γ,
+//! analytic gradients, projections, and the Li-GD algorithm.
+
+pub mod cohort;
+pub mod gradient;
+pub mod ligd;
+pub mod projection;
+pub mod utility;
+
+pub use cohort::{CohortProblem, CohortVars};
+pub use ligd::{solve_gd, solve_ligd, CohortSolution, GdOptions, GdReport};
+pub use utility::{eval, Evald};

@@ -1,0 +1,134 @@
+//! Feasible-set projection for the relaxed cohort problem.
+//!
+//! * β rows are projected onto the probability simplex Δ^M — this enforces
+//!   the paper's constraints (23.c) *and* (23.f/23.g) throughout the GD
+//!   trajectory (strictly stronger than the paper's box-relax-then-round;
+//!   rounding becomes a simple arg-max at the end).
+//! * p and r are clipped to their boxes (23.d) / (23.e).
+
+use super::cohort::{CohortProblem, CohortVars};
+
+/// Euclidean projection of `row` onto the probability simplex
+/// {x : x ≥ 0, Σx = 1} (Held–Wolfe–Crowder / sorted-threshold algorithm).
+pub fn project_simplex(row: &mut [f64]) {
+    let n = row.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 {
+        row[0] = 1.0;
+        return;
+    }
+    // §Perf: cohort rows are tiny (M ≤ 32); sort on the stack instead of
+    // allocating — the projection runs twice per user per GD probe.
+    const STACK: usize = 32;
+    let mut buf = [0.0f64; STACK];
+    let mut heap;
+    let sorted: &mut [f64] = if n <= STACK {
+        buf[..n].copy_from_slice(row);
+        &mut buf[..n]
+    } else {
+        heap = row.to_vec();
+        &mut heap
+    };
+    sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0;
+    let mut theta = 0.0;
+    let mut found = false;
+    for (k, &val) in sorted.iter().enumerate() {
+        cum += val;
+        let t = (cum - 1.0) / (k as f64 + 1.0);
+        if val - t > 0.0 {
+            theta = t;
+        } else {
+            found = true;
+            break;
+        }
+    }
+    let _ = found;
+    for x in row.iter_mut() {
+        *x = (*x - theta).max(0.0);
+    }
+}
+
+/// Project all variables onto the feasible set in place.
+pub fn project(v: &mut CohortVars, p: &CohortProblem) {
+    let (nu, nc) = (v.n_users, v.n_channels);
+    for u in 0..nu {
+        let start = v.idx_beta_up(u, 0);
+        project_simplex(&mut v.x[start..start + nc]);
+        let start = v.idx_beta_down(u, 0);
+        project_simplex(&mut v.x[start..start + nc]);
+        let idx = v.idx_p_up(u);
+        v.x[idx] = v.x[idx].clamp(p.p_min, p.p_max);
+        // Downlink (AP) power: the AP budget is larger than a device's; we
+        // bound each user's component by [p_min, 20·p_max] (≈ +13 dB).
+        let idx = v.idx_p_down(u);
+        v.x[idx] = v.x[idx].clamp(p.p_min, 20.0 * p.p_max);
+        let idx = v.idx_r(u);
+        v.x[idx] = v.x[idx].clamp(p.r_min, p.r_max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn simplex_basic() {
+        let mut r = vec![0.5, 0.5, 0.5];
+        project_simplex(&mut r);
+        let s: f64 = r.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(r.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn simplex_already_feasible_is_fixed_point() {
+        let mut r = vec![0.2, 0.3, 0.5];
+        let orig = r.clone();
+        project_simplex(&mut r);
+        for (a, b) in r.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn simplex_properties_random() {
+        forall("simplex projection valid + idempotent", 256, |g| {
+            let n = g.usize_in(1, 12);
+            let mut row = g.vec_f64(n, -3.0, 3.0);
+            project_simplex(&mut row);
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "sum={s}");
+            assert!(row.iter().all(|&x| x >= -1e-12));
+            // idempotent
+            let once = row.clone();
+            project_simplex(&mut row);
+            for (a, b) in row.iter().zip(once.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn simplex_is_euclidean_projection() {
+        // For any feasible z, ‖x* − y‖ ≤ ‖z − y‖ where x* is our output.
+        forall("projection minimizes distance", 64, |g| {
+            let n = g.usize_in(2, 6);
+            let y = g.vec_f64(n, -2.0, 2.0);
+            let mut x = y.clone();
+            project_simplex(&mut x);
+            // random feasible z
+            let mut z = g.vec_f64(n, 0.0, 1.0);
+            let s: f64 = z.iter().sum();
+            for v in z.iter_mut() {
+                *v /= s;
+            }
+            let dx: f64 = x.iter().zip(&y).map(|(a, b)| (a - b).powi(2)).sum();
+            let dz: f64 = z.iter().zip(&y).map(|(a, b)| (a - b).powi(2)).sum();
+            assert!(dx <= dz + 1e-9, "dx={dx} dz={dz}");
+        });
+    }
+}

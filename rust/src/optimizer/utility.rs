@@ -1,0 +1,268 @@
+//! Forward evaluation of the relaxed utility Γ (paper eq.26–27).
+//!
+//! For one cohort, computes per-user rates under relaxed subchannel shares
+//! β ∈ Δ^M (simplex), delays, energies, QoE relaxations, and the weighted
+//! utility — storing every intermediate the hand-written reverse pass
+//! (`gradient.rs`) needs.
+
+use super::cohort::{CohortProblem, CohortVars, SicOrders};
+use crate::latency::lambda_r;
+use crate::qoe;
+use crate::util::log2_1p;
+
+
+/// All forward intermediates for one evaluation point.
+#[derive(Clone, Debug, Default)]
+pub struct Evald {
+    /// Uplink per-(user,channel) SINR and its denominator.
+    pub s_up: Vec<f64>,
+    pub d_up: Vec<f64>,
+    /// log2(1 + S) per (user, channel) — cached for the backward pass.
+    pub log_up: Vec<f64>,
+    /// Downlink per-(user,channel) SINR and denominator.
+    pub s_down: Vec<f64>,
+    pub d_down: Vec<f64>,
+    pub log_down: Vec<f64>,
+    /// Effective rates (bit/s).
+    pub rate_up: Vec<f64>,
+    pub rate_down: Vec<f64>,
+    /// λ(r_i).
+    pub lambda: Vec<f64>,
+    /// End-to-end delay T_i (s).
+    pub t: Vec<f64>,
+    /// Energy E_i (J).
+    pub e: Vec<f64>,
+    /// Sigmoid QoE indicator R_i = R(T_i/Q_i).
+    pub rsig: Vec<f64>,
+    /// Per-user utility U_i.
+    pub util: Vec<f64>,
+    /// Γ = Σ U_i.
+    pub total: f64,
+}
+
+impl Evald {
+    /// Pre-sized workspace (hot path re-uses one of these per solve —
+    /// §Perf: the per-call `vec!` allocations were ~35% of eval time).
+    pub fn new(nu: usize, nc: usize) -> Self {
+        Self {
+            s_up: vec![0.0; nu * nc],
+            d_up: vec![0.0; nu * nc],
+            log_up: vec![0.0; nu * nc],
+            s_down: vec![0.0; nu * nc],
+            d_down: vec![0.0; nu * nc],
+            log_down: vec![0.0; nu * nc],
+            rate_up: vec![0.0; nu],
+            rate_down: vec![0.0; nu],
+            lambda: vec![0.0; nu],
+            t: vec![0.0; nu],
+            e: vec![0.0; nu],
+            rsig: vec![0.0; nu],
+            util: vec![0.0; nu],
+            total: 0.0,
+        }
+    }
+}
+
+/// Forward pass (allocating convenience wrapper).
+pub fn eval(p: &CohortProblem, v: &CohortVars, orders: &SicOrders) -> Evald {
+    let mut ev = Evald::new(p.n_users, p.n_channels);
+    eval_into(p, v, orders, &mut ev);
+    ev
+}
+
+/// Forward pass into a caller-owned workspace.
+pub fn eval_into(p: &CohortProblem, v: &CohortVars, orders: &SicOrders, ev: &mut Evald) {
+    let (nu, nc) = (p.n_users, p.n_channels);
+    debug_assert_eq!(ev.s_up.len(), nu * nc);
+    let Evald {
+        s_up,
+        d_up,
+        log_up,
+        s_down,
+        d_down,
+        log_down,
+        rate_up,
+        rate_down,
+        ..
+    } = ev;
+    rate_up.iter_mut().for_each(|x| *x = 0.0);
+    rate_down.iter_mut().for_each(|x| *x = 0.0);
+
+    // ---- Uplink rates (eq.5/6) ----------------------------------------
+    for m in 0..nc {
+        let order = orders.up_order(m);
+        // weaker-user received-power suffix along the SIC order
+        let mut weaker = 0.0;
+        for idx in (0..nu).rev() {
+            let i = order[idx];
+            let g = p.gu(i, m);
+            let d = p.bg_up[m] + p.noise_w + weaker;
+            let s = v.p_up(i) * g / d;
+            let lg = log2_1p(s);
+            s_up[i * nc + m] = s;
+            d_up[i * nc + m] = d;
+            log_up[i * nc + m] = lg;
+            rate_up[i] += v.beta_up(i, m) * p.bw_hz * lg;
+            weaker += v.beta_up(i, m) * v.p_up(i) * g;
+        }
+    }
+
+    // ---- Downlink rates (eq.8/9) ---------------------------------------
+    for k in 0..nc {
+        let order = orders.down_order(k); // ascending gain
+        // interference comes from *stronger* users' components: walk the
+        // order from strongest down, accumulating the stronger-power sum.
+        let mut acc = 0.0;
+        for idx in (0..nu).rev() {
+            let i = order[idx];
+            let g = p.gd(i, k);
+            let d = g * acc + p.bgd(i, k) + p.noise_w;
+            let s = v.p_down(i) * g / d;
+            let lg = log2_1p(s);
+            s_down[i * nc + k] = s;
+            d_down[i * nc + k] = d;
+            log_down[i * nc + k] = lg;
+            rate_down[i] += v.beta_down(i, k) * p.bw_hz * lg;
+            acc += v.beta_down(i, k) * v.p_down(i);
+        }
+    }
+
+    // ---- Per-user delay / energy / QoE / utility ------------------------
+    let Evald {
+        rate_up,
+        rate_down,
+        lambda,
+        t,
+        e,
+        rsig,
+        util,
+        ..
+    } = ev;
+    let mut total = 0.0;
+    for i in 0..nu {
+        let lam = lambda_r(v.r(i), p.lambda_gamma);
+        lambda[i] = lam;
+        let offloads = p.f_edge[i] > 0.0;
+        let t_dev = p.f_dev[i] / p.device_flops[i];
+        let t_srv = if offloads {
+            p.f_edge[i] / (lam * p.edge_unit_flops)
+        } else {
+            0.0
+        };
+        let t_up = if p.w_bits[i] > 0.0 {
+            p.w_bits[i] / rate_up[i]
+        } else {
+            0.0
+        };
+        let t_down = if offloads {
+            p.result_bits / rate_down[i]
+        } else {
+            0.0
+        };
+        let ti = t_dev + t_srv + t_up + t_down;
+        t[i] = ti;
+
+        let e_dev = p.xi_device * p.device_flops[i].powi(2) * p.f_dev[i] / 1e9;
+        let e_srv = if offloads {
+            p.xi_edge * (lam * p.edge_unit_flops).powi(2) * p.f_edge[i] / 1e9
+        } else {
+            0.0
+        };
+        let e_up = if p.w_bits[i] > 0.0 {
+            v.p_up(i) * p.w_bits[i] / rate_up[i]
+        } else {
+            0.0
+        };
+        let e_down = if offloads {
+            v.p_down(i) * p.result_bits / rate_down[i]
+        } else {
+            0.0
+        };
+        let ei = e_dev + e_srv + e_up + e_down;
+        e[i] = ei;
+
+        let x = ti / p.q_s[i];
+        let r = qoe::relax_r(x, p.sigmoid_a);
+        rsig[i] = r;
+        let dct = (ti - p.q_s[i]) * r;
+
+        let resource = if offloads { lam } else { 0.0 };
+        let ui = p.w_t * p.delay_scale * ti
+            + p.w_r * (p.energy_scale * ei + p.resource_scale * resource)
+            + p.w_q * (p.delay_scale * dct + r);
+        util[i] = ui;
+        total += ui;
+    }
+    ev.total = total;
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::models::zoo;
+    use crate::net::Network;
+    use crate::optimizer::cohort::{CohortProblem, CohortVars};
+
+    pub(crate) fn problem(seed: u64, nu: usize, nc: usize, split: usize) -> CohortProblem {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = (nu * 3).max(12);
+        let net = Network::generate(&cfg, seed);
+        let mut users = net.topo.users_of_ap(0);
+        if users.len() < nu {
+            users = (0..net.num_users()).collect();
+        }
+        let users: Vec<usize> = users.into_iter().take(nu).collect();
+        let channels: Vec<usize> = (0..nc).collect();
+        let bg_up = vec![1e-15; nc];
+        let bg_down = vec![1e-15; nu * nc];
+        let mut p = CohortProblem::from_network(&cfg, &net, &users, &channels, bg_up, bg_down);
+        let m = zoo::yolov2();
+        p.set_uniform_split(&m.split_constants(split));
+        p
+    }
+
+    #[test]
+    fn forward_is_finite_and_positive() {
+        let p = problem(3, 4, 3, 8);
+        let v = CohortVars::init_center(&p);
+        let ev = eval(&p, &v, &p.sic_orders());
+        assert!(ev.total.is_finite() && ev.total > 0.0);
+        for i in 0..p.n_users {
+            assert!(ev.t[i] > 0.0 && ev.t[i].is_finite());
+            assert!(ev.e[i] > 0.0 && ev.e[i].is_finite());
+            assert!(ev.rate_up[i] > 0.0);
+            assert!(ev.rate_down[i] > 0.0);
+            assert!((0.0..=1.0).contains(&ev.rsig[i]));
+        }
+    }
+
+    #[test]
+    fn device_only_split_ignores_radio() {
+        let m = zoo::yolov2();
+        let p0 = problem(4, 3, 2, m.num_layers());
+        let mut v1 = CohortVars::init_center(&p0);
+        let ev1 = eval(&p0, &v1, &p0.sic_orders());
+        // change powers; utility must not change (no transmission happens)
+        for u in 0..p0.n_users {
+            let idx = v1.idx_p_up(u);
+            v1.x[idx] = p0.p_max;
+        }
+        let ev2 = eval(&p0, &v1, &p0.sic_orders());
+        assert!((ev1.total - ev2.total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_interference_lowers_rate() {
+        let mut p = problem(5, 4, 3, 8);
+        let v = CohortVars::init_center(&p);
+        let r1 = eval(&p, &v, &p.sic_orders()).rate_up.clone();
+        for b in p.bg_up.iter_mut() {
+            *b *= 1e4;
+        }
+        let r2 = eval(&p, &v, &p.sic_orders()).rate_up.clone();
+        for i in 0..p.n_users {
+            assert!(r2[i] < r1[i]);
+        }
+    }
+}

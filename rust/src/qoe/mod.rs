@@ -1,0 +1,152 @@
+//! QoE model (paper §II.C, eq.13–eq.17).
+//!
+//! Delayed Completion Time (DCT): C_i = max(0, T_i − Q_i) — discrete, so the
+//! paper relaxes it with the sigmoid R(x) = 1/(1+e^{−a(x−1)}), x = T/Q:
+//!   C'_i = (T_i − Q_i)·R(T_i/Q_i)          (eq.14)
+//!   C    = Σ_i C'_i                        (eq.16)
+//!   z    = Σ_i R(T_i/Q_i)                  (eq.17)  — #users with DCT > 0.
+//! After optimization R is rounded: R < ½ → 0, R > ½ → 1 (paper's rule).
+
+use crate::util::sigmoid;
+
+/// The sigmoid relaxation R(x) with sharpness `a` (paper Fig.5).
+#[inline]
+pub fn relax_r(x: f64, a: f64) -> f64 {
+    sigmoid(a * (x - 1.0))
+}
+
+/// dR/dx — used by analytic gradients: a·R·(1−R).
+#[inline]
+pub fn relax_r_prime(x: f64, a: f64) -> f64 {
+    let r = relax_r(x, a);
+    a * r * (1.0 - r)
+}
+
+/// Exact (discrete) DCT of one user (eq.13).
+#[inline]
+pub fn dct_exact(delay_s: f64, q_s: f64) -> f64 {
+    (delay_s - q_s).max(0.0)
+}
+
+/// Relaxed DCT C'_i (eq.14).
+#[inline]
+pub fn dct_relaxed(delay_s: f64, q_s: f64, a: f64) -> f64 {
+    (delay_s - q_s) * relax_r(delay_s / q_s, a)
+}
+
+/// Rounded indicator (paper's post-optimization rule): 1 if R > ½.
+#[inline]
+pub fn violated(delay_s: f64, q_s: f64) -> bool {
+    delay_s > q_s
+}
+
+/// System-level QoE summary over a set of users.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QoeSummary {
+    /// Σ exact DCT (seconds).
+    pub sum_dct_s: f64,
+    /// Σ relaxed DCT (seconds).
+    pub sum_dct_relaxed_s: f64,
+    /// Number of users with DCT > 0 (exact z).
+    pub num_violating: usize,
+    /// Relaxed z (eq.17).
+    pub z_relaxed: f64,
+    pub num_users: usize,
+}
+
+impl QoeSummary {
+    /// Aggregate over (delay, threshold) pairs.
+    pub fn compute(pairs: impl Iterator<Item = (f64, f64)>, a: f64) -> Self {
+        let mut s = Self::default();
+        for (t, q) in pairs {
+            s.num_users += 1;
+            s.sum_dct_s += dct_exact(t, q);
+            s.sum_dct_relaxed_s += dct_relaxed(t, q, a);
+            s.z_relaxed += relax_r(t / q, a);
+            if violated(t, q) {
+                s.num_violating += 1;
+            }
+        }
+        s
+    }
+
+    /// Fraction of users violating their QoE threshold.
+    pub fn violation_frac(&self) -> f64 {
+        if self.num_users == 0 {
+            0.0
+        } else {
+            self.num_violating as f64 / self.num_users as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn sigmoid_matches_paper_example() {
+        // Paper: a=2000, Q=10ms, T=10.02ms → x=1.002, R ≈ 0.9827.
+        let r = relax_r(1.002, 2000.0);
+        assert!((r - 0.9827).abs() < 1e-3, "r={r}");
+    }
+
+    #[test]
+    fn relaxation_approaches_step_as_a_grows() {
+        // Fig.5: larger a → closer to the two-valued function.
+        let x = 1.05;
+        let e20 = (relax_r(x, 20.0) - 1.0).abs();
+        let e200 = (relax_r(x, 200.0) - 1.0).abs();
+        let e2000 = (relax_r(x, 2000.0) - 1.0).abs();
+        assert!(e20 > e200 && e200 > e2000);
+        let x = 0.95;
+        assert!(relax_r(x, 2000.0) < relax_r(x, 200.0));
+        assert!(relax_r(x, 200.0) < relax_r(x, 20.0));
+    }
+
+    #[test]
+    fn dct_exact_semantics() {
+        assert_eq!(dct_exact(0.009, 0.010), 0.0);
+        assert!((dct_exact(0.015, 0.010) - 0.005).abs() < 1e-15);
+    }
+
+    #[test]
+    fn relaxed_dct_error_vanishes_with_large_a() {
+        forall("relaxed DCT → exact DCT as a → ∞", 128, |g| {
+            let t = g.f64_in(0.001, 0.03);
+            let q = g.f64_in(0.005, 0.02);
+            if (t / q - 1.0).abs() < 0.02 {
+                return; // knife-edge region excluded (paper's approx rule)
+            }
+            let exact = dct_exact(t, q);
+            let relaxed = dct_relaxed(t, q, 5000.0);
+            assert!(
+                (exact - relaxed).abs() < 1e-4 * q.max(1e-9),
+                "t={t} q={q} exact={exact} relaxed={relaxed}"
+            );
+        });
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        forall("dR/dx matches FD", 64, |g| {
+            let x = g.f64_in(0.5, 1.5);
+            let a = g.f64_in(5.0, 100.0);
+            let h = 1e-6;
+            let fd = (relax_r(x + h, a) - relax_r(x - h, a)) / (2.0 * h);
+            let an = relax_r_prime(x, a);
+            assert!((fd - an).abs() < 1e-4 * (1.0 + an.abs()), "x={x} a={a}");
+        });
+    }
+
+    #[test]
+    fn summary_counts() {
+        let pairs = vec![(0.01, 0.02), (0.03, 0.02), (0.05, 0.02)];
+        let s = QoeSummary::compute(pairs.into_iter(), 100.0);
+        assert_eq!(s.num_users, 3);
+        assert_eq!(s.num_violating, 2);
+        assert!((s.sum_dct_s - (0.01 + 0.03)).abs() < 1e-12);
+        assert!(s.violation_frac() > 0.66 && s.violation_frac() < 0.67);
+    }
+}

@@ -1,0 +1,81 @@
+//! Loading AOT artifacts: HLO **text** (see DESIGN.md — serialized
+//! HloModuleProto from jax ≥ 0.5 is rejected by xla_extension 0.5.1, the
+//! text parser reassigns instruction ids and round-trips cleanly).
+
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact: HLO text → XlaComputation → PJRT executable.
+pub struct Artifact {
+    pub path: PathBuf,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load + compile one HLO-text artifact on `client`.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> anyhow::Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            exe,
+        })
+    }
+
+    /// Execute with f32 tensor inputs; returns the flattened f32 outputs of
+    /// the (1-tuple) result.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> anyhow::Result<Vec<f32>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute and return *all* tuple elements flattened to f32 vectors.
+    pub fn run_f32_multi(&self, inputs: &[(&[f32], &[i64])]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+}

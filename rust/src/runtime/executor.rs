@@ -1,0 +1,191 @@
+//! High-level executors over the artifact set:
+//!
+//! * [`SplitCnnExecutor`] — the split CIFAR CNN (one device-half and one
+//!   edge-half executable per split point), implementing the serving loop's
+//!   [`InferenceBackend`].
+//! * [`LigdChunkExecutor`] — the XLA-compiled Li-GD gradient-descent chunk
+//!   (T projected-GD steps per call, lowered from `python/compile/model.py`
+//!   with the Pallas NOMA-rate kernel inlined).
+
+use super::{Artifact, Runtime};
+use crate::coordinator::server::InferenceBackend;
+use crate::optimizer::{CohortProblem, CohortVars};
+use std::sync::Mutex;
+
+/// Shape contract of the AOT split CNN (`python/compile/model.py::SplitCnn`,
+/// a 9-layer NiN-style CIFAR network). Returns `(num_layers, act_sizes)`
+/// where `act_sizes[s]` is the flattened activation element count at split
+/// point `s` (index 0 = raw input). MUST stay in sync with the Python model
+/// — `tests/integration_runtime.rs` asserts it against the artifacts.
+pub fn split_cnn_shape() -> (usize, Vec<usize>) {
+    (
+        9,
+        vec![
+            32 * 32 * 3,  // s=0: input
+            32 * 32 * 32, // conv1 5×5 → 32ch
+            32 * 32 * 16, // mlp1 1×1 → 16ch
+            16 * 16 * 16, // pool1
+            16 * 16 * 32, // conv2 3×3 → 32ch
+            16 * 16 * 16, // mlp2 1×1 → 16ch
+            8 * 8 * 16,   // pool2
+            8 * 8 * 32,   // conv3 3×3 → 32ch
+            8 * 8 * 10,   // mlp3 1×1 → 10ch
+            10,           // gap → logits
+        ],
+    )
+}
+
+/// The split CNN: artifacts `split_cnn_dev_s{i}.hlo.txt` (layers 1..=i) and
+/// `split_cnn_edge_s{i}.hlo.txt` (layers i+1..=F). `dev[0]` and
+/// `edge[F]` are absent (empty halves).
+pub struct SplitCnnExecutor {
+    dev: Vec<Option<Mutex<Artifact>>>,
+    edge: Vec<Option<Mutex<Artifact>>>,
+    /// Activation element count after each layer (index 0 = input size).
+    act_sizes: Vec<usize>,
+    pub num_layers: usize,
+}
+
+// SAFETY: the `xla` crate's PJRT handles hold `Rc` + raw pointers and are
+// therefore `!Send`/`!Sync` by default, but the underlying PJRT CPU client
+// is thread-safe and we never clone the `Rc`s: every executable is accessed
+// exclusively behind its `Mutex`, and the owning struct (not references to
+// the internals) is what crosses threads.
+unsafe impl Send for SplitCnnExecutor {}
+unsafe impl Sync for SplitCnnExecutor {}
+
+impl SplitCnnExecutor {
+    /// Load all split halves present in the artifact directory.
+    pub fn load(rt: &Runtime, num_layers: usize, act_sizes: Vec<usize>) -> anyhow::Result<Self> {
+        assert_eq!(act_sizes.len(), num_layers + 1);
+        let mut dev = Vec::with_capacity(num_layers + 1);
+        let mut edge = Vec::with_capacity(num_layers + 1);
+        for s in 0..=num_layers {
+            dev.push(if s == 0 {
+                None
+            } else {
+                Some(Mutex::new(rt.load(&format!("split_cnn_dev_s{s}.hlo.txt"))?))
+            });
+            edge.push(if s == num_layers {
+                None
+            } else {
+                Some(Mutex::new(rt.load(&format!("split_cnn_edge_s{s}.hlo.txt"))?))
+            });
+        }
+        Ok(Self {
+            dev,
+            edge,
+            act_sizes,
+            num_layers,
+        })
+    }
+
+    /// Run the device half (input → cut activation).
+    pub fn run_device(&self, split: usize, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        match &self.dev[split] {
+            None => Ok(input.to_vec()),
+            Some(a) => a
+                .lock()
+                .unwrap()
+                .run_f32(&[(input, &[1, input.len() as i64])]),
+        }
+    }
+
+    /// Run the edge half (cut activation → logits).
+    pub fn run_edge(&self, split: usize, act: &[f32]) -> anyhow::Result<Vec<f32>> {
+        match &self.edge[split] {
+            None => Ok(act.to_vec()),
+            Some(a) => a
+                .lock()
+                .unwrap()
+                .run_f32(&[(act, &[1, act.len() as i64])]),
+        }
+    }
+}
+
+impl InferenceBackend for SplitCnnExecutor {
+    fn infer(&self, split: usize, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let split = split.min(self.num_layers);
+        let act = self.run_device(split, input)?;
+        anyhow::ensure!(
+            act.len() == self.act_sizes[split],
+            "cut activation size {} != expected {} at split {split}",
+            act.len(),
+            self.act_sizes[split]
+        );
+        self.run_edge(split, &act)
+    }
+}
+
+/// The XLA Li-GD chunk: runs `T` projected-GD steps for one cohort per
+/// call. Static shapes: `U` users × `M` channels (see aot.py).
+pub struct LigdChunkExecutor {
+    art: Mutex<Artifact>,
+    pub n_users: usize,
+    pub n_channels: usize,
+}
+
+// SAFETY: see `SplitCnnExecutor` — all PJRT access is serialized behind the
+// `Mutex` and the `Rc`s are never cloned across threads.
+unsafe impl Send for LigdChunkExecutor {}
+unsafe impl Sync for LigdChunkExecutor {}
+
+impl LigdChunkExecutor {
+    pub fn load(rt: &Runtime, n_users: usize, n_channels: usize) -> anyhow::Result<Self> {
+        let art = rt.load(&format!("ligd_chunk_c{n_users}_m{n_channels}.hlo.txt"))?;
+        Ok(Self {
+            art: Mutex::new(art),
+            n_users,
+            n_channels,
+        })
+    }
+
+    /// Execute one GD chunk from `vars`, returning (new vars, Γ).
+    ///
+    /// Inputs mirror `CohortProblem` field-for-field (f32); the utility
+    /// semantics are identical to the Rust analytic path — asserted by the
+    /// `integration_runtime` test.
+    pub fn run(
+        &self,
+        p: &CohortProblem,
+        vars: &CohortVars,
+    ) -> anyhow::Result<(CohortVars, f64)> {
+        let (u, m) = (self.n_users, self.n_channels);
+        anyhow::ensure!(p.n_users == u && p.n_channels == m, "cohort shape mismatch");
+        let to32 = |xs: &[f64]| xs.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        let g_up = to32(&p.g_up);
+        let g_down = to32(&p.g_down);
+        let bg_up = to32(&p.bg_up);
+        let bg_down = to32(&p.bg_down);
+        let f_dev = to32(&p.f_dev);
+        let f_edge = to32(&p.f_edge);
+        let w_bits = to32(&p.w_bits);
+        let q_s = to32(&p.q_s);
+        let c_dev = to32(&p.device_flops);
+        let x0 = to32(&vars.x);
+        let link = [p.bw_hz as f32, p.noise_w as f32];
+        let um = [u as i64, m as i64];
+        let uu = [u as i64];
+        let mm = [m as i64];
+        let xd = [vars.x.len() as i64];
+        let outs = self.art.lock().unwrap().run_f32_multi(&[
+            (&g_up, &um),
+            (&g_down, &um),
+            (&bg_up, &mm),
+            (&bg_down, &um),
+            (&f_dev, &uu),
+            (&f_edge, &uu),
+            (&w_bits, &uu),
+            (&q_s, &uu),
+            (&c_dev, &uu),
+            (&x0, &xd),
+            (&link, &[2]),
+        ])?;
+        anyhow::ensure!(outs.len() >= 2, "expected (x, gamma) outputs");
+        let mut nv = vars.clone();
+        for (dst, &src) in nv.x.iter_mut().zip(outs[0].iter()) {
+            *dst = src as f64;
+        }
+        Ok((nv, outs[1][0] as f64))
+    }
+}

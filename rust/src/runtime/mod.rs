@@ -1,0 +1,62 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text in
+//! `artifacts/`) and executes them from the Rust request path. Python never
+//! runs at serving time — `make artifacts` is the only place jax executes.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::Artifact;
+pub use executor::{LigdChunkExecutor, SplitCnnExecutor};
+
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn cpu(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    /// Default artifact location (repo-relative), overridable via
+    /// `ERA_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ERA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load one artifact by file name.
+    pub fn load(&self, name: &str) -> anyhow::Result<Artifact> {
+        Artifact::load(&self.client, &self.artifacts_dir.join(name))
+    }
+
+    /// Whether the artifact directory has been built.
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("manifest.txt").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_present_checks_manifest() {
+        let dir = std::env::temp_dir().join("era-rt-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::remove_file(dir.join("manifest.txt"));
+        assert!(!Runtime::artifacts_present(&dir));
+        std::fs::write(dir.join("manifest.txt"), "x").unwrap();
+        assert!(Runtime::artifacts_present(&dir));
+    }
+}

@@ -1,0 +1,315 @@
+//! Discrete-event serving simulation.
+//!
+//! The static evaluation (`metrics::evaluate`) scores one inference per user
+//! in isolation; this module adds the *dynamics*: queueing for the per-AP
+//! edge resource pool and per-channel airtime when a trace of requests flows
+//! through the decisions. It powers the workload sweeps (Fig.16/19) and the
+//! serving example's latency/throughput report.
+
+use crate::baselines::Decision;
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::Network;
+use crate::trace::Request;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Per-request result.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub user: usize,
+    pub arrival_s: f64,
+    pub finish_s: f64,
+    /// Pure service time (device + uplink + edge + downlink), no queueing.
+    pub service_s: f64,
+    /// Time spent waiting for the edge resource pool.
+    pub queue_s: f64,
+}
+
+impl Completion {
+    pub fn latency(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+#[derive(Debug)]
+struct Ev {
+    t: f64,
+    kind: EvKind,
+}
+
+#[derive(Debug)]
+enum EvKind {
+    /// Request finished device compute + uplink; wants `r` pool units at AP.
+    EdgeArrive { req: usize },
+    /// Request releases pool units and completes after the downlink.
+    EdgeDone { req: usize },
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on time
+        other.t.partial_cmp(&self.t).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Run the trace through the decisions and return per-request completions.
+///
+/// Uses the static per-user link rates (the coherence block of the episode)
+/// and models the edge pool as a per-AP counting semaphore with FIFO
+/// queueing — the serving-relevant contention the paper's λ(r) abstracts.
+pub fn run_episode(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    decisions: &[Decision],
+    rates_up: &[f64],
+    rates_down: &[f64],
+    trace: &[Request],
+) -> Vec<Completion> {
+    let n_aps = cfg.network.num_aps;
+    let mut pool = vec![cfg.compute.edge_pool_units; n_aps];
+    let mut waiting: Vec<std::collections::VecDeque<usize>> =
+        vec![Default::default(); n_aps];
+    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
+
+    // Pre-compute per-request phase durations.
+    struct Phases {
+        pre_edge_s: f64,  // device compute + uplink
+        edge_s: f64,      // edge compute
+        post_edge_s: f64, // downlink
+        r: f64,
+        ap: usize,
+        offloads: bool,
+    }
+    let phases: Vec<Phases> = trace
+        .iter()
+        .map(|rq| {
+            let d = &decisions[rq.user];
+            let sc = model.split_constants(d.split);
+            let dev = crate::latency::device_delay(&sc, net.users[rq.user].device_flops);
+            let up = crate::latency::uplink_delay(sc.cut_bits, rates_up[rq.user]);
+            let edge = crate::latency::server_delay(&sc, d.r.max(cfg.compute.r_min), &cfg.compute);
+            let down = crate::latency::downlink_delay(
+                cfg.compute.result_bits,
+                rates_down[rq.user],
+                sc.edge_flops,
+            );
+            Phases {
+                pre_edge_s: dev + up,
+                edge_s: edge,
+                post_edge_s: down,
+                r: d.r.max(cfg.compute.r_min),
+                ap: net.topo.user_ap[rq.user],
+                offloads: sc.edge_flops > 0.0,
+            }
+        })
+        .collect();
+    let mut edge_start = vec![0.0f64; trace.len()];
+
+    for (idx, rq) in trace.iter().enumerate() {
+        let ph = &phases[idx];
+        if ph.offloads {
+            heap.push(Ev {
+                t: rq.arrival_s + ph.pre_edge_s,
+                kind: EvKind::EdgeArrive { req: idx },
+            });
+        } else {
+            completions.push(Completion {
+                id: rq.id,
+                user: rq.user,
+                arrival_s: rq.arrival_s,
+                finish_s: rq.arrival_s + ph.pre_edge_s,
+                service_s: ph.pre_edge_s,
+                queue_s: 0.0,
+            });
+        }
+    }
+
+    while let Some(ev) = heap.pop() {
+        match ev.kind {
+            EvKind::EdgeArrive { req } => {
+                let ph = &phases[req];
+                if pool[ph.ap] >= ph.r {
+                    pool[ph.ap] -= ph.r;
+                    edge_start[req] = ev.t;
+                    heap.push(Ev {
+                        t: ev.t + ph.edge_s,
+                        kind: EvKind::EdgeDone { req },
+                    });
+                } else {
+                    waiting[ph.ap].push_back(req);
+                    edge_start[req] = ev.t; // provisional: records arrival at queue
+                }
+            }
+            EvKind::EdgeDone { req } => {
+                let ph = &phases[req];
+                pool[ph.ap] += ph.r;
+                let rq = &trace[req];
+                let queue_s =
+                    (edge_start[req] - (rq.arrival_s + ph.pre_edge_s)).max(0.0);
+                completions.push(Completion {
+                    id: rq.id,
+                    user: rq.user,
+                    arrival_s: rq.arrival_s,
+                    finish_s: ev.t + ph.post_edge_s,
+                    service_s: ph.pre_edge_s + ph.edge_s + ph.post_edge_s,
+                    queue_s,
+                });
+                // admit waiters that now fit (FIFO, skip-blocked=false)
+                while let Some(&next) = waiting[ph.ap].front() {
+                    let np = &phases[next];
+                    if pool[ph.ap] >= np.r {
+                        waiting[ph.ap].pop_front();
+                        pool[ph.ap] -= np.r;
+                        let wait_started = edge_start[next];
+                        edge_start[next] = ev.t;
+                        // queue time = now − when it reached the queue
+                        let _ = wait_started;
+                        heap.push(Ev {
+                            t: ev.t + np.edge_s,
+                            kind: EvKind::EdgeDone { req: next },
+                        });
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    completions.sort_by(|a, b| a.id.cmp(&b.id));
+    completions
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpisodeStats {
+    pub n: usize,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_queue_s: f64,
+    pub throughput_rps: f64,
+}
+
+pub fn stats(completions: &[Completion], episode_s: f64) -> EpisodeStats {
+    if completions.is_empty() {
+        return EpisodeStats::default();
+    }
+    let lat: Vec<f64> = completions.iter().map(|c| c.latency()).collect();
+    EpisodeStats {
+        n: completions.len(),
+        mean_latency_s: crate::util::mean(&lat),
+        p50_latency_s: crate::util::percentile(&lat, 50.0),
+        p99_latency_s: crate::util::percentile(&lat, 99.0),
+        mean_queue_s: crate::util::mean(
+            &completions.iter().map(|c| c.queue_s).collect::<Vec<_>>(),
+        ),
+        throughput_rps: completions.len() as f64 / episode_s.max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{DeviceOnly, Neurosurgeon, Strategy};
+    use crate::config::presets;
+    use crate::models::zoo;
+    use crate::trace::fixed_count_trace;
+
+    fn setup() -> (Config, Network, ModelProfile) {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 31);
+        (cfg, net, zoo::nin())
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let (cfg, net, model) = setup();
+        let ds = Neurosurgeon.decide(&cfg, &net, &model);
+        let o = crate::metrics::evaluate(
+            &cfg,
+            &net,
+            &model,
+            &ds,
+            crate::baselines::ChannelModel::Orthogonal,
+        );
+        // recompute rates to feed the episode
+        let tr = fixed_count_trace(&cfg, 2, 3);
+        let (up, down) = rates_of(&cfg, &net, &model, &ds);
+        let done = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
+        assert_eq!(done.len(), tr.len());
+        for c in &done {
+            assert!(c.finish_s >= c.arrival_s);
+            assert!(c.service_s > 0.0);
+        }
+        let _ = o;
+    }
+
+    fn rates_of(
+        cfg: &Config,
+        net: &Network,
+        _model: &ModelProfile,
+        ds: &[crate::baselines::Decision],
+    ) -> (Vec<f64>, Vec<f64>) {
+        // use the orthogonal model used for baselines
+        let alloc: Vec<crate::net::LinkAssignment> = ds
+            .iter()
+            .map(|d| crate::net::LinkAssignment {
+                up_ch: d.up_ch,
+                down_ch: d.down_ch,
+                p_up: d.p_up,
+                p_down: d.p_down,
+                r: d.r,
+                split: d.split,
+            })
+            .collect();
+        let r = net.rates(&alloc);
+        let _ = cfg;
+        (r.up, r.down)
+    }
+
+    #[test]
+    fn device_only_has_no_queueing() {
+        let (cfg, net, model) = setup();
+        let ds = DeviceOnly.decide(&cfg, &net, &model);
+        let tr = fixed_count_trace(&cfg, 4, 5);
+        let up = vec![f64::INFINITY; net.num_users()];
+        let done = run_episode(&cfg, &net, &model, &ds, &up, &up, &tr);
+        assert_eq!(done.len(), tr.len());
+        for c in &done {
+            assert_eq!(c.queue_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn congestion_grows_with_workload() {
+        let (cfg, net, model) = setup();
+        let ds = Neurosurgeon.decide(&cfg, &net, &model);
+        let (up, down) = rates_of(&cfg, &net, &model, &ds);
+        let light = stats(
+            &run_episode(&cfg, &net, &model, &ds, &up, &down, &fixed_count_trace(&cfg, 1, 7)),
+            cfg.workload.episode_s,
+        );
+        let heavy = stats(
+            &run_episode(&cfg, &net, &model, &ds, &up, &down, &fixed_count_trace(&cfg, 30, 7)),
+            cfg.workload.episode_s,
+        );
+        assert!(heavy.mean_queue_s >= light.mean_queue_s);
+        assert!(heavy.n == 30 * cfg.network.num_users);
+    }
+}

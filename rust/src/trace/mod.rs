@@ -1,0 +1,99 @@
+//! Workload generation (paper §V setup): inference requests from mobile
+//! users, Poisson arrivals for the serving simulator, fixed task counts for
+//! the workload sweeps (Fig.16/19).
+
+use crate::config::Config;
+use crate::util::rng::Pcg32;
+
+/// One inference request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub user: usize,
+    /// Arrival time within the episode (s).
+    pub arrival_s: f64,
+}
+
+/// Generate Poisson arrivals per user over `episode_s` seconds.
+pub fn poisson_trace(cfg: &Config, seed: u64) -> Vec<Request> {
+    let mut rng = Pcg32::new(seed, 0x7ACE);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for user in 0..cfg.network.num_users {
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(cfg.workload.arrival_rate_hz);
+            if t >= cfg.workload.episode_s {
+                break;
+            }
+            out.push(Request {
+                id,
+                user,
+                arrival_s: t,
+            });
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+/// Fixed-count workload: `k` tasks per user, arrivals spread uniformly over
+/// the episode (the Fig.16/19 "average number of works per user" variable).
+pub fn fixed_count_trace(cfg: &Config, k: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Pcg32::new(seed, 0xF1ED);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for user in 0..cfg.network.num_users {
+        for _ in 0..k {
+            out.push(Request {
+                id,
+                user,
+                arrival_s: rng.uniform(0.0, cfg.workload.episode_s),
+            });
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn poisson_trace_sorted_and_sized() {
+        let mut cfg = presets::smoke();
+        cfg.workload.arrival_rate_hz = 10.0;
+        cfg.workload.episode_s = 2.0;
+        let tr = poisson_trace(&cfg, 3);
+        for w in tr.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        // ~ users × rate × episode arrivals
+        let expect = cfg.network.num_users as f64 * 10.0 * 2.0;
+        assert!((tr.len() as f64) > 0.6 * expect && (tr.len() as f64) < 1.4 * expect);
+        // ids unique
+        let mut ids: Vec<u64> = tr.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), tr.len());
+    }
+
+    #[test]
+    fn fixed_count_exact() {
+        let cfg = presets::smoke();
+        let tr = fixed_count_trace(&cfg, 3, 7);
+        assert_eq!(tr.len(), cfg.network.num_users * 3);
+        assert!(tr.iter().all(|r| r.arrival_s < cfg.workload.episode_s));
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = presets::smoke();
+        assert_eq!(poisson_trace(&cfg, 5), poisson_trace(&cfg, 5));
+        assert_ne!(poisson_trace(&cfg, 5), poisson_trace(&cfg, 6));
+    }
+}

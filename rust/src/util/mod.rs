@@ -1,0 +1,85 @@
+//! Shared utilities: deterministic RNG, property-testing kit, math helpers.
+
+pub mod quickcheck;
+pub mod rng;
+
+/// dBm → Watts.
+#[inline]
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    10f64.powf((dbm - 30.0) / 10.0)
+}
+
+/// Watts → dBm.
+#[inline]
+pub fn watt_to_dbm(w: f64) -> f64 {
+    10.0 * w.log10() + 30.0
+}
+
+/// log2(1 + x), guarded for tiny/negative numerical noise.
+#[inline]
+pub fn log2_1p(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).log2()
+}
+
+/// Numerically-stable logistic sigmoid 1 / (1 + e^{-t}).
+#[inline]
+pub fn sigmoid(t: f64) -> f64 {
+    if t >= 0.0 {
+        1.0 / (1.0 + (-t).exp())
+    } else {
+        let e = t.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_roundtrip() {
+        for dbm in [-174.0, -30.0, 0.0, 25.0, 50.0] {
+            assert!((watt_to_dbm(dbm_to_watt(dbm)) - dbm).abs() < 1e-9);
+        }
+        // 25 dBm ≈ 0.316 W
+        assert!((dbm_to_watt(25.0) - 0.31622776601).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_props() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(100.0) > 0.999999);
+        assert!(sigmoid(-100.0) < 1e-6);
+        // stable in extreme ranges
+        assert!(sigmoid(-1e4) >= 0.0);
+        assert!(sigmoid(1e4) <= 1.0);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+}

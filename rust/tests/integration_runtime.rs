@@ -1,0 +1,230 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built (`make artifacts`); CI always builds artifacts first so the full
+//! three-layer path is exercised: jax/pallas → HLO text → PJRT → Rust.
+
+use era::optimizer::{CohortProblem, CohortVars};
+use era::runtime::{executor::split_cnn_shape, LigdChunkExecutor, Runtime, SplitCnnExecutor};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    // tests run from the crate root
+    std::env::var_os("ERA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn skip_if_missing() -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if Runtime::artifacts_present(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Parse the flat `key v1 v2 ...` golden fixture.
+fn load_golden(dir: &PathBuf) -> HashMap<String, Vec<f64>> {
+    let text = std::fs::read_to_string(dir.join("golden.txt")).expect("golden.txt");
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let key = match it.next() {
+            Some(k) => k.to_string(),
+            None => continue,
+        };
+        let vals: Vec<f64> = it.map(|v| v.parse().expect("float")).collect();
+        out.insert(key, vals);
+    }
+    out
+}
+
+/// Parse `const <name> <value>` lines from the manifest.
+fn manifest_consts(dir: &PathBuf) -> HashMap<String, f64> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt")).expect("manifest");
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() == 3 && parts[0] == "const" {
+            if let Ok(v) = parts[2].parse::<f64>() {
+                out.insert(parts[1].to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn manifest_consts_match_rust_defaults() {
+    let Some(dir) = skip_if_missing() else { return };
+    let c = manifest_consts(&dir);
+    let cfg = era::config::Config::default();
+    // Relative tolerance — an absolute epsilon silently passes for tiny
+    // constants like ξ (≈1e-23), which is exactly where drift bites.
+    let close = |a: f64, b: f64| a == b || (a - b).abs() <= 1e-6 * a.abs().max(b.abs());
+    assert!(close(c["p_max"], era::util::dbm_to_watt(cfg.network.max_tx_power_dbm)));
+    assert!(close(c["p_min"], era::util::dbm_to_watt(cfg.network.min_tx_power_dbm)));
+    assert!(close(c["r_min"], cfg.compute.r_min));
+    assert!(close(c["r_max"], cfg.compute.r_max));
+    assert!(close(c["lambda_gamma"], cfg.compute.lambda_gamma));
+    assert!(close(c["edge_unit_flops"], cfg.compute.edge_unit_flops));
+    assert!(close(c["xi_device"], cfg.compute.xi_device));
+    assert!(close(c["xi_edge"], cfg.compute.xi_edge));
+    assert!(close(c["sigmoid_a"], cfg.qoe.sigmoid_a));
+    assert!(close(c["w_t"], cfg.optimizer.weight_delay));
+    assert!(close(c["w_r"], cfg.optimizer.weight_resource));
+    assert!(close(c["w_q"], cfg.optimizer.weight_qoe));
+    assert!(close(c["delay_scale"], cfg.optimizer.delay_scale));
+    assert!(close(c["energy_scale"], cfg.optimizer.energy_scale));
+    assert!(close(c["resource_scale"], cfg.optimizer.resource_scale));
+    assert!(close(c["result_bits"], cfg.compute.result_bits));
+    assert!(close(c["cohort_users"], cfg.optimizer.cohort_users as f64));
+    assert!(close(c["cohort_channels"], cfg.optimizer.cohort_channels as f64));
+}
+
+#[test]
+fn split_cnn_every_split_matches_golden_logits() {
+    let Some(dir) = skip_if_missing() else { return };
+    let golden = load_golden(&dir);
+    let rt = Runtime::cpu(&dir).expect("pjrt client");
+    let (nl, sizes) = split_cnn_shape();
+    let exe = SplitCnnExecutor::load(&rt, nl, sizes.clone()).expect("load split cnn");
+    let n_in = sizes[0];
+    let input: Vec<f32> = (0..n_in)
+        .map(|i| i as f32 / (n_in as f32 - 1.0))
+        .collect();
+    let expect = &golden["logits"];
+    for split in 0..=nl {
+        let act = exe.run_device(split, &input).expect("device half");
+        assert_eq!(act.len(), sizes[split], "cut size at split {split}");
+        let logits = exe.run_edge(split, &act).expect("edge half");
+        assert_eq!(logits.len(), 10);
+        for (i, (&got, &want)) in logits.iter().zip(expect.iter()).enumerate() {
+            assert!(
+                (got as f64 - want).abs() < 1e-3,
+                "split {split} logit {i}: got {got} want {want}"
+            );
+        }
+    }
+}
+
+fn cohort_from_golden(golden: &HashMap<String, Vec<f64>>) -> (CohortProblem, CohortVars) {
+    let cfg = era::config::Config::default();
+    let (u, m) = (
+        cfg.optimizer.cohort_users,
+        cfg.optimizer.cohort_channels,
+    );
+    let g = |k: &str| golden[k].clone();
+    let link = &golden["link"];
+    let p = CohortProblem {
+        n_users: u,
+        n_channels: m,
+        bw_hz: link[0],
+        noise_w: link[1],
+        g_up: g("g_up"),
+        g_down: g("g_down"),
+        bg_up: g("bg_up"),
+        bg_down: g("bg_down"),
+        device_flops: g("c_dev"),
+        q_s: g("q_s"),
+        f_dev: g("f_dev"),
+        f_edge: g("f_edge"),
+        w_bits: g("w_bits"),
+        result_bits: cfg.compute.result_bits,
+        p_min: era::util::dbm_to_watt(cfg.network.min_tx_power_dbm),
+        p_max: era::util::dbm_to_watt(cfg.network.max_tx_power_dbm),
+        r_min: cfg.compute.r_min,
+        r_max: cfg.compute.r_max,
+        lambda_gamma: cfg.compute.lambda_gamma,
+        edge_unit_flops: cfg.compute.edge_unit_flops,
+        xi_device: cfg.compute.xi_device,
+        xi_edge: cfg.compute.xi_edge,
+        sigmoid_a: cfg.qoe.sigmoid_a,
+        w_t: cfg.optimizer.weight_delay,
+        w_r: cfg.optimizer.weight_resource,
+        w_q: cfg.optimizer.weight_qoe,
+        delay_scale: cfg.optimizer.delay_scale,
+        energy_scale: cfg.optimizer.energy_scale,
+        resource_scale: cfg.optimizer.resource_scale,
+    };
+    let vars = CohortVars {
+        n_users: u,
+        n_channels: m,
+        x: golden["x0"].clone(),
+    };
+    (p, vars)
+}
+
+#[test]
+fn rust_utility_matches_xla_utility() {
+    // The cross-implementation oracle: the analytic Rust Γ and the
+    // XLA-lowered jax Γ (with the Pallas rate kernel inlined) agree on the
+    // golden cohort — both on Γ and on every per-user delay/energy.
+    let Some(dir) = skip_if_missing() else { return };
+    let golden = load_golden(&dir);
+    let (p, vars) = cohort_from_golden(&golden);
+    let ev = era::optimizer::eval(&p, &vars, &p.sic_orders());
+    let rel = |a: f64, b: f64| (a - b).abs() / (1.0 + a.abs().max(b.abs()));
+    assert!(
+        rel(ev.total, golden["gamma"][0]) < 2e-4,
+        "gamma: rust {} vs xla {}",
+        ev.total,
+        golden["gamma"][0]
+    );
+    for i in 0..p.n_users {
+        assert!(
+            rel(ev.t[i], golden["t"][i]) < 2e-4,
+            "t[{i}]: {} vs {}",
+            ev.t[i],
+            golden["t"][i]
+        );
+        assert!(
+            rel(ev.e[i], golden["e"][i]) < 2e-4,
+            "e[{i}]: {} vs {}",
+            ev.e[i],
+            golden["e"][i]
+        );
+    }
+}
+
+#[test]
+fn ligd_chunk_executes_and_descends() {
+    // Run the AOT GD chunk from Rust; Γ must match the recorded
+    // post-chunk value and be an improvement over the start.
+    let Some(dir) = skip_if_missing() else { return };
+    let golden = load_golden(&dir);
+    let (p, vars) = cohort_from_golden(&golden);
+    let rt = Runtime::cpu(&dir).expect("client");
+    let exe = LigdChunkExecutor::load(&rt, p.n_users, p.n_channels).expect("chunk");
+    let (new_vars, gamma) = exe.run(&p, &vars).expect("run chunk");
+    assert!(
+        gamma < golden["gamma"][0],
+        "chunk did not descend: {gamma} vs start {}",
+        golden["gamma"][0]
+    );
+    let rel = (gamma - golden["gamma_after_chunk"][0]).abs()
+        / (1.0 + gamma.abs());
+    assert!(
+        rel < 2e-3,
+        "post-chunk gamma mismatch: rust-run {} vs python-run {}",
+        gamma,
+        golden["gamma_after_chunk"][0]
+    );
+    // result is feasible
+    for u in 0..p.n_users {
+        let su: f64 = (0..p.n_channels).map(|c| new_vars.beta_up(u, c)).sum();
+        assert!((su - 1.0).abs() < 1e-3, "beta row sums to {su}");
+        assert!(new_vars.r(u) >= p.r_min - 1e-5 && new_vars.r(u) <= p.r_max + 1e-5);
+    }
+    // And the Rust analytic Γ agrees with the XLA Γ at the new point.
+    let ev = era::optimizer::eval(&p, &new_vars, &p.sic_orders());
+    assert!(
+        (ev.total - gamma).abs() / (1.0 + gamma.abs()) < 2e-3,
+        "post-chunk parity: rust {} vs xla {}",
+        ev.total,
+        gamma
+    );
+}

@@ -1,0 +1,169 @@
+//! Property-based tests over the optimizer and coordinator invariants and
+//! the paper's corollaries (in-tree quickcheck kit — no proptest offline).
+
+use era::config::presets;
+use era::models::zoo;
+use era::net::Network;
+use era::optimizer::{solve_gd, solve_ligd, CohortProblem, CohortVars, GdOptions};
+use era::util::quickcheck::forall;
+
+fn random_problem(g: &mut era::util::quickcheck::Gen, split: usize) -> CohortProblem {
+    let mut cfg = presets::smoke();
+    cfg.network.num_users = g.usize_in(12, 30);
+    cfg.network.num_aps = g.usize_in(1, 3);
+    let net = Network::generate(&cfg, 9_000 + g.case as u64);
+    let nu = g.usize_in(2, 6);
+    let nc = g.usize_in(2, 6);
+    let users: Vec<usize> = (0..nu).collect();
+    let channels: Vec<usize> = (0..nc).collect();
+    let bg_up = (0..nc).map(|_| g.log_f64_in(1e-17, 1e-13)).collect();
+    let bg_down = (0..nu * nc).map(|_| g.log_f64_in(1e-17, 1e-13)).collect();
+    let mut p = CohortProblem::from_network(&cfg, &net, &users, &channels, bg_up, bg_down);
+    let m = zoo::yolov2();
+    p.set_uniform_split(&m.split_constants(split.min(m.num_layers())));
+    p
+}
+
+#[test]
+fn gd_never_increases_utility() {
+    // Corollary 2's practical face: every accepted GD step descends.
+    forall("GD monotone descent", 24, |g| {
+        let split = g.usize_in(0, 17);
+        let p = random_problem(g, split);
+        let opts = GdOptions {
+            step_size: g.log_f64_in(1e-3, 0.2),
+            epsilon: 1e-5,
+            max_iters: 80,
+        };
+        let (_, rep) = solve_gd(&p, CohortVars::init_center(&p), &opts);
+        assert!(
+            rep.final_gamma <= rep.initial_gamma + 1e-9,
+            "ascent: {} -> {}",
+            rep.initial_gamma,
+            rep.final_gamma
+        );
+    });
+}
+
+#[test]
+fn gd_solution_always_feasible() {
+    forall("GD feasibility", 24, |g| {
+        let split = g.usize_in(0, 17);
+        let p = random_problem(g, split);
+        let opts = GdOptions {
+            step_size: 0.05,
+            epsilon: 1e-5,
+            max_iters: 60,
+        };
+        let (v, _) = solve_gd(&p, CohortVars::init_center(&p), &opts);
+        for u in 0..p.n_users {
+            let su: f64 = (0..p.n_channels).map(|m| v.beta_up(u, m)).sum();
+            let sd: f64 = (0..p.n_channels).map(|m| v.beta_down(u, m)).sum();
+            assert!((su - 1.0).abs() < 1e-6, "beta_up row sum {su}");
+            assert!((sd - 1.0).abs() < 1e-6, "beta_down row sum {sd}");
+            assert!(v.p_up(u) >= p.p_min - 1e-12 && v.p_up(u) <= p.p_max + 1e-12);
+            assert!(v.r(u) >= p.r_min - 1e-12 && v.r(u) <= p.r_max + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn ligd_warm_start_no_worse_and_faster_on_average() {
+    // Corollary 4: warm-started Li-GD needs fewer total iterations than
+    // cold-start GD, without losing solution quality (checked on average
+    // across random instances).
+    let model = zoo::nin();
+    let mut warm_iters = 0usize;
+    let mut cold_iters = 0usize;
+    let mut warm_gamma = 0.0f64;
+    let mut cold_gamma = 0.0f64;
+    forall("Li-GD vs cold GD", 8, |g| {
+        let p = random_problem(g, 0);
+        let opts = GdOptions {
+            step_size: 0.05,
+            epsilon: 1e-5,
+            max_iters: 120,
+        };
+        let mut pw = p.clone();
+        let w = solve_ligd(&mut pw, &model, &opts, true);
+        let mut pc = p.clone();
+        let c = solve_ligd(&mut pc, &model, &opts, false);
+        warm_iters += w.total_iters;
+        cold_iters += c.total_iters;
+        warm_gamma += w.gamma;
+        cold_gamma += c.gamma;
+    });
+    assert!(
+        warm_iters < cold_iters,
+        "warm {warm_iters} !< cold {cold_iters}"
+    );
+    assert!(
+        warm_gamma <= cold_gamma * 1.05,
+        "warm-start lost quality: {warm_gamma} vs {cold_gamma}"
+    );
+}
+
+#[test]
+fn approximation_error_shrinks_with_sigmoid_sharpness() {
+    // Corollary 5's empirical face: the relaxed DCT approaches the exact
+    // discrete DCT as `a` grows, across random (T, Q).
+    forall("approx error ↓ in a", 128, |g| {
+        let t = g.f64_in(0.001, 0.04);
+        let q = g.f64_in(0.005, 0.02);
+        if (t / q - 1.0).abs() < 0.05 {
+            return;
+        }
+        let exact = era::qoe::dct_exact(t, q);
+        let e_small = (era::qoe::dct_relaxed(t, q, 20.0) - exact).abs();
+        let e_large = (era::qoe::dct_relaxed(t, q, 2000.0) - exact).abs();
+        assert!(
+            e_large <= e_small + 1e-12,
+            "a=2000 worse than a=20 at t={t} q={q}"
+        );
+    });
+}
+
+#[test]
+fn rounding_preserves_feasibility_across_scenarios() {
+    // Coordinator invariant under many random networks: rounded plans never
+    // violate the NOMA cluster cap, power boxes, or SIC threshold.
+    let model = zoo::nin();
+    forall("rounded plan feasibility", 8, |g| {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = g.usize_in(10, 40);
+        cfg.network.num_aps = g.usize_in(1, 4);
+        cfg.network.num_subchannels = g.usize_in(4, 12);
+        cfg.optimizer.max_iters = 30;
+        let net = Network::generate(&cfg, 7_000 + g.case as u64);
+        let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
+        let mut load =
+            vec![vec![0usize; cfg.network.num_subchannels]; cfg.network.num_aps];
+        let p_max = era::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
+        for (u, d) in ds.iter().enumerate() {
+            if let Some(ch) = d.up_ch {
+                let ap = net.topo.user_ap[u];
+                load[ap][ch] += 1;
+                assert!(load[ap][ch] <= cfg.network.max_users_per_subchannel);
+                assert!(d.p_up <= p_max + 1e-12);
+                assert!(
+                    d.p_up * net.channels.up[u][ap][ch] > cfg.network.sic_threshold_w,
+                    "committed user below SIC threshold"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn evaluation_is_deterministic_and_seed_sensitive() {
+    let cfg = presets::smoke();
+    let model = zoo::yolov2();
+    let a = Network::generate(&cfg, 123);
+    let b = Network::generate(&cfg, 123);
+    let (da, _) = era::coordinator::plan_era(&cfg, &a, &model);
+    let (db, _) = era::coordinator::plan_era(&cfg, &b, &model);
+    assert_eq!(da, db, "same seed must give identical plans");
+    let c = Network::generate(&cfg, 124);
+    let (dc, _) = era::coordinator::plan_era(&cfg, &c, &model);
+    assert_ne!(da, dc, "different seed should differ");
+}
