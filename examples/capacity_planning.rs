@@ -1,52 +1,50 @@
 //! Capacity planning with the serving simulator: how many tasks/user can
 //! the deployment absorb before edge-pool queueing blows the QoE budget?
 //! (The operational question behind the paper's Fig.16/19 workload sweep.)
+//! One scenario spec with an episode per cell.
 //!
 //! Run: `cargo run --release --example capacity_planning`
 
-use era::baselines::{ChannelModel, Strategy};
 use era::config::presets;
-use era::coordinator::EraStrategy;
-use era::models::zoo;
-use era::net::Network;
-use era::sim::{run_episode, stats};
-use era::trace::fixed_count_trace;
+use era::scenario::{Engine, ScenarioSpec};
 
 fn main() {
-    let mut cfg = presets::smoke();
-    cfg.network.num_users = 60;
-    cfg.workload.episode_s = 0.04; // compressed episode → visible contention
-    let model = zoo::yolov2();
-    let net = Network::generate(&cfg, 21);
-
-    let ds = EraStrategy::default().decide(&cfg, &net, &model);
-    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
-    let q = cfg.qoe.expected_finish_mean_s;
+    let workloads = [1usize, 2, 4, 8, 16, 32];
+    let mut base = presets::smoke();
+    base.network.num_users = 60;
+    base.workload.episode_s = 0.04; // compressed episode → visible contention
+    // zero jitter so every user's QoE threshold equals the printed Q —
+    // the engine counts misses against per-user thresholds
+    base.qoe.expected_finish_jitter = 0.0;
+    base.seed = 21;
+    let mut spec = ScenarioSpec::new("capacity", base.clone())
+        .with_strategies(&["era"])
+        .with_axis_usize("workload.tasks_per_user", &workloads);
+    spec.episode = true;
+    spec.trace_seed = Some(31);
 
     println!(
         "deployment: {} users, {} edge pool units/AP, episode {:.0} ms, Q ≈ {:.0} ms\n",
-        cfg.network.num_users,
-        cfg.compute.edge_pool_units,
-        cfg.workload.episode_s * 1e3,
-        q * 1e3
+        base.network.num_users,
+        base.compute.edge_pool_units,
+        base.workload.episode_s * 1e3,
+        base.qoe.expected_finish_mean_s * 1e3
     );
     println!(
         "{:>11} {:>10} {:>11} {:>11} {:>12} {:>13}",
         "tasks/user", "requests", "mean (ms)", "p99 (ms)", "queue (ms)", "QoE-miss (%)"
     );
-    for k in [1usize, 2, 4, 8, 16, 32] {
-        let tr = fixed_count_trace(&cfg, k, 31);
-        let done = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
-        let st = stats(&done, cfg.workload.episode_s);
-        let misses = done.iter().filter(|c| c.latency() > q).count();
+    let records = Engine::default().run(&spec).expect("scenario runs");
+    for (r, k) in records.iter().zip(workloads.iter()) {
+        let ep = r.episode.as_ref().expect("episode stats");
         println!(
             "{:>11} {:>10} {:>11.3} {:>11.3} {:>12.3} {:>12.1}%",
             k,
-            st.n,
-            st.mean_latency_s * 1e3,
-            st.p99_latency_s * 1e3,
-            st.mean_queue_s * 1e3,
-            100.0 * misses as f64 / done.len().max(1) as f64
+            ep.n,
+            ep.mean_latency_s * 1e3,
+            ep.p99_latency_s * 1e3,
+            ep.mean_queue_s * 1e3,
+            100.0 * ep.qoe_miss_frac
         );
     }
     println!("\nThe knee marks the deployment's QoE-safe capacity.");

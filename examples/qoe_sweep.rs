@@ -1,54 +1,40 @@
 //! QoE-threshold sweep (the paper's motivating experiment, Fig.8–11):
 //! how does relaxing the expected finish time trade latency for
-//! energy/resource savings under ERA?
+//! energy/resource savings under ERA? One scenario spec, one sweep axis.
 //!
 //! Run: `cargo run --release --example qoe_sweep`
 
-use era::baselines::{ChannelModel, DeviceOnly, EdgeOnly, Strategy};
 use era::config::presets;
-use era::coordinator::EraStrategy;
-use era::metrics::evaluate;
-use era::models::zoo;
-use era::net::Network;
+use era::scenario::{Engine, ScenarioSpec};
 
 fn main() {
-    let model = zoo::vgg16();
-    println!("model: {} | sweep: expected finish time 5..25 ms\n", model.name);
+    let q_ms = [5.0, 10.0, 15.0, 20.0, 25.0];
+    let means: Vec<f64> = q_ms.iter().map(|q| q / 1e3).collect();
+    let mut base = presets::smoke();
+    base.network.num_users = 48;
+    base.qoe.expected_finish_jitter = 0.0;
+    base.workload.model = "vgg16".into();
+    base.seed = 7;
+    let spec = ScenarioSpec::new("qoe_sweep", base)
+        .with_strategies(&["era"])
+        .with_axis_f64("qoe.expected_finish_mean_s", &means);
+
+    println!("model: vgg16 | sweep: expected finish time 5..25 ms\n");
     println!(
         "{:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
         "Q (ms)", "delay (ms)", "speedup", "energy (mJ)", "viol (%)", "mean r"
     );
-    for q_ms in [5.0, 10.0, 15.0, 20.0, 25.0] {
-        let mut cfg = presets::smoke();
-        cfg.network.num_users = 48;
-        cfg.qoe.expected_finish_mean_s = q_ms / 1e3;
-        cfg.qoe.expected_finish_jitter = 0.0;
-        let net = Network::generate(&cfg, 7);
-        let ds = EraStrategy::default().decide(&cfg, &net, &model);
-        let o = evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
-        let base = evaluate(
-            &cfg,
-            &net,
-            &model,
-            &DeviceOnly.decide(&cfg, &net, &model),
-            ChannelModel::Orthogonal,
-        );
-        let mean_r = ds
-            .iter()
-            .filter(|d| d.offloads(&model))
-            .map(|d| d.r)
-            .sum::<f64>()
-            / ds.iter().filter(|d| d.offloads(&model)).count().max(1) as f64;
+    let records = Engine::default().run(&spec).expect("scenario runs");
+    for (r, q) in records.iter().zip(q_ms.iter()) {
         println!(
             "{:>8.0} {:>12.3} {:>11.2}x {:>12.2} {:>11.1}% {:>10.2}",
-            q_ms,
-            o.mean_delay() * 1e3,
-            o.latency_speedup_vs(&base),
-            o.mean_energy() * 1e3,
-            o.qoe.violation_frac() * 100.0,
-            mean_r
+            q,
+            r.mean_delay_s * 1e3,
+            r.speedup_vs_device(),
+            r.mean_energy_j * 1e3,
+            r.violation_frac() * 100.0,
+            r.mean_r
         );
-        let _ = EdgeOnly; // (EdgeOnly comparison lives in `era figures --fig 9`)
     }
     println!(
         "\nTighter deadlines force more edge resource (higher r, more energy);\nloose deadlines let ERA power down — the paper's Fig.8/9 behaviour."

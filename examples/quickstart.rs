@@ -1,66 +1,49 @@
-//! Quickstart: generate a small NOMA edge network, plan with ERA, and
-//! compare against every baseline on latency / energy / QoE.
+//! Quickstart: run one scenario cell per strategy through the scenario
+//! engine and compare ERA against every baseline on latency / energy / QoE.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use era::baselines::*;
 use era::config::presets;
-use era::coordinator::EraStrategy;
-use era::metrics::evaluate;
-use era::models::zoo;
-use era::net::Network;
+use era::scenario::{Engine, ScenarioSpec};
 
 fn main() {
     // 1. A scenario: 5 APs, 250 users, 50 NOMA subchannels (the paper's
-    //    §V.A setup scaled 5× down; `presets::paper_full()` is the 1250-user
-    //    original).
+    //    §V.A setup scaled 5× down; preset "paper" is the 1250-user
+    //    original), with all seven strategies as the comparison set.
     let cfg = presets::medium();
-
-    // 2. The deterministic wireless world (Rayleigh fading, path loss,
-    //    nearest-AP association) and the DNN to serve.
-    let net = Network::generate(&cfg, cfg.seed);
-    let model = zoo::yolov2();
+    let spec = ScenarioSpec::new("quickstart", cfg.clone())
+        .with_strategies(era::strategies::NAMES);
     println!(
-        "network: {} users, {} APs, {} subchannels | model: {} ({} layers, {:.2} GFLOPs)\n",
+        "network: {} users, {} APs, {} subchannels | model: {} | {} engine cells\n",
         cfg.network.num_users,
         cfg.network.num_aps,
         cfg.network.num_subchannels,
-        model.name,
-        model.num_layers(),
-        model.total_flops() / 1e9
+        cfg.workload.model,
+        spec.num_cells(),
     );
 
-    // 3. Plan with every strategy and score under its channel model.
-    let strategies: Vec<Box<dyn Strategy>> = vec![
-        Box::new(EraStrategy::default()),
-        Box::new(Neurosurgeon),
-        Box::new(DnnSurgeon),
-        Box::new(Iao::default()),
-        Box::new(Dina),
-        Box::new(EdgeOnly),
-        Box::new(DeviceOnly),
-    ];
-    let base = {
-        let ds = DeviceOnly.decide(&cfg, &net, &model);
-        evaluate(&cfg, &net, &model, &ds, ChannelModel::Orthogonal)
-    };
+    // 2. The engine generates the deterministic wireless world per cell
+    //    (Rayleigh fading, path loss, nearest-AP association), plans with
+    //    each strategy, and scores it under its channel model — in
+    //    parallel across strategies.
+    let records = Engine::default().run(&spec).expect("scenario runs");
+
+    // 3. One row per cell; the Device-Only reference ratios come with the
+    //    record, no hand-rolled baseline pass needed.
     println!(
         "{:<14} {:>10} {:>9} {:>11} {:>12} {:>10}",
         "strategy", "delay(ms)", "speedup", "energy(mJ)", "QoE-viol(%)", "ΣDCT(ms)"
     );
-    for s in strategies {
-        let t0 = std::time::Instant::now();
-        let ds = s.decide(&cfg, &net, &model);
-        let o = evaluate(&cfg, &net, &model, &ds, s.channel_model());
+    for r in &records {
         println!(
             "{:<14} {:>10.3} {:>8.2}x {:>11.2} {:>11.1}% {:>10.1}   (planned in {:.0} ms)",
-            s.name(),
-            o.mean_delay() * 1e3,
-            o.latency_speedup_vs(&base),
-            o.mean_energy() * 1e3,
-            o.qoe.violation_frac() * 100.0,
-            o.qoe.sum_dct_s * 1e3,
-            t0.elapsed().as_secs_f64() * 1e3,
+            r.strategy,
+            r.mean_delay_s * 1e3,
+            r.speedup_vs_device(),
+            r.mean_energy_j * 1e3,
+            r.violation_frac() * 100.0,
+            r.sum_dct_s * 1e3,
+            r.plan_wall_s * 1e3,
         );
     }
     println!(

@@ -1,7 +1,9 @@
 //! End-to-end serving driver (the repository's E2E validation run):
 //!
 //!   1. generates the NOMA edge network,
-//!   2. plans split/channel/power/resource with ERA (Li-GD),
+//!   2. plans split/channel/power/resource with ERA (Li-GD) via the
+//!      strategy registry — the same resolution path the scenario engine
+//!      and the CLI use,
 //!   3. loads the AOT-compiled split-CNN artifacts (jax+Pallas → HLO text
 //!      → PJRT) and serves a batched request trace through the worker
 //!      pool, executing the *real* device-half and edge-half executables
@@ -10,12 +12,14 @@
 //!      and wall-clock throughput; cross-checks logits against the golden
 //!      fixture.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_noma`
+//! Run: `make artifacts && cargo run --release --features pjrt --example serve_noma`
+//! (the `pjrt` feature additionally needs the `xla` crate added to
+//! `[dependencies]` — see the feature note in rust/Cargo.toml).
 //! Recorded in EXPERIMENTS.md §E2E.
 
-use era::baselines::ChannelModel;
+use era::baselines::{ChannelModel, Strategy};
 use era::config::presets;
-use era::coordinator::server::{serve, InferenceBackend};
+use era::coordinator::server::serve;
 use era::metrics::evaluate;
 use era::models::zoo;
 use era::net::Network;
@@ -26,18 +30,20 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = presets::smoke();
     cfg.network.num_users = 48;
     // The AOT split CNN is the 9-layer NiN-style network.
+    cfg.workload.model = "nin".into();
     let model = zoo::nin();
     let net = Network::generate(&cfg, cfg.seed);
 
     // --- plan ------------------------------------------------------------
+    let era_strategy = era::strategies::by_name("era").expect("registry");
     let t0 = std::time::Instant::now();
-    let (ds, stats) = era::coordinator::plan_era(&cfg, &net, &model);
+    let (ds, info) = era_strategy.decide_with_stats(&cfg, &net, &model);
     println!(
         "planned {} users in {:.1} ms ({} cohorts, {} GD iterations)",
         net.num_users(),
         t0.elapsed().as_secs_f64() * 1e3,
-        stats.cohorts,
-        stats.total_gd_iters
+        info.cohorts,
+        info.gd_iters
     );
     let outcome = evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
     println!(
@@ -52,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     let dir = Runtime::default_dir();
     anyhow::ensure!(
         Runtime::artifacts_present(&dir),
-        "artifacts missing — run `make artifacts` first"
+        "artifacts missing — run `make artifacts` and build with --features pjrt"
     );
     let rt = Runtime::cpu(&dir)?;
     let (nl, sizes) = split_cnn_shape();
@@ -63,13 +69,16 @@ fn main() -> anyhow::Result<()> {
     let input: Vec<f32> = (0..sizes[0])
         .map(|i| i as f32 / (sizes[0] as f32 - 1.0))
         .collect();
-    let logits = backend.infer(4, &input)?;
+    let logits = {
+        use era::coordinator::server::InferenceBackend;
+        backend.infer(4, &input)?
+    };
     println!("sanity logits[..4] = {:?}", &logits[..4]);
 
     // --- serve -------------------------------------------------------------
     // The planner's splits index the *profile* model (9 layers — same as
     // the artifact CNN), so decisions map 1:1 onto executables.
-    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
+    let (up, down) = era::metrics::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
     let trace = era::trace::fixed_count_trace(&cfg, 8, cfg.seed + 9);
     for workers in [1usize, 4] {
         let rep = serve(

@@ -1,9 +1,11 @@
 //! `cargo bench --bench figures` — regenerates every figure of the paper's
 //! evaluation (Fig.5–Fig.19) at bench scale, timing each harness and
-//! printing the data series as markdown. Pass `--scale S` (default 0.4)
-//! and/or a figure id filter (`cargo bench --bench figures -- 6`).
+//! printing the data series as markdown. Pass `--scale S` (default 0.4),
+//! `--threads N` (scenario-engine workers), and/or a figure id filter
+//! (`cargo bench --bench figures -- 6`).
 //!
-//! One bench entry per paper figure-pair; the same code paths back
+//! One bench entry per paper figure-pair; every figure is a scenario spec
+//! executed by the parallel engine — the same code paths back
 //! `era figures` (full scale) — this target exists so `cargo bench`
 //! exercises the complete evaluation matrix end-to-end.
 
@@ -13,12 +15,17 @@ use era::figures::Harness;
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut scale = 0.4f64;
+    let mut threads: Option<usize> = None;
     let mut only: Option<u32> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--scale" => {
                 scale = args[i + 1].parse().expect("scale");
+                i += 2;
+            }
+            "--threads" => {
+                threads = Some(args[i + 1].parse().expect("threads"));
                 i += 2;
             }
             a => {
@@ -30,7 +37,10 @@ fn main() {
         }
     }
 
-    let h = Harness::new(scale);
+    let mut h = Harness::new(scale);
+    if let Some(t) = threads {
+        h.threads = t;
+    }
     println!(
         "# figure benches (scale {scale}: {} users / {} subchannels)\n",
         h.cfg.network.num_users, h.cfg.network.num_subchannels

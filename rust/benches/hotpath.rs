@@ -7,6 +7,8 @@
 //!   ligd_full_cohort    full Li-GD over all layers + refinement
 //!   ligd_cold_cohort    cold-start variant (Corollary 4 comparison)
 //!   plan_era_medium     whole-network planning pass (250 users)
+//!   plan_era_parallel   same pass, wave-parallel cohort solves (4 threads)
+//!   scenario_grid       scenario engine over a smoke grid (8 cells)
 //!   noma_rates_250u     full-network NOMA rate computation
 //!   episode_des         discrete-event serving episode (2k requests)
 //!   xla_gd_chunk        AOT GD chunk via PJRT (when artifacts exist)
@@ -87,6 +89,28 @@ fn main() {
             std::hint::black_box(era::coordinator::plan_era(&cfg, &net, &model));
         }));
     }
+    if want("plan_era_parallel") {
+        let popts = era::coordinator::PlanOptions {
+            warm_start: true,
+            threads: 4,
+        };
+        results.push(bench("plan_era_parallel (250 users, 4 threads)", 1, 2.0, 50, || {
+            std::hint::black_box(era::coordinator::plan_era_with(&cfg, &net, &model, &popts));
+        }));
+    }
+    if want("scenario_grid") {
+        let spec = era::scenario::ScenarioSpec::from_preset("smoke-grid").expect("preset");
+        let engine = era::scenario::Engine::default();
+        results.push(bench(
+            &format!("scenario_grid (smoke-grid, {} cells)", spec.num_cells()),
+            1,
+            2.0,
+            50,
+            || {
+                std::hint::black_box(engine.run(&spec).expect("grid runs"));
+            },
+        ));
+    }
     let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
     if want("noma_rates_250u") {
         let alloc: Vec<era::net::LinkAssignment> = ds
@@ -105,7 +129,7 @@ fn main() {
         }));
     }
     if want("episode_des") {
-        let (up, down) = era::figures::rates_for(
+        let (up, down) = era::metrics::rates_for(
             &cfg,
             &net,
             &ds,

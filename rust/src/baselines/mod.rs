@@ -60,12 +60,33 @@ impl Decision {
     }
 }
 
+/// Lightweight planning statistics a strategy can report alongside its
+/// decisions (zeros for the closed-form baselines; ERA fills in the Li-GD
+/// instrumentation). The scenario engine records these per cell.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanInfo {
+    /// Solver cohorts planned (0 for non-cohort strategies).
+    pub cohorts: usize,
+    /// Total gradient-descent iterations spent.
+    pub gd_iters: usize,
+}
+
 /// A serving strategy: decides split/channel/power/resource for all users.
 pub trait Strategy {
     fn name(&self) -> &'static str;
 
     /// Decide for every user in the network.
     fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision>;
+
+    /// Decide and report planner statistics. Default: no stats.
+    fn decide_with_stats(
+        &self,
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+    ) -> (Vec<Decision>, PlanInfo) {
+        (self.decide(cfg, net, model), PlanInfo::default())
+    }
 
     /// Which channel model the evaluation should apply to this strategy's
     /// decisions.

@@ -247,7 +247,12 @@ impl Config {
         Ok(cfg)
     }
 
-    fn apply(&mut self, doc: &BTreeMap<String, BTreeMap<String, TomlValue>>) -> anyhow::Result<()> {
+    /// Apply a parsed document section-by-section (used by [`Config::from_str`]
+    /// and by the scenario layer for `[base]`-style overlays).
+    pub fn apply(
+        &mut self,
+        doc: &BTreeMap<String, BTreeMap<String, TomlValue>>,
+    ) -> anyhow::Result<()> {
         for (section, kv) in doc {
             for (key, val) in kv {
                 self.apply_one(section, key, val).map_err(|e| {
@@ -256,6 +261,15 @@ impl Config {
             }
         }
         Ok(())
+    }
+
+    /// Set one knob by dotted path (`"network.num_users"`, `"workload.model"`,
+    /// or top-level `"seed"`). This is the sweep-axis entry point of the
+    /// scenario engine: axis keys are exactly config paths.
+    pub fn set_path(&mut self, path: &str, val: &TomlValue) -> anyhow::Result<()> {
+        let (section, key) = path.split_once('.').unwrap_or(("", path));
+        self.apply_one(section, key, val)
+            .map_err(|e| anyhow::anyhow!("config key {path}: {e}"))
     }
 
     fn apply_one(&mut self, section: &str, key: &str, val: &TomlValue) -> anyhow::Result<()> {
@@ -326,6 +340,78 @@ impl Config {
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
+    }
+
+    /// Render the full config as TOML-subset text. The inverse of
+    /// [`Config::from_str`]: `Config::from_str(&cfg.to_toml()) == cfg`.
+    /// Kept field-for-field in sync with [`Config::apply_one`] (the
+    /// `to_toml_round_trips` test enforces this).
+    pub fn to_toml(&self) -> String {
+        let f = |v: f64| TomlValue::Float(v).to_toml();
+        let n = &self.network;
+        let c = &self.compute;
+        let q = &self.qoe;
+        let o = &self.optimizer;
+        let w = &self.workload;
+        let mut s = String::new();
+        s.push_str(&format!("seed = {}\n\n", self.seed));
+        s.push_str("[network]\n");
+        s.push_str(&format!("num_aps = {}\n", n.num_aps));
+        s.push_str(&format!("num_users = {}\n", n.num_users));
+        s.push_str(&format!("bandwidth_hz = {}\n", f(n.bandwidth_hz)));
+        s.push_str(&format!("num_subchannels = {}\n", n.num_subchannels));
+        s.push_str(&format!(
+            "max_users_per_subchannel = {}\n",
+            n.max_users_per_subchannel
+        ));
+        s.push_str(&format!("max_tx_power_dbm = {}\n", f(n.max_tx_power_dbm)));
+        s.push_str(&format!("min_tx_power_dbm = {}\n", f(n.min_tx_power_dbm)));
+        s.push_str(&format!("ap_tx_power_dbm = {}\n", f(n.ap_tx_power_dbm)));
+        s.push_str(&format!("path_loss_exp = {}\n", f(n.path_loss_exp)));
+        s.push_str(&format!("noise_psd_dbm_hz = {}\n", f(n.noise_psd_dbm_hz)));
+        s.push_str(&format!("cell_radius_m = {}\n", f(n.cell_radius_m)));
+        s.push_str(&format!("min_distance_m = {}\n", f(n.min_distance_m)));
+        s.push_str(&format!("sic_threshold_w = {}\n\n", f(n.sic_threshold_w)));
+        s.push_str("[compute]\n");
+        s.push_str(&format!("device_flops_lo = {}\n", f(c.device_flops_lo)));
+        s.push_str(&format!("device_flops_hi = {}\n", f(c.device_flops_hi)));
+        s.push_str(&format!("edge_unit_flops = {}\n", f(c.edge_unit_flops)));
+        s.push_str(&format!("r_min = {}\n", f(c.r_min)));
+        s.push_str(&format!("r_max = {}\n", f(c.r_max)));
+        s.push_str(&format!("edge_pool_units = {}\n", f(c.edge_pool_units)));
+        s.push_str(&format!("lambda_gamma = {}\n", f(c.lambda_gamma)));
+        s.push_str(&format!("xi_device = {}\n", f(c.xi_device)));
+        s.push_str(&format!("xi_edge = {}\n", f(c.xi_edge)));
+        s.push_str(&format!("cycles_per_bit = {}\n", f(c.cycles_per_bit)));
+        s.push_str(&format!("result_bits = {}\n\n", f(c.result_bits)));
+        s.push_str("[qoe]\n");
+        s.push_str(&format!("sigmoid_a = {}\n", f(q.sigmoid_a)));
+        s.push_str(&format!(
+            "expected_finish_mean_s = {}\n",
+            f(q.expected_finish_mean_s)
+        ));
+        s.push_str(&format!(
+            "expected_finish_jitter = {}\n\n",
+            f(q.expected_finish_jitter)
+        ));
+        s.push_str("[optimizer]\n");
+        s.push_str(&format!("weight_delay = {}\n", f(o.weight_delay)));
+        s.push_str(&format!("weight_resource = {}\n", f(o.weight_resource)));
+        s.push_str(&format!("weight_qoe = {}\n", f(o.weight_qoe)));
+        s.push_str(&format!("step_size = {}\n", f(o.step_size)));
+        s.push_str(&format!("epsilon = {}\n", f(o.epsilon)));
+        s.push_str(&format!("max_iters = {}\n", o.max_iters));
+        s.push_str(&format!("cohort_users = {}\n", o.cohort_users));
+        s.push_str(&format!("cohort_channels = {}\n", o.cohort_channels));
+        s.push_str(&format!("energy_scale = {}\n", f(o.energy_scale)));
+        s.push_str(&format!("resource_scale = {}\n", f(o.resource_scale)));
+        s.push_str(&format!("delay_scale = {}\n\n", f(o.delay_scale)));
+        s.push_str("[workload]\n");
+        s.push_str(&format!("model = {:?}\n", w.model));
+        s.push_str(&format!("tasks_per_user = {}\n", f(w.tasks_per_user)));
+        s.push_str(&format!("arrival_rate_hz = {}\n", f(w.arrival_rate_hz)));
+        s.push_str(&format!("episode_s = {}\n", f(w.episode_s)));
+        s
     }
 
     /// Check invariants (weights sum to 1, bounds ordered, etc.).
@@ -409,6 +495,35 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(Config::from_str("[network]\nnope = 1\n").is_err());
+    }
+
+    #[test]
+    fn to_toml_round_trips() {
+        // Exercise non-default values so every emitter line is load-bearing.
+        let mut cfg = Config::default();
+        cfg.seed = 987654321;
+        cfg.network.num_users = 77;
+        cfg.network.bandwidth_hz = 37.5e6;
+        cfg.compute.xi_device = 1.25e-22;
+        cfg.qoe.expected_finish_mean_s = 0.0125;
+        cfg.optimizer.max_iters = 123;
+        cfg.workload.model = "nin".into();
+        let parsed = Config::from_str(&cfg.to_toml()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn set_path_overrides_one_knob() {
+        let mut cfg = Config::default();
+        cfg.set_path("network.num_users", &TomlValue::Int(99)).unwrap();
+        assert_eq!(cfg.network.num_users, 99);
+        cfg.set_path("workload.model", &TomlValue::Str("vgg16".into()))
+            .unwrap();
+        assert_eq!(cfg.workload.model, "vgg16");
+        cfg.set_path("seed", &TomlValue::Int(5)).unwrap();
+        assert_eq!(cfg.seed, 5);
+        let err = cfg.set_path("network.nope", &TomlValue::Int(1)).unwrap_err();
+        assert!(err.to_string().contains("network.nope"), "{err}");
     }
 
     #[test]

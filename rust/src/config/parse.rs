@@ -1,8 +1,10 @@
 //! TOML-subset parser (the offline registry has no `toml` crate).
 //!
 //! Supported: `[section]` headers, `key = value` with integer, float,
-//! string ("..."), and boolean values, `#` comments, blank lines.
-//! Unsupported (rejected): nested tables, arrays, multi-line strings.
+//! string ("..."), boolean, and flat-array (`[1, 2.5, "x"]`) values,
+//! `#` comments, blank lines. Keys may contain dots (`network.num_users`)
+//! — the scenario sweep grammar relies on this. Unsupported (rejected):
+//! nested tables, nested arrays, multi-line strings.
 
 use std::collections::BTreeMap;
 
@@ -13,6 +15,8 @@ pub enum TomlValue {
     Float(f64),
     Str(String),
     Bool(bool),
+    /// Flat array of scalars (no nesting).
+    Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
@@ -37,6 +41,30 @@ impl TomlValue {
             _ => None,
         }
     }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Render back to TOML-subset text (round-trips through [`parse_toml_subset`]).
+    pub fn to_toml(&self) -> String {
+        match self {
+            TomlValue::Int(i) => format!("{i}"),
+            // {:?} prints the shortest representation that round-trips, and
+            // always includes a decimal point or exponent (so it re-parses
+            // as Float, not Int).
+            TomlValue::Float(f) => format!("{f:?}"),
+            TomlValue::Str(s) => format!("{s:?}"),
+            TomlValue::Bool(b) => format!("{b}"),
+            TomlValue::Array(xs) => {
+                let inner: Vec<String> = xs.iter().map(|x| x.to_toml()).collect();
+                format!("[{}]", inner.join(", "))
+            }
+        }
+    }
 }
 
 /// Parse `text` into {section → {key → value}}. Top-level keys live in the
@@ -51,10 +79,10 @@ pub fn parse_toml_subset(
         if line.is_empty() {
             continue;
         }
-        if line.starts_with('[') {
+        if line.starts_with('[') && line.ends_with(']') && !line.contains('=') {
             anyhow::ensure!(
-                line.ends_with(']') && !line.contains('.'),
-                "line {}: bad section header {line:?}",
+                !line.contains('.'),
+                "line {}: bad section header {line:?} (nested tables unsupported)",
                 lineno + 1
             );
             section = line[1..line.len() - 1].trim().to_string();
@@ -73,10 +101,17 @@ pub fn parse_toml_subset(
 }
 
 fn strip_comment(line: &str) -> &str {
-    // A '#' inside a quoted string does not start a comment.
+    // A '#' inside a quoted string does not start a comment; `\"` inside a
+    // string does not close it.
     let mut in_str = false;
+    let mut escaped = false;
     for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
         match c {
+            '\\' if in_str => escaped = true,
             '"' => in_str = !in_str,
             '#' if !in_str => return &line[..i],
             _ => {}
@@ -86,8 +121,39 @@ fn strip_comment(line: &str) -> &str {
 }
 
 fn parse_value(s: &str) -> Option<TomlValue> {
+    if s.starts_with('[') && s.ends_with(']') {
+        return parse_array(&s[1..s.len() - 1]);
+    }
+    parse_scalar(s)
+}
+
+/// Undo the escapes `TomlValue::to_toml` (Debug formatting) produces for
+/// the characters this subset supports; unknown escapes are a parse error.
+fn unescape(s: &str) -> Option<String> {
+    if !s.contains('\\') {
+        return Some(s.to_string());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                _ => return None,
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Some(out)
+}
+
+fn parse_scalar(s: &str) -> Option<TomlValue> {
     if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
-        return Some(TomlValue::Str(s[1..s.len() - 1].to_string()));
+        return unescape(&s[1..s.len() - 1]).map(TomlValue::Str);
     }
     match s {
         "true" => return Some(TomlValue::Bool(true)),
@@ -101,6 +167,43 @@ fn parse_value(s: &str) -> Option<TomlValue> {
         return Some(TomlValue::Float(f));
     }
     None
+}
+
+/// Parse the inside of `[...]`: comma-separated scalars, commas and
+/// escaped quotes inside strings respected, nesting rejected.
+fn parse_array(inner: &str) -> Option<TomlValue> {
+    let mut items = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    let bytes = inner.as_bytes();
+    for i in 0..bytes.len() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match bytes[i] {
+            b'\\' if in_str => escaped = true,
+            b'"' => in_str = !in_str,
+            b'[' | b']' if !in_str => return None, // no nested arrays
+            b',' if !in_str => {
+                let piece = inner[start..i].trim();
+                if !piece.is_empty() {
+                    items.push(parse_scalar(piece)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return None;
+    }
+    let tail = inner[start..].trim();
+    if !tail.is_empty() {
+        items.push(parse_scalar(tail)?);
+    }
+    Some(TomlValue::Array(items))
 }
 
 #[cfg(test)]
@@ -139,9 +242,81 @@ mod tests {
     }
 
     #[test]
+    fn arrays_of_scalars() {
+        let doc = parse_toml_subset(
+            r#"
+            ints = [1, 2, 3]
+            floats = [0.5, 1e3]
+            names = ["era", "edge-only"]
+            tricky = ["a, b", "c"]
+            empty = []
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc[""]["ints"],
+            TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+        assert_eq!(
+            doc[""]["names"].as_array().unwrap()[1],
+            TomlValue::Str("edge-only".into())
+        );
+        assert_eq!(
+            doc[""]["tricky"].as_array().unwrap()[0],
+            TomlValue::Str("a, b".into())
+        );
+        assert_eq!(doc[""]["empty"], TomlValue::Array(vec![]));
+    }
+
+    #[test]
+    fn dotted_keys_for_sweep_grammar() {
+        let doc = parse_toml_subset("[sweep]\nnetwork.num_users = [100, 250]\n").unwrap();
+        assert!(doc["sweep"].contains_key("network.num_users"));
+    }
+
+    #[test]
+    fn escaped_strings_round_trip() {
+        let doc = parse_toml_subset("x = \"a \\\"quoted\\\" name\"\n").unwrap();
+        assert_eq!(doc[""]["x"], TomlValue::Str("a \"quoted\" name".into()));
+        let arr = parse_toml_subset("x = [\"a\\\\b\", \"c, d\"]\n").unwrap();
+        assert_eq!(
+            arr[""]["x"],
+            TomlValue::Array(vec![
+                TomlValue::Str("a\\b".into()),
+                TomlValue::Str("c, d".into())
+            ])
+        );
+        // unsupported escape is an error, not corruption
+        assert!(parse_toml_subset("x = \"a\\qb\"\n").is_err());
+    }
+
+    #[test]
+    fn value_to_toml_round_trips() {
+        for v in [
+            TomlValue::Int(-7),
+            TomlValue::Float(0.1),
+            TomlValue::Float(2.5e9),
+            TomlValue::Float(15e-3),
+            TomlValue::Str("hi there".into()),
+            TomlValue::Str("quote\" and slash\\".into()),
+            TomlValue::Bool(true),
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Float(1.5)]),
+        ] {
+            let text = format!("x = {}\n", v.to_toml());
+            let doc = parse_toml_subset(&text).unwrap();
+            assert_eq!(doc[""]["x"], v, "{text}");
+        }
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(parse_toml_subset("no equals sign").is_err());
         assert!(parse_toml_subset("[a.b]\n").is_err());
-        assert!(parse_toml_subset("x = [1,2]\n").is_err());
+        assert!(parse_toml_subset("x = [[1],[2]]\n").is_err());
+        assert!(parse_toml_subset("x = [1, }\n").is_err());
     }
 }

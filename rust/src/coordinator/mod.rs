@@ -1,10 +1,20 @@
 //! The ERA coordinator — the system's L3 contribution.
 //!
-//! Planning (`plan_era`): partitions users into solver cohorts, solves each
-//! cohort with Li-GD (warm-started, sequentially, folding already-planned
-//! cohorts into the background-interference constants), enforces the NOMA
-//! cluster cap and the SIC decodability threshold when rounding, and emits
-//! per-user [`Decision`]s.
+//! Planning (`plan_era` / `plan_era_with`): partitions users into solver
+//! cohorts, solves each cohort with Li-GD (warm-started, folding
+//! already-planned cohorts into the background-interference constants),
+//! enforces the NOMA cluster cap and the SIC decodability threshold when
+//! rounding, and emits per-user [`Decision`]s.
+//!
+//! With `PlanOptions::threads > 1` the Li-GD hot path scales out: cohorts
+//! are planned in *waves* of one cohort per AP, solved in parallel against
+//! the interference state committed before the wave, then rounded and
+//! committed in fixed AP order. The result is deterministic for every
+//! thread count ≥ 2 (wave composition and commit order are data-dependent,
+//! never schedule-dependent); `threads == 1` runs the exact sequential
+//! legacy algorithm, whose cohorts additionally see same-wave cross-AP
+//! interference (numerically slightly different, equally valid — see
+//! DESIGN.md §Scenario engine).
 //!
 //! Serving (`server`): the threaded request loop that applies those
 //! decisions to a live request trace and (optionally) executes the real
@@ -13,12 +23,12 @@
 pub mod cohort;
 pub mod server;
 
-use crate::baselines::{ChannelModel, Decision, Strategy};
+use crate::baselines::{ChannelModel, Decision, PlanInfo, Strategy};
 use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
-use crate::optimizer::{solve_ligd, CohortProblem, GdOptions};
-use cohort::{form_cohorts, ChannelLoad};
+use crate::optimizer::{solve_ligd, CohortProblem, CohortSolution, GdOptions};
+use cohort::{form_cohorts, ChannelLoad, Cohort};
 
 /// Planner statistics (Corollary 2/4 instrumentation).
 #[derive(Clone, Debug, Default)]
@@ -29,15 +39,36 @@ pub struct PlanStats {
     pub sic_fallbacks: usize,
     /// Offloaders demoted to device-only by the regret pass.
     pub demotions: usize,
+    /// Solver waves executed (== cohorts when planning sequentially).
+    pub waves: usize,
 }
 
-/// Plan ERA decisions for every user in the network.
+/// Planner knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    /// Li-GD warm start (false = the paper's "traditional GD" comparison).
+    pub warm_start: bool,
+    /// Solver threads. 1 = sequential legacy planning; ≥ 2 = wave-parallel
+    /// cohort solves (deterministic in the thread count).
+    pub threads: usize,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        Self {
+            warm_start: true,
+            threads: 1,
+        }
+    }
+}
+
+/// Plan ERA decisions for every user in the network (sequential legacy path).
 pub fn plan_era(
     cfg: &Config,
     net: &Network,
     model: &ModelProfile,
 ) -> (Vec<Decision>, PlanStats) {
-    plan_era_opts(cfg, net, model, true)
+    plan_era_with(cfg, net, model, &PlanOptions::default())
 }
 
 /// Same as [`plan_era`] with the Li-GD warm start toggle exposed (the
@@ -48,111 +79,240 @@ pub fn plan_era_opts(
     model: &ModelProfile,
     warm_start: bool,
 ) -> (Vec<Decision>, PlanStats) {
-    let nu = net.num_users();
-    let mut decisions = vec![Decision::device_only(model); nu];
-    let mut load = ChannelLoad::new(
-        cfg.network.num_aps,
-        cfg.network.num_subchannels,
-        cfg.network.max_users_per_subchannel,
-    );
-    let mut stats = PlanStats::default();
-    let opts = GdOptions::from_config(&cfg.optimizer);
+    plan_era_with(
+        cfg,
+        net,
+        model,
+        &PlanOptions {
+            warm_start,
+            threads: 1,
+        },
+    )
+}
 
-    // Running background interference accumulators from committed decisions:
-    // uplink at each AP per channel; downlink per-AP transmitted power per
-    // channel (converted to per-user interference when building a cohort).
+/// Running interference/occupancy state committed so far while planning.
+struct PlanState {
+    decisions: Vec<Decision>,
+    load: ChannelLoad,
+    /// Uplink background power received at each (AP, channel).
+    bg_up_acc: Vec<Vec<f64>>,
+    /// Downlink transmitted power per (AP, channel).
+    ap_ch_power: Vec<Vec<f64>>,
+    stats: PlanStats,
+}
+
+/// Build the cohort's solver problem against the committed state. Also
+/// re-picks the cohort's candidate channels from the *live* load so
+/// successive cohorts spread over the spectrum instead of piling onto the
+/// same high-gain channels.
+fn prepare_cohort(
+    cfg: &Config,
+    net: &Network,
+    st: &PlanState,
+    c: &mut Cohort,
+) -> CohortProblem {
     let n_aps = cfg.network.num_aps;
-    let m = cfg.network.num_subchannels;
-    let mut bg_up_acc = vec![vec![0.0f64; m]; n_aps];
-    let mut ap_ch_power = vec![vec![0.0f64; m]; n_aps];
-
-    let mut cohorts = form_cohorts(cfg, net, &load);
-    stats.cohorts = cohorts.len();
-
-    for c in cohorts.iter_mut() {
-        // Re-pick candidates against the *live* load so successive cohorts
-        // spread over the spectrum instead of piling onto the same
-        // high-gain channels.
-        c.channels = load.candidates_for(
-            c.ap,
-            cfg.optimizer.cohort_channels,
-            &c.users,
-            &net.channels.up,
-        );
-        // Background vectors for this cohort's candidate channels.
-        let bg_up: Vec<f64> = c.channels.iter().map(|&ch| bg_up_acc[c.ap][ch]).collect();
-        let mut bg_down = Vec::with_capacity(c.users.len() * c.channels.len());
-        for &u in &c.users {
-            for &ch in &c.channels {
-                let mut s = 0.0;
-                for x in 0..n_aps {
-                    if x != c.ap {
-                        s += ap_ch_power[x][ch] * net.channels.down[u][x][ch];
-                    }
+    c.channels = st.load.candidates_for(
+        c.ap,
+        cfg.optimizer.cohort_channels,
+        &c.users,
+        &net.channels.up,
+    );
+    let bg_up: Vec<f64> = c
+        .channels
+        .iter()
+        .map(|&ch| st.bg_up_acc[c.ap][ch])
+        .collect();
+    let mut bg_down = Vec::with_capacity(c.users.len() * c.channels.len());
+    for &u in &c.users {
+        for &ch in &c.channels {
+            let mut s = 0.0;
+            for x in 0..n_aps {
+                if x != c.ap {
+                    s += st.ap_ch_power[x][ch] * net.channels.down[u][x][ch];
                 }
-                bg_down.push(s);
+            }
+            bg_down.push(s);
+        }
+    }
+    CohortProblem::from_network(cfg, net, &c.users, &c.channels, bg_up, bg_down)
+}
+
+/// Round one solved cohort into concrete decisions, respecting cluster caps
+/// and SIC decodability, and fold the committed links into the background
+/// accumulators for later cohorts.
+fn round_and_commit(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    st: &mut PlanState,
+    c: &Cohort,
+    sol: &CohortSolution,
+) {
+    let n_aps = cfg.network.num_aps;
+    st.stats.total_gd_iters += sol.total_iters;
+    for (j, &u) in c.users.iter().enumerate() {
+        let split = sol.split[j];
+        if split == model.num_layers() {
+            st.decisions[u] = Decision::device_only(model);
+            continue;
+        }
+        // channel: preferred = rounded candidate; else best-gain channel
+        // among those with room
+        let mut ch = c.channels[sol.up_ch[j]];
+        if !st.load.has_room(c.ap, ch) {
+            match st.load.best_fallback(c.ap, &net.channels.up[u][c.ap]) {
+                Some(alt) => {
+                    ch = alt;
+                    st.stats.fallback_assignments += 1;
+                }
+                None => {
+                    // cell fully saturated: compute on device
+                    st.decisions[u] = Decision::device_only(model);
+                    st.stats.sic_fallbacks += 1;
+                    continue;
+                }
             }
         }
+        // SIC decodability (paper: p·|h|² must exceed the threshold,
+        // otherwise the entire model is computed on the device).
+        let g = net.channels.up[u][c.ap][ch];
+        if sol.p_up[j] * g <= cfg.network.sic_threshold_w {
+            st.decisions[u] = Decision::device_only(model);
+            st.stats.sic_fallbacks += 1;
+            continue;
+        }
+        st.load.commit(c.ap, ch);
+        let down_ch = c.channels[sol.down_ch[j]];
+        st.decisions[u] = Decision {
+            split,
+            up_ch: Some(ch),
+            down_ch: Some(down_ch),
+            p_up: sol.p_up[j],
+            p_down: sol.p_down[j],
+            r: sol.r[j],
+        };
+        // Fold into background for later cohorts. Other cells see this
+        // user's full cross-gain power; the *own* cell also records it
+        // (scaled by the expected SIC residual) so later same-cell
+        // cohorts don't plan against an empty channel — without this
+        // the planner's predicted rates are wildly optimistic and the
+        // rounded plan under-delivers (EXPERIMENTS.md §Calibration).
+        const SIC_RESIDUAL: f64 = 0.5;
+        for a in 0..n_aps {
+            let w = if a == c.ap { SIC_RESIDUAL } else { 1.0 };
+            st.bg_up_acc[a][ch] += w * sol.p_up[j] * net.channels.up[u][a][ch];
+        }
+        st.ap_ch_power[c.ap][down_ch] += sol.p_down[j];
+    }
+}
 
-        let mut problem =
-            CohortProblem::from_network(cfg, net, &c.users, &c.channels, bg_up, bg_down);
-        let sol = solve_ligd(&mut problem, model, &opts, warm_start);
-        stats.total_gd_iters += sol.total_iters;
-
-        // Round into concrete decisions, respecting cluster caps + SIC.
-        for (j, &u) in c.users.iter().enumerate() {
-            let split = sol.split[j];
-            if split == model.num_layers() {
-                decisions[u] = Decision::device_only(model);
-                continue;
+/// Solve one wave of prepared cohort problems, optionally in parallel.
+/// Pure function of the problems — results are index-ordered and
+/// independent of scheduling, so any thread count yields identical output.
+fn solve_wave(
+    problems: Vec<CohortProblem>,
+    model: &ModelProfile,
+    opts: &GdOptions,
+    warm_start: bool,
+    threads: usize,
+) -> Vec<CohortSolution> {
+    if threads <= 1 || problems.len() <= 1 {
+        return problems
+            .into_iter()
+            .map(|mut p| solve_ligd(&mut p, model, opts, warm_start))
+            .collect();
+    }
+    let n = problems.len();
+    let groups = threads.min(n);
+    // Round-robin the problems over `groups` worker threads; reassemble by
+    // original index so the output order never depends on scheduling.
+    let mut buckets: Vec<Vec<(usize, CohortProblem)>> = (0..groups).map(|_| Vec::new()).collect();
+    for (i, p) in problems.into_iter().enumerate() {
+        buckets[i % groups].push((i, p));
+    }
+    let mut out: Vec<Option<CohortSolution>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| {
+                scope.spawn(move || {
+                    bucket
+                        .into_iter()
+                        .map(|(i, mut p)| (i, solve_ligd(&mut p, model, opts, warm_start)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, sol) in h.join().expect("solver thread panicked") {
+                out[i] = Some(sol);
             }
-            // channel: preferred = rounded candidate; else best-gain
-            // channel among those with room
-            let mut ch = c.channels[sol.up_ch[j]];
-            if !load.has_room(c.ap, ch) {
-                match load.best_fallback(c.ap, &net.channels.up[u][c.ap]) {
-                    Some(alt) => {
-                        ch = alt;
-                        stats.fallback_assignments += 1;
-                    }
-                    None => {
-                        // cell fully saturated: compute on device
-                        decisions[u] = Decision::device_only(model);
-                        stats.sic_fallbacks += 1;
-                        continue;
-                    }
+        }
+    });
+    out.into_iter().map(|s| s.expect("all solved")).collect()
+}
+
+/// Plan ERA decisions with explicit [`PlanOptions`].
+pub fn plan_era_with(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    popts: &PlanOptions,
+) -> (Vec<Decision>, PlanStats) {
+    let nu = net.num_users();
+    let n_aps = cfg.network.num_aps;
+    let m = cfg.network.num_subchannels;
+    let mut st = PlanState {
+        decisions: vec![Decision::device_only(model); nu],
+        load: ChannelLoad::new(n_aps, m, cfg.network.max_users_per_subchannel),
+        bg_up_acc: vec![vec![0.0f64; m]; n_aps],
+        ap_ch_power: vec![vec![0.0f64; m]; n_aps],
+        stats: PlanStats::default(),
+    };
+    let gd_opts = GdOptions::from_config(&cfg.optimizer);
+
+    let cohorts = form_cohorts(cfg, net, &st.load);
+    st.stats.cohorts = cohorts.len();
+
+    // Wave partition. Sequential (threads == 1): one cohort per wave, in
+    // form_cohorts order — the exact legacy algorithm. Parallel: one cohort
+    // per AP per wave (cohorts of distinct cells only couple through
+    // inter-cell interference, which sequential planning also only folds
+    // with a one-wave lag for *future* cohorts).
+    let waves: Vec<Vec<Cohort>> = if popts.threads <= 1 {
+        cohorts.into_iter().map(|c| vec![c]).collect()
+    } else {
+        let mut per_ap: Vec<std::collections::VecDeque<Cohort>> =
+            (0..n_aps).map(|_| Default::default()).collect();
+        for c in cohorts {
+            per_ap[c.ap].push_back(c);
+        }
+        let mut waves = Vec::new();
+        loop {
+            let mut wave = Vec::new();
+            for q in per_ap.iter_mut() {
+                if let Some(c) = q.pop_front() {
+                    wave.push(c);
                 }
             }
-            // SIC decodability (paper: p·|h|² must exceed the threshold,
-            // otherwise the entire model is computed on the device).
-            let g = net.channels.up[u][c.ap][ch];
-            if sol.p_up[j] * g <= cfg.network.sic_threshold_w {
-                decisions[u] = Decision::device_only(model);
-                stats.sic_fallbacks += 1;
-                continue;
+            if wave.is_empty() {
+                break;
             }
-            load.commit(c.ap, ch);
-            let down_ch = c.channels[sol.down_ch[j]];
-            decisions[u] = Decision {
-                split,
-                up_ch: Some(ch),
-                down_ch: Some(down_ch),
-                p_up: sol.p_up[j],
-                p_down: sol.p_down[j],
-                r: sol.r[j],
-            };
-            // Fold into background for later cohorts. Other cells see this
-            // user's full cross-gain power; the *own* cell also records it
-            // (scaled by the expected SIC residual) so later same-cell
-            // cohorts don't plan against an empty channel — without this
-            // the planner's predicted rates are wildly optimistic and the
-            // rounded plan under-delivers (EXPERIMENTS.md §Calibration).
-            const SIC_RESIDUAL: f64 = 0.5;
-            for a in 0..n_aps {
-                let w = if a == c.ap { SIC_RESIDUAL } else { 1.0 };
-                bg_up_acc[a][ch] += w * sol.p_up[j] * net.channels.up[u][a][ch];
-            }
-            ap_ch_power[c.ap][down_ch] += sol.p_down[j];
+            waves.push(wave);
+        }
+        waves
+    };
+    st.stats.waves = waves.len();
+
+    for mut wave in waves {
+        let problems: Vec<CohortProblem> = wave
+            .iter_mut()
+            .map(|c| prepare_cohort(cfg, net, &st, c))
+            .collect();
+        let solutions = solve_wave(problems, model, &gd_opts, popts.warm_start, popts.threads);
+        for (c, sol) in wave.iter().zip(solutions.iter()) {
+            round_and_commit(cfg, net, model, &mut st, c, sol);
         }
     }
 
@@ -164,7 +324,8 @@ pub fn plan_era_opts(
     // device-only delay and its QoE threshold — offloading that hurts is
     // never admitted. (One pass; demotions only reduce interference, so
     // the survivors' realized rates can only improve.)
-    let alloc: Vec<crate::net::LinkAssignment> = decisions
+    let alloc: Vec<crate::net::LinkAssignment> = st
+        .decisions
         .iter()
         .map(|d| crate::net::LinkAssignment {
             up_ch: d.up_ch,
@@ -177,7 +338,7 @@ pub fn plan_era_opts(
         .collect();
     let rates = net.rates(&alloc);
     for u in 0..nu {
-        let d = decisions[u];
+        let d = st.decisions[u];
         if d.up_ch.is_none() {
             continue;
         }
@@ -192,33 +353,68 @@ pub fn plan_era_opts(
         );
         let device_delay = model.total_flops() / net.users[u].device_flops;
         if realized > device_delay && realized > net.users[u].qoe_threshold_s {
-            decisions[u] = Decision::device_only(model);
-            stats.demotions += 1;
+            st.decisions[u] = Decision::device_only(model);
+            st.stats.demotions += 1;
         }
     }
 
-    (decisions, stats)
+    (st.decisions, st.stats)
 }
 
-/// [`Strategy`] wrapper so ERA slots into the same evaluation harness as
-/// the baselines.
+/// [`Strategy`] wrapper so ERA slots into the same evaluation harness and
+/// registry as the baselines.
 pub struct EraStrategy {
     pub warm_start: bool,
+    /// Solver threads per planning pass (see [`PlanOptions::threads`]).
+    /// Keep at 1 inside the scenario engine — cells already run in
+    /// parallel; raise it for single-plan latency (`era plan --threads N`).
+    pub threads: usize,
 }
 
 impl Default for EraStrategy {
     fn default() -> Self {
-        Self { warm_start: true }
+        Self {
+            warm_start: true,
+            threads: 1,
+        }
     }
 }
 
 impl Strategy for EraStrategy {
     fn name(&self) -> &'static str {
-        "era"
+        if self.warm_start {
+            "era"
+        } else {
+            "era-cold"
+        }
     }
 
     fn decide(&self, cfg: &Config, net: &Network, model: &ModelProfile) -> Vec<Decision> {
-        plan_era_opts(cfg, net, model, self.warm_start).0
+        self.decide_with_stats(cfg, net, model).0
+    }
+
+    fn decide_with_stats(
+        &self,
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+    ) -> (Vec<Decision>, PlanInfo) {
+        let (ds, stats) = plan_era_with(
+            cfg,
+            net,
+            model,
+            &PlanOptions {
+                warm_start: self.warm_start,
+                threads: self.threads,
+            },
+        );
+        (
+            ds,
+            PlanInfo {
+                cohorts: stats.cohorts,
+                gd_iters: stats.total_gd_iters,
+            },
+        )
     }
 
     fn channel_model(&self) -> ChannelModel {
@@ -242,6 +438,7 @@ mod tests {
         assert_eq!(ds.len(), net.num_users());
         assert!(stats.cohorts > 0);
         assert!(stats.total_gd_iters > 0);
+        assert_eq!(stats.waves, stats.cohorts, "sequential: one cohort per wave");
         // NOMA cluster caps hold
         let mut load = vec![
             vec![0usize; cfg.network.num_subchannels];
@@ -281,6 +478,58 @@ mod tests {
     }
 
     #[test]
+    fn parallel_planning_is_thread_count_invariant() {
+        // Wave-parallel planning must produce bit-identical plans for any
+        // thread count ≥ 2 (scheduling must never leak into results).
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 21);
+        let model = zoo::nin();
+        let opts = |threads| PlanOptions {
+            warm_start: true,
+            threads,
+        };
+        let (d2, s2) = plan_era_with(&cfg, &net, &model, &opts(2));
+        let (d3, _) = plan_era_with(&cfg, &net, &model, &opts(3));
+        let (d8, _) = plan_era_with(&cfg, &net, &model, &opts(8));
+        assert_eq!(d2, d3);
+        assert_eq!(d2, d8);
+        assert!(s2.waves <= s2.cohorts);
+    }
+
+    #[test]
+    fn parallel_plan_stays_feasible_and_useful() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 22);
+        let model = zoo::yolov2();
+        let (ds, stats) = plan_era_with(
+            &cfg,
+            &net,
+            &model,
+            &PlanOptions {
+                warm_start: true,
+                threads: 4,
+            },
+        );
+        assert_eq!(ds.len(), net.num_users());
+        assert!(stats.total_gd_iters > 0);
+        let mut load = vec![
+            vec![0usize; cfg.network.num_subchannels];
+            cfg.network.num_aps
+        ];
+        for (u, d) in ds.iter().enumerate() {
+            if let Some(ch) = d.up_ch {
+                load[net.topo.user_ap[u]][ch] += 1;
+                assert!(load[net.topo.user_ap[u]][ch] <= cfg.network.max_users_per_subchannel);
+            }
+        }
+        // the parallel plan still beats device-only on latency
+        let o = crate::metrics::evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
+        let dev = crate::baselines::DeviceOnly.decide(&cfg, &net, &model);
+        let od = crate::metrics::evaluate(&cfg, &net, &model, &dev, ChannelModel::Orthogonal);
+        assert!(o.latency_speedup_vs(&od) > 1.0);
+    }
+
+    #[test]
     fn plan_invariants_random_networks() {
         forall("ERA plan invariants across random nets", 6, |g| {
             let mut cfg = presets::smoke();
@@ -290,7 +539,16 @@ mod tests {
             cfg.optimizer.max_iters = 40;
             let net = Network::generate(&cfg, g.case as u64 + 500);
             let model = zoo::nin();
-            let (ds, _) = plan_era(&cfg, &net, &model);
+            let threads = 1 + (g.case % 3);
+            let (ds, _) = plan_era_with(
+                &cfg,
+                &net,
+                &model,
+                &PlanOptions {
+                    warm_start: true,
+                    threads,
+                },
+            );
             let mut load = vec![
                 vec![0usize; cfg.network.num_subchannels];
                 cfg.network.num_aps

@@ -10,17 +10,43 @@
 //! * [`optimizer`] — the ERA contribution: relaxed utility Γ, analytic
 //!   gradients, projected GD, and the Li-GD loop-iteration warm start.
 //! * [`baselines`] — Device-Only, Edge-Only, Neurosurgeon, DNN-Surgeon,
-//!   IAO, DINA comparison schemes.
+//!   IAO, DINA comparison schemes; [`strategies`] — the name registry that
+//!   puts ERA and all six behind one lookup.
 //! * [`coordinator`] — the serving stack: request routing, cohort batching,
-//!   channel/power/split decisions, dispatch.
+//!   channel/power/split decisions (wave-parallel Li-GD solves), dispatch.
+//! * [`scenario`] — the experiment layer: declarative [`scenario::ScenarioSpec`]
+//!   grids (sweep axes × strategies × seeds) executed in parallel by
+//!   [`scenario::Engine`], one structured [`scenario::RunRecord`] per cell.
 //! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
-//!   artifacts (HLO text) and executes them from the Rust request path.
+//!   artifacts (HLO text) and executes them from the Rust request path
+//!   (requires the `pjrt` cargo feature; stubbed otherwise).
 //! * [`sim`], [`trace`] — episode simulation + workload generation.
 //! * [`metrics`], [`figures`] — evaluation metrics and the harness that
-//!   regenerates every figure of the paper's §V.
+//!   regenerates every figure of the paper's §V through the scenario engine.
 //!
 //! Python (JAX + Pallas) exists only in the build path (`make artifacts`);
 //! the serving binary is pure Rust once `artifacts/` is populated.
+//!
+//! ## Running scenarios
+//!
+//! Every experiment is a [`scenario::ScenarioSpec`]: a base [`config::Config`],
+//! a strategy list, sweep axes (dotted config paths), and replicate seeds.
+//! Load one from TOML (`ScenarioSpec::from_str` / `from_path`), a named
+//! preset (`from_preset("smoke-grid")`), or build it in code:
+//!
+//! ```no_run
+//! use era::scenario::{Engine, ScenarioSpec};
+//! let spec = ScenarioSpec::new("density", era::config::presets::medium())
+//!     .with_strategies(&["era", "neurosurgeon", "device-only"])
+//!     .with_axis_usize("network.num_users", &[100, 250])
+//!     .with_replicates(3);
+//! let records = Engine::default().run(&spec).unwrap();
+//! println!("{}", era::scenario::to_csv(&records));
+//! ```
+//!
+//! Cells execute on a thread pool; each cell derives all randomness from
+//! the spec seeds, so the rows are byte-identical for any thread count.
+//! From the CLI: `era run --scenario <file|preset> [--threads N]`.
 
 pub mod baselines;
 pub mod benchkit;
@@ -35,6 +61,8 @@ pub mod net;
 pub mod optimizer;
 pub mod qoe;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
+pub mod strategies;
 pub mod trace;
 pub mod util;

@@ -1,18 +1,21 @@
 //! `era` — the leader binary.
 //!
 //! Subcommands (hand-rolled parsing; no clap offline):
+//!   era run     --scenario <file|preset> [--threads N] [--out PATH] [--md]
 //!   era figures [--fig N] [--scale S] [--out PATH]   regenerate paper figures
-//!   era plan    [--model M] [--preset P] [--seed N]   one planning pass + report
-//!   era serve   [--model M] [--preset P] [--workers N] [--artifacts DIR]
+//!   era plan    [--model M] [--preset P] [--seed N] [--threads N]
+//!   era serve   [--model M] [--preset P] [--strategy S] [--workers N]
 //!   era ligd-demo                                     Li-GD vs cold GD iterations
-//!   era info                                          model zoo / config summary
+//!   era info                                          model zoo / scenario presets
+//!
+//! Every experiment path goes through the scenario engine
+//! (`era::scenario`): `run` executes whole grids, `plan` and `ligd-demo`
+//! are single-cell/single-axis specs.
 
-use era::baselines::{ChannelModel, DeviceOnly, Strategy};
-use era::config::presets;
-use era::coordinator::{plan_era_opts, EraStrategy};
+use era::baselines::Strategy;
 use era::figures::Harness;
-use era::metrics::evaluate;
 use era::models::zoo;
+use era::scenario::{self, Engine, ScenarioSpec};
 use std::collections::HashMap;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -39,6 +42,7 @@ fn main() {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[args.len().min(1)..]);
     let result = match cmd {
+        "run" => cmd_run(&flags),
         "figures" => cmd_figures(&flags),
         "plan" => cmd_plan(&flags),
         "serve" => cmd_serve(&flags),
@@ -46,12 +50,13 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: era <figures|plan|serve|ligd-demo|info> [flags]\n\
+                "usage: era <run|figures|plan|serve|ligd-demo|info> [flags]\n\
+                 run      --scenario FILE|PRESET --threads N --out PATH --md\n\
                  figures  --fig N --scale S --out PATH   regenerate paper figures\n\
-                 plan     --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N\n\
-                 serve    --model M --preset P --workers N --artifacts DIR --tasks K\n\
+                 plan     --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N --threads N\n\
+                 serve    --model M --preset P --strategy S --workers N --artifacts DIR --tasks K\n\
                  ligd-demo                               Li-GD vs cold-start GD\n\
-                 info                                    model zoo summary"
+                 info                                    model zoo + scenario presets"
             );
             Ok(())
         }
@@ -62,13 +67,101 @@ fn main() {
     }
 }
 
+fn engine_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Engine> {
+    Ok(match flags.get("threads") {
+        Some(t) => Engine::new(t.parse()?),
+        None => Engine::default(),
+    })
+}
+
+/// `era run --scenario <file|preset>`: execute a whole scenario grid in
+/// parallel and emit one structured row per cell.
+fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let arg = flags
+        .get("scenario")
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "--scenario <file|preset> required (presets: {})",
+                scenario::presets::NAMES.join(", ")
+            )
+        })?;
+    let spec = ScenarioSpec::resolve(arg)?;
+    let engine = engine_from_flags(flags)?;
+    eprintln!(
+        "scenario `{}`: {} cells ({} strategies x {} sweep points x {} seeds) on {} threads",
+        spec.name,
+        spec.num_cells(),
+        spec.strategies.len(),
+        spec.num_cells() / (spec.strategies.len() * spec.seeds.len()).max(1),
+        spec.seeds.len(),
+        engine.threads,
+    );
+    let t0 = std::time::Instant::now();
+    let records = engine.run(&spec)?;
+    eprintln!(
+        "ran {} cells in {:.2} s",
+        records.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let out = if flags.contains_key("md") {
+        records_markdown(&records)
+    } else {
+        scenario::to_csv(&records)
+    };
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &out)?;
+            eprintln!("wrote {} rows to {path}", records.len());
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+/// Human-readable grid summary (one row per cell).
+fn records_markdown(records: &[scenario::RunRecord]) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "| cell | strategy | seed | sweep | delay(ms) | speedup | energy(mJ) | viol% | offl |\n",
+    );
+    s.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    for r in records {
+        let sweep = if r.sweep.is_empty() {
+            "-".to_string()
+        } else {
+            r.sweep
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {:.3} | {:.2}x | {:.2} | {:.1} | {}/{} |\n",
+            r.cell,
+            r.strategy,
+            r.seed,
+            sweep,
+            r.mean_delay_s * 1e3,
+            r.speedup_vs_device(),
+            r.mean_energy_j * 1e3,
+            r.violation_frac() * 100.0,
+            r.offloaders,
+            r.users,
+        ));
+    }
+    s
+}
+
 fn cmd_figures(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let scale: f64 = flags
         .get("scale")
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(1.0);
-    let h = Harness::new(scale);
+    let mut h = Harness::new(scale);
+    if let Some(t) = flags.get("threads") {
+        h.threads = t.parse()?;
+    }
     let figs = match flags.get("fig") {
         Some(f) => h.generate(f.parse()?),
         None => h.generate_all(),
@@ -88,67 +181,73 @@ fn cmd_figures(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build a config from flags. Precedence (lowest → highest): preset,
+/// `--config` file, then explicit `--seed`/`--model` flags — a flag must
+/// never be silently discarded because a config file was also given.
 fn cfg_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<era::config::Config> {
-    let preset = flags.get("preset").map(String::as_str).unwrap_or("medium");
-    let mut cfg = presets::by_name(preset)
-        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?;
+    let mut cfg = match flags.get("config") {
+        Some(path) => era::config::Config::load(std::path::Path::new(path))?,
+        None => {
+            let preset = flags.get("preset").map(String::as_str).unwrap_or("medium");
+            era::config::presets::by_name(preset)
+                .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?
+        }
+    };
     if let Some(s) = flags.get("seed") {
         cfg.seed = s.parse()?;
     }
     if let Some(m) = flags.get("model") {
         cfg.workload.model = m.clone();
     }
-    if let Some(path) = flags.get("config") {
-        cfg = era::config::Config::load(std::path::Path::new(path))?;
-    }
     Ok(cfg)
 }
 
 fn cmd_plan(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let cfg = cfg_from_flags(flags)?;
-    let model = zoo::by_name(&cfg.workload.model)
+    // fail fast on a bad model name before the engine spins up
+    let _model = zoo::by_name(&cfg.workload.model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.workload.model))?;
-    let net = era::net::Network::generate(&cfg, cfg.seed);
-    let t0 = std::time::Instant::now();
-    let (ds, stats) = era::coordinator::plan_era(&cfg, &net, &model);
-    let dt = t0.elapsed();
-    let o = evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
-    let dev = DeviceOnly.decide(&cfg, &net, &model);
-    let od = evaluate(&cfg, &net, &model, &dev, ChannelModel::Orthogonal);
-    println!("model            : {}", model.name);
+    // `era plan` is a single engine cell; --threads N engages the
+    // wave-parallel cohort solver *inside* the cell.
+    let threads: usize = flags
+        .get("threads")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    let mut spec = ScenarioSpec::new("plan", cfg.clone()).with_strategies(&["era"]);
+    spec.plan_threads = threads.max(1);
+    let r = Engine::new(1).run_one(&spec)?;
+    println!("model            : {}", r.model);
     println!(
         "users / APs / M  : {} / {} / {}",
         cfg.network.num_users, cfg.network.num_aps, cfg.network.num_subchannels
     );
     println!(
-        "plan time        : {:.1} ms ({} cohorts, {} GD iters)",
-        dt.as_secs_f64() * 1e3,
-        stats.cohorts,
-        stats.total_gd_iters
+        "plan time        : {:.1} ms ({} cohorts, {} GD iters, {} solver threads)",
+        r.plan_wall_s * 1e3,
+        r.cohorts,
+        r.gd_iters,
+        threads
     );
     println!(
         "mean delay       : {:.3} ms (device-only {:.3} ms)",
-        o.mean_delay() * 1e3,
-        od.mean_delay() * 1e3
+        r.mean_delay_s * 1e3,
+        r.device_mean_delay_s() * 1e3
     );
-    println!(
-        "latency speedup  : {:.2}x vs device-only",
-        o.latency_speedup_vs(&od)
-    );
+    println!("latency speedup  : {:.2}x vs device-only", r.speedup_vs_device());
     println!(
         "mean energy      : {:.3} mJ (device-only {:.3} mJ)",
-        o.mean_energy() * 1e3,
-        od.mean_energy() * 1e3
+        r.mean_energy_j * 1e3,
+        r.device_sum_energy_j / r.users.max(1) as f64 * 1e3
     );
     println!(
         "QoE violations   : {}/{} ({:.1}%)",
-        o.qoe.num_violating,
-        o.qoe.num_users,
-        o.qoe.violation_frac() * 100.0
+        r.qoe_violations,
+        r.qoe_users,
+        r.violation_frac() * 100.0
     );
-    println!("sum DCT          : {:.2} ms", o.qoe.sum_dct_s * 1e3);
-    let offloaders = ds.iter().filter(|d| d.offloads(&model)).count();
-    println!("offloaders       : {offloaders}/{}", ds.len());
+    println!("sum DCT          : {:.2} ms", r.sum_dct_s * 1e3);
+    println!("offloaders       : {}/{}", r.offloaders, r.users);
     Ok(())
 }
 
@@ -164,11 +263,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(2);
+    let strategy_name = flags.get("strategy").map(String::as_str).unwrap_or("era");
+    let strat = era::strategies::by_name(strategy_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy {strategy_name}"))?;
     let model = zoo::by_name(&cfg.workload.model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {}", cfg.workload.model))?;
     let net = era::net::Network::generate(&cfg, cfg.seed);
-    let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
-    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
+    let ds = strat.decide(&cfg, &net, &model);
+    let (up, down) = era::metrics::rates_for(&cfg, &net, &ds, strat.channel_model());
     let trace = era::trace::fixed_count_trace(&cfg, tasks, cfg.seed + 1);
 
     // Optional real-PJRT backend when artifacts exist.
@@ -192,7 +294,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             }
         } else {
             eprintln!(
-                "no artifacts at {} (run `make artifacts`); simulation mode",
+                "no usable artifacts at {} (run `make artifacts`, build with --features pjrt); simulation mode",
                 art_dir.display()
             );
             None
@@ -201,6 +303,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let rep = era::coordinator::server::serve(
         &cfg, &net, &model, &ds, &up, &down, &trace, workers, backend, input,
     );
+    println!("strategy         : {}", strat.name());
     println!("requests served  : {} in {:.2} s", rep.served.len(), rep.wall_s);
     println!(
         "throughput       : {:.1} req/s ({} workers)",
@@ -220,23 +323,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Li-GD vs cold-start GD through the engine: one scenario, two strategies.
 fn cmd_ligd_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let mut cfg = presets::smoke();
+    let mut spec = ScenarioSpec::from_preset("ligd")?;
     if let Some(s) = flags.get("seed") {
-        cfg.seed = s.parse()?;
+        let seed: u64 = s.parse()?;
+        spec.base.seed = seed;
+        spec.seeds = vec![seed];
     }
-    let model = zoo::yolov2();
-    let net = era::net::Network::generate(&cfg, cfg.seed);
-    for (label, warm) in [("Li-GD (warm start)", true), ("cold-start GD", false)] {
-        let t0 = std::time::Instant::now();
-        let (_, stats) = plan_era_opts(&cfg, &net, &model, warm);
+    spec.base.workload.model = "yolov2".into();
+    let records = Engine::new(2).run(&spec)?;
+    for r in &records {
+        let label = if r.strategy == "era" {
+            "Li-GD (warm start)"
+        } else {
+            "cold-start GD"
+        };
         println!(
             "{label:<20} total GD iterations: {:>6}  ({:.1} ms)",
-            stats.total_gd_iters,
-            t0.elapsed().as_secs_f64() * 1e3
+            r.gd_iters,
+            r.plan_wall_s * 1e3
         );
     }
-    let _ = EraStrategy::default();
     Ok(())
 }
 
@@ -256,5 +364,62 @@ fn cmd_info() -> anyhow::Result<()> {
             cuts.iter().cloned().fold(f64::INFINITY, f64::min) / 1e3,
         );
     }
+    println!("\nstrategies: {}", era::strategies::NAMES.join(", "));
+    println!("scenario presets: {}", scenario::presets::NAMES.join(", "));
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let args: Vec<String> = ["--model", "nin", "--md", "--seed", "7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = parse_flags(&args);
+        assert_eq!(f["model"], "nin");
+        assert_eq!(f["md"], "true");
+        assert_eq!(f["seed"], "7");
+    }
+
+    #[test]
+    fn config_file_does_not_clobber_explicit_flags() {
+        // Regression: --config used to be applied *after* --seed/--model,
+        // silently discarding those overrides.
+        let dir = std::env::temp_dir().join("era-main-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.toml");
+        std::fs::write(
+            &path,
+            "seed = 111\n[workload]\nmodel = \"vgg16\"\n[network]\nnum_users = 33\n",
+        )
+        .unwrap();
+        let mut flags = HashMap::new();
+        flags.insert("config".to_string(), path.display().to_string());
+        flags.insert("seed".to_string(), "222".to_string());
+        flags.insert("model".to_string(), "nin".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.seed, 222, "--seed wins over the file");
+        assert_eq!(cfg.workload.model, "nin", "--model wins over the file");
+        assert_eq!(cfg.network.num_users, 33, "file keys without flags apply");
+        // without flags, the file's values hold
+        let mut only_file = HashMap::new();
+        only_file.insert("config".to_string(), path.display().to_string());
+        let cfg = cfg_from_flags(&only_file).unwrap();
+        assert_eq!(cfg.seed, 111);
+        assert_eq!(cfg.workload.model, "vgg16");
+    }
+
+    #[test]
+    fn preset_plus_flag_overrides() {
+        let mut flags = HashMap::new();
+        flags.insert("preset".to_string(), "smoke".to_string());
+        flags.insert("model".to_string(), "vgg16".to_string());
+        let cfg = cfg_from_flags(&flags).unwrap();
+        assert_eq!(cfg.network.num_users, 24, "smoke preset");
+        assert_eq!(cfg.workload.model, "vgg16");
+    }
 }

@@ -179,6 +179,21 @@ pub fn orthogonal_rates(
     (up, down)
 }
 
+/// Per-user link rates under a channel model — shared by the evaluation,
+/// the discrete-event simulator, and the serving loop (previously a private
+/// copy in the figure harness).
+pub fn rates_for(
+    cfg: &Config,
+    net: &Network,
+    decisions: &[Decision],
+    cm: ChannelModel,
+) -> (Vec<f64>, Vec<f64>) {
+    match cm {
+        ChannelModel::Noma => noma_rates(net, decisions),
+        ChannelModel::Orthogonal => orthogonal_rates(cfg, net, decisions),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,14 +2,20 @@
 //!
 //! * [`SplitCnnExecutor`] — the split CIFAR CNN (one device-half and one
 //!   edge-half executable per split point), implementing the serving loop's
-//!   [`InferenceBackend`].
+//!   [`InferenceBackend`](crate::coordinator::server::InferenceBackend).
 //! * [`LigdChunkExecutor`] — the XLA-compiled Li-GD gradient-descent chunk
 //!   (T projected-GD steps per call, lowered from `python/compile/model.py`
 //!   with the Pallas NOMA-rate kernel inlined).
+//!
+//! Both executors require the `pjrt` cargo feature; without it they compile
+//! as stubs whose `load` constructors return an error (see `runtime`).
 
-use super::{Artifact, Runtime};
+use super::Runtime;
 use crate::coordinator::server::InferenceBackend;
 use crate::optimizer::{CohortProblem, CohortVars};
+#[cfg(feature = "pjrt")]
+use super::Artifact;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// Shape contract of the AOT split CNN (`python/compile/model.py::SplitCnn`,
@@ -38,6 +44,7 @@ pub fn split_cnn_shape() -> (usize, Vec<usize>) {
 /// The split CNN: artifacts `split_cnn_dev_s{i}.hlo.txt` (layers 1..=i) and
 /// `split_cnn_edge_s{i}.hlo.txt` (layers i+1..=F). `dev[0]` and
 /// `edge[F]` are absent (empty halves).
+#[cfg(feature = "pjrt")]
 pub struct SplitCnnExecutor {
     dev: Vec<Option<Mutex<Artifact>>>,
     edge: Vec<Option<Mutex<Artifact>>>,
@@ -51,9 +58,12 @@ pub struct SplitCnnExecutor {
 // is thread-safe and we never clone the `Rc`s: every executable is accessed
 // exclusively behind its `Mutex`, and the owning struct (not references to
 // the internals) is what crosses threads.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for SplitCnnExecutor {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for SplitCnnExecutor {}
 
+#[cfg(feature = "pjrt")]
 impl SplitCnnExecutor {
     /// Load all split halves present in the artifact directory.
     pub fn load(rt: &Runtime, num_layers: usize, act_sizes: Vec<usize>) -> anyhow::Result<Self> {
@@ -103,6 +113,7 @@ impl SplitCnnExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl InferenceBackend for SplitCnnExecutor {
     fn infer(&self, split: usize, input: &[f32]) -> anyhow::Result<Vec<f32>> {
         let split = split.min(self.num_layers);
@@ -117,8 +128,37 @@ impl InferenceBackend for SplitCnnExecutor {
     }
 }
 
+/// Stub split-CNN executor (no `pjrt` feature): `load` always errors.
+#[cfg(not(feature = "pjrt"))]
+pub struct SplitCnnExecutor {
+    pub num_layers: usize,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl SplitCnnExecutor {
+    pub fn load(_rt: &Runtime, _num_layers: usize, _act_sizes: Vec<usize>) -> anyhow::Result<Self> {
+        anyhow::bail!("SplitCnnExecutor requires the `pjrt` feature")
+    }
+
+    pub fn run_device(&self, _split: usize, _input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("SplitCnnExecutor requires the `pjrt` feature")
+    }
+
+    pub fn run_edge(&self, _split: usize, _act: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("SplitCnnExecutor requires the `pjrt` feature")
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl InferenceBackend for SplitCnnExecutor {
+    fn infer(&self, _split: usize, _input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("SplitCnnExecutor requires the `pjrt` feature")
+    }
+}
+
 /// The XLA Li-GD chunk: runs `T` projected-GD steps for one cohort per
 /// call. Static shapes: `U` users × `M` channels (see aot.py).
+#[cfg(feature = "pjrt")]
 pub struct LigdChunkExecutor {
     art: Mutex<Artifact>,
     pub n_users: usize,
@@ -127,9 +167,12 @@ pub struct LigdChunkExecutor {
 
 // SAFETY: see `SplitCnnExecutor` — all PJRT access is serialized behind the
 // `Mutex` and the `Rc`s are never cloned across threads.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for LigdChunkExecutor {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for LigdChunkExecutor {}
 
+#[cfg(feature = "pjrt")]
 impl LigdChunkExecutor {
     pub fn load(rt: &Runtime, n_users: usize, n_channels: usize) -> anyhow::Result<Self> {
         let art = rt.load(&format!("ligd_chunk_c{n_users}_m{n_channels}.hlo.txt"))?;
@@ -187,5 +230,27 @@ impl LigdChunkExecutor {
             *dst = src as f64;
         }
         Ok((nv, outs[1][0] as f64))
+    }
+}
+
+/// Stub Li-GD chunk executor (no `pjrt` feature): `load` always errors.
+#[cfg(not(feature = "pjrt"))]
+pub struct LigdChunkExecutor {
+    pub n_users: usize,
+    pub n_channels: usize,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LigdChunkExecutor {
+    pub fn load(_rt: &Runtime, _n_users: usize, _n_channels: usize) -> anyhow::Result<Self> {
+        anyhow::bail!("LigdChunkExecutor requires the `pjrt` feature")
+    }
+
+    pub fn run(
+        &self,
+        _p: &CohortProblem,
+        _vars: &CohortVars,
+    ) -> anyhow::Result<(CohortVars, f64)> {
+        anyhow::bail!("LigdChunkExecutor requires the `pjrt` feature")
     }
 }

@@ -1,10 +1,19 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text in
 //! `artifacts/`) and executes them from the Rust request path. Python never
 //! runs at serving time — `make artifacts` is the only place jax executes.
+//!
+//! The PJRT bindings (`xla` crate) are gated behind the `pjrt` cargo
+//! feature: offline registries may not carry xla-rs, and every layer except
+//! artifact execution is pure Rust. Without the feature this module compiles
+//! as a stub whose constructors return errors and whose
+//! [`Runtime::artifacts_present`] always reports `false`, so all callers
+//! fall back to simulation mode gracefully.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
 pub mod executor;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::Artifact;
 pub use executor::{LigdChunkExecutor, SplitCnnExecutor};
 
@@ -12,12 +21,14 @@ use std::path::{Path, PathBuf};
 
 /// Shared PJRT CPU client + artifact directory.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     pub client: xla::PjRtClient,
     pub artifacts_dir: PathBuf,
 }
 
 impl Runtime {
     /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    #[cfg(feature = "pjrt")]
     pub fn cpu(artifacts_dir: &Path) -> anyhow::Result<Self> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
@@ -25,6 +36,16 @@ impl Runtime {
             client,
             artifacts_dir: artifacts_dir.to_path_buf(),
         })
+    }
+
+    /// Stub: the crate was built without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let _ = artifacts_dir;
+        anyhow::bail!(
+            "built without the `pjrt` feature — add the `xla` dependency and \
+             rebuild with `--features pjrt` to execute AOT artifacts"
+        )
     }
 
     /// Default artifact location (repo-relative), overridable via
@@ -36,17 +57,19 @@ impl Runtime {
     }
 
     /// Load one artifact by file name.
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, name: &str) -> anyhow::Result<Artifact> {
         Artifact::load(&self.client, &self.artifacts_dir.join(name))
     }
 
-    /// Whether the artifact directory has been built.
+    /// Whether the artifact directory has been built *and* this build can
+    /// execute it (always `false` without the `pjrt` feature).
     pub fn artifacts_present(dir: &Path) -> bool {
-        dir.join("manifest.txt").exists()
+        cfg!(feature = "pjrt") && dir.join("manifest.txt").exists()
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

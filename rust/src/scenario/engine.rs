@@ -1,0 +1,494 @@
+//! Scenario execution engine.
+//!
+//! [`expand`] turns a [`ScenarioSpec`] into a flat cell grid
+//! (sweep-point × strategy × seed); [`Engine::run`] executes the cells on a
+//! `std::thread::scope` worker pool and returns one [`RunRecord`] per cell.
+//!
+//! Determinism: each cell's randomness derives entirely from the spec
+//! (config seed + optional seed-axis offset), cells never share mutable
+//! state, and records are written slot-indexed — so the produced rows are
+//! byte-identical for every engine thread count. `tests/scenario.rs`
+//! asserts this.
+
+use super::spec::{Axis, ScenarioSpec};
+use crate::baselines::{DeviceOnly, EdgeOnly, Strategy};
+use crate::config::Config;
+use crate::metrics::{evaluate, rates_for};
+use crate::models::zoo;
+use crate::net::Network;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One executable grid cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub index: usize,
+    pub cfg: Config,
+    pub strategy: String,
+    /// Replicate seed (`cfg.seed`).
+    pub seed: u64,
+    /// Seed used to generate the wireless network (seed + seed-axis offset).
+    pub net_seed: u64,
+    /// Per-axis value index of this cell's sweep point.
+    pub sweep_idx: Vec<usize>,
+    /// Per-axis `(key, value)` display pairs.
+    pub sweep: Vec<(String, String)>,
+}
+
+/// Discrete-event episode aggregates for one cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpisodeRecord {
+    pub n: usize,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub mean_queue_s: f64,
+    pub throughput_rps: f64,
+    /// Fraction of completions exceeding their user's QoE threshold.
+    pub qoe_miss_frac: f64,
+}
+
+/// Structured result of one cell: plan stats, static evaluation, reference
+/// baselines, and (optionally) episode dynamics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunRecord {
+    pub scenario: String,
+    pub cell: usize,
+    pub strategy: String,
+    pub seed: u64,
+    pub sweep_idx: Vec<usize>,
+    pub sweep: Vec<(String, String)>,
+    pub model: String,
+    pub users: usize,
+    pub cohorts: usize,
+    pub gd_iters: usize,
+    pub offloaders: usize,
+    /// Mean edge resource units over offloading users (0 if none).
+    pub mean_r: f64,
+    pub sum_delay_s: f64,
+    pub mean_delay_s: f64,
+    pub sum_energy_j: f64,
+    pub mean_energy_j: f64,
+    pub qoe_violations: usize,
+    pub qoe_users: usize,
+    pub sum_dct_s: f64,
+    /// Device-Only reference outcome on the same network (orthogonal).
+    pub device_sum_delay_s: f64,
+    pub device_sum_energy_j: f64,
+    /// Edge-Only reference outcome on the same network (orthogonal).
+    pub edge_sum_delay_s: f64,
+    pub edge_sum_energy_j: f64,
+    pub episode: Option<EpisodeRecord>,
+    /// Wall-clock planning time. Deliberately excluded from the CSV so rows
+    /// stay byte-identical across thread counts and machines.
+    pub plan_wall_s: f64,
+}
+
+impl RunRecord {
+    pub fn violation_frac(&self) -> f64 {
+        if self.qoe_users == 0 {
+            0.0
+        } else {
+            self.qoe_violations as f64 / self.qoe_users as f64
+        }
+    }
+
+    pub fn device_mean_delay_s(&self) -> f64 {
+        self.device_sum_delay_s / self.users.max(1) as f64
+    }
+
+    /// Latency speedup vs the Device-Only reference on the same network.
+    pub fn speedup_vs_device(&self) -> f64 {
+        self.device_sum_delay_s / self.sum_delay_s.max(1e-30)
+    }
+
+    /// Energy reduction vs the Device-Only reference.
+    pub fn energy_reduction_vs_device(&self) -> f64 {
+        self.device_sum_energy_j / self.sum_energy_j.max(1e-30)
+    }
+
+    /// Energy reduction vs the Edge-Only reference (the natural offloading
+    /// comparison, paper Fig.9).
+    pub fn energy_reduction_vs_edge(&self) -> f64 {
+        self.edge_sum_energy_j / self.sum_energy_j.max(1e-30)
+    }
+
+    /// CSV column names, aligned with [`RunRecord::to_csv_row`].
+    pub fn csv_header() -> &'static str {
+        "scenario,cell,strategy,seed,sweep,model,users,cohorts,gd_iters,offloaders,\
+         mean_r,mean_delay_s,sum_delay_s,mean_energy_j,sum_energy_j,\
+         qoe_violations,qoe_users,sum_dct_s,\
+         speedup_vs_device,energy_reduction_vs_device,energy_reduction_vs_edge,\
+         ep_n,ep_mean_latency_s,ep_p99_latency_s,ep_mean_queue_s,ep_throughput_rps,ep_qoe_miss_frac"
+    }
+
+    /// One deterministic CSV row (floats in shortest round-trip form).
+    pub fn to_csv_row(&self) -> String {
+        let f = |v: f64| format!("{v:?}");
+        let sweep = if self.sweep.is_empty() {
+            "-".to_string()
+        } else {
+            self.sweep
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        let ep = match &self.episode {
+            Some(e) => format!(
+                "{},{},{},{},{},{}",
+                e.n,
+                f(e.mean_latency_s),
+                f(e.p99_latency_s),
+                f(e.mean_queue_s),
+                f(e.throughput_rps),
+                f(e.qoe_miss_frac)
+            ),
+            None => "-,-,-,-,-,-".to_string(),
+        };
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.scenario,
+            self.cell,
+            self.strategy,
+            self.seed,
+            sweep,
+            self.model,
+            self.users,
+            self.cohorts,
+            self.gd_iters,
+            self.offloaders,
+            f(self.mean_r),
+            f(self.mean_delay_s),
+            f(self.sum_delay_s),
+            f(self.mean_energy_j),
+            f(self.sum_energy_j),
+            self.qoe_violations,
+            self.qoe_users,
+            f(self.sum_dct_s),
+            f(self.speedup_vs_device()),
+            f(self.energy_reduction_vs_device()),
+            f(self.energy_reduction_vs_edge()),
+            ep
+        )
+    }
+}
+
+/// Render records as a CSV document (header + one row per cell).
+pub fn to_csv(records: &[RunRecord]) -> String {
+    let mut out = String::from(RunRecord::csv_header());
+    out.push('\n');
+    for r in records {
+        out.push_str(&r.to_csv_row());
+        out.push('\n');
+    }
+    out
+}
+
+/// Expand a spec into its cell grid: sweep points in row-major axis order
+/// (first axis slowest), then strategies, then seeds.
+pub fn expand(spec: &ScenarioSpec) -> anyhow::Result<Vec<Cell>> {
+    spec.validate()?;
+    let axis_lens: Vec<usize> = spec.axes.iter().map(|a| a.values.len()).collect();
+    let num_points: usize = axis_lens.iter().product();
+    let seed_axis_pos = spec
+        .seed_axis
+        .as_ref()
+        .and_then(|k| spec.axes.iter().position(|a| &a.key == k));
+
+    let mut cells = Vec::with_capacity(spec.num_cells());
+    let mut idx = vec![0usize; spec.axes.len()];
+    for point in 0..num_points.max(1) {
+        // decode `point` into the mixed-radix axis index (first axis slowest)
+        let mut rest = point;
+        for (a, &len) in axis_lens.iter().enumerate().rev() {
+            idx[a] = rest % len;
+            rest /= len;
+        }
+        let mut cfg0 = spec.base.clone();
+        let mut sweep = Vec::with_capacity(spec.axes.len());
+        for (a, axis) in spec.axes.iter().enumerate() {
+            let v = &axis.values[idx[a]];
+            cfg0.set_path(&axis.key, v)?;
+            sweep.push((axis.key.clone(), Axis::display(v)));
+        }
+        cfg0.validate()?;
+        let seed_off = seed_axis_pos.map(|p| idx[p] as u64).unwrap_or(0);
+        for strategy in &spec.strategies {
+            for &seed in &spec.seeds {
+                let mut cfg = cfg0.clone();
+                cfg.seed = seed;
+                cells.push(Cell {
+                    index: cells.len(),
+                    cfg,
+                    strategy: strategy.clone(),
+                    seed,
+                    net_seed: seed + seed_off,
+                    sweep_idx: idx.clone(),
+                    sweep: sweep.clone(),
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Execute one cell: generate the network, plan, evaluate, score the
+/// Device-/Edge-Only references, and (optionally) run the DES episode.
+pub fn run_cell(spec: &ScenarioSpec, cell: &Cell) -> anyhow::Result<RunRecord> {
+    let cfg = &cell.cfg;
+    let mut strat: Box<dyn Strategy> = crate::strategies::by_name(&cell.strategy)
+        .ok_or_else(|| anyhow::anyhow!("unknown strategy `{}`", cell.strategy))?;
+    // ERA cells honor the spec's in-cell solver parallelism (wave-parallel
+    // Li-GD cohort solves — deterministic for any plan_threads ≥ 2).
+    // Matching on the resolved canonical name covers registry aliases too.
+    if spec.plan_threads > 1 {
+        match strat.name() {
+            "era" => {
+                strat = Box::new(crate::coordinator::EraStrategy {
+                    warm_start: true,
+                    threads: spec.plan_threads,
+                })
+            }
+            "era-cold" => {
+                strat = Box::new(crate::coordinator::EraStrategy {
+                    warm_start: false,
+                    threads: spec.plan_threads,
+                })
+            }
+            _ => {}
+        }
+    }
+    let model = zoo::by_name(&cfg.workload.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{}`", cfg.workload.model))?;
+    let net = Network::generate(cfg, cell.net_seed);
+
+    let t0 = std::time::Instant::now();
+    let (ds, info) = strat.decide_with_stats(cfg, &net, &model);
+    let plan_wall_s = t0.elapsed().as_secs_f64();
+    let o = evaluate(cfg, &net, &model, &ds, strat.channel_model());
+
+    // Reference outcomes are recomputed per cell rather than shared across
+    // the strategies of a sweep point: both baselines are closed-form and
+    // cheap next to an ERA plan, and keeping cells fully independent is
+    // what makes the engine's determinism argument trivial.
+    let dev = DeviceOnly.decide(cfg, &net, &model);
+    let od = evaluate(cfg, &net, &model, &dev, DeviceOnly.channel_model());
+    let edge = EdgeOnly.decide(cfg, &net, &model);
+    let oe = evaluate(cfg, &net, &model, &edge, EdgeOnly.channel_model());
+
+    let offl: Vec<&crate::baselines::Decision> =
+        ds.iter().filter(|d| d.offloads(&model)).collect();
+    let mean_r = if offl.is_empty() {
+        0.0
+    } else {
+        offl.iter().map(|d| d.r).sum::<f64>() / offl.len() as f64
+    };
+
+    let episode = if spec.episode {
+        let (up, down) = rates_for(cfg, &net, &ds, strat.channel_model());
+        let k = cfg.workload.tasks_per_user.round().max(0.0) as usize;
+        let trace_seed = spec.trace_seed.unwrap_or(cfg.seed + 1);
+        let trace = crate::trace::fixed_count_trace(cfg, k, trace_seed);
+        let done = crate::sim::run_episode(cfg, &net, &model, &ds, &up, &down, &trace);
+        let st = crate::sim::stats(&done, cfg.workload.episode_s);
+        let misses = done
+            .iter()
+            .filter(|c| c.latency() > net.users[c.user].qoe_threshold_s)
+            .count();
+        Some(EpisodeRecord {
+            n: st.n,
+            mean_latency_s: st.mean_latency_s,
+            p50_latency_s: st.p50_latency_s,
+            p99_latency_s: st.p99_latency_s,
+            mean_queue_s: st.mean_queue_s,
+            throughput_rps: st.throughput_rps,
+            qoe_miss_frac: misses as f64 / done.len().max(1) as f64,
+        })
+    } else {
+        None
+    };
+
+    Ok(RunRecord {
+        scenario: spec.name.clone(),
+        cell: cell.index,
+        strategy: cell.strategy.clone(),
+        seed: cell.seed,
+        sweep_idx: cell.sweep_idx.clone(),
+        sweep: cell.sweep.clone(),
+        model: model.name.to_string(),
+        users: net.num_users(),
+        cohorts: info.cohorts,
+        gd_iters: info.gd_iters,
+        offloaders: offl.len(),
+        mean_r,
+        sum_delay_s: o.sum_delay(),
+        mean_delay_s: o.mean_delay(),
+        sum_energy_j: o.sum_energy(),
+        mean_energy_j: o.mean_energy(),
+        qoe_violations: o.qoe.num_violating,
+        qoe_users: o.qoe.num_users,
+        sum_dct_s: o.qoe.sum_dct_s,
+        device_sum_delay_s: od.sum_delay(),
+        device_sum_energy_j: od.sum_energy(),
+        edge_sum_delay_s: oe.sum_delay(),
+        edge_sum_energy_j: oe.sum_energy(),
+        episode,
+        plan_wall_s,
+    })
+}
+
+/// Parallel scenario executor.
+pub struct Engine {
+    /// Worker threads for cell execution (cells are independent; results
+    /// are identical for any value).
+    pub threads: usize,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Self {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+impl Engine {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Run every cell of the spec; records are returned in cell order.
+    pub fn run(&self, spec: &ScenarioSpec) -> anyhow::Result<Vec<RunRecord>> {
+        let cells = expand(spec)?;
+        let threads = self.threads.min(cells.len()).max(1);
+        if threads == 1 {
+            return cells.iter().map(|c| run_cell(spec, c)).collect();
+        }
+        let slots: Vec<Mutex<Option<anyhow::Result<RunRecord>>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let rec = run_cell(spec, &cells[i]);
+                    *slots[i].lock().unwrap() = Some(rec);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("cell executed"))
+            .collect()
+    }
+
+    /// Run a single-cell spec and return its record.
+    pub fn run_one(&self, spec: &ScenarioSpec) -> anyhow::Result<RunRecord> {
+        let mut records = self.run(spec)?;
+        anyhow::ensure!(
+            records.len() == 1,
+            "expected a single-cell spec, got {} cells",
+            records.len()
+        );
+        Ok(records.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn tiny_spec() -> ScenarioSpec {
+        let mut base = presets::smoke();
+        base.network.num_users = 12;
+        base.optimizer.max_iters = 25;
+        ScenarioSpec::new("tiny", base)
+            .with_strategies(&["neurosurgeon", "device-only"])
+            .with_axis_usize("network.num_users", &[12, 16])
+            .with_replicates(2)
+    }
+
+    #[test]
+    fn expansion_order_and_shape() {
+        let spec = tiny_spec();
+        let cells = expand(&spec).unwrap();
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        // sweep-point slowest, then strategy, then seed
+        assert_eq!(cells[0].sweep_idx, vec![0]);
+        assert_eq!(cells[0].strategy, "neurosurgeon");
+        assert_eq!(cells[1].strategy, "neurosurgeon");
+        assert_ne!(cells[0].seed, cells[1].seed);
+        assert_eq!(cells[2].strategy, "device-only");
+        assert_eq!(cells[4].sweep_idx, vec![1]);
+        assert_eq!(cells[4].cfg.network.num_users, 16);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    #[test]
+    fn seed_axis_offsets_network_seed() {
+        let spec = tiny_spec();
+        let mut with = spec.clone();
+        with.seed_axis = Some("network.num_users".into());
+        let plain = expand(&spec).unwrap();
+        let offset = expand(&with).unwrap();
+        assert_eq!(plain[0].net_seed, plain[0].seed);
+        assert_eq!(offset[4].net_seed, offset[4].seed + 1, "axis idx 1 → +1");
+    }
+
+    #[test]
+    fn records_reference_outcomes_are_consistent() {
+        let spec = tiny_spec();
+        let recs = Engine::new(2).run(&spec).unwrap();
+        assert_eq!(recs.len(), 8);
+        for r in &recs {
+            assert!(r.sum_delay_s > 0.0 && r.sum_energy_j > 0.0);
+            assert!(r.device_sum_delay_s > 0.0 && r.edge_sum_delay_s > 0.0);
+            if r.strategy == "device-only" {
+                // identical decisions to the reference → ratio exactly 1
+                assert!((r.speedup_vs_device() - 1.0).abs() < 1e-12);
+                assert_eq!(r.offloaders, 0);
+            }
+            assert_eq!(r.users, r.qoe_users);
+            assert!(r.episode.is_none());
+        }
+    }
+
+    #[test]
+    fn episode_cells_carry_dynamics() {
+        let mut base = presets::smoke();
+        base.network.num_users = 10;
+        base.optimizer.max_iters = 20;
+        base.workload.tasks_per_user = 3.0;
+        let mut spec = ScenarioSpec::new("ep", base).with_strategies(&["neurosurgeon"]);
+        spec.episode = true;
+        let rec = Engine::new(1).run_one(&spec).unwrap();
+        let ep = rec.episode.expect("episode record");
+        assert_eq!(ep.n, 10 * 3);
+        assert!(ep.mean_latency_s > 0.0);
+        assert!(ep.throughput_rps > 0.0);
+        assert!((0.0..=1.0).contains(&ep.qoe_miss_frac));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let spec = tiny_spec();
+        let recs = Engine::new(1).run(&spec).unwrap();
+        let csv = to_csv(&recs);
+        assert_eq!(csv.lines().count(), 1 + recs.len());
+        let cols = RunRecord::csv_header().split(',').count();
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Scenario layer: declarative experiment specs and the parallel engine
+//! that executes them (see DESIGN.md §Scenario engine).
+//!
+//! The paper's evaluation is a grid — strategies × models × user counts ×
+//! bandwidths × workloads. This module makes that grid a first-class
+//! object: a [`ScenarioSpec`] names the axes, the [`Engine`] expands them
+//! into cells (sweep-point × strategy × seed) and executes every cell in
+//! parallel, and every entry point (`era run`/`plan`/`ligd-demo`, the
+//! figure harness, examples, benches) drives it instead of hand-rolling
+//! the config → network → plan → evaluate pipeline.
+//!
+//! ```no_run
+//! use era::scenario::{Engine, ScenarioSpec};
+//! let spec = ScenarioSpec::from_preset("smoke-grid").unwrap();
+//! let records = Engine::default().run(&spec).unwrap();
+//! for r in &records {
+//!     println!("{}", r.to_csv_row());
+//! }
+//! ```
+
+pub mod engine;
+pub mod presets;
+pub mod spec;
+
+pub use engine::{expand, run_cell, to_csv, Cell, Engine, EpisodeRecord, RunRecord};
+pub use spec::{Axis, ScenarioSpec};

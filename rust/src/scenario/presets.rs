@@ -1,0 +1,104 @@
+//! Named scenario presets for `era run --scenario <name>` — the multi-axis
+//! grids the paper's evaluation (§V) is built from, plus a fast smoke grid.
+
+use super::ScenarioSpec;
+use crate::config::presets as cfg;
+
+/// Known preset names (CLI error messages list these).
+pub const NAMES: &[&str] = &[
+    "smoke-grid",
+    "model-grid",
+    "density",
+    "qoe-sweep",
+    "workload",
+    "ligd",
+];
+
+/// Look up a scenario preset by name.
+pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+    match name {
+        // Fast CI-sized grid: 2 strategies × 2 user counts × 2 seeds.
+        "smoke-grid" => {
+            let mut base = cfg::smoke();
+            base.optimizer.max_iters = 60;
+            Some(
+                ScenarioSpec::new("smoke-grid", base)
+                    .with_strategies(&["era", "neurosurgeon"])
+                    .with_axis_usize("network.num_users", &[16, 24])
+                    .with_replicates(2),
+            )
+        }
+        // Paper Fig.6/7: all strategies × all models (network re-drawn per
+        // model, as the paper's per-model experiments do).
+        "model-grid" => {
+            let mut spec = ScenarioSpec::new("model-grid", cfg::medium())
+                .with_strategies(crate::strategies::NAMES)
+                .with_axis_str("workload.model", &["nin", "yolov2", "vgg16"]);
+            spec.seed_axis = Some("workload.model".into());
+            Some(spec)
+        }
+        // Paper Fig.14/17: user-density sweep.
+        "density" => Some(
+            ScenarioSpec::new("density", cfg::medium())
+                .with_strategies(crate::strategies::NAMES)
+                .with_axis_usize("network.num_users", &[100, 150, 200, 250]),
+        ),
+        // Paper Fig.8–11 shape: ERA across expected finish times.
+        "qoe-sweep" => {
+            let mut base = cfg::smoke();
+            base.network.num_users = 48;
+            base.qoe.expected_finish_jitter = 0.0;
+            Some(
+                ScenarioSpec::new("qoe-sweep", base)
+                    .with_strategies(&["era"])
+                    .with_axis_f64(
+                        "qoe.expected_finish_mean_s",
+                        &[5e-3, 10e-3, 15e-3, 20e-3, 25e-3],
+                    ),
+            )
+        }
+        // Paper Fig.16/19: workload sweep through the DES simulator.
+        "workload" => {
+            let mut base = cfg::smoke();
+            base.network.num_users = 60;
+            base.workload.episode_s = 0.04;
+            let mut spec = ScenarioSpec::new("workload", base)
+                .with_strategies(&["era", "neurosurgeon", "edge-only"])
+                .with_axis_usize("workload.tasks_per_user", &[1, 2, 4, 8, 16, 32]);
+            spec.episode = true;
+            Some(spec)
+        }
+        // Li-GD vs cold-start GD iteration comparison (Corollary 4).
+        "ligd" => Some(
+            ScenarioSpec::new("ligd", cfg::smoke()).with_strategies(&["era", "era-cold"]),
+        ),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_expand() {
+        for &name in NAMES {
+            let spec = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            spec.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let cells = super::super::engine::expand(&spec).unwrap();
+            assert_eq!(cells.len(), spec.num_cells(), "{name}");
+            assert!(!cells.is_empty(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn smoke_grid_is_a_real_multi_axis_parallel_sweep() {
+        // The acceptance shape: ≥ 2 strategies × ≥ 2 sweep values × ≥ 2 seeds.
+        let spec = by_name("smoke-grid").unwrap();
+        assert!(spec.strategies.len() >= 2);
+        assert!(spec.axes[0].values.len() >= 2);
+        assert!(spec.seeds.len() >= 2);
+        assert_eq!(spec.num_cells(), 8);
+    }
+}

@@ -1,0 +1,470 @@
+//! Declarative scenario specification.
+//!
+//! A [`ScenarioSpec`] describes one experiment: a base [`Config`], the
+//! strategies to compare, sweep axes (each axis is a dotted config path
+//! plus a value list), seed replication, and an optional discrete-event
+//! episode per cell. Specs load from TOML-subset text (`from_str` /
+//! `from_path`), from the named preset registry (`from_preset`), or are
+//! built programmatically (the figure harness does this).
+//!
+//! TOML grammar (everything optional except that at least one strategy
+//! resolves):
+//!
+//! ```toml
+//! name = "density"
+//! preset = "medium"                  # base Config preset (default: paper)
+//! strategies = ["era", "neurosurgeon", "device-only"]
+//! seeds = 3                          # replicates: base.seed, +1, +2
+//! # seeds = [7, 11, 13]              # ...or explicit seed list
+//! episode = true                     # run the DES episode per cell
+//! seed_axis = "workload.model"       # offset net seed by this axis' index
+//! trace_seed = 301                   # fixed episode trace seed
+//! seed = 42                          # base config seed
+//!
+//! [sweep]                            # axes: dotted config paths
+//! network.num_users = [100, 250]
+//! workload.model = ["nin", "yolov2"]
+//!
+//! [network]                          # any Config section overlays the base
+//! num_aps = 5
+//! ```
+//!
+//! Axes parsed from TOML are ordered alphabetically by key (the parser is
+//! BTreeMap-backed); cell expansion order is sweep-point × strategy × seed.
+
+use crate::config::{parse_toml_subset, presets as cfg_presets, Config, TomlValue};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One sweep axis: a dotted config path and the values it takes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Axis {
+    pub key: String,
+    pub values: Vec<TomlValue>,
+}
+
+impl Axis {
+    /// Human/CSV display of one axis value.
+    pub fn display(v: &TomlValue) -> String {
+        match v {
+            TomlValue::Str(s) => s.clone(),
+            other => other.to_toml(),
+        }
+    }
+}
+
+/// A declarative experiment: base config + strategy list + sweep axes +
+/// seed replication.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub base: Config,
+    /// Strategy names resolved via [`crate::strategies::by_name`].
+    pub strategies: Vec<String>,
+    /// Cross-product sweep axes (first axis slowest).
+    pub axes: Vec<Axis>,
+    /// Replicate seeds; each cell's config seed is one of these.
+    pub seeds: Vec<u64>,
+    /// Run the discrete-event serving episode in every cell
+    /// (`workload.tasks_per_user` tasks per user through `sim::run_episode`).
+    pub episode: bool,
+    /// Axis key whose value index additionally offsets the cell's network
+    /// seed (paper figures that re-draw the network per sweep point).
+    pub seed_axis: Option<String>,
+    /// Fixed trace seed for episode cells (default: cell seed + 1).
+    pub trace_seed: Option<u64>,
+    /// Wave-parallel Li-GD solver threads *inside* each ERA cell (see
+    /// [`crate::coordinator::PlanOptions::threads`]). Keep at 1 when the
+    /// grid itself saturates the machine; raise for single-cell latency.
+    pub plan_threads: usize,
+}
+
+const TOP_KEYS: &[&str] = &[
+    "name",
+    "preset",
+    "strategies",
+    "seeds",
+    "episode",
+    "seed_axis",
+    "trace_seed",
+    "plan_threads",
+    "seed",
+];
+
+impl ScenarioSpec {
+    /// A single-cell spec: one strategy ("era"), no axes, one seed.
+    pub fn new(name: &str, base: Config) -> Self {
+        let seed = base.seed;
+        Self {
+            name: name.to_string(),
+            base,
+            strategies: vec!["era".into()],
+            axes: Vec::new(),
+            seeds: vec![seed],
+            episode: false,
+            seed_axis: None,
+            trace_seed: None,
+            plan_threads: 1,
+        }
+    }
+
+    /// Replace the strategy list.
+    pub fn with_strategies(mut self, names: &[&str]) -> Self {
+        self.strategies = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Append a sweep axis of raw TOML values.
+    pub fn with_axis(mut self, key: &str, values: Vec<TomlValue>) -> Self {
+        self.axes.push(Axis {
+            key: key.into(),
+            values,
+        });
+        self
+    }
+
+    /// Append a float-valued sweep axis.
+    pub fn with_axis_f64(self, key: &str, values: &[f64]) -> Self {
+        self.with_axis(key, values.iter().map(|&v| TomlValue::Float(v)).collect())
+    }
+
+    /// Append an integer-valued sweep axis.
+    pub fn with_axis_usize(self, key: &str, values: &[usize]) -> Self {
+        self.with_axis(
+            key,
+            values.iter().map(|&v| TomlValue::Int(v as i64)).collect(),
+        )
+    }
+
+    /// Append a string-valued sweep axis.
+    pub fn with_axis_str(self, key: &str, values: &[&str]) -> Self {
+        self.with_axis(
+            key,
+            values.iter().map(|s| TomlValue::Str(s.to_string())).collect(),
+        )
+    }
+
+    /// Replicate over `n` consecutive seeds starting at the base seed.
+    pub fn with_replicates(mut self, n: u64) -> Self {
+        self.seeds = (0..n.max(1)).map(|i| self.base.seed + i).collect();
+        self
+    }
+
+    /// Total cell count (sweep points × strategies × seeds).
+    pub fn num_cells(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product::<usize>()
+            * self.strategies.len()
+            * self.seeds.len()
+    }
+
+    /// Parse a spec from TOML-subset text.
+    pub fn from_str(text: &str) -> anyhow::Result<Self> {
+        let doc = parse_toml_subset(text)?;
+        let empty = BTreeMap::new();
+        let top = doc.get("").unwrap_or(&empty);
+        for key in top.keys() {
+            anyhow::ensure!(
+                TOP_KEYS.contains(&key.as_str()),
+                "unknown scenario key `{key}` (known: {})",
+                TOP_KEYS.join(", ")
+            );
+        }
+
+        // Base config: preset, then section overlays, then the seed key.
+        let mut base = match top.get("preset") {
+            Some(v) => {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("preset must be a string"))?;
+                cfg_presets::by_name(name).ok_or_else(|| {
+                    anyhow::anyhow!("unknown config preset `{name}` (known: paper, smoke, medium)")
+                })?
+            }
+            None => Config::default(),
+        };
+        let mut cfg_doc: BTreeMap<String, BTreeMap<String, TomlValue>> = BTreeMap::new();
+        for (section, kv) in &doc {
+            if !section.is_empty() && section != "sweep" {
+                cfg_doc.insert(section.clone(), kv.clone());
+            }
+        }
+        base.apply(&cfg_doc)?;
+        if let Some(v) = top.get("seed") {
+            base.seed = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("seed must be an integer"))?
+                as u64;
+        }
+
+        let mut spec = ScenarioSpec::new("scenario", base);
+        if let Some(v) = top.get("name") {
+            spec.name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("name must be a string"))?
+                .to_string();
+        }
+        if let Some(v) = top.get("strategies") {
+            let arr = v
+                .as_array()
+                .ok_or_else(|| anyhow::anyhow!("strategies must be an array of strings"))?;
+            spec.strategies = arr
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("strategies must be strings"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+        }
+        match top.get("seeds") {
+            Some(TomlValue::Int(n)) => {
+                anyhow::ensure!(*n >= 1, "seeds count must be >= 1");
+                spec.seeds = (0..*n as u64).map(|i| spec.base.seed + i).collect();
+            }
+            Some(TomlValue::Array(xs)) => {
+                spec.seeds = xs
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .map(|f| f as u64)
+                            .ok_or_else(|| anyhow::anyhow!("seeds must be integers"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                anyhow::ensure!(!spec.seeds.is_empty(), "seeds array must be non-empty");
+            }
+            Some(other) => anyhow::bail!("seeds must be an integer count or array, got {other:?}"),
+            None => {}
+        }
+        if let Some(v) = top.get("episode") {
+            spec.episode = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("episode must be a boolean"))?;
+        }
+        if let Some(v) = top.get("seed_axis") {
+            spec.seed_axis = Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("seed_axis must be a string"))?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = top.get("trace_seed") {
+            spec.trace_seed = Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("trace_seed must be an integer"))?
+                    as u64,
+            );
+        }
+        if let Some(v) = top.get("plan_threads") {
+            let t = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("plan_threads must be an integer"))?
+                as usize;
+            anyhow::ensure!(t >= 1, "plan_threads must be >= 1");
+            spec.plan_threads = t;
+        }
+        if let Some(sweep) = doc.get("sweep") {
+            for (key, val) in sweep {
+                let values = match val {
+                    TomlValue::Array(xs) => xs.clone(),
+                    scalar => vec![scalar.clone()],
+                };
+                spec.axes.push(Axis {
+                    key: key.clone(),
+                    values,
+                });
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a spec file.
+    pub fn from_path(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("failed to read scenario `{}`: {e}", path.display()))?;
+        Self::from_str(&text)
+            .map_err(|e| anyhow::anyhow!("invalid scenario `{}`: {e:#}", path.display()))
+    }
+
+    /// Look up a named preset (see [`super::presets`]).
+    pub fn from_preset(name: &str) -> anyhow::Result<Self> {
+        super::presets::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario preset `{name}` (known: {})",
+                super::presets::NAMES.join(", ")
+            )
+        })
+    }
+
+    /// Resolve a CLI argument: an existing file path, else a preset name.
+    pub fn resolve(arg: &str) -> anyhow::Result<Self> {
+        let path = Path::new(arg);
+        if path.exists() {
+            Self::from_path(path)
+        } else {
+            Self::from_preset(arg)
+        }
+    }
+
+    /// Structural validation: strategies resolve, axis keys are real config
+    /// paths, seed_axis names an axis, the base config is coherent.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.strategies.is_empty(), "no strategies listed");
+        for s in &self.strategies {
+            anyhow::ensure!(
+                crate::strategies::by_name(s).is_some(),
+                "unknown strategy `{s}` (known: {}, era-cold)",
+                crate::strategies::NAMES.join(", ")
+            );
+        }
+        anyhow::ensure!(!self.seeds.is_empty(), "no seeds listed");
+        let mut probe = self.base.clone();
+        for a in &self.axes {
+            anyhow::ensure!(!a.values.is_empty(), "sweep axis `{}` is empty", a.key);
+            for v in &a.values {
+                probe.set_path(&a.key, v)?;
+            }
+        }
+        if let Some(k) = &self.seed_axis {
+            anyhow::ensure!(
+                self.axes.iter().any(|a| &a.key == k),
+                "seed_axis `{k}` does not name a sweep axis"
+            );
+        }
+        self.base.validate()?;
+        Ok(())
+    }
+
+    /// Render to TOML-subset text. The text form canonicalizes axes to
+    /// alphabetical key order (the `[sweep]` table is parsed from a
+    /// BTreeMap, so that is the only order a file can express); a spec
+    /// built programmatically with non-alphabetical axis order therefore
+    /// round-trips to the canonical ordering — `sweep_idx` positions
+    /// follow `spec.axes`, so re-derive index-based projections after a
+    /// text round-trip rather than assuming the original axis order.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("name = {:?}\n", self.name));
+        let strats: Vec<String> = self.strategies.iter().map(|x| format!("{x:?}")).collect();
+        s.push_str(&format!("strategies = [{}]\n", strats.join(", ")));
+        let seeds: Vec<String> = self.seeds.iter().map(|x| x.to_string()).collect();
+        s.push_str(&format!("seeds = [{}]\n", seeds.join(", ")));
+        s.push_str(&format!("episode = {}\n", self.episode));
+        if let Some(k) = &self.seed_axis {
+            s.push_str(&format!("seed_axis = {k:?}\n"));
+        }
+        if let Some(t) = self.trace_seed {
+            s.push_str(&format!("trace_seed = {t}\n"));
+        }
+        if self.plan_threads != 1 {
+            s.push_str(&format!("plan_threads = {}\n", self.plan_threads));
+        }
+        if !self.axes.is_empty() {
+            s.push_str("\n[sweep]\n");
+            let mut axes: Vec<&Axis> = self.axes.iter().collect();
+            axes.sort_by(|a, b| a.key.cmp(&b.key));
+            for a in axes {
+                let vals: Vec<String> = a.values.iter().map(|v| v.to_toml()).collect();
+                s.push_str(&format!("{} = [{}]\n", a.key, vals.join(", ")));
+            }
+        }
+        // Full base config; its leading top-level `seed = N` paragraph must
+        // stay in the top-level section, so it is re-emitted here and the
+        // section body appended after the sweep table.
+        let cfg = self.base.to_toml();
+        let (seed_line, sections) = cfg.split_once("\n\n").expect("Config::to_toml shape");
+        s = format!("{seed_line}\n{s}\n{sections}");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_parses_with_defaults() {
+        let spec = ScenarioSpec::from_str("name = \"x\"\n").unwrap();
+        assert_eq!(spec.name, "x");
+        assert_eq!(spec.strategies, vec!["era".to_string()]);
+        assert_eq!(spec.seeds, vec![Config::default().seed]);
+        assert_eq!(spec.num_cells(), 1);
+        assert!(!spec.episode);
+    }
+
+    #[test]
+    fn full_spec_parses() {
+        let spec = ScenarioSpec::from_str(
+            r#"
+            name = "grid"
+            preset = "smoke"
+            strategies = ["era", "neurosurgeon"]
+            seeds = 2
+            episode = true
+            seed = 100
+            trace_seed = 7
+            [sweep]
+            network.num_users = [16, 24]
+            workload.model = ["nin", "yolov2"]
+            [qoe]
+            expected_finish_jitter = 0.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.base.network.num_aps, 2, "smoke preset applied");
+        assert_eq!(spec.base.qoe.expected_finish_jitter, 0.0, "overlay applied");
+        assert_eq!(spec.base.seed, 100);
+        assert_eq!(spec.seeds, vec![100, 101]);
+        assert_eq!(spec.axes.len(), 2);
+        assert_eq!(spec.num_cells(), 2 * 2 * 2 * 2);
+        assert!(spec.episode);
+        assert_eq!(spec.trace_seed, Some(7));
+    }
+
+    #[test]
+    fn toml_round_trip_full_spec() {
+        let mut spec = ScenarioSpec::new("rt", cfg_presets::smoke())
+            .with_strategies(&["era", "dina"])
+            .with_axis_usize("network.num_users", &[16, 24])
+            .with_axis_str("workload.model", &["nin", "vgg16"])
+            .with_replicates(3);
+        spec.episode = true;
+        spec.seed_axis = Some("network.num_users".into());
+        spec.trace_seed = Some(12);
+        spec.plan_threads = 2;
+        let text = spec.to_toml();
+        let parsed = ScenarioSpec::from_str(&text)
+            .unwrap_or_else(|e| panic!("re-parse failed: {e}\n{text}"));
+        assert_eq!(parsed, spec);
+    }
+
+    #[test]
+    fn unknown_top_key_is_a_clear_error() {
+        let e = ScenarioSpec::from_str("strategy = [\"era\"]\n").unwrap_err();
+        assert!(
+            e.to_string().contains("unknown scenario key `strategy`"),
+            "{e}"
+        );
+        assert!(e.to_string().contains("strategies"), "lists known keys: {e}");
+    }
+
+    #[test]
+    fn unknown_strategy_and_axis_are_clear_errors() {
+        let e = ScenarioSpec::from_str("strategies = [\"erra\"]\n").unwrap_err();
+        assert!(e.to_string().contains("unknown strategy `erra`"), "{e}");
+        let e = ScenarioSpec::from_str("[sweep]\nnetwork.num_userz = [1]\n").unwrap_err();
+        assert!(e.to_string().contains("network.num_userz"), "{e}");
+    }
+
+    #[test]
+    fn unknown_config_preset_is_a_clear_error() {
+        let e = ScenarioSpec::from_str("preset = \"gigantic\"\n").unwrap_err();
+        assert!(e.to_string().contains("unknown config preset"), "{e}");
+    }
+
+    #[test]
+    fn unknown_scenario_preset_is_a_clear_error() {
+        let e = ScenarioSpec::from_preset("nope").unwrap_err();
+        assert!(e.to_string().contains("unknown scenario preset `nope`"), "{e}");
+    }
+}

@@ -36,6 +36,10 @@ impl Completion {
 #[derive(Debug)]
 struct Ev {
     t: f64,
+    /// Monotone insertion number: ties in `t` resolve FIFO, so the event
+    /// order (and everything downstream of it) is independent of the
+    /// heap's internal layout.
+    seq: u64,
     kind: EvKind,
 }
 
@@ -49,7 +53,7 @@ enum EvKind {
 
 impl PartialEq for Ev {
     fn eq(&self, other: &Self) -> bool {
-        self.t == other.t
+        self.t == other.t && self.seq == other.seq
     }
 }
 impl Eq for Ev {}
@@ -60,8 +64,35 @@ impl PartialOrd for Ev {
 }
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap on time
-        other.t.partial_cmp(&self.t).unwrap_or(Ordering::Equal)
+        // min-heap on (time, insertion order)
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// BinaryHeap wrapper that stamps each pushed event with the next sequence
+/// number (the deterministic time tie-break).
+#[derive(Default)]
+struct EventQueue {
+    heap: BinaryHeap<Ev>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    fn push(&mut self, t: f64, kind: EvKind) {
+        self.heap.push(Ev {
+            t,
+            seq: self.next_seq,
+            kind,
+        });
+        self.next_seq += 1;
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        self.heap.pop()
     }
 }
 
@@ -83,7 +114,7 @@ pub fn run_episode(
     let mut pool = vec![cfg.compute.edge_pool_units; n_aps];
     let mut waiting: Vec<std::collections::VecDeque<usize>> =
         vec![Default::default(); n_aps];
-    let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+    let mut heap = EventQueue::default();
     let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
 
     // Pre-compute per-request phase durations.
@@ -123,10 +154,7 @@ pub fn run_episode(
     for (idx, rq) in trace.iter().enumerate() {
         let ph = &phases[idx];
         if ph.offloads {
-            heap.push(Ev {
-                t: rq.arrival_s + ph.pre_edge_s,
-                kind: EvKind::EdgeArrive { req: idx },
-            });
+            heap.push(rq.arrival_s + ph.pre_edge_s, EvKind::EdgeArrive { req: idx });
         } else {
             completions.push(Completion {
                 id: rq.id,
@@ -146,10 +174,7 @@ pub fn run_episode(
                 if pool[ph.ap] >= ph.r {
                     pool[ph.ap] -= ph.r;
                     edge_start[req] = ev.t;
-                    heap.push(Ev {
-                        t: ev.t + ph.edge_s,
-                        kind: EvKind::EdgeDone { req },
-                    });
+                    heap.push(ev.t + ph.edge_s, EvKind::EdgeDone { req });
                 } else {
                     waiting[ph.ap].push_back(req);
                     edge_start[req] = ev.t; // provisional: records arrival at queue
@@ -175,14 +200,8 @@ pub fn run_episode(
                     if pool[ph.ap] >= np.r {
                         waiting[ph.ap].pop_front();
                         pool[ph.ap] -= np.r;
-                        let wait_started = edge_start[next];
                         edge_start[next] = ev.t;
-                        // queue time = now − when it reached the queue
-                        let _ = wait_started;
-                        heap.push(Ev {
-                            t: ev.t + np.edge_s,
-                            kind: EvKind::EdgeDone { req: next },
-                        });
+                        heap.push(ev.t + np.edge_s, EvKind::EdgeDone { req: next });
                     } else {
                         break;
                     }
@@ -293,6 +312,39 @@ mod tests {
         assert_eq!(done.len(), tr.len());
         for c in &done {
             assert_eq!(c.queue_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn simultaneous_arrivals_are_fifo_and_deterministic() {
+        // Every request of one user arrives at t=0 with identical phase
+        // durations: the event heap sees all-tied timestamps. The sequence
+        // tie-break must serve them in insertion (id) order, identically
+        // on every run.
+        let (mut cfg, net, model) = setup();
+        cfg.compute.edge_pool_units = cfg.compute.r_max; // one request at a time
+        let ds = Neurosurgeon.decide(&cfg, &net, &model);
+        let (up, down) = rates_of(&cfg, &net, &model, &ds);
+        let user = (0..net.num_users())
+            .find(|&u| ds[u].offloads(&model))
+            .expect("an offloader");
+        let tr: Vec<crate::trace::Request> = (0..6)
+            .map(|i| crate::trace::Request {
+                id: i,
+                user,
+                arrival_s: 0.0,
+            })
+            .collect();
+        let a = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
+        let b = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
+        assert_eq!(a.len(), tr.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.finish_s, y.finish_s, "non-deterministic tie-break");
+        }
+        // FIFO under ties: earlier-submitted requests never finish later.
+        for w in a.windows(2) {
+            assert!(w[0].finish_s <= w[1].finish_s + 1e-12);
         }
     }
 

@@ -1,0 +1,76 @@
+//! Strategy registry: ERA and all six paper baselines behind one
+//! name-based lookup, so every entry point (CLI, scenario engine, figure
+//! harness, examples) resolves strategies the same way instead of
+//! hand-rolling `Vec<Box<dyn Strategy>>` lists.
+
+use crate::baselines::{DeviceOnly, Dina, DnnSurgeon, EdgeOnly, Iao, Neurosurgeon, Strategy};
+use crate::coordinator::EraStrategy;
+
+/// Canonical strategy names, in the paper's figure order (ERA first,
+/// Device-Only last). `era-cold` is the cold-start GD ablation and is not
+/// part of the figure set.
+pub const NAMES: &[&str] = &[
+    "era",
+    "edge-only",
+    "neurosurgeon",
+    "dnn-surgeon",
+    "iao",
+    "dina",
+    "device-only",
+];
+
+/// Look up a strategy by name (kebab/snake case and common aliases).
+pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
+    match name.to_ascii_lowercase().replace('_', "-").as_str() {
+        "era" => Some(Box::new(EraStrategy::default())),
+        "era-cold" | "cold-gd" => Some(Box::new(EraStrategy {
+            warm_start: false,
+            ..EraStrategy::default()
+        })),
+        "device-only" | "device" => Some(Box::new(DeviceOnly)),
+        "edge-only" | "edge" => Some(Box::new(EdgeOnly)),
+        "neurosurgeon" => Some(Box::new(Neurosurgeon)),
+        "dnn-surgeon" => Some(Box::new(DnnSurgeon)),
+        "iao" => Some(Box::new(Iao::default())),
+        "dina" => Some(Box::new(Dina)),
+        _ => None,
+    }
+}
+
+/// All seven paper strategies, in [`NAMES`] order.
+pub fn all() -> Vec<Box<dyn Strategy>> {
+    NAMES
+        .iter()
+        .map(|n| by_name(n).expect("registry self-consistent"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_resolve_and_match() {
+        for &n in NAMES {
+            let s = by_name(n).unwrap_or_else(|| panic!("missing {n}"));
+            assert_eq!(s.name(), n, "registry key vs Strategy::name");
+        }
+        assert!(by_name("era-cold").is_some());
+        assert!(by_name("ERA").is_some(), "case-insensitive");
+        assert!(by_name("dnn_surgeon").is_some(), "snake-case alias");
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_covers_paper_figures() {
+        let names: Vec<&str> = all().iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), 7);
+        assert_eq!(names[0], "era");
+        assert!(names.contains(&"device-only"));
+    }
+
+    #[test]
+    fn era_cold_reports_cold_name() {
+        assert_eq!(by_name("era-cold").unwrap().name(), "era-cold");
+    }
+}

@@ -127,7 +127,7 @@ fn serving_loop_consistent_with_static_eval() {
     let model = zoo::nin();
     let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
     let o = evaluate(&cfg, &net, &model, &ds, ChannelModel::Noma);
-    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
+    let (up, down) = era::metrics::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
     let trace = era::trace::fixed_count_trace(&cfg, 1, 5);
     let rep = era::coordinator::server::serve(
         &cfg, &net, &model, &ds, &up, &down, &trace, 2, None, None,
@@ -151,7 +151,7 @@ fn episode_simulator_conserves_requests_and_orders_time() {
     let net = Network::generate(&cfg, 44);
     let model = zoo::yolov2();
     let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
-    let (up, down) = era::figures::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
+    let (up, down) = era::metrics::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
     let trace = era::trace::poisson_trace(&cfg, 55);
     let done = era::sim::run_episode(&cfg, &net, &model, &ds, &up, &down, &trace);
     assert_eq!(done.len(), trace.len());

@@ -1,0 +1,145 @@
+//! Integration tests over the scenario layer: spec loading (TOML
+//! round-trip, error quality), engine execution, and the determinism
+//! contract — identical RunRecord rows for every engine thread count.
+
+use era::config::presets;
+use era::scenario::{expand, to_csv, Engine, ScenarioSpec};
+
+fn grid_spec() -> ScenarioSpec {
+    // ≥ 2 strategies × ≥ 2 sweep values × ≥ 2 seeds — the acceptance shape.
+    let mut base = presets::smoke();
+    base.network.num_users = 16;
+    base.optimizer.max_iters = 30;
+    ScenarioSpec::new("grid", base)
+        .with_strategies(&["era", "neurosurgeon"])
+        .with_axis_usize("network.num_users", &[12, 16])
+        .with_replicates(2)
+}
+
+#[test]
+fn full_spec_toml_round_trip() {
+    let mut spec = grid_spec().with_axis_str("workload.model", &["nin", "yolov2"]);
+    spec.episode = true;
+    spec.trace_seed = Some(99);
+    spec.seed_axis = Some("network.num_users".into());
+    spec.plan_threads = 3;
+    // axes must be in alphabetical key order for text round-trips
+    // ("network.num_users" < "workload.model" — already true here)
+    let text = spec.to_toml();
+    let reparsed = ScenarioSpec::from_str(&text)
+        .unwrap_or_else(|e| panic!("round-trip parse failed: {e:#}\n---\n{text}"));
+    assert_eq!(reparsed, spec);
+    // and a second round is a fixed point
+    assert_eq!(reparsed.to_toml(), text);
+}
+
+#[test]
+fn spec_file_loading_and_errors() {
+    let dir = std::env::temp_dir().join("era-scenario-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let good = dir.join("good.toml");
+    std::fs::write(
+        &good,
+        r#"
+        name = "from-file"
+        preset = "smoke"
+        strategies = ["era", "device-only"]
+        seeds = 2
+        [sweep]
+        workload.model = ["nin", "yolov2"]
+        "#,
+    )
+    .unwrap();
+    let spec = ScenarioSpec::from_path(&good).unwrap();
+    assert_eq!(spec.name, "from-file");
+    assert_eq!(spec.num_cells(), 2 * 2 * 2);
+    // resolve() prefers the file when it exists, else presets
+    assert_eq!(
+        ScenarioSpec::resolve(good.to_str().unwrap()).unwrap().name,
+        "from-file"
+    );
+    assert_eq!(ScenarioSpec::resolve("smoke-grid").unwrap().name, "smoke-grid");
+
+    // error quality: unknown key, unknown preset, unknown strategy
+    let e = ScenarioSpec::from_str("sweeps = 3\n").unwrap_err().to_string();
+    assert!(e.contains("unknown scenario key `sweeps`"), "{e}");
+    let e = ScenarioSpec::resolve("no-such-preset").unwrap_err().to_string();
+    assert!(e.contains("unknown scenario preset `no-such-preset`"), "{e}");
+    assert!(e.contains("smoke-grid"), "suggests known presets: {e}");
+    let e = ScenarioSpec::from_str("strategies = [\"neurosurgeon2\"]\n")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("unknown strategy"), "{e}");
+    let e = ScenarioSpec::from_str("[sweep]\nqoe.nope = [1]\n")
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("qoe.nope"), "{e}");
+}
+
+#[test]
+fn engine_rows_identical_at_1_and_n_threads() {
+    // The determinism contract behind `era run`: every cell derives its
+    // randomness from the spec, so the emitted rows are byte-identical
+    // regardless of engine parallelism.
+    let spec = grid_spec();
+    let r1 = Engine::new(1).run(&spec).unwrap();
+    let r4 = Engine::new(4).run(&spec).unwrap();
+    let r7 = Engine::new(7).run(&spec).unwrap();
+    assert_eq!(r1.len(), spec.num_cells());
+    let csv1 = to_csv(&r1);
+    assert_eq!(csv1, to_csv(&r4), "1 vs 4 threads");
+    assert_eq!(csv1, to_csv(&r7), "1 vs 7 threads");
+    // sanity: the grid actually exercised both strategies and both seeds
+    assert!(r1.iter().any(|r| r.strategy == "era"));
+    assert!(r1.iter().any(|r| r.strategy == "neurosurgeon"));
+    let seeds: std::collections::HashSet<u64> = r1.iter().map(|r| r.seed).collect();
+    assert_eq!(seeds.len(), 2);
+}
+
+#[test]
+fn grid_covers_every_cell_with_real_results() {
+    let spec = grid_spec();
+    let cells = expand(&spec).unwrap();
+    let records = Engine::new(4).run(&spec).unwrap();
+    assert_eq!(records.len(), cells.len());
+    for (c, r) in cells.iter().zip(records.iter()) {
+        assert_eq!(c.index, r.cell);
+        assert_eq!(c.strategy, r.strategy);
+        assert_eq!(c.seed, r.seed);
+        assert!(r.sum_delay_s > 0.0);
+        assert!(r.sum_energy_j > 0.0);
+        assert!(r.qoe_users > 0);
+        if r.strategy == "era" {
+            assert!(r.gd_iters > 0, "ERA cells carry Li-GD stats");
+            assert!(r.cohorts > 0);
+        }
+    }
+}
+
+#[test]
+fn in_cell_parallel_planning_matches_across_plan_threads() {
+    // plan_threads engages wave-parallel Li-GD inside each ERA cell;
+    // results must be identical for any plan_threads ≥ 2.
+    let mut base = presets::smoke();
+    base.network.num_users = 20;
+    base.optimizer.max_iters = 30;
+    let mk = |t: usize| {
+        let mut s = ScenarioSpec::new("p", base.clone()).with_strategies(&["era"]);
+        s.plan_threads = t;
+        s
+    };
+    let r2 = Engine::new(1).run_one(&mk(2)).unwrap();
+    let r4 = Engine::new(1).run_one(&mk(4)).unwrap();
+    assert_eq!(r2.to_csv_row(), r4.to_csv_row());
+}
+
+#[test]
+fn scenario_presets_smoke_run() {
+    // The CI-sized preset end-to-end: the exact path behind
+    // `era run --scenario smoke-grid`.
+    let spec = ScenarioSpec::from_preset("smoke-grid").unwrap();
+    let records = Engine::default().run(&spec).unwrap();
+    assert_eq!(records.len(), 8);
+    let csv = to_csv(&records);
+    assert_eq!(csv.lines().count(), 9);
+}
