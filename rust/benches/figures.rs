@@ -1,7 +1,8 @@
 //! `cargo bench --bench figures` — regenerates every figure of the paper's
 //! evaluation (Fig.5–Fig.19) at bench scale, timing each harness and
 //! printing the data series as markdown. Pass `--scale S` (default 0.4),
-//! `--threads N` (scenario-engine workers), and/or a figure id filter
+//! `--threads N` (scenario-engine workers), `--json <path>` (trajectory
+//! record, see benchkit), and/or a figure id filter
 //! (`cargo bench --bench figures -- 6`).
 //!
 //! One bench entry per paper figure-pair; every figure is a scenario spec
@@ -17,6 +18,7 @@ fn main() {
     let mut scale = 0.4f64;
     let mut threads: Option<usize> = None;
     let mut only: Option<u32> = None;
+    let mut json_path: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -26,6 +28,14 @@ fn main() {
             }
             "--threads" => {
                 threads = Some(args[i + 1].parse().expect("threads"));
+                i += 2;
+            }
+            "--json" => {
+                json_path = Some(
+                    args.get(i + 1)
+                        .expect("--json needs a path argument")
+                        .clone(),
+                );
                 i += 2;
             }
             a => {
@@ -58,6 +68,7 @@ fn main() {
         (16, &[16, 19], "fig16/19 workload sweep (DES)"),
     ];
     let mut all_md = String::new();
+    let mut results = Vec::new();
     for &(id, members, label) in groups {
         if let Some(o) = only {
             if !members.contains(&o) {
@@ -69,9 +80,14 @@ fn main() {
             figs = h.generate(id);
         });
         println!("{}", r.report());
+        results.push(r);
         for f in &figs {
             all_md.push_str(&f.to_markdown());
         }
     }
     println!("\n{all_md}");
+    if let Some(path) = json_path {
+        era::benchkit::write_json(&path, "figures", &results).expect("write bench json");
+        println!("wrote trajectory record to {path}");
+    }
 }

@@ -1,5 +1,8 @@
 //! `cargo bench --bench hotpath` — micro/meso benchmarks of the serving
-//! hot path, used by the §Perf optimization loop (EXPERIMENTS.md):
+//! hot path, used by the §Perf optimization loop (EXPERIMENTS.md). Pass
+//! `--json <path>` to emit an `era-bench-v1` trajectory record (name,
+//! ns/iter, iters, git rev) — the checked-in `BENCH_hotpath.json` baseline
+//! is regenerated this way. Benches:
 //!
 //!   utility_eval        one forward Γ evaluation (cohort 8×8)
 //!   utility_grad        one fused forward+reverse evaluation
@@ -17,10 +20,33 @@ use era::benchkit::bench;
 use era::config::presets;
 use era::models::zoo;
 use era::net::Network;
-use era::optimizer::{eval, solve_gd, solve_ligd, CohortVars, GdOptions};
+use era::optimizer::{solve_gd, solve_ligd, CohortVars, GdOptions};
 
 fn main() {
-    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with("--"));
+    // `cargo bench --bench hotpath -- [filter] [--json <path>]`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut filter: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => {
+                json_path = Some(
+                    args.get(i + 1)
+                        .expect("--json needs a path argument")
+                        .clone(),
+                );
+                i += 2;
+            }
+            a if a.starts_with("--") => i += 1, // tolerate cargo's own flags
+            a => {
+                if filter.is_none() {
+                    filter = Some(a.to_string());
+                }
+                i += 1;
+            }
+        }
+    }
     let want = |name: &str| filter.as_deref().map_or(true, |f| name.contains(f));
     let mut results = Vec::new();
 
@@ -169,5 +195,9 @@ fn main() {
     println!("\n# hotpath bench summary");
     for r in &results {
         println!("{}", r.report());
+    }
+    if let Some(path) = json_path {
+        era::benchkit::write_json(&path, "hotpath", &results).expect("write bench json");
+        println!("wrote trajectory record to {path}");
     }
 }

@@ -1,7 +1,9 @@
 //! Minimal benchmarking harness (the offline registry has no `criterion`).
 //!
-//! Provides warmup + timed iterations with mean / p50 / p99 reporting and a
-//! stable text output format consumed by EXPERIMENTS.md §Perf. `cargo bench`
+//! Provides warmup + timed iterations with mean / p50 / p99 reporting, a
+//! stable text output format consumed by EXPERIMENTS.md §Perf, and a JSON
+//! trajectory emitter (`--json <path>` on the bench runners) that writes
+//! the `era-bench-v1` records checked in as `BENCH_*.json`. `cargo bench`
 //! runs the `[[bench]] harness = false` binaries which use this module.
 
 use std::time::Instant;
@@ -33,6 +35,89 @@ impl BenchResult {
             self.per_sec()
         )
     }
+}
+
+/// Best-effort git revision for trajectory records: `ERA_GIT_REV` env
+/// override first (CI), then `git rev-parse` (with a `-dirty` suffix when
+/// the working tree has uncommitted changes, so a record can never claim
+/// to measure a commit it does not), else `"unknown"`.
+pub fn git_rev() -> String {
+    if let Ok(rev) = std::env::var("ERA_GIT_REV") {
+        if !rev.is_empty() {
+            return rev;
+        }
+    }
+    let git = |args: &[&str]| {
+        std::process::Command::new("git")
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+    };
+    match git(&["rev-parse", "--short", "HEAD"])
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+    {
+        Some(rev) => {
+            let dirty = git(&["status", "--porcelain"])
+                .map(|s| !s.trim().is_empty())
+                .unwrap_or(false);
+            if dirty {
+                format!("{rev}-dirty")
+            } else {
+                rev
+            }
+        }
+        None => "unknown".to_string(),
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One trajectory record: suite name + per-bench (name, ns/iter, iters)
+/// stamped with the git revision. Schema `era-bench-v1`, consumed by
+/// EXPERIMENTS.md §Perf and the CI smoke-bench job.
+pub fn to_json(suite: &str, results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"era-bench-v1\",\n");
+    out.push_str(&format!("  \"suite\": \"{}\",\n", json_escape(suite)));
+    out.push_str(&format!("  \"git_rev\": \"{}\",\n", json_escape(&git_rev())));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ns_per_iter\": {:.1}, \"iters\": {}, \
+             \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"min_ns\": {:.1}}}{sep}\n",
+            json_escape(&r.name),
+            r.mean_s * 1e9,
+            r.iters,
+            r.p50_s * 1e9,
+            r.p99_s * 1e9,
+            r.min_s * 1e9,
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the trajectory record to `path` (see [`to_json`]).
+pub fn write_json(path: &str, suite: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(suite, results))
 }
 
 fn fmt_dur(s: f64) -> String {
@@ -89,6 +174,34 @@ mod tests {
         assert_eq!(n, r.iters + 2);
         assert!(r.mean_s >= 0.0);
         assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn json_trajectory_shape() {
+        let r = BenchResult {
+            name: "utility_eval (8u×8ch)".into(),
+            iters: 100,
+            mean_s: 1.5e-6,
+            p50_s: 1.4e-6,
+            p99_s: 2.0e-6,
+            min_s: 1.3e-6,
+        };
+        let js = to_json("hotpath", &[r]);
+        assert!(js.contains("\"schema\": \"era-bench-v1\""));
+        assert!(js.contains("\"suite\": \"hotpath\""));
+        assert!(js.contains("\"git_rev\": \""));
+        assert!(js.contains("\"name\": \"utility_eval (8u×8ch)\""));
+        assert!(js.contains("\"ns_per_iter\": 1500.0"));
+        assert!(js.contains("\"iters\": 100"));
+        // valid-ish JSON: balanced braces/brackets, no trailing comma
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert!(!js.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\ny");
     }
 
     #[test]

@@ -207,9 +207,11 @@ fn round_and_commit(
     }
 }
 
-/// Solve one wave of prepared cohort problems, optionally in parallel.
-/// Pure function of the problems — results are index-ordered and
-/// independent of scheduling, so any thread count yields identical output.
+/// Solve one wave of prepared cohort problems, optionally in parallel on
+/// the persistent worker pool (`util::pool`) — no per-wave thread spawns,
+/// and each pool worker keeps its `LigdWorkspace` warm across waves and
+/// plans. Pure function of the problems with index-ordered reassembly, so
+/// every thread count yields identical output.
 fn solve_wave(
     problems: Vec<CohortProblem>,
     model: &ModelProfile,
@@ -217,40 +219,16 @@ fn solve_wave(
     warm_start: bool,
     threads: usize,
 ) -> Vec<CohortSolution> {
-    if threads <= 1 || problems.len() <= 1 {
-        return problems
-            .into_iter()
-            .map(|mut p| solve_ligd(&mut p, model, opts, warm_start))
-            .collect();
-    }
     let n = problems.len();
-    let groups = threads.min(n);
-    // Round-robin the problems over `groups` worker threads; reassemble by
-    // original index so the output order never depends on scheduling.
-    let mut buckets: Vec<Vec<(usize, CohortProblem)>> = (0..groups).map(|_| Vec::new()).collect();
-    for (i, p) in problems.into_iter().enumerate() {
-        buckets[i % groups].push((i, p));
-    }
-    let mut out: Vec<Option<CohortSolution>> = (0..n).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = buckets
-            .into_iter()
-            .map(|bucket| {
-                scope.spawn(move || {
-                    bucket
-                        .into_iter()
-                        .map(|(i, mut p)| (i, solve_ligd(&mut p, model, opts, warm_start)))
-                        .collect::<Vec<_>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, sol) in h.join().expect("solver thread panicked") {
-                out[i] = Some(sol);
-            }
-        }
-    });
-    out.into_iter().map(|s| s.expect("all solved")).collect()
+    let parallelism = if n <= 1 { 1 } else { threads };
+    // Each problem is solved exactly once; the Mutex hands out the `&mut`
+    // the solver needs without cloning the problem.
+    let slots: Vec<std::sync::Mutex<CohortProblem>> =
+        problems.into_iter().map(std::sync::Mutex::new).collect();
+    crate::util::pool::map_indexed(n, parallelism, |i| {
+        let mut p = slots[i].lock().unwrap();
+        solve_ligd(&mut p, model, opts, warm_start)
+    })
 }
 
 /// Plan ERA decisions with explicit [`PlanOptions`].
@@ -366,8 +344,10 @@ pub fn plan_era_with(
 pub struct EraStrategy {
     pub warm_start: bool,
     /// Solver threads per planning pass (see [`PlanOptions::threads`]).
-    /// Keep at 1 inside the scenario engine — cells already run in
-    /// parallel; raise it for single-plan latency (`era plan --threads N`).
+    /// Safe at any value inside the scenario engine — cohort solves and
+    /// engine cells share one persistent worker pool (`util::pool`), so
+    /// nested parallelism degrades gracefully instead of oversubscribing;
+    /// raise it for single-plan latency (`era plan --threads N`).
     pub threads: usize,
 }
 

@@ -44,9 +44,10 @@
 //! println!("{}", era::scenario::to_csv(&records));
 //! ```
 //!
-//! Cells execute on a thread pool; each cell derives all randomness from
-//! the spec seeds, so the rows are byte-identical for any thread count.
-//! From the CLI: `era run --scenario <file|preset> [--threads N]`.
+//! Cells execute on the persistent worker pool ([`util::pool`], shared
+//! with the wave-parallel Li-GD solver); each cell derives all randomness
+//! from the spec seeds, so the rows are byte-identical for any thread
+//! count. From the CLI: `era run --scenario <file|preset> [--threads N]`.
 
 pub mod baselines;
 pub mod benchkit;

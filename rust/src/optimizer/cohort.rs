@@ -151,27 +151,38 @@ impl CohortProblem {
     /// SIC decode orders per channel: uplink descending gain, downlink
     /// ascending gain (paper §II.B).
     pub fn sic_orders(&self) -> SicOrders {
+        let mut so = SicOrders::default();
+        self.sic_orders_into(&mut so);
+        so
+    }
+
+    /// Recompute the SIC decode orders into an existing buffer (the
+    /// `LigdWorkspace` hot path — no allocation once capacity exists).
+    pub fn sic_orders_into(&self, so: &mut SicOrders) {
         let nc = self.n_channels;
         let nu = self.n_users;
-        let mut up = vec![0usize; nc * nu];
-        let mut down = vec![0usize; nc * nu];
-        let mut idx: Vec<usize> = (0..nu).collect();
+        so.n_users = nu;
+        so.up.resize(nc * nu, 0);
+        so.down.resize(nc * nu, 0);
         for m in 0..nc {
-            idx.sort_by(|&a, &b| self.gu(b, m).partial_cmp(&self.gu(a, m)).unwrap());
-            up[m * nu..(m + 1) * nu].copy_from_slice(&idx);
-            idx.sort_by(|&a, &b| self.gd(a, m).partial_cmp(&self.gd(b, m)).unwrap());
-            down[m * nu..(m + 1) * nu].copy_from_slice(&idx);
-        }
-        SicOrders {
-            n_users: nu,
-            up,
-            down,
+            let row = &mut so.up[m * nu..(m + 1) * nu];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = j;
+            }
+            // unstable sort: no scratch allocation, and identical to the
+            // stable order because fading gains are distinct almost surely
+            row.sort_unstable_by(|&a, &b| self.gu(b, m).partial_cmp(&self.gu(a, m)).unwrap());
+            let row = &mut so.down[m * nu..(m + 1) * nu];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = j;
+            }
+            row.sort_unstable_by(|&a, &b| self.gd(a, m).partial_cmp(&self.gd(b, m)).unwrap());
         }
     }
 }
 
 /// Precomputed SIC decode orders, per channel.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SicOrders {
     n_users: usize,
     /// `up[m*U..(m+1)*U]` = users in uplink decode order (strongest first).
@@ -208,23 +219,38 @@ impl CohortVars {
     /// Feasible center-point initialization (uniform β, mid power/resource).
     pub fn init_center(p: &CohortProblem) -> Self {
         let (u, m) = (p.n_users, p.n_channels);
-        let mut x = vec![0.0; Self::dim(u, m)];
-        for i in 0..u {
-            for c in 0..m {
-                x[i * m + c] = 1.0 / m as f64;
-                x[u * m + i * m + c] = 1.0 / m as f64;
-            }
-            x[2 * u * m + i] = 0.5 * (p.p_min + p.p_max);
-            x[2 * u * m + u + i] = 0.5 * (p.p_min + p.p_max) * 10.0; // AP power scale
-            x[2 * u * m + 2 * u + i] = 0.5 * (p.r_min + p.r_max);
-        }
         let mut v = Self {
             n_users: u,
             n_channels: m,
-            x,
+            x: vec![0.0; Self::dim(u, m)],
         };
-        crate::optimizer::projection::project(&mut v, p);
+        v.set_center(p);
         v
+    }
+
+    /// Resize for `p`'s cohort shape (keeps capacity — the workspace reuse
+    /// contract: no allocation once the largest shape has been seen).
+    pub fn resize_for(&mut self, p: &CohortProblem) {
+        self.n_users = p.n_users;
+        self.n_channels = p.n_channels;
+        self.x.resize(Self::dim(p.n_users, p.n_channels), 0.0);
+    }
+
+    /// Overwrite with the feasible center point in place (every slot is
+    /// written, so stale contents never leak through).
+    pub fn set_center(&mut self, p: &CohortProblem) {
+        let (u, m) = (self.n_users, self.n_channels);
+        debug_assert_eq!(self.x.len(), Self::dim(u, m));
+        for i in 0..u {
+            for c in 0..m {
+                self.x[i * m + c] = 1.0 / m as f64;
+                self.x[u * m + i * m + c] = 1.0 / m as f64;
+            }
+            self.x[2 * u * m + i] = 0.5 * (p.p_min + p.p_max);
+            self.x[2 * u * m + u + i] = 0.5 * (p.p_min + p.p_max) * 10.0; // AP power scale
+            self.x[2 * u * m + 2 * u + i] = 0.5 * (p.r_min + p.r_max);
+        }
+        crate::optimizer::projection::project(self, p);
     }
 
     #[inline]

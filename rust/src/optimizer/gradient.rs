@@ -36,8 +36,15 @@ pub fn grad_from_eval(
     ev: &Evald,
     grad: &mut Vec<f64>,
 ) {
-    grad.clear();
-    grad.resize(v.x.len(), 0.0);
+    // Zero in place; resizing only moves the length within existing
+    // capacity once the workspace has seen this cohort shape (§Perf: the
+    // backward pass runs once per accepted GD step — no allocation).
+    if grad.len() == v.x.len() {
+        grad.fill(0.0);
+    } else {
+        grad.clear();
+        grad.resize(v.x.len(), 0.0);
+    }
     backward(p, v, orders, ev, grad);
 }
 

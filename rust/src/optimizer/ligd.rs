@@ -12,11 +12,11 @@
 
 use super::cohort::{CohortProblem, CohortVars};
 use super::projection::project;
-use super::utility::eval;
+use super::workspace::{with_thread_workspace, LigdWorkspace};
 use crate::models::ModelProfile;
 
 /// Outcome of one projected-GD solve.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct GdReport {
     pub iters: usize,
     pub initial_gamma: f64,
@@ -44,97 +44,105 @@ impl GdOptions {
 
 /// Per-variable step scaling (β, p_up, p_down, r live on very different
 /// scales; descending in the range-normalized coordinates is GD with a
-/// diagonal preconditioner).
-fn scales(p: &CohortProblem, v: &CohortVars) -> Vec<f64> {
-    let mut s = vec![1.0; v.x.len()];
+/// diagonal preconditioner). Written in place — values depend only on the
+/// problem bounds, not the iterate.
+fn scales_into(p: &CohortProblem, v: &CohortVars, s: &mut Vec<f64>) {
+    s.resize(v.x.len(), 0.0);
+    s.fill(1.0);
     for u in 0..p.n_users {
         let pr = (p.p_max - p.p_min).powi(2);
         s[v.idx_p_up(u)] = pr;
         s[v.idx_p_down(u)] = (20.0 * p.p_max - p.p_min).powi(2);
         s[v.idx_r(u)] = (p.r_max - p.r_min).powi(2);
     }
-    s
 }
 
-/// Projected gradient descent with Armijo backtracking from `init`.
-///
-/// §Perf notes: one `Evald` workspace is reused across every forward pass
-/// (no per-call allocation), and the forward evaluation of an *accepted*
-/// trial point doubles as the intermediates for the next backward pass —
-/// one forward per backtrack probe, zero redundant forwards per accept.
+/// Projected gradient descent with Armijo backtracking (allocating
+/// convenience wrapper over [`solve_gd_ws`], using this thread's persistent
+/// workspace).
 pub fn solve_gd(
     p: &CohortProblem,
     init: CohortVars,
     opt: &GdOptions,
 ) -> (CohortVars, GdReport) {
-    use crate::optimizer::gradient::grad_from_eval;
-    use crate::optimizer::utility::{eval_into, Evald};
+    with_thread_workspace(|ws| {
+        ws.prepare(p);
+        ws.vars.x.copy_from_slice(&init.x);
+        let report = solve_gd_ws(p, ws, opt);
+        (ws.vars.clone(), report)
+    })
+}
 
-    let orders = p.sic_orders();
-    let mut v = init;
-    project(&mut v, p);
-    let mut grad = Vec::new();
-    let mut ev = Evald::new(p.n_users, p.n_channels);
-    let mut ev_trial = Evald::new(p.n_users, p.n_channels);
-    eval_into(p, &v, &orders, &mut ev);
-    grad_from_eval(p, &v, &orders, &ev, &mut grad);
-    let scal = scales(p, &v);
+/// Projected gradient descent with Armijo backtracking, entirely inside a
+/// caller-owned [`LigdWorkspace`].
+///
+/// Contract: `ws.prepare(p)` has been called for this cohort and `ws.vars`
+/// holds the initial point. On return `ws.vars` is the solution and `ws.ev`
+/// holds the forward intermediates *at that solution* — callers consume it
+/// directly instead of re-running `eval` (the old per-layer redundant
+/// forward).
+///
+/// §Perf notes: the `Evald` pair, gradient, scales, and trial point all
+/// live in the workspace, so the iteration loop performs zero heap
+/// allocations (`tests/alloc_count.rs`); the forward evaluation of an
+/// *accepted* trial point doubles as the intermediates for the next
+/// backward pass — one forward per backtrack probe, zero redundant
+/// forwards per accept.
+pub fn solve_gd_ws(p: &CohortProblem, ws: &mut LigdWorkspace, opt: &GdOptions) -> GdReport {
+    use crate::optimizer::gradient::grad_from_eval;
+    use crate::optimizer::utility::eval_into;
+
+    project(&mut ws.vars, p);
+    eval_into(p, &ws.vars, &ws.orders, &mut ws.ev);
+    grad_from_eval(p, &ws.vars, &ws.orders, &ws.ev, &mut ws.grad);
+    scales_into(p, &ws.vars, &mut ws.scal);
     let mut step = opt.step_size;
     let mut report = GdReport {
         iters: 0,
-        initial_gamma: ev.total,
-        final_gamma: ev.total,
+        initial_gamma: ws.ev.total,
+        final_gamma: ws.ev.total,
         converged: false,
     };
 
-    let mut trial = v.clone();
     for _ in 0..opt.max_iters {
         report.iters += 1;
-        // Candidate step with backtracking.
+        // Candidate step with backtracking. The trial buffer is fully
+        // overwritten before every probe, so its previous contents (stale
+        // scratch from an earlier solve) never leak through.
         let mut accepted = false;
         for _bt in 0..12 {
-            for j in 0..v.x.len() {
-                trial.x[j] = v.x[j] - step * scal[j] * grad[j];
+            for j in 0..ws.vars.x.len() {
+                ws.trial.x[j] = ws.vars.x[j] - step * ws.scal[j] * ws.grad[j];
             }
-            project(&mut trial, p);
-            eval_into(p, &trial, &orders, &mut ev_trial);
-            if ev_trial.total < ev.total {
+            project(&mut ws.trial, p);
+            eval_into(p, &ws.trial, &ws.orders, &mut ws.ev_trial);
+            if ws.ev_trial.total < ws.ev.total {
                 // accept; the trial forward becomes the current state
-                std::mem::swap(&mut v, &mut trial);
-                std::mem::swap(&mut ev, &mut ev_trial);
-                grad_from_eval(p, &v, &orders, &ev, &mut grad);
+                std::mem::swap(&mut ws.vars, &mut ws.trial);
+                std::mem::swap(&mut ws.ev, &mut ws.ev_trial);
+                grad_from_eval(p, &ws.vars, &ws.orders, &ws.ev, &mut ws.grad);
                 step = (step * 1.25).min(opt.step_size * 64.0);
                 accepted = true;
                 break;
             }
             step *= 0.5;
         }
-        let improvement = report.final_gamma - ev.total;
-        report.final_gamma = ev.total;
+        let improvement = report.final_gamma - ws.ev.total;
+        report.final_gamma = ws.ev.total;
         if !accepted {
             report.converged = true; // no descent direction at this scale
             break;
         }
-        if improvement.abs() < opt.epsilon * (1.0 + ev.total.abs()) {
+        if improvement.abs() < opt.epsilon * (1.0 + ws.ev.total.abs()) {
             report.converged = true;
             break;
         }
     }
-    (v, report)
-}
-
-/// Per-layer solution record.
-#[derive(Clone, Debug)]
-pub struct LayerSolution {
-    pub split: usize,
-    pub vars: CohortVars,
-    pub gamma: f64,
-    pub per_user_utility: Vec<f64>,
-    pub report: GdReport,
+    report
 }
 
 /// Full Li-GD output for one cohort.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CohortSolution {
     /// Chosen split point per user.
     pub split: Vec<usize>,
@@ -165,94 +173,117 @@ pub fn solve_ligd(
     opt: &GdOptions,
     warm_start: bool,
 ) -> CohortSolution {
-    let splits: Vec<usize> = (0..=model.num_layers()).collect();
-    let mut layer_solutions: Vec<LayerSolution> = Vec::with_capacity(splits.len());
-    let orders = p.sic_orders();
+    with_thread_workspace(|ws| solve_ligd_ws(p, model, opt, warm_start, ws))
+}
 
-    for (li, &s) in splits.iter().enumerate() {
+/// [`solve_ligd`] inside a caller-owned [`LigdWorkspace`].
+///
+/// The only heap allocations are the vectors packaged into the returned
+/// [`CohortSolution`] — a constant count independent of layer count and GD
+/// iterations. Warm starts copy between pooled layer slots
+/// (`copy_from_slice`), and every per-layer forward that `solve_gd_ws`
+/// already evaluated is consumed from `ws.ev` instead of re-run.
+pub fn solve_ligd_ws(
+    p: &mut CohortProblem,
+    model: &ModelProfile,
+    opt: &GdOptions,
+    warm_start: bool,
+    ws: &mut LigdWorkspace,
+) -> CohortSolution {
+    ws.prepare(p);
+    let nu = p.n_users;
+    let nc = p.n_channels;
+    let n_layers = model.num_layers() + 1; // candidate splits 0..=L
+    ws.ensure_layers(n_layers, CohortVars::dim(nu, nc), nu);
+
+    for li in 0..n_layers {
+        let s = li;
         p.set_uniform_split(&model.split_constants(s));
-        let init = if li == 0 || !warm_start {
-            CohortVars::init_center(p)
+        if li == 0 || !warm_start {
+            ws.vars.set_center(p);
         } else {
-            // Warm start: previous layer with the closest intermediate size.
+            // Warm start: previous layer with the closest intermediate size
+            // (first minimum on ties, matching `Iterator::min_by`).
             let w = model.cut_bits(s);
-            let best = layer_solutions
-                .iter()
-                .min_by(|a, b| {
-                    let da = (model.cut_bits(a.split) - w).abs();
-                    let db = (model.cut_bits(b.split) - w).abs();
-                    da.partial_cmp(&db).unwrap()
-                })
-                .expect("non-empty");
-            best.vars.clone()
-        };
-        let (vars, report) = solve_gd(p, init, opt);
-        let ev = eval(p, &vars, &orders);
-        layer_solutions.push(LayerSolution {
-            split: s,
-            vars,
-            gamma: ev.total,
-            per_user_utility: ev.util.clone(),
-            report,
-        });
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for (j, slot) in ws.layers[..li].iter().enumerate() {
+                let d = (model.cut_bits(slot.split) - w).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            ws.vars.x.copy_from_slice(&ws.layers[best].x);
+        }
+        let report = solve_gd_ws(p, ws, opt);
+        // `ws.ev` is the forward at the accepted point — no redundant eval.
+        let slot = &mut ws.layers[li];
+        slot.split = s;
+        slot.gamma = ws.ev.total;
+        slot.iters = report.iters;
+        slot.x.copy_from_slice(&ws.vars.x);
+        slot.util.copy_from_slice(&ws.ev.util);
     }
 
     // Per-user best layer (Table I line 18, decoupled per user).
-    let nu = p.n_users;
     let mut split = vec![0usize; nu];
-    for i in 0..nu {
+    for (i, si) in split.iter_mut().enumerate() {
         let mut best = (0usize, f64::INFINITY);
-        for ls in &layer_solutions {
-            if ls.per_user_utility[i] < best.1 {
-                best = (ls.split, ls.per_user_utility[i]);
+        for slot in &ws.layers[..n_layers] {
+            if slot.util[i] < best.1 {
+                best = (slot.split, slot.util[i]);
             }
         }
-        split[i] = best.0;
+        *si = best.0;
     }
 
     // Mixed refinement: per-user split constants, warm start from the layer
     // solution with the lowest Γ.
-    let scs: Vec<_> = split.iter().map(|&s| model.split_constants(s)).collect();
-    p.set_splits(&scs);
-    let warm = layer_solutions
-        .iter()
-        .min_by(|a, b| a.gamma.partial_cmp(&b.gamma).unwrap())
-        .unwrap()
-        .vars
-        .clone();
-    let (vars, refine_report) = solve_gd(p, warm, opt);
-    let ev = eval(p, &vars, &orders);
+    ws.split_consts.clear();
+    ws.split_consts
+        .extend(split.iter().map(|&s| model.split_constants(s)));
+    p.set_splits(&ws.split_consts);
+    let mut warm = 0usize;
+    let mut warm_gamma = f64::INFINITY;
+    for (j, slot) in ws.layers[..n_layers].iter().enumerate() {
+        if slot.gamma < warm_gamma {
+            warm_gamma = slot.gamma;
+            warm = j;
+        }
+    }
+    ws.vars.x.copy_from_slice(&ws.layers[warm].x);
+    let refine_report = solve_gd_ws(p, ws, opt);
 
     // Rounding: arg-max over the simplex row (paper's B > 0.5 rule).
-    let nc = p.n_channels;
     let mut up_ch = vec![0usize; nu];
     let mut down_ch = vec![0usize; nu];
     for i in 0..nu {
         let (mut bu, mut bd) = ((0usize, -1.0), (0usize, -1.0));
         for m in 0..nc {
-            if vars.beta_up(i, m) > bu.1 {
-                bu = (m, vars.beta_up(i, m));
+            if ws.vars.beta_up(i, m) > bu.1 {
+                bu = (m, ws.vars.beta_up(i, m));
             }
-            if vars.beta_down(i, m) > bd.1 {
-                bd = (m, vars.beta_down(i, m));
+            if ws.vars.beta_down(i, m) > bd.1 {
+                bd = (m, ws.vars.beta_down(i, m));
             }
         }
         up_ch[i] = bu.0;
         down_ch[i] = bd.0;
     }
 
-    let layer_iters: Vec<usize> = layer_solutions.iter().map(|l| l.report.iters).collect();
+    let layer_iters: Vec<usize> = ws.layers[..n_layers].iter().map(|l| l.iters).collect();
     let total_iters = layer_iters.iter().sum::<usize>() + refine_report.iters;
     CohortSolution {
         split,
         up_ch,
         down_ch,
-        p_up: (0..nu).map(|i| vars.p_up(i)).collect(),
-        p_down: (0..nu).map(|i| vars.p_down(i)).collect(),
-        r: (0..nu).map(|i| vars.r(i)).collect(),
-        delay_s: ev.t.clone(),
-        energy_j: ev.e.clone(),
-        gamma: ev.total,
+        p_up: (0..nu).map(|i| ws.vars.p_up(i)).collect(),
+        p_down: (0..nu).map(|i| ws.vars.p_down(i)).collect(),
+        r: (0..nu).map(|i| ws.vars.r(i)).collect(),
+        delay_s: ws.ev.t.clone(),
+        energy_j: ws.ev.e.clone(),
+        gamma: ws.ev.total,
         layer_iters,
         refine_iters: refine_report.iters,
         total_iters,
@@ -263,7 +294,7 @@ pub fn solve_ligd(
 mod tests {
     use super::*;
     use crate::models::zoo;
-    use crate::optimizer::utility::tests::problem;
+    use crate::optimizer::utility::{eval, tests::problem};
 
     fn opts() -> GdOptions {
         GdOptions {

@@ -6,7 +6,11 @@ pub mod gradient;
 pub mod ligd;
 pub mod projection;
 pub mod utility;
+pub mod workspace;
 
 pub use cohort::{CohortProblem, CohortVars};
-pub use ligd::{solve_gd, solve_ligd, CohortSolution, GdOptions, GdReport};
+pub use ligd::{
+    solve_gd, solve_gd_ws, solve_ligd, solve_ligd_ws, CohortSolution, GdOptions, GdReport,
+};
 pub use utility::{eval, Evald};
+pub use workspace::{with_thread_workspace, LigdWorkspace};

@@ -52,6 +52,10 @@ pub fn project_simplex(row: &mut [f64]) {
 }
 
 /// Project all variables onto the feasible set in place.
+///
+/// Hot path: called twice per GD backtracking probe (on workspace-owned
+/// buffers — see `optimizer::workspace`); the simplex projection below is
+/// allocation-free for cohort-sized rows, so the whole projection is too.
 pub fn project(v: &mut CohortVars, p: &CohortProblem) {
     let (nu, nc) = (v.n_users, v.n_channels);
     for u in 0..nu {

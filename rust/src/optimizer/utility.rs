@@ -44,22 +44,37 @@ impl Evald {
     /// Pre-sized workspace (hot path re-uses one of these per solve —
     /// §Perf: the per-call `vec!` allocations were ~35% of eval time).
     pub fn new(nu: usize, nc: usize) -> Self {
-        Self {
-            s_up: vec![0.0; nu * nc],
-            d_up: vec![0.0; nu * nc],
-            log_up: vec![0.0; nu * nc],
-            s_down: vec![0.0; nu * nc],
-            d_down: vec![0.0; nu * nc],
-            log_down: vec![0.0; nu * nc],
-            rate_up: vec![0.0; nu],
-            rate_down: vec![0.0; nu],
-            lambda: vec![0.0; nu],
-            t: vec![0.0; nu],
-            e: vec![0.0; nu],
-            rsig: vec![0.0; nu],
-            util: vec![0.0; nu],
-            total: 0.0,
+        let mut ev = Self::default();
+        ev.resize(nu, nc);
+        ev
+    }
+
+    /// Resize for a `(nu, nc)` cohort shape in place. Capacity is kept, so
+    /// once a buffer has seen the largest cohort shape of a run this never
+    /// allocates again (the `LigdWorkspace` reuse contract).
+    pub fn resize(&mut self, nu: usize, nc: usize) {
+        for buf in [
+            &mut self.s_up,
+            &mut self.d_up,
+            &mut self.log_up,
+            &mut self.s_down,
+            &mut self.d_down,
+            &mut self.log_down,
+        ] {
+            buf.resize(nu * nc, 0.0);
         }
+        for buf in [
+            &mut self.rate_up,
+            &mut self.rate_down,
+            &mut self.lambda,
+            &mut self.t,
+            &mut self.e,
+            &mut self.rsig,
+            &mut self.util,
+        ] {
+            buf.resize(nu, 0.0);
+        }
+        self.total = 0.0;
     }
 }
 

@@ -1,0 +1,171 @@
+//! Reusable solver state for the Li-GD hot path (§Perf, EXPERIMENTS.md).
+//!
+//! Every per-layer GD solve used to allocate two [`Evald`] workspaces, a
+//! gradient buffer, a step-scale vector, a trial-point clone, and a fresh
+//! SIC-order table — (L+1)+1 times per cohort. A [`LigdWorkspace`] owns all
+//! of that state once; [`LigdWorkspace::prepare`] *resizes* it for each
+//! cohort (capacity is kept), so after the first cohort of the largest
+//! shape the entire GD iteration loop runs without touching the heap.
+//! `tests/alloc_count.rs` asserts the zero-allocation steady state.
+//!
+//! One workspace lives per solver thread (see [`with_thread_workspace`]):
+//! the persistent worker pool (`util::pool`) and the sequential planner both
+//! reuse the same thread-local instance across cohorts, waves, and plans.
+//! Reuse is observationally pure — every buffer is fully overwritten before
+//! it is read — so pooled and freshly-allocated solves produce bit-identical
+//! results (property-tested in `tests/props.rs`).
+
+use super::cohort::{CohortProblem, CohortVars, SicOrders};
+use super::utility::Evald;
+use crate::models::SplitConstants;
+use std::cell::RefCell;
+
+/// Per-layer result slot pooled inside the workspace (replaces the old
+/// per-layer `LayerSolution` heap allocations).
+#[derive(Clone, Debug, Default)]
+pub struct LayerSlot {
+    pub split: usize,
+    pub gamma: f64,
+    pub iters: usize,
+    /// Solution point (same layout as `CohortVars::x`).
+    pub x: Vec<f64>,
+    /// Per-user utility at the solution.
+    pub util: Vec<f64>,
+}
+
+/// All mutable state one Li-GD solver needs, owned once and resized per
+/// cohort. Fields are public within the crate's optimizer/coordinator
+/// layers; treat them as scratch — valid only between `prepare` and the
+/// end of the enclosing solve.
+#[derive(Clone, Debug)]
+pub struct LigdWorkspace {
+    /// Current iterate (doubles as the init input and solution output of
+    /// `solve_gd_ws`).
+    pub vars: CohortVars,
+    /// Backtracking trial point.
+    pub trial: CohortVars,
+    /// Forward intermediates at `vars`.
+    pub ev: Evald,
+    /// Forward intermediates at `trial`.
+    pub ev_trial: Evald,
+    /// ∇Γ at `vars`.
+    pub grad: Vec<f64>,
+    /// Diagonal step preconditioner.
+    pub scal: Vec<f64>,
+    /// SIC decode orders of the current cohort.
+    pub orders: SicOrders,
+    /// Per-layer solution pool for `solve_ligd_ws`. Only the slots resized
+    /// by the latest `ensure_layers` call are valid; `solve_ligd_ws` tracks
+    /// that count itself.
+    pub layers: Vec<LayerSlot>,
+    /// Scratch for the mixed-refinement per-user split constants.
+    pub split_consts: Vec<SplitConstants>,
+}
+
+impl Default for LigdWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LigdWorkspace {
+    /// Empty workspace; buffers grow on first `prepare`.
+    pub fn new() -> Self {
+        let empty = CohortVars {
+            n_users: 0,
+            n_channels: 0,
+            x: Vec::new(),
+        };
+        Self {
+            vars: empty.clone(),
+            trial: empty,
+            ev: Evald::default(),
+            ev_trial: Evald::default(),
+            grad: Vec::new(),
+            scal: Vec::new(),
+            orders: SicOrders::default(),
+            layers: Vec::new(),
+            split_consts: Vec::new(),
+        }
+    }
+
+    /// Resize every buffer for `p`'s cohort shape and recompute the SIC
+    /// orders. Never shrinks capacity; allocation-free once the largest
+    /// shape of the run has been seen.
+    pub fn prepare(&mut self, p: &CohortProblem) {
+        self.vars.resize_for(p);
+        self.trial.resize_for(p);
+        self.ev.resize(p.n_users, p.n_channels);
+        self.ev_trial.resize(p.n_users, p.n_channels);
+        let dim = self.vars.x.len();
+        self.grad.resize(dim, 0.0);
+        self.scal.resize(dim, 0.0);
+        p.sic_orders_into(&mut self.orders);
+    }
+
+    /// Make the first `n` layer slots valid for a `(dim, nu)` cohort.
+    pub fn ensure_layers(&mut self, n: usize, dim: usize, nu: usize) {
+        if self.layers.len() < n {
+            self.layers.resize_with(n, LayerSlot::default);
+        }
+        for slot in &mut self.layers[..n] {
+            slot.x.resize(dim, 0.0);
+            slot.util.resize(nu, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    /// One workspace per solver thread: pool workers, engine workers, and
+    /// the main thread each keep their own across cohorts/waves/plans.
+    static THREAD_WS: RefCell<LigdWorkspace> = RefCell::new(LigdWorkspace::new());
+}
+
+/// Run `f` with this thread's persistent [`LigdWorkspace`].
+///
+/// Not re-entrant (a nested call on the same thread panics on the
+/// `RefCell`); the solver entry points never nest.
+pub fn with_thread_workspace<R>(f: impl FnOnce(&mut LigdWorkspace) -> R) -> R {
+    THREAD_WS.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::utility::tests::problem;
+
+    #[test]
+    fn prepare_resizes_and_is_idempotent() {
+        let p1 = problem(51, 4, 3, 6);
+        let p2 = problem(52, 2, 2, 6);
+        let mut ws = LigdWorkspace::new();
+        ws.prepare(&p1);
+        assert_eq!(ws.vars.x.len(), CohortVars::dim(4, 3));
+        assert_eq!(ws.ev.s_up.len(), 12);
+        assert_eq!(ws.grad.len(), ws.vars.x.len());
+        // shrink to a smaller cohort, then grow back — shapes track `p`
+        ws.prepare(&p2);
+        assert_eq!(ws.vars.n_users, 2);
+        assert_eq!(ws.vars.x.len(), CohortVars::dim(2, 2));
+        ws.prepare(&p1);
+        assert_eq!(ws.vars.x.len(), CohortVars::dim(4, 3));
+        // orders match a fresh computation
+        let fresh = p1.sic_orders();
+        for m in 0..p1.n_channels {
+            assert_eq!(ws.orders.up_order(m), fresh.up_order(m));
+            assert_eq!(ws.orders.down_order(m), fresh.down_order(m));
+        }
+    }
+
+    #[test]
+    fn layer_slots_resize() {
+        let mut ws = LigdWorkspace::new();
+        ws.ensure_layers(5, 24, 4);
+        assert!(ws.layers.len() >= 5);
+        assert_eq!(ws.layers[4].x.len(), 24);
+        assert_eq!(ws.layers[4].util.len(), 4);
+        ws.ensure_layers(3, 10, 2);
+        assert_eq!(ws.layers[2].x.len(), 10);
+        assert_eq!(ws.layers[2].util.len(), 2);
+    }
+}

@@ -1,14 +1,17 @@
 //! Scenario execution engine.
 //!
 //! [`expand`] turns a [`ScenarioSpec`] into a flat cell grid
-//! (sweep-point × strategy × seed); [`Engine::run`] executes the cells on a
-//! `std::thread::scope` worker pool and returns one [`RunRecord`] per cell.
+//! (sweep-point × strategy × seed); [`Engine::run`] executes the cells on
+//! the persistent worker pool (`util::pool`) and returns one [`RunRecord`]
+//! per cell. Cells of one (sweep-point, net-seed) group share a single
+//! generated [`Network`] — the strategy axis reuses one network and its
+//! gain matrices instead of regenerating identical ones per strategy cell.
 //!
 //! Determinism: each cell's randomness derives entirely from the spec
-//! (config seed + optional seed-axis offset), cells never share mutable
-//! state, and records are written slot-indexed — so the produced rows are
-//! byte-identical for every engine thread count. `tests/scenario.rs`
-//! asserts this.
+//! (config seed + optional seed-axis offset), cells only share the
+//! immutable cached network, and records are written slot-indexed — so the
+//! produced rows are byte-identical for every engine thread count.
+//! `tests/scenario.rs` asserts this.
 
 use super::spec::{Axis, ScenarioSpec};
 use crate::baselines::{DeviceOnly, EdgeOnly, Strategy};
@@ -16,8 +19,8 @@ use crate::config::Config;
 use crate::metrics::{evaluate, rates_for};
 use crate::models::zoo;
 use crate::net::Network;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::sync::OnceLock;
 
 /// One executable grid cell.
 #[derive(Clone, Debug)]
@@ -233,9 +236,20 @@ pub fn expand(spec: &ScenarioSpec) -> anyhow::Result<Vec<Cell>> {
     Ok(cells)
 }
 
-/// Execute one cell: generate the network, plan, evaluate, score the
-/// Device-/Edge-Only references, and (optionally) run the DES episode.
+/// Execute one cell standalone: generate its network, then delegate to
+/// [`run_cell_net`]. The engine itself shares networks across cells — use
+/// this when running isolated cells.
 pub fn run_cell(spec: &ScenarioSpec, cell: &Cell) -> anyhow::Result<RunRecord> {
+    let net = Network::generate(&cell.cfg, cell.net_seed);
+    run_cell_net(spec, cell, &net)
+}
+
+/// Execute one cell against an already-generated network: plan, evaluate,
+/// score the Device-/Edge-Only references, and (optionally) run the DES
+/// episode. `net` must equal `Network::generate(&cell.cfg, cell.net_seed)`
+/// (network generation never reads `cfg.seed`, so cells of one sweep point
+/// × net-seed group can share it).
+pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::Result<RunRecord> {
     let cfg = &cell.cfg;
     let mut strat: Box<dyn Strategy> = crate::strategies::by_name(&cell.strategy)
         .ok_or_else(|| anyhow::anyhow!("unknown strategy `{}`", cell.strategy))?;
@@ -261,21 +275,21 @@ pub fn run_cell(spec: &ScenarioSpec, cell: &Cell) -> anyhow::Result<RunRecord> {
     }
     let model = zoo::by_name(&cfg.workload.model)
         .ok_or_else(|| anyhow::anyhow!("unknown model `{}`", cfg.workload.model))?;
-    let net = Network::generate(cfg, cell.net_seed);
 
     let t0 = std::time::Instant::now();
-    let (ds, info) = strat.decide_with_stats(cfg, &net, &model);
+    let (ds, info) = strat.decide_with_stats(cfg, net, &model);
     let plan_wall_s = t0.elapsed().as_secs_f64();
-    let o = evaluate(cfg, &net, &model, &ds, strat.channel_model());
+    let o = evaluate(cfg, net, &model, &ds, strat.channel_model());
 
     // Reference outcomes are recomputed per cell rather than shared across
     // the strategies of a sweep point: both baselines are closed-form and
-    // cheap next to an ERA plan, and keeping cells fully independent is
-    // what makes the engine's determinism argument trivial.
-    let dev = DeviceOnly.decide(cfg, &net, &model);
-    let od = evaluate(cfg, &net, &model, &dev, DeviceOnly.channel_model());
-    let edge = EdgeOnly.decide(cfg, &net, &model);
-    let oe = evaluate(cfg, &net, &model, &edge, EdgeOnly.channel_model());
+    // cheap next to an ERA plan, and keeping cell *results* fully
+    // independent is what makes the engine's determinism argument trivial
+    // (only the immutable network is shared — see Engine::run).
+    let dev = DeviceOnly.decide(cfg, net, &model);
+    let od = evaluate(cfg, net, &model, &dev, DeviceOnly.channel_model());
+    let edge = EdgeOnly.decide(cfg, net, &model);
+    let oe = evaluate(cfg, net, &model, &edge, EdgeOnly.channel_model());
 
     let offl: Vec<&crate::baselines::Decision> =
         ds.iter().filter(|d| d.offloads(&model)).collect();
@@ -286,11 +300,11 @@ pub fn run_cell(spec: &ScenarioSpec, cell: &Cell) -> anyhow::Result<RunRecord> {
     };
 
     let episode = if spec.episode {
-        let (up, down) = rates_for(cfg, &net, &ds, strat.channel_model());
+        let (up, down) = rates_for(cfg, net, &ds, strat.channel_model());
         let k = cfg.workload.tasks_per_user.round().max(0.0) as usize;
         let trace_seed = spec.trace_seed.unwrap_or(cfg.seed + 1);
         let trace = crate::trace::fixed_count_trace(cfg, k, trace_seed);
-        let done = crate::sim::run_episode(cfg, &net, &model, &ds, &up, &down, &trace);
+        let done = crate::sim::run_episode(cfg, net, &model, &ds, &up, &down, &trace);
         let st = crate::sim::stats(&done, cfg.workload.episode_s);
         let misses = done
             .iter()
@@ -363,31 +377,35 @@ impl Engine {
     }
 
     /// Run every cell of the spec; records are returned in cell order.
+    ///
+    /// Cells execute on the persistent worker pool (`util::pool`), and all
+    /// cells of one (sweep-point, net-seed) group lazily share a single
+    /// generated [`Network`]: the strategy axis — which would otherwise
+    /// regenerate an identical network and gain matrices per strategy cell
+    /// — reuses one. Sharing is read-only, so rows stay byte-identical to
+    /// standalone [`run_cell`] execution for every thread count
+    /// (`tests/scenario.rs` asserts both).
     pub fn run(&self, spec: &ScenarioSpec) -> anyhow::Result<Vec<RunRecord>> {
         let cells = expand(spec)?;
-        let threads = self.threads.min(cells.len()).max(1);
-        if threads == 1 {
-            return cells.iter().map(|c| run_cell(spec, c)).collect();
+        // Map each cell to its network-sharing group.
+        let mut group_ids: HashMap<(Vec<usize>, u64), usize> = HashMap::new();
+        let mut group_of = Vec::with_capacity(cells.len());
+        for c in &cells {
+            let next_id = group_ids.len();
+            let id = *group_ids
+                .entry((c.sweep_idx.clone(), c.net_seed))
+                .or_insert(next_id);
+            group_of.push(id);
         }
-        let slots: Vec<Mutex<Option<anyhow::Result<RunRecord>>>> =
-            cells.iter().map(|_| Mutex::new(None)).collect();
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= cells.len() {
-                        break;
-                    }
-                    let rec = run_cell(spec, &cells[i]);
-                    *slots[i].lock().unwrap() = Some(rec);
-                });
-            }
+        let nets: Vec<OnceLock<Network>> = (0..group_ids.len()).map(|_| OnceLock::new()).collect();
+        let threads = self.threads.min(cells.len()).max(1);
+        let records = crate::util::pool::map_indexed(cells.len(), threads, |i| {
+            let cell = &cells[i];
+            let group = group_of[i];
+            let net = nets[group].get_or_init(|| Network::generate(&cell.cfg, cell.net_seed));
+            run_cell_net(spec, cell, net)
         });
-        slots
-            .into_iter()
-            .map(|s| s.into_inner().unwrap().expect("cell executed"))
-            .collect()
+        records.into_iter().collect()
     }
 
     /// Run a single-cell spec and return its record.

@@ -1,5 +1,7 @@
-//! Shared utilities: deterministic RNG, property-testing kit, math helpers.
+//! Shared utilities: deterministic RNG, property-testing kit, math helpers,
+//! and the persistent worker pool.
 
+pub mod pool;
 pub mod quickcheck;
 pub mod rng;
 

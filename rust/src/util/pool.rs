@@ -1,0 +1,314 @@
+//! Persistent worker pool shared by every parallel layer of the system —
+//! wave-parallel Li-GD cohort solves (`coordinator::solve_wave`) and the
+//! scenario engine's cell executor (`scenario::Engine::run`).
+//!
+//! The old code spawned fresh OS threads per wave of every plan and per
+//! engine run; under a scenario grid that is thousands of short-lived
+//! threads, each paying spawn/teardown and losing its solver workspace.
+//! Here a fixed set of workers is spawned once (first use), fed through a
+//! channel, and kept alive for the process lifetime — so each worker's
+//! thread-local `LigdWorkspace` persists across cohorts, waves, plans, and
+//! scenario cells.
+//!
+//! # Execution model
+//!
+//! [`WorkerPool::run_indexed`]`(n, parallelism, f)` is a parallel-for over
+//! `0..n`: indices are claimed from a shared atomic counter and `f(i)` runs
+//! exactly once per index. The *calling* thread always participates as one
+//! of the workers, and helper jobs submitted to the pool never block — they
+//! drain whatever indices remain and exit. Two consequences:
+//!
+//! * **No nested-pool deadlock.** A cell job that internally calls
+//!   `run_indexed` again (engine cell → wave-parallel plan) makes progress
+//!   on its own indices even when every pool worker is busy; queued helpers
+//!   that start late simply find the counter exhausted and leave.
+//! * **Determinism.** Output ordering is by index (each `f(i)` writes slot
+//!   `i`), never by scheduling, so results are identical for every
+//!   `parallelism` value and pool size — `tests/scenario.rs` and
+//!   `coordinator::tests` assert byte-identical rows/plans.
+//!
+//! # Safety
+//!
+//! Helpers receive a lifetime-erased pointer to the caller's closure. The
+//! caller upholds the invariant that the closure outlives every access:
+//! it waits until no helper is inside the drain loop, publishes `closed`,
+//! and waits again — after that, any helper that raced past the first
+//! check observes `closed` (SeqCst total order) and exits without touching
+//! the closure. See the protocol notes on [`TaskState`].
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Shared state of one `run_indexed` call.
+///
+/// Protocol (all atomics SeqCst):
+/// * helpers: check `closed`; increment `active`; re-check `closed`
+///   (exit if set); drain indices; decrement `active` and signal.
+/// * owner: drain inline; wait `active == 0`; set `closed`; wait
+///   `active == 0` again; only then return (and drop the closure).
+///
+/// The double wait closes the race where a helper increments `active`
+/// after the owner's first wait observed zero: in the SeqCst total order
+/// that increment follows the owner's load, so the helper's re-check of
+/// `closed` follows the owner's store and the helper exits; the owner's
+/// second wait covers the helper that instead slipped in before the store
+/// (it drains an exhausted counter and leaves immediately).
+struct TaskState {
+    next: AtomicUsize,
+    n: usize,
+    /// Helpers currently between enter and exit.
+    active: AtomicUsize,
+    /// Once set, no helper may dereference `data` anymore.
+    closed: AtomicBool,
+    /// Type- and lifetime-erased pointer to the owner's `Fn(usize)`
+    /// closure; valid until the owner's `run_indexed` frame returns.
+    data: *const (),
+    /// Monomorphized shim that calls the closure behind `data`.
+    call: unsafe fn(*const (), usize),
+    /// First panic payload from any worker (owner re-raises it).
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    idle_lock: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+// Safety: `data` is only dereferenced under the protocol above, which the
+// owner's shutdown handshake makes data-race-free; the closure itself is
+// required to be Sync by `run_indexed`; all other fields are Sync
+// primitives.
+unsafe impl Send for TaskState {}
+unsafe impl Sync for TaskState {}
+
+impl TaskState {
+    fn wait_idle(&self) {
+        let mut g = self.idle_lock.lock().unwrap();
+        while self.active.load(Ordering::SeqCst) != 0 {
+            g = self.idle_cv.wait(g).unwrap();
+        }
+    }
+}
+
+unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+/// Claim and run indices until the counter is exhausted. Never blocks.
+/// Panics in `f` are captured (first payload wins) and fail the task fast
+/// by exhausting the counter.
+fn drain(task: &TaskState) {
+    loop {
+        let i = task.next.fetch_add(1, Ordering::SeqCst);
+        if i >= task.n {
+            break;
+        }
+        // Safety: see TaskState — the owner keeps the closure alive until
+        // every helper has exited the protocol.
+        let run = || unsafe { (task.call)(task.data, i) };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(run)) {
+            let mut slot = task.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+            drop(slot);
+            task.next.store(task.n, Ordering::SeqCst);
+        }
+    }
+}
+
+/// One queued helper job executing the enter/drain/exit protocol.
+fn helper(task: &TaskState) {
+    if task.closed.load(Ordering::SeqCst) {
+        return;
+    }
+    task.active.fetch_add(1, Ordering::SeqCst);
+    if !task.closed.load(Ordering::SeqCst) {
+        drain(task);
+    }
+    task.active.fetch_sub(1, Ordering::SeqCst);
+    let _g = task.idle_lock.lock().unwrap();
+    task.idle_cv.notify_all();
+}
+
+struct Job(Arc<TaskState>);
+
+/// The persistent pool: N detached workers parked on a shared channel.
+pub struct WorkerPool {
+    sender: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    fn with_workers(workers: usize) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("era-pool-{i}"))
+                .spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(Job(task)) => helper(&task),
+                        Err(_) => break, // pool dropped (process exit)
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        Self {
+            sender: Mutex::new(tx),
+            workers,
+        }
+    }
+
+    /// Helper threads in the pool (the caller of `run_indexed` always adds
+    /// itself on top of these).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel-for over `0..n` at the requested parallelism (caller
+    /// included). `parallelism <= 1` runs inline without touching the pool
+    /// — the exact sequential path.
+    pub fn run_indexed<F: Fn(usize) + Sync>(&self, n: usize, parallelism: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        let k = parallelism.max(1).min(n);
+        if k == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let task = Arc::new(TaskState {
+            next: AtomicUsize::new(0),
+            n,
+            active: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            data: f as *const F as *const (),
+            call: call_shim::<F>,
+            panic: Mutex::new(None),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+        });
+        {
+            let tx = self.sender.lock().unwrap();
+            for _ in 1..k {
+                tx.send(Job(Arc::clone(&task))).expect("worker pool alive");
+            }
+        }
+        // The caller is one of the workers: it drains inline, so progress
+        // never depends on pool capacity (no nested-pool deadlock).
+        drain(&task);
+        task.wait_idle();
+        task.closed.store(true, Ordering::SeqCst);
+        task.wait_idle();
+        if let Some(payload) = task.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// The process-wide pool (spawned on first use, sized to the hardware;
+/// the submitting thread always participates, hence the −1).
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool::with_workers(hw.saturating_sub(1).max(1))
+    })
+}
+
+/// Map `f` over `0..n` on the global pool with index-ordered reassembly:
+/// `out[i] == f(i)` for every scheduling, thread count, and pool size.
+pub fn map_indexed<T, F>(n: usize, parallelism: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let write = |i: usize| {
+        let value = f(i);
+        *slots[i].lock().unwrap() = Some(value);
+    };
+    global().run_indexed(n, parallelism, &write);
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every index executed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_is_index_ordered_for_any_parallelism() {
+        for par in [1, 2, 3, 8, 64] {
+            let out = map_indexed(37, par, |i| i * i);
+            assert_eq!(out.len(), 37);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "par={par}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        let bump = |i: usize| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        };
+        global().run_indexed(100, 7, &bump);
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn nested_runs_do_not_deadlock() {
+        // Saturate: outer jobs each start an inner parallel-for. The
+        // caller-participates design guarantees progress even when every
+        // pool worker is occupied by an outer job.
+        let out = map_indexed(8, 8, |i| {
+            let inner = map_indexed(8, 4, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (0..8).map(|j| i * 10 + j).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn zero_and_one_items() {
+        let empty: Vec<usize> = map_indexed(0, 4, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(map_indexed(1, 4, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let result = std::panic::catch_unwind(|| {
+            map_indexed(16, 4, |i| {
+                if i == 5 {
+                    panic!("boom at {i}");
+                }
+                i
+            })
+        });
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 5"), "payload: {msg}");
+    }
+}

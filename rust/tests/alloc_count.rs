@@ -1,0 +1,136 @@
+//! Heap-allocation accounting for the Li-GD hot path (ISSUE 2 acceptance:
+//! zero heap allocations per GD iteration in the steady state).
+//!
+//! This binary installs a counting global allocator and holds a single
+//! `#[test]` so no concurrent test can pollute the counter. The contract:
+//!
+//! * `solve_gd_ws` (the GD iteration loop, including a full workspace
+//!   re-`prepare`) performs **zero** allocations once the workspace has
+//!   seen the cohort shape;
+//! * `solve_ligd_ws` performs a small constant number — exactly the
+//!   vectors packaged into the returned `CohortSolution` — independent of
+//!   the iteration budget.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use era::config::presets;
+use era::models::zoo;
+use era::net::Network;
+use era::optimizer::{solve_gd_ws, solve_ligd_ws, CohortProblem, GdOptions, LigdWorkspace};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn cohort_problem() -> CohortProblem {
+    let cfg = presets::smoke();
+    let net = Network::generate(&cfg, 17);
+    let mut users = net.topo.users_of_ap(0);
+    if users.len() < 4 {
+        users = (0..net.num_users()).collect();
+    }
+    let users: Vec<usize> = users.into_iter().take(4).collect();
+    let channels: Vec<usize> = (0..3).collect();
+    let bg_up = vec![1e-15; 3];
+    let bg_down = vec![1e-15; users.len() * 3];
+    CohortProblem::from_network(&cfg, &net, &users, &channels, bg_up, bg_down)
+}
+
+#[test]
+fn ligd_hot_path_is_allocation_free_in_steady_state() {
+    let model = zoo::nin();
+    let opts = GdOptions {
+        step_size: 0.05,
+        epsilon: 1e-5,
+        max_iters: 40,
+    };
+    let mut p = cohort_problem();
+    p.set_uniform_split(&model.split_constants(4));
+    let mut ws = LigdWorkspace::new();
+
+    // ---- warm up: first contact with this cohort shape allocates -------
+    ws.prepare(&p);
+    ws.vars.set_center(&p);
+    let warm_rep = solve_gd_ws(&p, &mut ws, &opts);
+    assert!(warm_rep.iters >= 1);
+
+    // ---- steady state: full re-prepare + GD solve, zero allocations ----
+    let before = allocs();
+    ws.prepare(&p);
+    ws.vars.set_center(&p);
+    let rep = solve_gd_ws(&p, &mut ws, &opts);
+    let gd_delta = allocs() - before;
+    assert!(rep.iters >= 1);
+    assert_eq!(
+        gd_delta, 0,
+        "solve_gd_ws steady state performed {gd_delta} heap allocations"
+    );
+
+    // ---- full Li-GD: constant packaging-only allocation count ----------
+    let warmup = solve_ligd_ws(&mut p, &model, &opts, true, &mut ws);
+    assert!(warmup.total_iters > 0);
+
+    let before = allocs();
+    let sol = solve_ligd_ws(&mut p, &model, &opts, true, &mut ws);
+    let short_delta = allocs() - before;
+    assert!(sol.total_iters > 0);
+    drop(sol);
+
+    let long_opts = GdOptions {
+        max_iters: 4 * opts.max_iters,
+        ..opts
+    };
+    let before = allocs();
+    let sol = solve_ligd_ws(&mut p, &model, &opts, true, &mut ws);
+    let repeat_delta = allocs() - before;
+    drop(sol);
+    let before = allocs();
+    let sol = solve_ligd_ws(&mut p, &model, &long_opts, true, &mut ws);
+    let long_delta = allocs() - before;
+    assert!(sol.total_iters > 0);
+    drop(sol);
+
+    assert_eq!(
+        short_delta, repeat_delta,
+        "allocation count must be reproducible run-to-run"
+    );
+    assert_eq!(
+        short_delta, long_delta,
+        "allocation count must not scale with the iteration budget"
+    );
+    // Exactly the CohortSolution's owned vectors (9 of them) plus nothing
+    // hidden; keep a little headroom for std internals.
+    assert!(
+        short_delta <= 16,
+        "expected packaging-only allocations, got {short_delta}"
+    );
+}

@@ -167,3 +167,63 @@ fn evaluation_is_deterministic_and_seed_sensitive() {
     let (dc, _) = era::coordinator::plan_era(&cfg, &c, &model);
     assert_ne!(da, dc, "different seed should differ");
 }
+
+#[test]
+fn workspace_reuse_is_bit_identical_to_fresh_solver() {
+    // The allocation-free contract: a LigdWorkspace reused across many
+    // cohorts (the pool-worker steady state, with stale buffer contents
+    // from earlier solves) must produce exactly the CohortSolution a
+    // freshly-allocated workspace produces — bit-for-bit, not within
+    // tolerance.
+    use era::optimizer::{solve_ligd_ws, LigdWorkspace};
+    let model = zoo::yolov2();
+    let opts = GdOptions {
+        step_size: 0.05,
+        epsilon: 1e-5,
+        max_iters: 60,
+    };
+    let mut reused = LigdWorkspace::new();
+    forall("workspace reuse == fresh alloc", 12, |g| {
+        let split = g.usize_in(0, 17);
+        let warm_start = g.case % 2 == 0;
+        let p = random_problem(g, split);
+        let mut p_reused = p.clone();
+        let mut p_fresh = p.clone();
+        let mut p_tls = p;
+        let a = solve_ligd_ws(&mut p_reused, &model, &opts, warm_start, &mut reused);
+        let b = solve_ligd_ws(&mut p_fresh, &model, &opts, warm_start, &mut LigdWorkspace::new());
+        assert_eq!(a, b, "reused workspace diverged from fresh workspace");
+        // the public entry point (thread-local workspace) matches too
+        let c = solve_ligd(&mut p_tls, &model, &opts, warm_start);
+        assert_eq!(a, c, "thread-local workspace diverged");
+    });
+}
+
+#[test]
+fn solve_gd_workspace_matches_wrapper() {
+    use era::optimizer::{solve_gd_ws, LigdWorkspace};
+    let mut ws = LigdWorkspace::new();
+    forall("solve_gd_ws == solve_gd", 10, |g| {
+        let split = g.usize_in(0, 17);
+        let p = random_problem(g, split);
+        let opts = GdOptions {
+            step_size: 0.05,
+            epsilon: 1e-5,
+            max_iters: 40,
+        };
+        let init = CohortVars::init_center(&p);
+        let (v, rep) = solve_gd(&p, init.clone(), &opts);
+        ws.prepare(&p);
+        ws.vars.x.copy_from_slice(&init.x);
+        let rep2 = solve_gd_ws(&p, &mut ws, &opts);
+        assert_eq!(rep, rep2, "reports diverged");
+        assert_eq!(v.x, ws.vars.x, "solution points diverged");
+        // ws.ev holds the forward at the solution — the no-redundant-eval
+        // contract consumed by solve_ligd_ws
+        let ev = era::optimizer::eval(&p, &v, &p.sic_orders());
+        assert_eq!(ev.total, ws.ev.total);
+        assert_eq!(ev.util, ws.ev.util);
+        assert_eq!(ev.t, ws.ev.t);
+        assert_eq!(ev.e, ws.ev.e);
+    });
+}

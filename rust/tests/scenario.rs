@@ -143,3 +143,42 @@ fn scenario_presets_smoke_run() {
     let csv = to_csv(&records);
     assert_eq!(csv.lines().count(), 9);
 }
+
+#[test]
+fn pooled_engine_rows_match_standalone_cells() {
+    // Golden contract for the worker pool + shared-network cache: the
+    // engine (any thread count, one Network shared across the strategy
+    // axis of a sweep point) emits byte-identical rows to executing every
+    // cell standalone, each generating its own network.
+    let mut spec = grid_spec();
+    spec.plan_threads = 2; // exercise nested pool use inside ERA cells
+    let cells = expand(&spec).unwrap();
+    let standalone: Vec<String> = cells
+        .iter()
+        .map(|c| era::scenario::run_cell(&spec, c).unwrap().to_csv_row())
+        .collect();
+    for threads in [1, 4] {
+        let records = Engine::new(threads).run(&spec).unwrap();
+        let rows: Vec<String> = records.iter().map(|r| r.to_csv_row()).collect();
+        assert_eq!(rows, standalone, "threads={threads}");
+    }
+}
+
+#[test]
+fn density_shaped_grid_is_thread_invariant_across_all_strategies() {
+    // The density preset's shape (full strategy list × a user-count axis)
+    // at smoke scale: rows must be byte-identical across engine thread
+    // counts while all strategies of a sweep point share one cached
+    // network. (The full `density` preset is identical modulo scale.)
+    let mut base = presets::smoke();
+    base.optimizer.max_iters = 25;
+    let spec = ScenarioSpec::new("density", base)
+        .with_strategies(era::strategies::NAMES)
+        .with_axis_usize("network.num_users", &[12, 18]);
+    let r1 = Engine::new(1).run(&spec).unwrap();
+    let r6 = Engine::new(6).run(&spec).unwrap();
+    assert_eq!(to_csv(&r1), to_csv(&r6), "1 vs 6 threads");
+    for s in era::strategies::NAMES {
+        assert!(r1.iter().any(|r| r.strategy == *s), "missing strategy {s}");
+    }
+}
