@@ -11,6 +11,7 @@
 //!   ligd_cold_cohort    cold-start variant (Corollary 4 comparison)
 //!   plan_era_medium     whole-network planning pass (250 users)
 //!   plan_era_parallel   same pass, wave-parallel cohort solves (4 threads)
+//!   replan_epoch        one dynamic-serving re-plan epoch (50% active)
 //!   scenario_grid       scenario engine over a smoke grid (8 cells)
 //!   noma_rates_250u     full-network NOMA rate computation
 //!   episode_des         discrete-event serving episode (2k requests)
@@ -122,6 +123,22 @@ fn main() {
         };
         results.push(bench("plan_era_parallel (250 users, 4 threads)", 1, 2.0, 50, || {
             std::hint::black_box(era::coordinator::plan_era_with(&cfg, &net, &model, &popts));
+        }));
+    }
+    if want("replan_epoch") {
+        // One epoch of the dynamic serving engine's re-plan: masked Li-GD
+        // over the currently-active half of the population, workspace pools
+        // warm from the previous epoch. Tracks re-planning cost in
+        // BENCH_hotpath.json.
+        let active: Vec<bool> = (0..net.num_users()).map(|u| u % 2 == 0).collect();
+        let popts = era::coordinator::PlanOptions {
+            warm_start: true,
+            threads: 1,
+        };
+        results.push(bench("replan_epoch (250 users, 50% active)", 1, 2.0, 50, || {
+            std::hint::black_box(era::coordinator::plan_era_masked(
+                &cfg, &net, &model, &active, &popts,
+            ));
         }));
     }
     if want("scenario_grid") {

@@ -88,6 +88,29 @@ pub trait Strategy {
         (self.decide(cfg, net, model), PlanInfo::default())
     }
 
+    /// Re-plan on the currently-active user subset — the entry point of the
+    /// dynamic serving engine's epoch loop (`sim::run_dynamic`). Inactive
+    /// users must come out device-only so they occupy no spectrum or edge
+    /// resources. Default: plan the full population, then evict inactive
+    /// users (correct for the per-user baseline rules); ERA overrides this
+    /// to exclude inactive users from cohort formation so active users get
+    /// their share of the spectrum.
+    fn decide_masked(
+        &self,
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+        active: &[bool],
+    ) -> (Vec<Decision>, PlanInfo) {
+        let (mut ds, info) = self.decide_with_stats(cfg, net, model);
+        for (u, &a) in active.iter().enumerate() {
+            if !a {
+                ds[u] = Decision::device_only(model);
+            }
+        }
+        (ds, info)
+    }
+
     /// Which channel model the evaluation should apply to this strategy's
     /// decisions.
     fn channel_model(&self) -> ChannelModel {

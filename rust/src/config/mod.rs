@@ -21,6 +21,7 @@ pub struct Config {
     pub qoe: QoeConfig,
     pub optimizer: OptimizerConfig,
     pub workload: WorkloadConfig,
+    pub churn: ChurnConfig,
     pub seed: u64,
 }
 
@@ -120,6 +121,28 @@ pub struct OptimizerConfig {
     pub delay_scale: f64,
 }
 
+/// User churn model for the dynamic serving engine (companion work arXiv
+/// 2312.16497: plans must be refreshed as users arrive, leave, and move).
+/// All rates are continuous-time event rates over the episode; the defaults
+/// describe a static population (no churn), which keeps every legacy
+/// scenario byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnConfig {
+    /// Fraction of the user population active at t = 0.
+    pub initial_active_frac: f64,
+    /// System-wide activation rate (new users joining, 1/s).
+    pub arrival_rate_hz: f64,
+    /// Per-active-user departure rate (1/s).
+    pub departure_rate_hz: f64,
+    /// Per-active-user request-rate rescale rate (1/s); each event redraws
+    /// the user's traffic multiplier uniformly in [lo, hi].
+    pub rate_change_hz: f64,
+    pub rate_factor_lo: f64,
+    pub rate_factor_hi: f64,
+    /// Per-active-user AP handoff rate (1/s); ignored for single-AP cells.
+    pub handoff_hz: f64,
+}
+
 /// Workload generation (§V.C/V.D sweeps).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadConfig {
@@ -207,6 +230,32 @@ impl Default for OptimizerConfig {
     }
 }
 
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self {
+            initial_active_frac: 1.0,
+            arrival_rate_hz: 0.0,
+            departure_rate_hz: 0.0,
+            rate_change_hz: 0.0,
+            rate_factor_lo: 0.5,
+            rate_factor_hi: 2.0,
+            handoff_hz: 0.0,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// True when any churn mechanism is configured (a default config is a
+    /// static population).
+    pub fn any(&self) -> bool {
+        self.initial_active_frac < 1.0
+            || self.arrival_rate_hz > 0.0
+            || self.departure_rate_hz > 0.0
+            || self.rate_change_hz > 0.0
+            || self.handoff_hz > 0.0
+    }
+}
+
 impl Default for WorkloadConfig {
     fn default() -> Self {
         Self {
@@ -226,6 +275,7 @@ impl Default for Config {
             qoe: QoeConfig::default(),
             optimizer: OptimizerConfig::default(),
             workload: WorkloadConfig::default(),
+            churn: ChurnConfig::default(),
             seed: 20240710,
         }
     }
@@ -337,6 +387,13 @@ impl Config {
             ("workload", "tasks_per_user") => self.workload.tasks_per_user = f!(),
             ("workload", "arrival_rate_hz") => self.workload.arrival_rate_hz = f!(),
             ("workload", "episode_s") => self.workload.episode_s = f!(),
+            ("churn", "initial_active_frac") => self.churn.initial_active_frac = f!(),
+            ("churn", "arrival_rate_hz") => self.churn.arrival_rate_hz = f!(),
+            ("churn", "departure_rate_hz") => self.churn.departure_rate_hz = f!(),
+            ("churn", "rate_change_hz") => self.churn.rate_change_hz = f!(),
+            ("churn", "rate_factor_lo") => self.churn.rate_factor_lo = f!(),
+            ("churn", "rate_factor_hi") => self.churn.rate_factor_hi = f!(),
+            ("churn", "handoff_hz") => self.churn.handoff_hz = f!(),
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
@@ -410,7 +467,19 @@ impl Config {
         s.push_str(&format!("model = {:?}\n", w.model));
         s.push_str(&format!("tasks_per_user = {}\n", f(w.tasks_per_user)));
         s.push_str(&format!("arrival_rate_hz = {}\n", f(w.arrival_rate_hz)));
-        s.push_str(&format!("episode_s = {}\n", f(w.episode_s)));
+        s.push_str(&format!("episode_s = {}\n\n", f(w.episode_s)));
+        let ch = &self.churn;
+        s.push_str("[churn]\n");
+        s.push_str(&format!(
+            "initial_active_frac = {}\n",
+            f(ch.initial_active_frac)
+        ));
+        s.push_str(&format!("arrival_rate_hz = {}\n", f(ch.arrival_rate_hz)));
+        s.push_str(&format!("departure_rate_hz = {}\n", f(ch.departure_rate_hz)));
+        s.push_str(&format!("rate_change_hz = {}\n", f(ch.rate_change_hz)));
+        s.push_str(&format!("rate_factor_lo = {}\n", f(ch.rate_factor_lo)));
+        s.push_str(&format!("rate_factor_hi = {}\n", f(ch.rate_factor_hi)));
+        s.push_str(&format!("handoff_hz = {}\n", f(ch.handoff_hz)));
         s
     }
 
@@ -432,6 +501,22 @@ impl Config {
         anyhow::ensure!(self.network.num_aps > 0, "need APs");
         anyhow::ensure!(self.compute.lambda_gamma > 0.0 && self.compute.lambda_gamma <= 1.0);
         anyhow::ensure!(o.cohort_users > 0 && o.cohort_channels > 0);
+        let ch = &self.churn;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&ch.initial_active_frac),
+            "churn.initial_active_frac must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            ch.arrival_rate_hz >= 0.0
+                && ch.departure_rate_hz >= 0.0
+                && ch.rate_change_hz >= 0.0
+                && ch.handoff_hz >= 0.0,
+            "churn rates must be >= 0"
+        );
+        anyhow::ensure!(
+            ch.rate_factor_lo > 0.0 && ch.rate_factor_lo <= ch.rate_factor_hi,
+            "churn rate factors must satisfy 0 < lo <= hi"
+        );
         Ok(())
     }
 
@@ -508,8 +593,25 @@ mod tests {
         cfg.qoe.expected_finish_mean_s = 0.0125;
         cfg.optimizer.max_iters = 123;
         cfg.workload.model = "nin".into();
+        cfg.churn.initial_active_frac = 0.35;
+        cfg.churn.arrival_rate_hz = 4.5;
+        cfg.churn.departure_rate_hz = 0.125;
+        cfg.churn.rate_change_hz = 0.2;
+        cfg.churn.handoff_hz = 0.0625;
         let parsed = Config::from_str(&cfg.to_toml()).unwrap();
         assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn churn_defaults_are_static_and_bad_values_rejected() {
+        let cfg = Config::default();
+        assert!(!cfg.churn.any(), "default config has no churn");
+        let c = Config::from_str("[churn]\narrival_rate_hz = 2.0\n").unwrap();
+        assert!(c.churn.any());
+        let e = Config::from_str("[churn]\ninitial_active_frac = 1.5\n").unwrap_err();
+        assert!(e.to_string().contains("initial_active_frac"), "{e}");
+        let e = Config::from_str("[churn]\nrate_factor_lo = 3.0\n").unwrap_err();
+        assert!(e.to_string().contains("rate factors"), "{e}");
     }
 
     #[test]

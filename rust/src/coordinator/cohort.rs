@@ -96,9 +96,27 @@ impl ChannelLoad {
 /// Partition all users into cohorts (per cell, chunks of
 /// `cfg.optimizer.cohort_users`), with gain-aware channel candidates.
 pub fn form_cohorts(cfg: &Config, net: &Network, load: &ChannelLoad) -> Vec<Cohort> {
+    form_cohorts_masked(cfg, net, load, None)
+}
+
+/// [`form_cohorts`] restricted to an active-user mask (`None` = everyone).
+/// The dynamic serving engine re-plans each epoch on the currently-active
+/// population only — departed users must not occupy cohort slots or bias
+/// the gain-aware channel choice.
+pub fn form_cohorts_masked(
+    cfg: &Config,
+    net: &Network,
+    load: &ChannelLoad,
+    active: Option<&[bool]>,
+) -> Vec<Cohort> {
     let mut cohorts = Vec::new();
     for ap in 0..cfg.network.num_aps {
-        let members = net.topo.users_of_ap(ap);
+        let members: Vec<usize> = net
+            .topo
+            .users_of_ap(ap)
+            .into_iter()
+            .filter(|&u| active.map_or(true, |m| m[u]))
+            .collect();
         for chunk in members.chunks(cfg.optimizer.cohort_users) {
             cohorts.push(Cohort {
                 ap,
@@ -138,6 +156,26 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn masked_cohorts_cover_exactly_the_active_users() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 3);
+        let load = ChannelLoad::new(cfg.network.num_aps, cfg.network.num_subchannels, 3);
+        let active: Vec<bool> = (0..net.num_users()).map(|u| u % 3 != 0).collect();
+        let cohorts = form_cohorts_masked(&cfg, &net, &load, Some(&active));
+        let mut seen = vec![false; net.num_users()];
+        for c in &cohorts {
+            for &u in &c.users {
+                assert!(active[u], "inactive user {u} planned into a cohort");
+                assert!(!seen[u]);
+                seen[u] = true;
+            }
+        }
+        for (u, &a) in active.iter().enumerate() {
+            assert_eq!(seen[u], a, "user {u}");
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
 use crate::optimizer::{solve_ligd, CohortProblem, CohortSolution, GdOptions};
-use cohort::{form_cohorts, ChannelLoad, Cohort};
+use cohort::{form_cohorts_masked, ChannelLoad, Cohort};
 
 /// Planner statistics (Corollary 2/4 instrumentation).
 #[derive(Clone, Debug, Default)]
@@ -238,6 +238,31 @@ pub fn plan_era_with(
     model: &ModelProfile,
     popts: &PlanOptions,
 ) -> (Vec<Decision>, PlanStats) {
+    plan_era_impl(cfg, net, model, None, popts)
+}
+
+/// Epoch re-plan for the dynamic serving engine: plan only the
+/// currently-active users (everyone else stays device-only and occupies no
+/// spectrum). Runs on the same persistent worker pool as full plans, so the
+/// per-worker `LigdWorkspace` buffers stay warm across successive epochs —
+/// a re-solve allocates nothing on the GD hot path.
+pub fn plan_era_masked(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    active: &[bool],
+    popts: &PlanOptions,
+) -> (Vec<Decision>, PlanStats) {
+    plan_era_impl(cfg, net, model, Some(active), popts)
+}
+
+fn plan_era_impl(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    active: Option<&[bool]>,
+    popts: &PlanOptions,
+) -> (Vec<Decision>, PlanStats) {
     let nu = net.num_users();
     let n_aps = cfg.network.num_aps;
     let m = cfg.network.num_subchannels;
@@ -250,7 +275,7 @@ pub fn plan_era_with(
     };
     let gd_opts = GdOptions::from_config(&cfg.optimizer);
 
-    let cohorts = form_cohorts(cfg, net, &st.load);
+    let cohorts = form_cohorts_masked(cfg, net, &st.load, active);
     st.stats.cohorts = cohorts.len();
 
     // Wave partition. Sequential (threads == 1): one cohort per wave, in
@@ -397,6 +422,32 @@ impl Strategy for EraStrategy {
         )
     }
 
+    fn decide_masked(
+        &self,
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+        active: &[bool],
+    ) -> (Vec<Decision>, PlanInfo) {
+        let (ds, stats) = plan_era_masked(
+            cfg,
+            net,
+            model,
+            active,
+            &PlanOptions {
+                warm_start: self.warm_start,
+                threads: self.threads,
+            },
+        );
+        (
+            ds,
+            PlanInfo {
+                cohorts: stats.cohorts,
+                gd_iters: stats.total_gd_iters,
+            },
+        )
+    }
+
     fn channel_model(&self) -> ChannelModel {
         ChannelModel::Noma
     }
@@ -507,6 +558,34 @@ mod tests {
         let dev = crate::baselines::DeviceOnly.decide(&cfg, &net, &model);
         let od = crate::metrics::evaluate(&cfg, &net, &model, &dev, ChannelModel::Orthogonal);
         assert!(o.latency_speedup_vs(&od) > 1.0);
+    }
+
+    #[test]
+    fn masked_plan_covers_only_active_users_and_matches_full_when_all_active() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 9);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        // all-active mask is bit-identical to the unmasked plan
+        let all = vec![true; net.num_users()];
+        let (d_full, s_full) = plan_era_with(&cfg, &net, &model, &popts);
+        let (d_all, s_all) = plan_era_masked(&cfg, &net, &model, &all, &popts);
+        assert_eq!(d_full, d_all);
+        assert_eq!(s_full.cohorts, s_all.cohorts);
+        // a half-active mask never offloads an inactive user
+        let half: Vec<bool> = (0..net.num_users()).map(|u| u % 2 == 0).collect();
+        let (d_half, s_half) = plan_era_masked(&cfg, &net, &model, &half, &popts);
+        assert!(s_half.cohorts > 0 && s_half.cohorts <= s_full.cohorts);
+        for (u, d) in d_half.iter().enumerate() {
+            if !half[u] {
+                assert!(!d.offloads(&model), "inactive user {u} got spectrum");
+                assert!(d.up_ch.is_none());
+            }
+        }
+        assert!(
+            d_half.iter().enumerate().any(|(u, d)| half[u] && d.offloads(&model)),
+            "some active user should still offload"
+        );
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! optionally run the *real* split-CNN PJRT executable so the end-to-end
 //! example proves all three layers compose.
 //!
+//! Modeled latency is *queue-inclusive*: the trace is first replayed
+//! through the discrete-event episode (`sim::run_episode`), so each served
+//! request reports the latency it would see under edge-pool contention,
+//! not the load-free decision-time estimate.
+//!
 //! No tokio offline — the event loop is std::thread + mpsc, which for a
 //! CPU-bound simulator is the honest choice anyway.
 
@@ -13,7 +18,7 @@ use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
 use crate::trace::Request;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::HashMap;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -22,8 +27,11 @@ use std::time::Instant;
 pub struct Served {
     pub id: u64,
     pub user: usize,
-    /// Modeled network+compute latency (s) from the wireless/compute models.
+    /// Modeled end-to-end latency (s) including edge-pool queueing, from
+    /// the DES episode replay of the same trace.
     pub modeled_latency_s: f64,
+    /// Modeled time spent waiting for the edge pool (s).
+    pub modeled_queue_s: f64,
     /// Wall-clock time spent executing the real artifacts (s); 0 when
     /// running in pure-simulation mode.
     pub exec_wall_s: f64,
@@ -35,10 +43,16 @@ pub struct Served {
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub served: Vec<Served>,
+    /// Requests the DES rejected at admission (non-finite phases); they are
+    /// still executed by the worker pool but carry the load-free estimate.
+    pub modeled_drops: usize,
+    /// Requests handled per worker (the routing statistic).
+    pub per_worker: Vec<usize>,
     pub wall_s: f64,
     pub throughput_rps: f64,
     pub mean_modeled_latency_s: f64,
     pub p99_modeled_latency_s: f64,
+    pub mean_modeled_queue_s: f64,
     pub mean_exec_wall_s: f64,
 }
 
@@ -51,6 +65,7 @@ pub trait InferenceBackend: Send + Sync {
 }
 
 /// Serve a whole trace through `workers` threads.
+#[allow(clippy::too_many_arguments)]
 pub fn serve(
     cfg: &Config,
     net: &Network,
@@ -63,13 +78,14 @@ pub fn serve(
     backend: Option<Arc<dyn InferenceBackend>>,
     input: Option<Vec<f32>>,
 ) -> ServeReport {
-    let (tx, rx) = mpsc::channel::<(usize, Request)>();
+    let (tx, rx) = mpsc::channel::<Request>();
     let (done_tx, done_rx) = mpsc::channel::<Served>();
     let rx = Arc::new(Mutex::new(rx));
-    let counter = Arc::new(AtomicUsize::new(0));
 
-    // Modeled per-user latency (decision-time prediction).
-    let modeled: Vec<f64> = (0..net.num_users())
+    // Load-free per-user estimate — the fallback for requests the DES
+    // rejects (non-finite phases), which can never be assigned a finite
+    // queue-inclusive latency.
+    let static_modeled: Vec<f64> = (0..net.num_users())
         .map(|u| {
             let d = &decisions[u];
             let sc = model.split_constants(d.split);
@@ -84,6 +100,15 @@ pub fn serve(
         })
         .collect();
 
+    // Queue-inclusive modeled latency per request id from the DES replay.
+    let episode = crate::sim::run_episode(cfg, net, model, decisions, rates_up, rates_down, trace);
+    let modeled_by_id: HashMap<u64, (f64, f64)> = episode
+        .completions
+        .iter()
+        .map(|c| (c.id, (c.latency(), c.queue_s)))
+        .collect();
+    let modeled_drops = episode.dropped.len();
+
     let start = Instant::now();
     std::thread::scope(|scope| {
         for w in 0..workers {
@@ -91,19 +116,18 @@ pub fn serve(
             let done_tx = done_tx.clone();
             let backend = backend.clone();
             let input = input.clone();
-            let modeled = &modeled;
+            let static_modeled = &static_modeled;
+            let modeled_by_id = &modeled_by_id;
             let decisions = &decisions;
-            let counter = Arc::clone(&counter);
             scope.spawn(move || loop {
                 let job = {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
-                let (widx, rq) = match job {
+                let rq = match job {
                     Ok(j) => j,
                     Err(_) => break,
                 };
-                let _ = widx;
                 let mut exec_wall = 0.0;
                 if let (Some(be), Some(inp)) = (backend.as_ref(), input.as_ref()) {
                     let t0 = Instant::now();
@@ -112,11 +136,15 @@ pub fn serve(
                         exec_wall = t0.elapsed().as_secs_f64();
                     }
                 }
-                counter.fetch_add(1, Ordering::Relaxed);
+                let (lat, queue) = modeled_by_id
+                    .get(&rq.id)
+                    .copied()
+                    .unwrap_or((static_modeled[rq.user], 0.0));
                 let _ = done_tx.send(Served {
                     id: rq.id,
                     user: rq.user,
-                    modeled_latency_s: modeled[rq.user],
+                    modeled_latency_s: lat,
+                    modeled_queue_s: queue,
                     exec_wall_s: exec_wall,
                     worker: w,
                 });
@@ -124,21 +152,41 @@ pub fn serve(
         }
         drop(done_tx);
         for rq in trace {
-            tx.send((0, *rq)).expect("workers alive");
+            tx.send(*rq).expect("workers alive");
         }
         drop(tx);
     });
 
     let served: Vec<Served> = done_rx.into_iter().collect();
     let wall = start.elapsed().as_secs_f64();
-    let lat: Vec<f64> = served.iter().map(|s| s.modeled_latency_s).collect();
+    let mut per_worker = vec![0usize; workers];
+    for s in &served {
+        per_worker[s.worker] += 1;
+    }
+    // Aggregate over finite modeled latencies only: a DES-dropped request's
+    // static fallback is infinite in exactly the drop cases (zero-rate
+    // link), and one ∞ would otherwise poison the mean/p99 of every
+    // successfully served request. Drops stay visible via `modeled_drops`.
+    let lat: Vec<f64> = served
+        .iter()
+        .map(|s| s.modeled_latency_s)
+        .filter(|l| l.is_finite())
+        .collect();
+    let queue: Vec<f64> = served
+        .iter()
+        .map(|s| s.modeled_queue_s)
+        .filter(|q| q.is_finite())
+        .collect();
     let exec: Vec<f64> = served.iter().map(|s| s.exec_wall_s).collect();
     ServeReport {
         throughput_rps: served.len() as f64 / wall.max(1e-12),
         mean_modeled_latency_s: crate::util::mean(&lat),
         p99_modeled_latency_s: crate::util::percentile(&lat, 99.0),
+        mean_modeled_queue_s: crate::util::mean(&queue),
         mean_exec_wall_s: crate::util::mean(&exec),
         served,
+        modeled_drops,
+        per_worker,
         wall_s: wall,
     }
 }
@@ -178,6 +226,44 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), trace.len());
         assert!(rep.throughput_rps > 0.0);
+        assert_eq!(rep.modeled_drops, 0);
+        assert_eq!(rep.per_worker.len(), 4);
+        assert_eq!(rep.per_worker.iter().sum::<usize>(), trace.len());
+    }
+
+    #[test]
+    fn modeled_latency_includes_queueing() {
+        // With the pool squeezed to one concurrent request (r is clamped
+        // into [r_min, pool] = [1, 1]), the serving report's modeled
+        // latency must reflect DES queueing.
+        let mut cfg = presets::smoke();
+        cfg.compute.edge_pool_units = 1.0;
+        let net = Network::generate(&cfg, 80);
+        let model = zoo::nin();
+        let ds = Neurosurgeon.decide(&cfg, &net, &model);
+        let up = vec![1e6; net.num_users()];
+        let user = (0..net.num_users())
+            .find(|&u| ds[u].offloads(&model))
+            .expect("an offloader");
+        let trace: Vec<Request> = (0..8)
+            .map(|i| Request {
+                id: i,
+                user,
+                arrival_s: 0.0,
+            })
+            .collect();
+        let rep = serve(
+            &cfg, &net, &model, &ds, &up, &up, &trace, 2, None, None,
+        );
+        assert_eq!(rep.served.len(), trace.len());
+        assert!(
+            rep.mean_modeled_queue_s > 0.0,
+            "simultaneous arrivals on a unit pool must queue"
+        );
+        assert!(rep.served.iter().any(|s| s.modeled_queue_s > 0.0));
+        for s in &rep.served {
+            assert!(s.modeled_latency_s >= s.modeled_queue_s);
+        }
     }
 
     #[test]
@@ -223,8 +309,8 @@ mod tests {
             Some(Arc::new(StubBackend)),
             Some(vec![0.1f32; 8]),
         );
-        let distinct: std::collections::HashSet<usize> =
-            rep.served.iter().map(|s| s.worker).collect();
-        assert!(distinct.len() >= 2, "only {} workers used", distinct.len());
+        let busy = rep.per_worker.iter().filter(|&&n| n > 0).count();
+        assert!(busy >= 2, "only {busy} workers used");
+        assert_eq!(rep.per_worker.iter().sum::<usize>(), rep.served.len());
     }
 }

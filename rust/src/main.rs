@@ -96,6 +96,15 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         spec.seeds.len(),
         engine.threads,
     );
+    if spec.is_dynamic() {
+        eprintln!(
+            "dynamic serving: churn={}, re-plan every {} s",
+            spec.episode_churn,
+            spec.replan_interval_s
+                .map(|d| format!("{d}"))
+                .unwrap_or_else(|| "episode".into()),
+        );
+    }
     let t0 = std::time::Instant::now();
     let records = engine.run(&spec)?;
     eprintln!(
@@ -103,6 +112,16 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         records.len(),
         t0.elapsed().as_secs_f64()
     );
+    if let Some(d) = records.iter().find_map(|r| r.dynamics.as_ref()) {
+        eprintln!(
+            "dynamics (cell 0): {} epochs, peak {} active users, {} arrivals / {} departures / {} handoffs",
+            d.epochs.len(),
+            d.peak_active,
+            d.churn_arrivals,
+            d.churn_departures,
+            d.churn_handoffs
+        );
+    }
     let out = if flags.contains_key("md") {
         records_markdown(&records)
     } else {
@@ -310,10 +329,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         rep.throughput_rps, workers
     );
     println!(
-        "modeled latency  : mean {:.3} ms  p99 {:.3} ms",
+        "modeled latency  : mean {:.3} ms  p99 {:.3} ms (queue-inclusive; mean queue {:.3} ms)",
         rep.mean_modeled_latency_s * 1e3,
-        rep.p99_modeled_latency_s * 1e3
+        rep.p99_modeled_latency_s * 1e3,
+        rep.mean_modeled_queue_s * 1e3
     );
+    if rep.modeled_drops > 0 {
+        println!("modeled drops    : {} (non-finite phases)", rep.modeled_drops);
+    }
     if rep.mean_exec_wall_s > 0.0 {
         println!(
             "PJRT exec        : mean {:.3} ms per request",

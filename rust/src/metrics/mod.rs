@@ -179,6 +179,20 @@ pub fn orthogonal_rates(
     (up, down)
 }
 
+/// Fraction of DES completions whose queue-inclusive latency exceeds the
+/// user's QoE threshold — shared by the static and dynamic episode paths
+/// of the scenario engine.
+pub fn qoe_miss_frac(completions: &[crate::sim::Completion], net: &Network) -> f64 {
+    if completions.is_empty() {
+        return 0.0;
+    }
+    let miss = completions
+        .iter()
+        .filter(|c| c.latency() > net.users[c.user].qoe_threshold_s)
+        .count();
+    miss as f64 / completions.len() as f64
+}
+
 /// Per-user link rates under a channel model — shared by the evaluation,
 /// the discrete-event simulator, and the serving loop (previously a private
 /// copy in the figure harness).

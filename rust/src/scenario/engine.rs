@@ -49,6 +49,25 @@ pub struct EpisodeRecord {
     pub throughput_rps: f64,
     /// Fraction of completions exceeding their user's QoE threshold.
     pub qoe_miss_frac: f64,
+    /// Requests explicitly rejected by the DES (`sim::DroppedRequest`) —
+    /// conservation holds: `n + dropped == trace length`.
+    pub dropped: usize,
+}
+
+/// Dynamic-serving aggregates for one cell (churn and/or epoch
+/// re-planning): the per-epoch trajectory plus population/churn summary
+/// counters. Emitted as extra CSV columns only when present, so static
+/// grids stay byte-identical to the legacy format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DynamicsRecord {
+    /// Per-epoch plan + serving stats; `epochs.len()` == re-plan count.
+    pub epochs: Vec<crate::sim::EpochRecord>,
+    pub peak_active: usize,
+    pub mean_active: f64,
+    pub churn_arrivals: usize,
+    pub churn_departures: usize,
+    pub churn_rate_changes: usize,
+    pub churn_handoffs: usize,
 }
 
 /// Structured result of one cell: plan stats, static evaluation, reference
@@ -82,6 +101,8 @@ pub struct RunRecord {
     pub edge_sum_delay_s: f64,
     pub edge_sum_energy_j: f64,
     pub episode: Option<EpisodeRecord>,
+    /// Dynamic serving block (None on the legacy static path).
+    pub dynamics: Option<DynamicsRecord>,
     /// Wall-clock planning time. Deliberately excluded from the CSV so rows
     /// stay byte-identical across thread counts and machines.
     pub plan_wall_s: f64,
@@ -123,6 +144,48 @@ impl RunRecord {
          qoe_violations,qoe_users,sum_dct_s,\
          speedup_vs_device,energy_reduction_vs_device,energy_reduction_vs_edge,\
          ep_n,ep_mean_latency_s,ep_p99_latency_s,ep_mean_queue_s,ep_throughput_rps,ep_qoe_miss_frac"
+    }
+
+    /// Extra column names appended when any record carries dynamics —
+    /// aligned with the tail of [`RunRecord::to_csv_row_dynamic`].
+    pub fn csv_dynamics_columns() -> &'static str {
+        "ep_dropped,dyn_epochs,dyn_peak_active,dyn_mean_active,\
+         dyn_arrivals,dyn_departures,dyn_rate_changes,dyn_handoffs,dyn_qoe_miss_traj"
+    }
+
+    /// Header for grids with dynamic-serving cells.
+    pub fn csv_header_dynamic() -> String {
+        format!("{},{}", Self::csv_header(), Self::csv_dynamics_columns())
+    }
+
+    /// [`RunRecord::to_csv_row`] plus the dynamics columns ("-" when the
+    /// cell ran the static path). The per-epoch QoE-violation trajectory is
+    /// `;`-joined so it stays a single CSV field.
+    pub fn to_csv_row_dynamic(&self) -> String {
+        let f = |v: f64| format!("{v:?}");
+        let ep_dropped = match &self.episode {
+            Some(e) => e.dropped.to_string(),
+            None => "-".to_string(),
+        };
+        let tail = match &self.dynamics {
+            Some(d) => {
+                let traj: Vec<String> =
+                    d.epochs.iter().map(|e| f(e.qoe_miss_frac)).collect();
+                format!(
+                    "{},{},{},{},{},{},{},{}",
+                    d.epochs.len(),
+                    d.peak_active,
+                    f(d.mean_active),
+                    d.churn_arrivals,
+                    d.churn_departures,
+                    d.churn_rate_changes,
+                    d.churn_handoffs,
+                    traj.join(";")
+                )
+            }
+            None => "-,-,-,-,-,-,-,-".to_string(),
+        };
+        format!("{},{},{}", self.to_csv_row(), ep_dropped, tail)
     }
 
     /// One deterministic CSV row (floats in shortest round-trip form).
@@ -177,12 +240,24 @@ impl RunRecord {
     }
 }
 
-/// Render records as a CSV document (header + one row per cell).
+/// Render records as a CSV document (header + one row per cell). Grids
+/// without dynamic-serving cells emit the legacy column set byte-for-byte;
+/// when any cell carries a [`DynamicsRecord`], the dynamics columns are
+/// appended for every row.
 pub fn to_csv(records: &[RunRecord]) -> String {
-    let mut out = String::from(RunRecord::csv_header());
+    let dynamic = records.iter().any(|r| r.dynamics.is_some());
+    let mut out = if dynamic {
+        RunRecord::csv_header_dynamic()
+    } else {
+        RunRecord::csv_header().to_string()
+    };
     out.push('\n');
     for r in records {
-        out.push_str(&r.to_csv_row());
+        if dynamic {
+            out.push_str(&r.to_csv_row_dynamic());
+        } else {
+            out.push_str(&r.to_csv_row());
+        }
         out.push('\n');
     }
     out
@@ -299,28 +374,93 @@ pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::
         offl.iter().map(|d| d.r).sum::<f64>() / offl.len() as f64
     };
 
-    let episode = if spec.episode {
-        let (up, down) = rates_for(cfg, net, &ds, strat.channel_model());
-        let k = cfg.workload.tasks_per_user.round().max(0.0) as usize;
+    let (episode, dynamics) = if spec.episode {
         let trace_seed = spec.trace_seed.unwrap_or(cfg.seed + 1);
-        let trace = crate::trace::fixed_count_trace(cfg, k, trace_seed);
-        let done = crate::sim::run_episode(cfg, net, &model, &ds, &up, &down, &trace);
-        let st = crate::sim::stats(&done, cfg.workload.episode_s);
-        let misses = done
-            .iter()
-            .filter(|c| c.latency() > net.users[c.user].qoe_threshold_s)
-            .count();
-        Some(EpisodeRecord {
-            n: st.n,
-            mean_latency_s: st.mean_latency_s,
-            p50_latency_s: st.p50_latency_s,
-            p99_latency_s: st.p99_latency_s,
-            mean_queue_s: st.mean_queue_s,
-            throughput_rps: st.throughput_rps,
-            qoe_miss_frac: misses as f64 / done.len().max(1) as f64,
-        })
+        if spec.is_dynamic() {
+            // Dynamic serving through `sim::run_dynamic`. With churn the
+            // trace is churn-aware Poisson (`workload.arrival_rate_hz`);
+            // with only a re-plan interval set, the legacy fixed-count
+            // workload is kept so rows stay comparable to the static path
+            // (re-planning, not the workload model, is the variable). The
+            // schedule seed is decoupled from the trace seed so the churn
+            // pattern is stable while the request realization varies.
+            let (schedule, trace) = if spec.episode_churn {
+                let schedule = crate::trace::ChurnSchedule::generate(
+                    cfg,
+                    &net.topo.user_ap,
+                    trace_seed ^ 0x00C4_52A7,
+                );
+                let trace = crate::trace::dynamic_trace(cfg, &schedule, trace_seed);
+                (schedule, trace)
+            } else {
+                let k = cfg.workload.tasks_per_user.round().max(0.0) as usize;
+                (
+                    crate::trace::ChurnSchedule::static_all(net.num_users()),
+                    crate::trace::fixed_count_trace(cfg, k, trace_seed),
+                )
+            };
+            let delta = spec.replan_interval_s.unwrap_or(cfg.workload.episode_s);
+            let dy = crate::sim::run_dynamic(
+                cfg,
+                net,
+                &model,
+                strat.as_ref(),
+                &schedule,
+                &trace,
+                delta,
+            );
+            let st = crate::sim::stats(&dy.outcome.completions, cfg.workload.episode_s);
+            let (arrivals, departures, rate_changes, handoffs) = schedule.counts();
+            let peak_active = dy.epochs.iter().map(|e| e.active_users).max().unwrap_or(0);
+            let mean_active = if dy.epochs.is_empty() {
+                0.0
+            } else {
+                dy.epochs.iter().map(|e| e.active_users).sum::<usize>() as f64
+                    / dy.epochs.len() as f64
+            };
+            (
+                Some(EpisodeRecord {
+                    n: st.n,
+                    mean_latency_s: st.mean_latency_s,
+                    p50_latency_s: st.p50_latency_s,
+                    p99_latency_s: st.p99_latency_s,
+                    mean_queue_s: st.mean_queue_s,
+                    throughput_rps: st.throughput_rps,
+                    qoe_miss_frac: crate::metrics::qoe_miss_frac(&dy.outcome.completions, net),
+                    dropped: dy.outcome.dropped.len(),
+                }),
+                Some(DynamicsRecord {
+                    epochs: dy.epochs,
+                    peak_active,
+                    mean_active,
+                    churn_arrivals: arrivals,
+                    churn_departures: departures,
+                    churn_rate_changes: rate_changes,
+                    churn_handoffs: handoffs,
+                }),
+            )
+        } else {
+            let (up, down) = rates_for(cfg, net, &ds, strat.channel_model());
+            let k = cfg.workload.tasks_per_user.round().max(0.0) as usize;
+            let trace = crate::trace::fixed_count_trace(cfg, k, trace_seed);
+            let done = crate::sim::run_episode(cfg, net, &model, &ds, &up, &down, &trace);
+            let st = crate::sim::stats(&done.completions, cfg.workload.episode_s);
+            (
+                Some(EpisodeRecord {
+                    n: st.n,
+                    mean_latency_s: st.mean_latency_s,
+                    p50_latency_s: st.p50_latency_s,
+                    p99_latency_s: st.p99_latency_s,
+                    mean_queue_s: st.mean_queue_s,
+                    throughput_rps: st.throughput_rps,
+                    qoe_miss_frac: crate::metrics::qoe_miss_frac(&done.completions, net),
+                    dropped: done.dropped.len(),
+                }),
+                None,
+            )
+        }
     } else {
-        None
+        (None, None)
     };
 
     Ok(RunRecord {
@@ -348,6 +488,7 @@ pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::
         edge_sum_delay_s: oe.sum_delay(),
         edge_sum_energy_j: oe.sum_energy(),
         episode,
+        dynamics,
         plan_wall_s,
     })
 }
@@ -493,9 +634,72 @@ mod tests {
         let rec = Engine::new(1).run_one(&spec).unwrap();
         let ep = rec.episode.expect("episode record");
         assert_eq!(ep.n, 10 * 3);
+        assert_eq!(ep.dropped, 0);
+        assert!(rec.dynamics.is_none(), "static path carries no dynamics");
         assert!(ep.mean_latency_s > 0.0);
         assert!(ep.throughput_rps > 0.0);
         assert!((0.0..=1.0).contains(&ep.qoe_miss_frac));
+    }
+
+    #[test]
+    fn dynamic_cells_carry_epoch_trajectories() {
+        let mut base = presets::smoke();
+        base.network.num_users = 10;
+        base.optimizer.max_iters = 20;
+        base.workload.episode_s = 0.5;
+        base.workload.arrival_rate_hz = 30.0;
+        base.churn.initial_active_frac = 0.5;
+        base.churn.arrival_rate_hz = 4.0;
+        base.churn.departure_rate_hz = 0.4;
+        let mut spec = ScenarioSpec::new("dyn", base).with_strategies(&["neurosurgeon"]);
+        spec.episode = true;
+        spec.episode_churn = true;
+        spec.replan_interval_s = Some(0.125);
+        spec.trace_seed = Some(55);
+        let rec = Engine::new(1).run_one(&spec).unwrap();
+        let ep = rec.episode.expect("episode record");
+        let dy = rec.dynamics.expect("dynamics record");
+        assert_eq!(dy.epochs.len(), 4, "0.5 s / 0.125 s");
+        let total: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(total, ep.n + ep.dropped, "epoch buckets conserve the trace");
+        assert!(dy.peak_active >= 1 && dy.peak_active <= 10);
+        assert!(dy.mean_active > 0.0);
+        for e in &dy.epochs {
+            assert!((0.0..=1.0).contains(&e.qoe_miss_frac));
+        }
+    }
+
+    #[test]
+    fn dynamic_csv_appends_columns_static_csv_does_not() {
+        let spec = tiny_spec();
+        let recs = Engine::new(1).run(&spec).unwrap();
+        let csv = to_csv(&recs);
+        assert_eq!(csv.lines().next().unwrap(), RunRecord::csv_header());
+        assert!(!csv.contains("dyn_epochs"));
+
+        let mut base = presets::smoke();
+        base.network.num_users = 8;
+        base.optimizer.max_iters = 20;
+        base.workload.episode_s = 0.25;
+        base.workload.tasks_per_user = 4.0; // replan-only keeps fixed-count
+        let mut dspec = ScenarioSpec::new("dyncsv", base).with_strategies(&["device-only"]);
+        dspec.episode = true;
+        dspec.replan_interval_s = Some(0.125);
+        let drecs = Engine::new(1).run(&dspec).unwrap();
+        let ep = drecs[0].episode.as_ref().expect("episode");
+        assert_eq!(
+            ep.n + ep.dropped,
+            8 * 4,
+            "replan-only cells keep the fixed-count workload"
+        );
+        let dcsv = to_csv(&drecs);
+        let header = dcsv.lines().next().unwrap().to_string();
+        assert_eq!(header, RunRecord::csv_header_dynamic());
+        assert!(header.contains("dyn_qoe_miss_traj"));
+        let cols = header.split(',').count();
+        for line in dcsv.lines() {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
     }
 
     #[test]

@@ -22,5 +22,7 @@ pub mod engine;
 pub mod presets;
 pub mod spec;
 
-pub use engine::{expand, run_cell, run_cell_net, to_csv, Cell, Engine, EpisodeRecord, RunRecord};
+pub use engine::{
+    expand, run_cell, run_cell_net, to_csv, Cell, DynamicsRecord, Engine, EpisodeRecord, RunRecord,
+};
 pub use spec::{Axis, ScenarioSpec};

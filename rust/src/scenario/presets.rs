@@ -11,6 +11,7 @@ pub const NAMES: &[&str] = &[
     "density",
     "qoe-sweep",
     "workload",
+    "churn",
     "ligd",
 ];
 
@@ -68,6 +69,32 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
             spec.episode = true;
             Some(spec)
         }
+        // Dynamic serving under churn: half the population online at t=0, a
+        // flash-crowd-style activation stream, departures, per-user traffic
+        // rescaling and AP handoffs, re-planned every 125 ms on the live
+        // user set. The axis sweeps the activation rate (calm → crowded);
+        // the pool is sized small so overload actually queues.
+        "churn" => {
+            let mut base = cfg::smoke();
+            base.network.num_users = 40;
+            base.optimizer.max_iters = 60;
+            base.compute.edge_pool_units = 16.0;
+            base.workload.episode_s = 1.0;
+            base.workload.arrival_rate_hz = 25.0;
+            base.churn.initial_active_frac = 0.4;
+            base.churn.arrival_rate_hz = 10.0;
+            base.churn.departure_rate_hz = 0.25;
+            base.churn.rate_change_hz = 0.2;
+            base.churn.handoff_hz = 0.1;
+            let mut spec = ScenarioSpec::new("churn", base)
+                .with_strategies(&["era", "neurosurgeon", "edge-only"])
+                .with_axis_f64("churn.arrival_rate_hz", &[4.0, 10.0]);
+            spec.episode = true;
+            spec.episode_churn = true;
+            spec.replan_interval_s = Some(0.125);
+            spec.trace_seed = Some(4242);
+            Some(spec)
+        }
         // Li-GD vs cold-start GD iteration comparison (Corollary 4).
         "ligd" => Some(
             ScenarioSpec::new("ligd", cfg::smoke()).with_strategies(&["era", "era-cold"]),
@@ -90,6 +117,19 @@ mod tests {
             assert!(!cells.is_empty(), "{name}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn churn_preset_is_dynamic() {
+        let spec = by_name("churn").unwrap();
+        assert!(spec.episode && spec.episode_churn);
+        assert!(spec.is_dynamic());
+        assert_eq!(spec.replan_interval_s, Some(0.125));
+        assert!(spec.base.churn.any());
+        // round-trips through the TOML grammar like every other preset
+        let text = spec.to_toml();
+        let reparsed = ScenarioSpec::from_str(&text).unwrap();
+        assert_eq!(reparsed, spec);
     }
 
     #[test]

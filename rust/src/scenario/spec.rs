@@ -17,6 +17,8 @@
 //! seeds = 3                          # replicates: base.seed, +1, +2
 //! # seeds = [7, 11, 13]              # ...or explicit seed list
 //! episode = true                     # run the DES episode per cell
+//! episode.churn = true               # dynamic serving: churn-driven trace
+//! episode.replan_interval_s = 0.25   # dynamic serving: re-plan epoch length
 //! seed_axis = "workload.model"       # offset net seed by this axis' index
 //! trace_seed = 301                   # fixed episode trace seed
 //! seed = 42                          # base config seed
@@ -68,6 +70,18 @@ pub struct ScenarioSpec {
     /// Run the discrete-event serving episode in every cell
     /// (`workload.tasks_per_user` tasks per user through `sim::run_episode`).
     pub episode: bool,
+    /// Dynamic serving: drive the episode with a churn schedule sampled
+    /// from the base config's `[churn]` section (TOML key `episode.churn`).
+    /// The trace becomes churn-aware Poisson (`workload.arrival_rate_hz`)
+    /// instead of fixed-count.
+    pub episode_churn: bool,
+    /// Dynamic serving: re-plan every `Δ` seconds on the currently-active
+    /// user set (TOML key `episode.replan_interval_s`). `None` = plan once
+    /// for the whole episode. Setting either this or `episode_churn`
+    /// switches the cell onto `sim::run_dynamic`; with churn off the
+    /// legacy fixed-count workload is kept, so re-planning is the only
+    /// variable vs the static path.
+    pub replan_interval_s: Option<f64>,
     /// Axis key whose value index additionally offsets the cell's network
     /// seed (paper figures that re-draw the network per sweep point).
     pub seed_axis: Option<String>,
@@ -85,6 +99,8 @@ const TOP_KEYS: &[&str] = &[
     "strategies",
     "seeds",
     "episode",
+    "episode.churn",
+    "episode.replan_interval_s",
     "seed_axis",
     "trace_seed",
     "plan_threads",
@@ -102,10 +118,18 @@ impl ScenarioSpec {
             axes: Vec::new(),
             seeds: vec![seed],
             episode: false,
+            episode_churn: false,
+            replan_interval_s: None,
             seed_axis: None,
             trace_seed: None,
             plan_threads: 1,
         }
+    }
+
+    /// True when the episode runs through the dynamic serving engine
+    /// (`sim::run_dynamic`) rather than the legacy static path.
+    pub fn is_dynamic(&self) -> bool {
+        self.episode_churn || self.replan_interval_s.is_some()
     }
 
     /// Replace the strategy list.
@@ -240,6 +264,16 @@ impl ScenarioSpec {
                 .as_bool()
                 .ok_or_else(|| anyhow::anyhow!("episode must be a boolean"))?;
         }
+        if let Some(v) = top.get("episode.churn") {
+            spec.episode_churn = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("episode.churn must be a boolean"))?;
+        }
+        if let Some(v) = top.get("episode.replan_interval_s") {
+            spec.replan_interval_s = Some(v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("episode.replan_interval_s must be a number")
+            })?);
+        }
         if let Some(v) = top.get("seed_axis") {
             spec.seed_axis = Some(
                 v.as_str()
@@ -331,6 +365,18 @@ impl ScenarioSpec {
                 "seed_axis `{k}` does not name a sweep axis"
             );
         }
+        if let Some(d) = self.replan_interval_s {
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "episode.replan_interval_s must be a positive number (got {d})"
+            );
+        }
+        if self.is_dynamic() {
+            anyhow::ensure!(
+                self.episode,
+                "episode.churn / episode.replan_interval_s require episode = true"
+            );
+        }
         self.base.validate()?;
         Ok(())
     }
@@ -350,6 +396,15 @@ impl ScenarioSpec {
         let seeds: Vec<String> = self.seeds.iter().map(|x| x.to_string()).collect();
         s.push_str(&format!("seeds = [{}]\n", seeds.join(", ")));
         s.push_str(&format!("episode = {}\n", self.episode));
+        if self.episode_churn {
+            s.push_str("episode.churn = true\n");
+        }
+        if let Some(d) = self.replan_interval_s {
+            s.push_str(&format!(
+                "episode.replan_interval_s = {}\n",
+                TomlValue::Float(d).to_toml()
+            ));
+        }
         if let Some(k) = &self.seed_axis {
             s.push_str(&format!("seed_axis = {k:?}\n"));
         }
@@ -401,6 +456,8 @@ mod tests {
             strategies = ["era", "neurosurgeon"]
             seeds = 2
             episode = true
+            episode.churn = true
+            episode.replan_interval_s = 0.25
             seed = 100
             trace_seed = 7
             [sweep]
@@ -408,17 +465,33 @@ mod tests {
             workload.model = ["nin", "yolov2"]
             [qoe]
             expected_finish_jitter = 0.0
+            [churn]
+            arrival_rate_hz = 3.0
             "#,
         )
         .unwrap();
         assert_eq!(spec.base.network.num_aps, 2, "smoke preset applied");
         assert_eq!(spec.base.qoe.expected_finish_jitter, 0.0, "overlay applied");
+        assert_eq!(spec.base.churn.arrival_rate_hz, 3.0, "churn overlay applied");
         assert_eq!(spec.base.seed, 100);
         assert_eq!(spec.seeds, vec![100, 101]);
         assert_eq!(spec.axes.len(), 2);
         assert_eq!(spec.num_cells(), 2 * 2 * 2 * 2);
         assert!(spec.episode);
+        assert!(spec.episode_churn);
+        assert!(spec.is_dynamic());
+        assert_eq!(spec.replan_interval_s, Some(0.25));
         assert_eq!(spec.trace_seed, Some(7));
+    }
+
+    #[test]
+    fn dynamic_keys_require_episode_and_positive_interval() {
+        let e = ScenarioSpec::from_str("episode.churn = true\n").unwrap_err();
+        assert!(e.to_string().contains("require episode = true"), "{e}");
+        let e =
+            ScenarioSpec::from_str("episode = true\nepisode.replan_interval_s = 0.0\n")
+                .unwrap_err();
+        assert!(e.to_string().contains("positive"), "{e}");
     }
 
     #[test]
@@ -429,6 +502,8 @@ mod tests {
             .with_axis_str("workload.model", &["nin", "vgg16"])
             .with_replicates(3);
         spec.episode = true;
+        spec.episode_churn = true;
+        spec.replan_interval_s = Some(0.125);
         spec.seed_axis = Some("network.num_users".into());
         spec.trace_seed = Some(12);
         spec.plan_threads = 2;

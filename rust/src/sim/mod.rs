@@ -3,14 +3,24 @@
 //! The static evaluation (`metrics::evaluate`) scores one inference per user
 //! in isolation; this module adds the *dynamics*: queueing for the per-AP
 //! edge resource pool and per-channel airtime when a trace of requests flows
-//! through the decisions. It powers the workload sweeps (Fig.16/19) and the
-//! serving example's latency/throughput report.
+//! through the decisions. It powers the workload sweeps (Fig.16/19), the
+//! serving example's latency/throughput report, and — via [`run_dynamic`] —
+//! the epoch-driven dynamic serving engine (churn + re-planning,
+//! DESIGN.md §2c).
+//!
+//! **Request conservation.** Every request in the trace is accounted for:
+//! it either appears in [`EpisodeOutcome::completions`] or in
+//! [`EpisodeOutcome::dropped`] (with a reason), and the DES asserts
+//! `completed + dropped == trace length`. Admission clamps a request's edge
+//! resource demand to the pool size, so no waiter can starve forever behind
+//! an unsatisfiable demand — the silent-loss bug this module used to have
+//! under overload.
 
-use crate::baselines::Decision;
+use crate::baselines::{Decision, Strategy};
 use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
-use crate::trace::Request;
+use crate::trace::{ChurnEventKind, ChurnSchedule, Request};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -31,6 +41,32 @@ impl Completion {
     pub fn latency(&self) -> f64 {
         self.finish_s - self.arrival_s
     }
+}
+
+/// Why a request was rejected at admission instead of simulated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// A phase duration was NaN/∞ (e.g. a zero-rate link): the request can
+    /// never finish, so it is rejected up front instead of corrupting the
+    /// event heap or starving in the pool queue.
+    NonFinitePhase,
+}
+
+/// A request that was explicitly rejected (never silently lost).
+#[derive(Clone, Copy, Debug)]
+pub struct DroppedRequest {
+    pub id: u64,
+    pub user: usize,
+    pub arrival_s: f64,
+    pub reason: DropReason,
+}
+
+/// Conservation-checked result of one episode: every trace request is in
+/// exactly one of the two lists.
+#[derive(Clone, Debug, Default)]
+pub struct EpisodeOutcome {
+    pub completions: Vec<Completion>,
+    pub dropped: Vec<DroppedRequest>,
 }
 
 #[derive(Debug)]
@@ -64,12 +100,11 @@ impl PartialOrd for Ev {
 }
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap on (time, insertion order)
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        // min-heap on (time, insertion order). `total_cmp` is a total order
+        // even for NaN, so a pathological timestamp can no longer corrupt
+        // the heap invariant (admission additionally rejects non-finite
+        // phases, so in practice every `t` here is finite).
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -96,63 +131,84 @@ impl EventQueue {
     }
 }
 
-/// Run the trace through the decisions and return per-request completions.
-///
-/// Uses the static per-user link rates (the coherence block of the episode)
-/// and models the edge pool as a per-AP counting semaphore with FIFO
-/// queueing — the serving-relevant contention the paper's λ(r) abstracts.
-pub fn run_episode(
+/// Pre-computed per-request phase durations under one plan.
+struct Phases {
+    pre_edge_s: f64,  // device compute + uplink
+    edge_s: f64,      // edge compute
+    post_edge_s: f64, // downlink
+    r: f64,
+    ap: usize,
+    offloads: bool,
+}
+
+/// Phase durations of one request under a concrete decision + link rates.
+/// The edge resource demand is clamped to `[r_min, edge_pool_units]` at
+/// admission: a demand above the whole pool could otherwise never be
+/// granted and the request would starve in the FIFO queue forever.
+fn phases_for(
     cfg: &Config,
     net: &Network,
     model: &ModelProfile,
-    decisions: &[Decision],
+    d: &Decision,
+    user: usize,
     rates_up: &[f64],
     rates_down: &[f64],
-    trace: &[Request],
-) -> Vec<Completion> {
+) -> Phases {
+    let sc = model.split_constants(d.split);
+    let dev = crate::latency::device_delay(&sc, net.users[user].device_flops);
+    let up = crate::latency::uplink_delay(sc.cut_bits, rates_up[user]);
+    let r = d
+        .r
+        .max(cfg.compute.r_min)
+        .min(cfg.compute.edge_pool_units);
+    let edge = crate::latency::server_delay(&sc, r, &cfg.compute);
+    let down = crate::latency::downlink_delay(
+        cfg.compute.result_bits,
+        rates_down[user],
+        sc.edge_flops,
+    );
+    Phases {
+        pre_edge_s: dev + up,
+        edge_s: edge,
+        post_edge_s: down,
+        r,
+        ap: net.topo.user_ap[user],
+        offloads: sc.edge_flops > 0.0,
+    }
+}
+
+/// The DES core: run `trace` (one pre-computed [`Phases`] per request)
+/// through the per-AP edge pools. Pure and deterministic; asserts request
+/// conservation before returning.
+fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome {
+    debug_assert_eq!(phases.len(), trace.len());
     let n_aps = cfg.network.num_aps;
     let mut pool = vec![cfg.compute.edge_pool_units; n_aps];
-    let mut waiting: Vec<std::collections::VecDeque<usize>> =
-        vec![Default::default(); n_aps];
+    let mut waiting: Vec<std::collections::VecDeque<usize>> = vec![Default::default(); n_aps];
     let mut heap = EventQueue::default();
     let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
-
-    // Pre-compute per-request phase durations.
-    struct Phases {
-        pre_edge_s: f64,  // device compute + uplink
-        edge_s: f64,      // edge compute
-        post_edge_s: f64, // downlink
-        r: f64,
-        ap: usize,
-        offloads: bool,
-    }
-    let phases: Vec<Phases> = trace
-        .iter()
-        .map(|rq| {
-            let d = &decisions[rq.user];
-            let sc = model.split_constants(d.split);
-            let dev = crate::latency::device_delay(&sc, net.users[rq.user].device_flops);
-            let up = crate::latency::uplink_delay(sc.cut_bits, rates_up[rq.user]);
-            let edge = crate::latency::server_delay(&sc, d.r.max(cfg.compute.r_min), &cfg.compute);
-            let down = crate::latency::downlink_delay(
-                cfg.compute.result_bits,
-                rates_down[rq.user],
-                sc.edge_flops,
-            );
-            Phases {
-                pre_edge_s: dev + up,
-                edge_s: edge,
-                post_edge_s: down,
-                r: d.r.max(cfg.compute.r_min),
-                ap: net.topo.user_ap[rq.user],
-                offloads: sc.edge_flops > 0.0,
-            }
-        })
-        .collect();
+    let mut dropped: Vec<DroppedRequest> = Vec::new();
     let mut edge_start = vec![0.0f64; trace.len()];
 
     for (idx, rq) in trace.iter().enumerate() {
         let ph = &phases[idx];
+        let finite = rq.arrival_s.is_finite()
+            && ph.pre_edge_s.is_finite()
+            && (!ph.offloads
+                || (ph.edge_s.is_finite() && ph.post_edge_s.is_finite() && ph.r.is_finite()));
+        if !finite {
+            dropped.push(DroppedRequest {
+                id: rq.id,
+                user: rq.user,
+                arrival_s: rq.arrival_s,
+                reason: DropReason::NonFinitePhase,
+            });
+            continue;
+        }
+        debug_assert!(
+            !ph.offloads || ph.r <= cfg.compute.edge_pool_units,
+            "admission must clamp r to the pool size"
+        );
         if ph.offloads {
             heap.push(rq.arrival_s + ph.pre_edge_s, EvKind::EdgeArrive { req: idx });
         } else {
@@ -184,8 +240,7 @@ pub fn run_episode(
                 let ph = &phases[req];
                 pool[ph.ap] += ph.r;
                 let rq = &trace[req];
-                let queue_s =
-                    (edge_start[req] - (rq.arrival_s + ph.pre_edge_s)).max(0.0);
+                let queue_s = (edge_start[req] - (rq.arrival_s + ph.pre_edge_s)).max(0.0);
                 completions.push(Completion {
                     id: rq.id,
                     user: rq.user,
@@ -210,8 +265,213 @@ pub fn run_episode(
         }
     }
 
+    assert_eq!(
+        completions.len() + dropped.len(),
+        trace.len(),
+        "DES lost requests: {} completed + {} dropped != {} traced",
+        completions.len(),
+        dropped.len(),
+        trace.len()
+    );
     completions.sort_by(|a, b| a.id.cmp(&b.id));
-    completions
+    dropped.sort_by(|a, b| a.id.cmp(&b.id));
+    EpisodeOutcome {
+        completions,
+        dropped,
+    }
+}
+
+/// Run the trace through one static plan and return the conservation-checked
+/// outcome (see [`EpisodeOutcome`]).
+///
+/// Uses the static per-user link rates (the coherence block of the episode)
+/// and models the edge pool as a per-AP counting semaphore — the
+/// serving-relevant contention the paper's λ(r) abstracts. Admission is
+/// *work-conserving*: a newly arriving request that fits the free pool is
+/// served immediately even while larger requests wait (waiters themselves
+/// drain strictly FIFO with head-of-line blocking), so a blocked big-`r`
+/// waiter can be overtaken by later small-`r` arrivals — visible as extra
+/// `queue_s` under heterogeneous-`r` overload.
+pub fn run_episode(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    decisions: &[Decision],
+    rates_up: &[f64],
+    rates_down: &[f64],
+    trace: &[Request],
+) -> EpisodeOutcome {
+    let phases: Vec<Phases> = trace
+        .iter()
+        .map(|rq| phases_for(cfg, net, model, &decisions[rq.user], rq.user, rates_up, rates_down))
+        .collect();
+    run_des(cfg, &phases, trace)
+}
+
+/// Per-epoch snapshot of the dynamic serving engine: who was active, what
+/// the re-plan cost, and how the epoch's cohort of requests fared.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub t_start_s: f64,
+    pub active_users: usize,
+    pub offloaders: usize,
+    pub cohorts: usize,
+    pub gd_iters: usize,
+    /// Wall-clock re-planning time (never emitted in deterministic CSV).
+    pub plan_wall_s: f64,
+    /// Requests arriving in this epoch.
+    pub requests: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub mean_latency_s: f64,
+    pub mean_queue_s: f64,
+    /// Fraction of this epoch's completions exceeding the user's QoE
+    /// threshold — the QoE-violation trajectory across epochs.
+    pub qoe_miss_frac: f64,
+}
+
+/// Result of a dynamic (epoch-driven) episode.
+#[derive(Clone, Debug)]
+pub struct DynamicOutcome {
+    pub outcome: EpisodeOutcome,
+    pub epochs: Vec<EpochRecord>,
+}
+
+/// The dynamic serving engine: split the episode into epochs of
+/// `replan_interval_s`, re-plan at each epoch start on the currently-active
+/// user set (via [`Strategy::decide_masked`] — ERA re-solves with the
+/// persistent `LigdWorkspace` pools warm), and run ONE discrete-event pass
+/// over the whole trace in which each request uses the plan of the epoch it
+/// arrived in. Queue/pool state carries across epoch boundaries, so a
+/// flash crowd admitted in epoch `e` still congests epoch `e+1`.
+///
+/// Handoffs in the schedule take effect at the next epoch boundary (the
+/// network is cloned once and `user_ap` re-assigned); arrivals mid-epoch
+/// are served device-only until the next re-plan picks them up, exactly as
+/// a real coordinator would.
+///
+/// Deterministic in `(cfg, net, schedule, trace, Δ)` — no wall-clock state
+/// feeds back into results.
+pub fn run_dynamic(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    strat: &dyn Strategy,
+    schedule: &ChurnSchedule,
+    trace: &[Request],
+    replan_interval_s: f64,
+) -> DynamicOutcome {
+    let episode_s = cfg.workload.episode_s.max(1e-9);
+    let delta = if replan_interval_s.is_finite() && replan_interval_s > 0.0 {
+        replan_interval_s.min(episode_s)
+    } else {
+        episode_s
+    };
+    let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
+    // The single forward cursor below assigns requests to epochs; an
+    // unsorted trace would silently get the wrong epoch's plan.
+    assert!(
+        trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        "run_dynamic requires a trace sorted by arrival_s"
+    );
+
+    // Handoffs mutate the association; everything else reads `net` shared.
+    let mut net_dyn: Option<Network> = if schedule.has_handoffs() {
+        Some(net.clone())
+    } else {
+        None
+    };
+
+    let mut phases: Vec<Phases> = Vec::with_capacity(trace.len());
+    let mut epoch_of_id: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::with_capacity(trace.len());
+    let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
+    let mut next_req = 0usize; // trace cursor
+    // Incrementally replayed schedule state (events are time-sorted):
+    // the activity mask and — when handoffs exist — the association.
+    let mut active = schedule.initial_active.clone();
+    let mut next_ev = 0usize;
+    for e in 0..n_epochs {
+        let t0 = e as f64 * delta;
+        let t1 = if e + 1 == n_epochs {
+            f64::INFINITY
+        } else {
+            t0 + delta
+        };
+        while next_ev < schedule.events.len() && schedule.events[next_ev].t_s <= t0 {
+            let ev = &schedule.events[next_ev];
+            match ev.kind {
+                ChurnEventKind::Arrive => active[ev.user] = true,
+                ChurnEventKind::Depart => active[ev.user] = false,
+                ChurnEventKind::RateChange { .. } => {}
+                ChurnEventKind::Handoff { ap } => {
+                    if let Some(nd) = net_dyn.as_mut() {
+                        nd.topo.user_ap[ev.user] = ap;
+                    }
+                }
+            }
+            next_ev += 1;
+        }
+        let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
+        let tp = std::time::Instant::now();
+        let (ds, info) = strat.decide_masked(cfg, net_e, model, &active);
+        let plan_wall_s = tp.elapsed().as_secs_f64();
+        let (up, down) = crate::metrics::rates_for(cfg, net_e, &ds, strat.channel_model());
+        let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
+        let start_req = next_req;
+        while next_req < trace.len() && trace[next_req].arrival_s < t1 {
+            let rq = &trace[next_req];
+            phases.push(phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down));
+            epoch_of_id.insert(rq.id, e);
+            next_req += 1;
+        }
+        epochs.push(EpochRecord {
+            epoch: e,
+            t_start_s: t0,
+            active_users: active.iter().filter(|&&a| a).count(),
+            offloaders,
+            cohorts: info.cohorts,
+            gd_iters: info.gd_iters,
+            plan_wall_s,
+            requests: next_req - start_req,
+            completed: 0,
+            dropped: 0,
+            mean_latency_s: 0.0,
+            mean_queue_s: 0.0,
+            qoe_miss_frac: 0.0,
+        });
+    }
+    debug_assert_eq!(next_req, trace.len(), "last epoch captures all arrivals");
+
+    let outcome = run_des(cfg, &phases, trace);
+
+    // Bucket per-epoch serving stats by arrival epoch. QoE thresholds live
+    // on the immutable base network (handoffs never change them).
+    let mut lat_sum = vec![0.0f64; n_epochs];
+    let mut queue_sum = vec![0.0f64; n_epochs];
+    let mut miss = vec![0usize; n_epochs];
+    for c in &outcome.completions {
+        let e = epoch_of_id[&c.id];
+        epochs[e].completed += 1;
+        lat_sum[e] += c.latency();
+        queue_sum[e] += c.queue_s;
+        if c.latency() > net.users[c.user].qoe_threshold_s {
+            miss[e] += 1;
+        }
+    }
+    for d in &outcome.dropped {
+        epochs[epoch_of_id[&d.id]].dropped += 1;
+    }
+    for (e, rec) in epochs.iter_mut().enumerate() {
+        if rec.completed > 0 {
+            rec.mean_latency_s = lat_sum[e] / rec.completed as f64;
+            rec.mean_queue_s = queue_sum[e] / rec.completed as f64;
+            rec.qoe_miss_frac = miss[e] as f64 / rec.completed as f64;
+        }
+    }
+
+    DynamicOutcome { outcome, epochs }
 }
 
 /// Aggregate serving statistics.
@@ -271,8 +531,9 @@ mod tests {
         let tr = fixed_count_trace(&cfg, 2, 3);
         let (up, down) = rates_of(&cfg, &net, &model, &ds);
         let done = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
-        assert_eq!(done.len(), tr.len());
-        for c in &done {
+        assert_eq!(done.completions.len(), tr.len());
+        assert!(done.dropped.is_empty());
+        for c in &done.completions {
             assert!(c.finish_s >= c.arrival_s);
             assert!(c.service_s > 0.0);
         }
@@ -309,8 +570,8 @@ mod tests {
         let tr = fixed_count_trace(&cfg, 4, 5);
         let up = vec![f64::INFINITY; net.num_users()];
         let done = run_episode(&cfg, &net, &model, &ds, &up, &up, &tr);
-        assert_eq!(done.len(), tr.len());
-        for c in &done {
+        assert_eq!(done.completions.len(), tr.len());
+        for c in &done.completions {
             assert_eq!(c.queue_s, 0.0);
         }
     }
@@ -337,13 +598,13 @@ mod tests {
             .collect();
         let a = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
         let b = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
-        assert_eq!(a.len(), tr.len());
-        for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(a.completions.len(), tr.len());
+        for (x, y) in a.completions.iter().zip(b.completions.iter()) {
             assert_eq!(x.id, y.id);
             assert_eq!(x.finish_s, y.finish_s, "non-deterministic tie-break");
         }
         // FIFO under ties: earlier-submitted requests never finish later.
-        for w in a.windows(2) {
+        for w in a.completions.windows(2) {
             assert!(w[0].finish_s <= w[1].finish_s + 1e-12);
         }
     }
@@ -354,14 +615,115 @@ mod tests {
         let ds = Neurosurgeon.decide(&cfg, &net, &model);
         let (up, down) = rates_of(&cfg, &net, &model, &ds);
         let light = stats(
-            &run_episode(&cfg, &net, &model, &ds, &up, &down, &fixed_count_trace(&cfg, 1, 7)),
+            &run_episode(&cfg, &net, &model, &ds, &up, &down, &fixed_count_trace(&cfg, 1, 7))
+                .completions,
             cfg.workload.episode_s,
         );
         let heavy = stats(
-            &run_episode(&cfg, &net, &model, &ds, &up, &down, &fixed_count_trace(&cfg, 30, 7)),
+            &run_episode(&cfg, &net, &model, &ds, &up, &down, &fixed_count_trace(&cfg, 30, 7))
+                .completions,
             cfg.workload.episode_s,
         );
         assert!(heavy.mean_queue_s >= light.mean_queue_s);
         assert!(heavy.n == 30 * cfg.network.num_users);
+    }
+
+    #[test]
+    fn oversized_demand_is_clamped_not_starved() {
+        // Regression for the silent-loss bug: a request whose r exceeds the
+        // whole pool used to starve forever and vanish from `completions`.
+        let (mut cfg, net, model) = setup();
+        cfg.compute.edge_pool_units = 2.0; // far below r_max = 16
+        let ds = Neurosurgeon.decide(&cfg, &net, &model);
+        let (up, down) = rates_of(&cfg, &net, &model, &ds);
+        let tr = fixed_count_trace(&cfg, 8, 13);
+        let done = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
+        assert_eq!(
+            done.completions.len() + done.dropped.len(),
+            tr.len(),
+            "conservation"
+        );
+        assert!(done.dropped.is_empty(), "finite phases never drop");
+        assert_eq!(done.completions.len(), tr.len());
+    }
+
+    #[test]
+    fn non_finite_phases_are_explicit_drops() {
+        // A zero-rate uplink makes the uplink phase infinite: the request
+        // must surface as an explicit drop, not a lost heap entry.
+        let (cfg, net, model) = setup();
+        let ds = Neurosurgeon.decide(&cfg, &net, &model);
+        let user = (0..net.num_users())
+            .find(|&u| ds[u].offloads(&model))
+            .expect("an offloader");
+        let zero_up = vec![0.0; net.num_users()];
+        let down = vec![1e6; net.num_users()];
+        let tr: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                user,
+                arrival_s: 0.0,
+            })
+            .collect();
+        let done = run_episode(&cfg, &net, &model, &ds, &zero_up, &down, &tr);
+        assert_eq!(done.completions.len() + done.dropped.len(), tr.len());
+        assert_eq!(done.dropped.len(), tr.len());
+        assert!(done
+            .dropped
+            .iter()
+            .all(|d| d.reason == DropReason::NonFinitePhase));
+    }
+
+    #[test]
+    fn dynamic_single_epoch_matches_static_episode() {
+        // With a static schedule and Δ = episode_s the dynamic engine is
+        // one plan + one DES pass — bit-identical to run_episode.
+        let (cfg, net, model) = setup();
+        let strat = Neurosurgeon;
+        let ds = strat.decide(&cfg, &net, &model);
+        let (up, down) = crate::metrics::rates_for(&cfg, &net, &ds, strat.channel_model());
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 17);
+        let stat = run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
+        let dynr = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, cfg.workload.episode_s);
+        assert_eq!(dynr.epochs.len(), 1);
+        assert_eq!(dynr.outcome.completions.len(), stat.completions.len());
+        for (a, b) in dynr.outcome.completions.iter().zip(stat.completions.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish_s, b.finish_s);
+            assert_eq!(a.queue_s, b.queue_s);
+        }
+    }
+
+    #[test]
+    fn dynamic_epochs_conserve_and_replan() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 1.0;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.churn.initial_active_frac = 0.5;
+        cfg.churn.arrival_rate_hz = 6.0;
+        cfg.churn.departure_rate_hz = 0.3;
+        cfg.churn.rate_change_hz = 0.2;
+        cfg.churn.handoff_hz = 0.2;
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, 41);
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 42);
+        let strat = Neurosurgeon;
+        let dynr = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.25);
+        assert_eq!(dynr.epochs.len(), 4);
+        let total_req: usize = dynr.epochs.iter().map(|e| e.requests).sum();
+        assert_eq!(total_req, tr.len());
+        let total_done: usize = dynr.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(
+            total_done,
+            dynr.outcome.completions.len() + dynr.outcome.dropped.len()
+        );
+        assert_eq!(total_done, tr.len(), "epoch buckets conserve the trace");
+        // determinism of the whole dynamic pipeline
+        let again = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.25);
+        for (a, b) in dynr.epochs.iter().zip(again.epochs.iter()) {
+            assert_eq!(a.active_users, b.active_users);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.mean_latency_s, b.mean_latency_s);
+        }
     }
 }

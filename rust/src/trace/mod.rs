@@ -1,6 +1,8 @@
 //! Workload generation (paper §V setup): inference requests from mobile
 //! users, Poisson arrivals for the serving simulator, fixed task counts for
-//! the workload sweeps (Fig.16/19).
+//! the workload sweeps (Fig.16/19), and — for the dynamic serving engine —
+//! churn schedules (user arrival/departure, per-user traffic rescaling,
+//! AP handoff) with the churn-aware request trace they induce.
 
 use crate::config::Config;
 use crate::util::rng::Pcg32;
@@ -58,6 +60,269 @@ pub fn fixed_count_trace(cfg: &Config, k: usize, seed: u64) -> Vec<Request> {
     out
 }
 
+/// One churn event. Events are the *schedule* of the dynamic serving
+/// engine: the epoch loop replays them to know who is active (and where)
+/// at each re-planning instant, and the trace generator replays them to
+/// emit requests only while a user is active.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnEventKind {
+    /// User joins the active population.
+    Arrive,
+    /// User leaves the active population.
+    Depart,
+    /// User's request rate is rescaled to `factor` × the base rate.
+    RateChange { factor: f64 },
+    /// User hands off to AP `ap` (takes effect at the next re-plan).
+    Handoff { ap: usize },
+}
+
+/// A timestamped churn event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnEvent {
+    pub t_s: f64,
+    pub user: usize,
+    pub kind: ChurnEventKind,
+}
+
+/// Deterministic churn schedule over one episode: initial activity mask +
+/// a time-sorted event list.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnSchedule {
+    pub initial_active: Vec<bool>,
+    /// Sorted ascending by `t_s` (generation emits them in time order).
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    /// The static population: everyone active, nothing ever changes.
+    pub fn static_all(num_users: usize) -> Self {
+        Self {
+            initial_active: vec![true; num_users],
+            events: Vec::new(),
+        }
+    }
+
+    /// Sample a schedule from `cfg.churn` as a continuous-time Markov
+    /// chain: competing exponential clocks for system-wide activations and
+    /// per-active-user departures / rate changes / handoffs. Deterministic
+    /// in `(cfg, user_ap, seed)`. `user_ap` supplies each user's starting
+    /// cell so handoffs always move to a *different* AP.
+    pub fn generate(cfg: &Config, user_ap: &[usize], seed: u64) -> Self {
+        let ch = &cfg.churn;
+        let n = user_ap.len();
+        let n_aps = cfg.network.num_aps;
+        let mut rng = Pcg32::new(seed, 0xC4E2);
+        let frac = ch.initial_active_frac.clamp(0.0, 1.0);
+        let mut active: Vec<bool> = (0..n).map(|_| rng.f64() < frac).collect();
+        if frac > 0.0 && n > 0 && !active.iter().any(|&a| a) {
+            // tiny populations can draw an empty start; keep one user so a
+            // churn-free dynamic episode is never vacuously empty
+            let u = rng.below(n);
+            active[u] = true;
+        }
+        let initial_active = active.clone();
+        let mut cur_ap: Vec<usize> = user_ap.to_vec();
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            let n_active = active.iter().filter(|&&a| a).count();
+            let n_inactive = n - n_active;
+            let ra = if n_inactive > 0 { ch.arrival_rate_hz } else { 0.0 };
+            let rd = ch.departure_rate_hz * n_active as f64;
+            let rr = ch.rate_change_hz * n_active as f64;
+            let rh = if n_aps > 1 {
+                ch.handoff_hz * n_active as f64
+            } else {
+                0.0
+            };
+            let total = ra + rd + rr + rh;
+            if total <= 0.0 {
+                break;
+            }
+            t += rng.exponential(total);
+            if t >= cfg.workload.episode_s {
+                break;
+            }
+            let pick = rng.f64() * total;
+            if pick < ra {
+                let user = nth_with(&active, false, rng.below(n_inactive));
+                active[user] = true;
+                events.push(ChurnEvent {
+                    t_s: t,
+                    user,
+                    kind: ChurnEventKind::Arrive,
+                });
+            } else if pick < ra + rd {
+                let user = nth_with(&active, true, rng.below(n_active));
+                active[user] = false;
+                events.push(ChurnEvent {
+                    t_s: t,
+                    user,
+                    kind: ChurnEventKind::Depart,
+                });
+            } else if pick < ra + rd + rr {
+                let user = nth_with(&active, true, rng.below(n_active));
+                let factor = rng.uniform(ch.rate_factor_lo, ch.rate_factor_hi);
+                events.push(ChurnEvent {
+                    t_s: t,
+                    user,
+                    kind: ChurnEventKind::RateChange { factor },
+                });
+            } else {
+                let user = nth_with(&active, true, rng.below(n_active));
+                let mut ap = rng.below(n_aps);
+                if ap == cur_ap[user] {
+                    ap = (ap + 1) % n_aps;
+                }
+                cur_ap[user] = ap;
+                events.push(ChurnEvent {
+                    t_s: t,
+                    user,
+                    kind: ChurnEventKind::Handoff { ap },
+                });
+            }
+        }
+        Self {
+            initial_active,
+            events,
+        }
+    }
+
+    /// Activity mask at time `t` (events with `t_s <= t` applied).
+    pub fn active_at(&self, t: f64) -> Vec<bool> {
+        let mut active = self.initial_active.clone();
+        for e in &self.events {
+            if e.t_s > t {
+                break;
+            }
+            match e.kind {
+                ChurnEventKind::Arrive => active[e.user] = true,
+                ChurnEventKind::Depart => active[e.user] = false,
+                _ => {}
+            }
+        }
+        active
+    }
+
+    /// Event tallies `(arrivals, departures, rate_changes, handoffs)`.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for e in &self.events {
+            match e.kind {
+                ChurnEventKind::Arrive => c.0 += 1,
+                ChurnEventKind::Depart => c.1 += 1,
+                ChurnEventKind::RateChange { .. } => c.2 += 1,
+                ChurnEventKind::Handoff { .. } => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// True when any event moves a user between APs.
+    pub fn has_handoffs(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, ChurnEventKind::Handoff { .. }))
+    }
+}
+
+/// Index of the `k`-th user whose mask equals `val` (panics if absent —
+/// callers pick `k` below the respective population count).
+fn nth_with(mask: &[bool], val: bool, k: usize) -> usize {
+    mask.iter()
+        .enumerate()
+        .filter(|(_, &m)| m == val)
+        .map(|(i, _)| i)
+        .nth(k)
+        .expect("churn event for an out-of-range user")
+}
+
+/// Poisson arrivals at `rate` over `[from, to)`, appended to `out`.
+fn emit_arrivals(
+    rng: &mut Pcg32,
+    user: usize,
+    rate: f64,
+    from: f64,
+    to: f64,
+    out: &mut Vec<Request>,
+) {
+    if rate <= 0.0 || to <= from {
+        return;
+    }
+    let mut t = from;
+    loop {
+        t += rng.exponential(rate);
+        if t >= to {
+            break;
+        }
+        out.push(Request {
+            id: 0, // assigned after the global sort
+            user,
+            arrival_s: t,
+        });
+    }
+}
+
+/// Churn-aware Poisson trace: each user emits requests at
+/// `workload.arrival_rate_hz × factor` while active, where activity
+/// intervals and rate factors come from the schedule. With
+/// [`ChurnSchedule::static_all`] this is a plain per-user Poisson trace.
+/// Deterministic in `(cfg, schedule, seed)`; ids are assigned in global
+/// arrival order.
+pub fn dynamic_trace(cfg: &Config, schedule: &ChurnSchedule, seed: u64) -> Vec<Request> {
+    let n = schedule.initial_active.len();
+    let mut per_user: Vec<Vec<&ChurnEvent>> = vec![Vec::new(); n];
+    for e in &schedule.events {
+        per_user[e.user].push(e);
+    }
+    let mut root = Pcg32::new(seed, 0xD19A);
+    let mut out = Vec::new();
+    for user in 0..n {
+        let mut rng = root.split(user as u64);
+        let mut active = schedule.initial_active[user];
+        let mut factor = 1.0f64;
+        let mut seg_start = 0.0f64;
+        for e in &per_user[user] {
+            if active {
+                emit_arrivals(
+                    &mut rng,
+                    user,
+                    cfg.workload.arrival_rate_hz * factor,
+                    seg_start,
+                    e.t_s,
+                    &mut out,
+                );
+            }
+            match e.kind {
+                ChurnEventKind::Arrive => active = true,
+                ChurnEventKind::Depart => active = false,
+                ChurnEventKind::RateChange { factor: f } => factor = f,
+                ChurnEventKind::Handoff { .. } => {}
+            }
+            seg_start = e.t_s;
+        }
+        if active {
+            emit_arrivals(
+                &mut rng,
+                user,
+                cfg.workload.arrival_rate_hz * factor,
+                seg_start,
+                cfg.workload.episode_s,
+                &mut out,
+            );
+        }
+    }
+    out.sort_by(|a, b| {
+        a.arrival_s
+            .total_cmp(&b.arrival_s)
+            .then(a.user.cmp(&b.user))
+    });
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +360,97 @@ mod tests {
         let cfg = presets::smoke();
         assert_eq!(poisson_trace(&cfg, 5), poisson_trace(&cfg, 5));
         assert_ne!(poisson_trace(&cfg, 5), poisson_trace(&cfg, 6));
+    }
+
+    fn churny_cfg() -> Config {
+        let mut cfg = presets::smoke();
+        cfg.workload.episode_s = 4.0;
+        cfg.workload.arrival_rate_hz = 5.0;
+        cfg.churn.initial_active_frac = 0.5;
+        cfg.churn.arrival_rate_hz = 3.0;
+        cfg.churn.departure_rate_hz = 0.2;
+        cfg.churn.rate_change_hz = 0.3;
+        cfg.churn.handoff_hz = 0.2;
+        cfg
+    }
+
+    #[test]
+    fn churn_schedule_is_deterministic_and_consistent() {
+        let cfg = churny_cfg();
+        let user_ap: Vec<usize> = (0..cfg.network.num_users)
+            .map(|u| u % cfg.network.num_aps)
+            .collect();
+        let a = ChurnSchedule::generate(&cfg, &user_ap, 9);
+        let b = ChurnSchedule::generate(&cfg, &user_ap, 9);
+        assert_eq!(a, b);
+        let c = ChurnSchedule::generate(&cfg, &user_ap, 10);
+        assert_ne!(a, c);
+        // events sorted, in-episode, and activity transitions legal
+        let mut active = a.initial_active.clone();
+        let mut last = 0.0;
+        for e in &a.events {
+            assert!(e.t_s >= last && e.t_s < cfg.workload.episode_s);
+            last = e.t_s;
+            match e.kind {
+                ChurnEventKind::Arrive => {
+                    assert!(!active[e.user], "arrival of an already-active user");
+                    active[e.user] = true;
+                }
+                ChurnEventKind::Depart => {
+                    assert!(active[e.user], "departure of an inactive user");
+                    active[e.user] = false;
+                }
+                ChurnEventKind::RateChange { factor } => {
+                    assert!(active[e.user]);
+                    assert!(
+                        factor >= cfg.churn.rate_factor_lo
+                            && factor <= cfg.churn.rate_factor_hi
+                    );
+                }
+                ChurnEventKind::Handoff { ap } => {
+                    assert!(active[e.user]);
+                    assert!(ap < cfg.network.num_aps);
+                }
+            }
+        }
+        let (ar, de, rc, ho) = a.counts();
+        assert_eq!(ar + de + rc + ho, a.events.len());
+        assert!(a.has_handoffs() == (ho > 0));
+        assert_eq!(a.active_at(cfg.workload.episode_s), active);
+    }
+
+    #[test]
+    fn dynamic_trace_respects_activity_windows() {
+        let cfg = churny_cfg();
+        let user_ap: Vec<usize> = (0..cfg.network.num_users)
+            .map(|u| u % cfg.network.num_aps)
+            .collect();
+        let sched = ChurnSchedule::generate(&cfg, &user_ap, 21);
+        let tr = dynamic_trace(&cfg, &sched, 22);
+        assert_eq!(tr, dynamic_trace(&cfg, &sched, 22), "deterministic");
+        assert!(!tr.is_empty());
+        for w in tr.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        for (i, r) in tr.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids in arrival order");
+            assert!(r.arrival_s < cfg.workload.episode_s);
+            assert!(
+                sched.active_at(r.arrival_s)[r.user],
+                "request from an inactive user at t={}",
+                r.arrival_s
+            );
+        }
+    }
+
+    #[test]
+    fn static_schedule_reduces_to_plain_poisson_per_user() {
+        let mut cfg = presets::smoke();
+        cfg.workload.episode_s = 2.0;
+        cfg.workload.arrival_rate_hz = 10.0;
+        let sched = ChurnSchedule::static_all(cfg.network.num_users);
+        let tr = dynamic_trace(&cfg, &sched, 7);
+        let expect = cfg.network.num_users as f64 * 10.0 * 2.0;
+        assert!((tr.len() as f64) > 0.6 * expect && (tr.len() as f64) < 1.4 * expect);
     }
 }

@@ -132,13 +132,17 @@ fn serving_loop_consistent_with_static_eval() {
     let rep = era::coordinator::server::serve(
         &cfg, &net, &model, &ds, &up, &down, &trace, 2, None, None,
     );
+    assert_eq!(rep.modeled_drops, 0);
     for srv in &rep.served {
+        // modeled latency is queue-inclusive; net of queueing it must agree
+        // with the static evaluation
         let expect = o.delay_s[srv.user];
         assert!(
-            (srv.modeled_latency_s - expect).abs() < 1e-9,
-            "user {}: served {} vs eval {}",
+            (srv.modeled_latency_s - srv.modeled_queue_s - expect).abs() < 1e-9,
+            "user {}: served {} (queue {}) vs eval {}",
             srv.user,
             srv.modeled_latency_s,
+            srv.modeled_queue_s,
             expect
         );
     }
@@ -154,8 +158,9 @@ fn episode_simulator_conserves_requests_and_orders_time() {
     let (up, down) = era::metrics::rates_for(&cfg, &net, &ds, ChannelModel::Noma);
     let trace = era::trace::poisson_trace(&cfg, 55);
     let done = era::sim::run_episode(&cfg, &net, &model, &ds, &up, &down, &trace);
-    assert_eq!(done.len(), trace.len());
-    for c in &done {
+    assert_eq!(done.completions.len() + done.dropped.len(), trace.len());
+    assert!(done.dropped.is_empty());
+    for c in &done.completions {
         assert!(c.finish_s >= c.arrival_s + c.service_s - 1e-9);
         assert!(c.queue_s >= 0.0);
     }

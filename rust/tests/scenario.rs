@@ -1,9 +1,11 @@
 //! Integration tests over the scenario layer: spec loading (TOML
-//! round-trip, error quality), engine execution, and the determinism
-//! contract — identical RunRecord rows for every engine thread count.
+//! round-trip, error quality), engine execution, the determinism
+//! contract — identical RunRecord rows for every engine thread count —
+//! and the dynamic serving engine (churn + epoch re-planning, plus the
+//! DES request-conservation guarantees it relies on).
 
 use era::config::presets;
-use era::scenario::{expand, to_csv, Engine, ScenarioSpec};
+use era::scenario::{expand, to_csv, Engine, RunRecord, ScenarioSpec};
 
 fn grid_spec() -> ScenarioSpec {
     // ≥ 2 strategies × ≥ 2 sweep values × ≥ 2 seeds — the acceptance shape.
@@ -20,6 +22,9 @@ fn grid_spec() -> ScenarioSpec {
 fn full_spec_toml_round_trip() {
     let mut spec = grid_spec().with_axis_str("workload.model", &["nin", "yolov2"]);
     spec.episode = true;
+    spec.episode_churn = true;
+    spec.replan_interval_s = Some(0.25);
+    spec.base.churn.arrival_rate_hz = 2.5;
     spec.trace_seed = Some(99);
     spec.seed_axis = Some("network.num_users".into());
     spec.plan_threads = 3;
@@ -162,6 +167,114 @@ fn pooled_engine_rows_match_standalone_cells() {
         let rows: Vec<String> = records.iter().map(|r| r.to_csv_row()).collect();
         assert_eq!(rows, standalone, "threads={threads}");
     }
+}
+
+#[test]
+fn saturation_conserves_requests_for_all_strategies() {
+    // Regression for the DES silent-loss bug: a trace that over-subscribes
+    // `edge_pool_units` (pool far below r_max, compressed episode) must
+    // account for every request under every strategy — completed +
+    // explicitly-dropped == trace length, and with finite link rates
+    // nothing may drop at all.
+    let mut cfg = presets::smoke();
+    cfg.network.num_users = 16;
+    cfg.optimizer.max_iters = 30;
+    cfg.compute.edge_pool_units = 2.0; // << r_max = 16: the old starvation case
+    cfg.workload.episode_s = 0.02;
+    let net = era::net::Network::generate(&cfg, 5);
+    let model = era::models::zoo::by_name(&cfg.workload.model).expect("model");
+    let tr = era::trace::fixed_count_trace(&cfg, 6, 11);
+    for &name in era::strategies::NAMES {
+        let strat = era::strategies::by_name(name).expect("strategy");
+        let ds = strat.decide(&cfg, &net, &model);
+        let (up, down) = era::metrics::rates_for(&cfg, &net, &ds, strat.channel_model());
+        let done = era::sim::run_episode(&cfg, &net, &model, &ds, &up, &down, &tr);
+        assert_eq!(
+            done.completions.len() + done.dropped.len(),
+            tr.len(),
+            "{name}: conservation"
+        );
+        assert!(
+            done.dropped.is_empty(),
+            "{name}: finite-rate requests must complete, not drop"
+        );
+    }
+}
+
+#[test]
+fn churn_off_rows_match_the_legacy_static_path() {
+    // The byte-identity contract: with churn disabled, an episode grid must
+    // take the legacy static path — the CSV header is the legacy column
+    // set, and every episode record equals a hand-rolled replay of
+    // plan → rates → fixed_count_trace → run_episode → stats.
+    let mut spec = grid_spec();
+    spec.episode = true;
+    spec.trace_seed = Some(99);
+    assert!(!spec.is_dynamic());
+    let records = Engine::new(2).run(&spec).unwrap();
+    let csv = to_csv(&records);
+    assert_eq!(
+        csv.lines().next().unwrap(),
+        RunRecord::csv_header(),
+        "churn-off grids keep the legacy header"
+    );
+    assert!(!csv.contains("dyn_"), "no dynamics columns leak in");
+
+    let cells = expand(&spec).unwrap();
+    for (c, r) in cells.iter().zip(records.iter()) {
+        let net = era::net::Network::generate(&c.cfg, c.net_seed);
+        let strat = era::strategies::by_name(&c.strategy).unwrap();
+        let model = era::models::zoo::by_name(&c.cfg.workload.model).unwrap();
+        let ds = strat.decide(&c.cfg, &net, &model);
+        let (up, down) = era::metrics::rates_for(&c.cfg, &net, &ds, strat.channel_model());
+        let k = c.cfg.workload.tasks_per_user.round().max(0.0) as usize;
+        let tr = era::trace::fixed_count_trace(&c.cfg, k, 99);
+        let done = era::sim::run_episode(&c.cfg, &net, &model, &ds, &up, &down, &tr);
+        let st = era::sim::stats(&done.completions, c.cfg.workload.episode_s);
+        let ep = r.episode.as_ref().expect("episode record");
+        assert_eq!(ep.n, st.n, "cell {}", c.index);
+        assert_eq!(ep.mean_latency_s, st.mean_latency_s, "cell {}", c.index);
+        assert_eq!(ep.p99_latency_s, st.p99_latency_s, "cell {}", c.index);
+        assert_eq!(ep.mean_queue_s, st.mean_queue_s, "cell {}", c.index);
+        assert_eq!(ep.dropped, 0, "cell {}", c.index);
+        assert!(r.dynamics.is_none(), "cell {}", c.index);
+    }
+}
+
+#[test]
+fn churn_preset_runs_end_to_end_with_dynamics() {
+    // CI-sized variant of `era run --scenario churn`: scaled down but same
+    // shape (churn schedule + epoch re-planning through every strategy).
+    let mut spec = ScenarioSpec::from_preset("churn").unwrap();
+    spec.base.network.num_users = 16;
+    spec.base.optimizer.max_iters = 25;
+    spec.base.workload.episode_s = 0.5;
+    spec.base.workload.arrival_rate_hz = 15.0;
+    spec.replan_interval_s = Some(0.125);
+    spec.strategies = vec!["era".into(), "neurosurgeon".into()];
+    spec.axes.clear();
+    let records = Engine::new(2).run(&spec).unwrap();
+    assert_eq!(records.len(), 2);
+    let csv = to_csv(&records);
+    assert_eq!(csv.lines().next().unwrap(), RunRecord::csv_header_dynamic());
+    for r in &records {
+        let ep = r.episode.as_ref().expect("episode");
+        let dy = r.dynamics.as_ref().expect("dynamics");
+        assert_eq!(dy.epochs.len(), 4, "0.5 s episode / 0.125 s epochs");
+        let requests: usize = dy.epochs.iter().map(|e| e.requests).sum();
+        let accounted: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(requests, accounted, "{}: epoch conservation", r.strategy);
+        assert_eq!(requests, ep.n + ep.dropped, "{}: total conservation", r.strategy);
+        if r.strategy == "era" {
+            assert!(
+                dy.epochs.iter().any(|e| e.gd_iters > 0),
+                "era re-plans must run Li-GD"
+            );
+        }
+    }
+    // the whole dynamic pipeline is deterministic across engine thread counts
+    let again = Engine::new(1).run(&spec).unwrap();
+    assert_eq!(csv, to_csv(&again));
 }
 
 #[test]
