@@ -10,7 +10,10 @@
 use era::scenario::{Engine, ScenarioSpec};
 
 fn main() {
-    let mut spec = ScenarioSpec::from_preset("churn").expect("churn preset");
+    // The incremental variant of the churn preset: identical serving
+    // scenario, but each epoch re-plans through the dirty-cohort
+    // PlanCache (DESIGN.md §2d) — watch the reuse columns below.
+    let mut spec = ScenarioSpec::from_preset("churn-incremental").expect("preset");
     // one sweep point is enough for the demo; keep the crowded setting
     spec.axes.clear();
     spec.strategies = vec!["era".into(), "neurosurgeon".into()];
@@ -23,10 +26,14 @@ fn main() {
         spec.base.churn.departure_rate_hz,
     );
     println!(
-        "re-plan every {} ms over a {} s episode, edge pool {} units/AP\n",
+        "re-plan every {} ms over a {} s episode, edge pool {} units/AP,",
         spec.replan_interval_s.unwrap_or(0.0) * 1e3,
         spec.base.workload.episode_s,
         spec.base.compute.edge_pool_units,
+    );
+    println!(
+        "incremental planner on (full re-scan every {} epochs)\n",
+        spec.full_rescan_every,
     );
 
     let records = Engine::default().run(&spec).expect("scenario runs");
@@ -44,22 +51,35 @@ fn main() {
             dy.churn_handoffs,
         );
         println!(
-            "{:>6} {:>8} {:>10} {:>9} {:>11} {:>12} {:>13}",
-            "epoch", "active", "offload", "reqs", "mean (ms)", "queue (ms)", "QoE-miss (%)"
+            "{:>6} {:>8} {:>10} {:>9} {:>7} {:>8} {:>11} {:>12} {:>13}",
+            "epoch", "active", "offload", "reqs", "reuse", "resolve", "mean (ms)", "queue (ms)", "QoE-miss (%)"
         );
         for e in &dy.epochs {
             println!(
-                "{:>6} {:>8} {:>10} {:>9} {:>11.3} {:>12.3} {:>12.1}%",
+                "{:>6} {:>8} {:>10} {:>9} {:>7} {:>8} {:>11.3} {:>12.3} {:>12.1}%",
                 e.epoch,
                 e.active_users,
                 e.offloaders,
                 e.requests,
+                e.cohorts_reused,
+                e.cohorts_resolved,
                 e.mean_latency_s * 1e3,
                 e.mean_queue_s * 1e3,
                 100.0 * e.qoe_miss_frac,
             );
         }
+        let reused: usize = dy.epochs.iter().map(|e| e.cohorts_reused).sum();
+        let resolved: usize = dy.epochs.iter().map(|e| e.cohorts_resolved).sum();
+        if reused + resolved > 0 {
+            println!(
+                "cache: {} cohorts reused / {} re-solved ({:.0}% hit)",
+                reused,
+                resolved,
+                100.0 * reused as f64 / (reused + resolved) as f64,
+            );
+        }
         println!();
     }
-    println!("Re-planning tracks the active population; the static plan cannot.");
+    println!("Re-planning tracks the active population; the static plan cannot —");
+    println!("and the plan cache makes each steady-state epoch cost the churn, not the population.");
 }

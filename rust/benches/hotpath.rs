@@ -12,6 +12,8 @@
 //!   plan_era_medium     whole-network planning pass (250 users)
 //!   plan_era_parallel   same pass, wave-parallel cohort solves (4 threads)
 //!   replan_epoch        one dynamic-serving re-plan epoch (50% active)
+//!   replan_epoch_incremental  steady-state incremental epoch (sparse churn)
+//!   plan_era_cached     all-clean cache replay (zero-churn floor)
 //!   scenario_grid       scenario engine over a smoke grid (8 cells)
 //!   noma_rates_250u     full-network NOMA rate computation
 //!   episode_des         discrete-event serving episode (2k requests)
@@ -126,10 +128,10 @@ fn main() {
         }));
     }
     if want("replan_epoch") {
-        // One epoch of the dynamic serving engine's re-plan: masked Li-GD
-        // over the currently-active half of the population, workspace pools
-        // warm from the previous epoch. Tracks re-planning cost in
-        // BENCH_hotpath.json.
+        // One epoch of the dynamic serving engine's *full* re-plan: masked
+        // Li-GD over the currently-active half of the population, workspace
+        // pools warm from the previous epoch. The reference the incremental
+        // benches below are measured against.
         let active: Vec<bool> = (0..net.num_users()).map(|u| u % 2 == 0).collect();
         let popts = era::coordinator::PlanOptions {
             warm_start: true,
@@ -140,6 +142,69 @@ fn main() {
                 &cfg, &net, &model, &active, &popts,
             ));
         }));
+    }
+    if want("replan_epoch_incremental") {
+        // Steady-state incremental epoch under *sparse churn*: the cache is
+        // warm and every iteration toggles two users' activity before
+        // re-planning — only the cohorts the churn delta touches re-solve
+        // (windowed Li-GD, seeded from the cached epoch); everything else
+        // replays its cached solution. Acceptance: ≥ 5× faster than the
+        // full `replan_epoch` above.
+        let nu = net.num_users();
+        let mut active: Vec<bool> = (0..nu).map(|u| u % 2 == 0).collect();
+        let popts = era::coordinator::PlanOptions {
+            warm_start: true,
+            threads: 1,
+        };
+        let mut cache =
+            era::coordinator::PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        std::hint::black_box(era::coordinator::plan_era_cached(
+            &cfg, &net, &model, &active, &popts, &mut cache,
+        ));
+        let mut k = 0usize;
+        results.push(bench(
+            "replan_epoch_incremental (250 users, sparse churn)",
+            2,
+            2.0,
+            500,
+            || {
+                // The epoch's churn delta: two arrive/depart toggles on
+                // adjacent indices — always distinct users, so no iteration
+                // degenerates to a zero-churn all-clean epoch.
+                active[(2 * k) % nu] ^= true;
+                active[(2 * k + 1) % nu] ^= true;
+                k += 1;
+                std::hint::black_box(era::coordinator::plan_era_cached(
+                    &cfg, &net, &model, &active, &popts, &mut cache,
+                ));
+            },
+        ));
+    }
+    if want("plan_era_cached") {
+        // The zero-churn floor: every cohort fingerprint is clean, the
+        // whole epoch is cache replay + rounding + the regret pass — no
+        // solver work at all.
+        let active: Vec<bool> = (0..net.num_users()).map(|u| u % 2 == 0).collect();
+        let popts = era::coordinator::PlanOptions {
+            warm_start: true,
+            threads: 1,
+        };
+        let mut cache =
+            era::coordinator::PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        std::hint::black_box(era::coordinator::plan_era_cached(
+            &cfg, &net, &model, &active, &popts, &mut cache,
+        ));
+        results.push(bench(
+            "plan_era_cached (250 users, all clean)",
+            2,
+            2.0,
+            2_000,
+            || {
+                std::hint::black_box(era::coordinator::plan_era_cached(
+                    &cfg, &net, &model, &active, &popts, &mut cache,
+                ));
+            },
+        ));
     }
     if want("scenario_grid") {
         let spec = era::scenario::ScenarioSpec::from_preset("smoke-grid").expect("preset");

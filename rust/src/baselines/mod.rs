@@ -69,6 +69,14 @@ pub struct PlanInfo {
     pub cohorts: usize,
     /// Total gradient-descent iterations spent.
     pub gd_iters: usize,
+    /// Cohorts reused verbatim from the plan cache (incremental re-plans
+    /// only; 0 everywhere else).
+    pub cohorts_reused: usize,
+    /// Cohorts actually solved (== `cohorts` outside the incremental path).
+    pub cohorts_resolved: usize,
+    /// Dirty re-solves whose windowed layer scan clipped and re-ran the
+    /// full scan (the §2d error-bound safeguard firing; incremental only).
+    pub window_fallbacks: usize,
 }
 
 /// A serving strategy: decides split/channel/power/resource for all users.
@@ -109,6 +117,24 @@ pub trait Strategy {
             }
         }
         (ds, info)
+    }
+
+    /// Incremental epoch re-plan: like [`Strategy::decide_masked`], but
+    /// with a cross-epoch [`crate::coordinator::PlanCache`] the strategy
+    /// may use to skip work on cohorts untouched since the previous epoch.
+    /// Default: ignore the cache and re-plan in full (correct for every
+    /// strategy; the closed-form baselines are cheap enough that caching
+    /// buys nothing). ERA overrides this with the dirty-cohort planner
+    /// (`coordinator::plan_era_cached`).
+    fn decide_incremental(
+        &self,
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+        active: &[bool],
+        _cache: &mut crate::coordinator::PlanCache,
+    ) -> (Vec<Decision>, PlanInfo) {
+        self.decide_masked(cfg, net, model, active)
     }
 
     /// Which channel model the evaluation should apply to this strategy's

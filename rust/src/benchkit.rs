@@ -120,6 +120,66 @@ pub fn write_json(path: &str, suite: &str, results: &[BenchResult]) -> std::io::
     std::fs::write(path, to_json(suite, results))
 }
 
+/// Parse an `era-bench-v1` record back into `(name, ns_per_iter)` pairs.
+/// Hand-rolled (the offline registry has no `serde`); tolerant of
+/// anything [`to_json`] emits — one result object per line.
+pub fn parse_json(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(npos) = line.find("\"name\": \"") else {
+            continue;
+        };
+        let rest = &line[npos + 9..];
+        let Some(nend) = rest.find('"') else {
+            continue;
+        };
+        let name = rest[..nend].to_string();
+        let Some(vpos) = line.find("\"ns_per_iter\": ") else {
+            continue;
+        };
+        let vrest = &line[vpos + 15..];
+        let vend = vrest
+            .find(|c| c == ',' || c == '}')
+            .unwrap_or(vrest.len());
+        if let Ok(v) = vrest[..vend].trim().parse::<f64>() {
+            out.push((name, v));
+        }
+    }
+    out
+}
+
+/// One baseline-vs-current comparison row (matched by bench name).
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_ns: f64,
+    pub new_ns: f64,
+}
+
+impl BenchDelta {
+    /// Signed regression percentage (positive = slower than baseline).
+    pub fn pct(&self) -> f64 {
+        (self.new_ns / self.base_ns.max(1e-9) - 1.0) * 100.0
+    }
+}
+
+/// Match two parsed records by bench name (current record's order).
+/// Entries present in only one record are skipped — a partial CI run
+/// diffs only what it measured.
+pub fn compare(base: &[(String, f64)], new: &[(String, f64)]) -> Vec<BenchDelta> {
+    new.iter()
+        .filter_map(|(name, new_ns)| {
+            base.iter()
+                .find(|(b, _)| b == name)
+                .map(|(_, base_ns)| BenchDelta {
+                    name: name.clone(),
+                    base_ns: *base_ns,
+                    new_ns: *new_ns,
+                })
+        })
+        .collect()
+}
+
 fn fmt_dur(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
@@ -196,6 +256,41 @@ mod tests {
         // valid-ish JSON: balanced braces/brackets, no trailing comma
         assert_eq!(js.matches('{').count(), js.matches('}').count());
         assert!(!js.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn json_round_trips_through_parse_and_compare() {
+        let rs = vec![
+            BenchResult {
+                name: "plan_era_medium (250 users)".into(),
+                iters: 5,
+                mean_s: 0.4,
+                p50_s: 0.4,
+                p99_s: 0.41,
+                min_s: 0.39,
+            },
+            BenchResult {
+                name: "replan_epoch (250 users, 50% active)".into(),
+                iters: 10,
+                mean_s: 0.2,
+                p50_s: 0.2,
+                p99_s: 0.21,
+                min_s: 0.19,
+            },
+        ];
+        let base = parse_json(&to_json("hotpath", &rs));
+        assert_eq!(base.len(), 2);
+        assert_eq!(base[0].0, "plan_era_medium (250 users)");
+        assert!((base[0].1 - 0.4e9).abs() < 1.0);
+        // current run measured only one bench, 30% slower + one unknown
+        let new = vec![
+            ("replan_epoch (250 users, 50% active)".to_string(), 0.26e9),
+            ("brand_new_bench".to_string(), 1.0),
+        ];
+        let deltas = compare(&base, &new);
+        assert_eq!(deltas.len(), 1, "unmatched entries are skipped");
+        assert_eq!(deltas[0].name, "replan_epoch (250 users, 50% active)");
+        assert!((deltas[0].pct() - 30.0).abs() < 0.5, "{}", deltas[0].pct());
     }
 
     #[test]

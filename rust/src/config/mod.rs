@@ -119,6 +119,9 @@ pub struct OptimizerConfig {
     pub resource_scale: f64,
     /// Delay term scale (s → utility); 1/0.02 s keeps a 20 ms delay ≈ 1.
     pub delay_scale: f64,
+    /// Incremental re-plan (DESIGN.md §2d): Li-GD layer-scan half-width
+    /// around the cached optimal splits when re-solving a dirty cohort.
+    pub replan_layer_window: usize,
 }
 
 /// User churn model for the dynamic serving engine (companion work arXiv
@@ -226,6 +229,7 @@ impl Default for OptimizerConfig {
             energy_scale: 10.0,
             resource_scale: 0.02,
             delay_scale: 50.0,
+            replan_layer_window: 2,
         }
     }
 }
@@ -378,6 +382,7 @@ impl Config {
             ("optimizer", "energy_scale") => self.optimizer.energy_scale = f!(),
             ("optimizer", "resource_scale") => self.optimizer.resource_scale = f!(),
             ("optimizer", "delay_scale") => self.optimizer.delay_scale = f!(),
+            ("optimizer", "replan_layer_window") => self.optimizer.replan_layer_window = u!(),
             ("workload", "model") => {
                 self.workload.model = val
                     .as_str()
@@ -462,7 +467,11 @@ impl Config {
         s.push_str(&format!("cohort_channels = {}\n", o.cohort_channels));
         s.push_str(&format!("energy_scale = {}\n", f(o.energy_scale)));
         s.push_str(&format!("resource_scale = {}\n", f(o.resource_scale)));
-        s.push_str(&format!("delay_scale = {}\n\n", f(o.delay_scale)));
+        s.push_str(&format!("delay_scale = {}\n", f(o.delay_scale)));
+        s.push_str(&format!(
+            "replan_layer_window = {}\n\n",
+            o.replan_layer_window
+        ));
         s.push_str("[workload]\n");
         s.push_str(&format!("model = {:?}\n", w.model));
         s.push_str(&format!("tasks_per_user = {}\n", f(w.tasks_per_user)));
@@ -501,6 +510,10 @@ impl Config {
         anyhow::ensure!(self.network.num_aps > 0, "need APs");
         anyhow::ensure!(self.compute.lambda_gamma > 0.0 && self.compute.lambda_gamma <= 1.0);
         anyhow::ensure!(o.cohort_users > 0 && o.cohort_channels > 0);
+        anyhow::ensure!(
+            o.replan_layer_window >= 1,
+            "optimizer.replan_layer_window must be >= 1"
+        );
         let ch = &self.churn;
         anyhow::ensure!(
             (0.0..=1.0).contains(&ch.initial_active_frac),
@@ -592,6 +605,7 @@ mod tests {
         cfg.compute.xi_device = 1.25e-22;
         cfg.qoe.expected_finish_mean_s = 0.0125;
         cfg.optimizer.max_iters = 123;
+        cfg.optimizer.replan_layer_window = 3;
         cfg.workload.model = "nin".into();
         cfg.churn.initial_active_frac = 0.35;
         cfg.churn.arrival_rate_hz = 4.5;

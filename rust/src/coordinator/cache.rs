@@ -1,0 +1,162 @@
+//! Cross-epoch plan cache for the incremental re-planner (DESIGN.md §2d).
+//!
+//! The dynamic serving engine re-plans every epoch, but under sparse churn
+//! most cohorts are untouched between consecutive epochs. A [`PlanCache`]
+//! fingerprints each cohort's *local* solver inputs — member set, AP
+//! association, per-user channel gains at that AP, QoE thresholds and
+//! device capability (the active mask is captured implicitly by
+//! membership) — and keeps the committed [`CohortSolution`] plus the
+//! candidate channels it indexes into. On the next re-plan,
+//! [`crate::coordinator::plan_era_cached`] partitions cohorts into *clean*
+//! (fingerprint unchanged — reuse the cached solution verbatim, zero
+//! solver work) and *dirty* (re-solve, seeded from the cached refined
+//! point with the Li-GD layer scan windowed around the cached optimal
+//! splits). A forced full re-solve every [`PlanCache::full_rescan_every`]
+//! epochs bounds the drift that stale cross-cohort interference can
+//! accumulate.
+
+use crate::net::Network;
+use crate::optimizer::CohortSolution;
+use std::collections::HashMap;
+
+/// Cache key: `(ap, cohort slot within that AP's formation order)`. Slot
+/// positions are stable while an AP's active membership is stable; any
+/// membership shift changes the fingerprint and dirties the slot anyway.
+pub(crate) type CohortKey = (usize, usize);
+
+/// One cached cohort solve.
+pub(crate) struct CacheEntry {
+    /// Cohort-local fingerprint at solve time (see [`cohort_fingerprint`]).
+    pub fingerprint: u64,
+    /// Candidate channel list the solution's channel indices refer to.
+    pub channels: Vec<usize>,
+    /// The committed solution; `solution.x` doubles as the cross-epoch
+    /// warm-start seed and `solution.split` centers the windowed scan.
+    pub solution: CohortSolution,
+}
+
+/// Cross-epoch state owned by the dynamic serving engine (one per
+/// `run_dynamic` episode) and threaded through
+/// [`crate::baselines::Strategy::decide_incremental`].
+pub struct PlanCache {
+    /// Re-plan epochs served so far (incremented by every
+    /// `plan_era_cached` call).
+    pub epoch: u64,
+    /// Force a full re-solve every N epochs: `1` = every epoch (incremental
+    /// bookkeeping with full-solve semantics — byte-identical to the
+    /// non-incremental path), `0` = never force one beyond the initial
+    /// cache population.
+    pub full_rescan_every: usize,
+    /// Li-GD layer-scan half-width around the cached optimal splits for
+    /// dirty re-solves (`cfg.optimizer.replan_layer_window`).
+    pub window: usize,
+    pub(crate) entries: HashMap<CohortKey, CacheEntry>,
+}
+
+impl PlanCache {
+    pub fn new(full_rescan_every: usize, window: usize) -> Self {
+        Self {
+            epoch: 0,
+            full_rescan_every,
+            window,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Cached cohort count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every cached solve (the next re-plan is a full one).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// FNV-1a over the bytes fed in — deterministic across runs and platforms
+/// (f64 values hash by their IEEE-754 bit pattern).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    #[inline]
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+}
+
+/// Cohort-local fingerprint: everything the cohort's solver inputs depend
+/// on *except* the cross-cohort interference state (member set and order,
+/// AP association, per-user uplink/downlink gain rows at that AP, device
+/// capability, QoE threshold). Identical fingerprint ⇒ identical local
+/// subproblem ⇒ the cached solve is exact for it (the background the
+/// solution was computed against can drift; the rescan safeguard bounds
+/// that — DESIGN.md §2d).
+pub(crate) fn cohort_fingerprint(net: &Network, ap: usize, users: &[usize]) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(ap as u64);
+    h.u64(users.len() as u64);
+    for &u in users {
+        h.u64(u as u64);
+        h.f64(net.users[u].device_flops);
+        h.f64(net.users[u].qoe_threshold_s);
+        for &g in &net.channels.up[u][ap] {
+            h.f64(g);
+        }
+        for &g in &net.channels.down[u][ap] {
+            h.f64(g);
+        }
+    }
+    h.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn fingerprint_is_deterministic_and_input_sensitive() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 13);
+        let users = net.topo.users_of_ap(0);
+        let fp = cohort_fingerprint(&net, 0, &users);
+        assert_eq!(fp, cohort_fingerprint(&net, 0, &users), "deterministic");
+        // membership change → different fingerprint
+        assert_ne!(fp, cohort_fingerprint(&net, 0, &users[1..]));
+        // AP association change → different fingerprint
+        assert_ne!(fp, cohort_fingerprint(&net, 1, &users));
+        // per-user state change (QoE threshold) → different fingerprint
+        let mut net2 = net.clone();
+        net2.users[users[0]].qoe_threshold_s *= 2.0;
+        assert_ne!(fp, cohort_fingerprint(&net2, 0, &users));
+    }
+
+    #[test]
+    fn cache_bookkeeping() {
+        let mut cache = PlanCache::new(4, 2);
+        assert!(cache.is_empty());
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.epoch, 0);
+        assert_eq!(cache.full_rescan_every, 4);
+        assert_eq!(cache.window, 2);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

@@ -20,6 +20,7 @@
 //! decisions to a live request trace and (optionally) executes the real
 //! split CNN through the PJRT runtime.
 
+pub mod cache;
 pub mod cohort;
 pub mod server;
 
@@ -27,7 +28,9 @@ use crate::baselines::{ChannelModel, Decision, PlanInfo, Strategy};
 use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
-use crate::optimizer::{solve_ligd, CohortProblem, CohortSolution, GdOptions};
+use crate::optimizer::{solve_ligd_seeded, CohortProblem, CohortSolution, EpochSeed, GdOptions};
+use cache::{cohort_fingerprint, CacheEntry};
+pub use cache::PlanCache;
 use cohort::{form_cohorts_masked, ChannelLoad, Cohort};
 
 /// Planner statistics (Corollary 2/4 instrumentation).
@@ -41,6 +44,14 @@ pub struct PlanStats {
     pub demotions: usize,
     /// Solver waves executed (== cohorts when planning sequentially).
     pub waves: usize,
+    /// Cohorts reused verbatim from the [`PlanCache`] (clean fingerprints;
+    /// always 0 on the non-incremental paths).
+    pub cohorts_reused: usize,
+    /// Cohorts actually solved this plan (== `cohorts` on the
+    /// non-incremental paths).
+    pub cohorts_resolved: usize,
+    /// Dirty re-solves whose windowed layer scan clipped and re-ran full.
+    pub window_fallbacks: usize,
 }
 
 /// Planner knobs.
@@ -140,18 +151,22 @@ fn prepare_cohort(
 
 /// Round one solved cohort into concrete decisions, respecting cluster caps
 /// and SIC decodability, and fold the committed links into the background
-/// accumulators for later cohorts.
+/// accumulators for later cohorts. Takes the cohort as raw parts so the
+/// incremental path can replay a cached solution against its *cached*
+/// channel list without cloning a `Cohort`.
+#[allow(clippy::too_many_arguments)]
 fn round_and_commit(
     cfg: &Config,
     net: &Network,
     model: &ModelProfile,
     st: &mut PlanState,
-    c: &Cohort,
+    ap: usize,
+    users: &[usize],
+    channels: &[usize],
     sol: &CohortSolution,
 ) {
     let n_aps = cfg.network.num_aps;
-    st.stats.total_gd_iters += sol.total_iters;
-    for (j, &u) in c.users.iter().enumerate() {
+    for (j, &u) in users.iter().enumerate() {
         let split = sol.split[j];
         if split == model.num_layers() {
             st.decisions[u] = Decision::device_only(model);
@@ -159,9 +174,9 @@ fn round_and_commit(
         }
         // channel: preferred = rounded candidate; else best-gain channel
         // among those with room
-        let mut ch = c.channels[sol.up_ch[j]];
-        if !st.load.has_room(c.ap, ch) {
-            match st.load.best_fallback(c.ap, &net.channels.up[u][c.ap]) {
+        let mut ch = channels[sol.up_ch[j]];
+        if !st.load.has_room(ap, ch) {
+            match st.load.best_fallback(ap, &net.channels.up[u][ap]) {
                 Some(alt) => {
                     ch = alt;
                     st.stats.fallback_assignments += 1;
@@ -176,14 +191,14 @@ fn round_and_commit(
         }
         // SIC decodability (paper: p·|h|² must exceed the threshold,
         // otherwise the entire model is computed on the device).
-        let g = net.channels.up[u][c.ap][ch];
+        let g = net.channels.up[u][ap][ch];
         if sol.p_up[j] * g <= cfg.network.sic_threshold_w {
             st.decisions[u] = Decision::device_only(model);
             st.stats.sic_fallbacks += 1;
             continue;
         }
-        st.load.commit(c.ap, ch);
-        let down_ch = c.channels[sol.down_ch[j]];
+        st.load.commit(ap, ch);
+        let down_ch = channels[sol.down_ch[j]];
         st.decisions[u] = Decision {
             split,
             up_ch: Some(ch),
@@ -200,10 +215,10 @@ fn round_and_commit(
         // rounded plan under-delivers (EXPERIMENTS.md §Calibration).
         const SIC_RESIDUAL: f64 = 0.5;
         for a in 0..n_aps {
-            let w = if a == c.ap { SIC_RESIDUAL } else { 1.0 };
+            let w = if a == ap { SIC_RESIDUAL } else { 1.0 };
             st.bg_up_acc[a][ch] += w * sol.p_up[j] * net.channels.up[u][a][ch];
         }
-        st.ap_ch_power[c.ap][down_ch] += sol.p_down[j];
+        st.ap_ch_power[ap][down_ch] += sol.p_down[j];
     }
 }
 
@@ -219,16 +234,68 @@ fn solve_wave(
     warm_start: bool,
     threads: usize,
 ) -> Vec<CohortSolution> {
+    // One harness for both paths: an unseeded solve is exactly the full
+    // Li-GD scan (`solve_ligd_seeded` with `None` degrades to it).
+    let n = problems.len();
+    solve_wave_seeded(problems, vec![None; n], model, opts, warm_start, threads)
+        .into_iter()
+        .map(|(sol, _)| sol)
+        .collect()
+}
+
+/// [`solve_wave`] with per-problem cross-epoch seeds (the dirty-cohort
+/// re-solve path): each seeded problem gets the windowed Li-GD scan, with
+/// the same index-ordered determinism — each problem is solved exactly
+/// once (the Mutex hands out the `&mut` the solver needs without cloning
+/// the problem). Returns `(solution, fell_back)`.
+fn solve_wave_seeded(
+    problems: Vec<CohortProblem>,
+    seeds: Vec<Option<EpochSeed<'_>>>,
+    model: &ModelProfile,
+    opts: &GdOptions,
+    warm_start: bool,
+    threads: usize,
+) -> Vec<(CohortSolution, bool)> {
+    debug_assert_eq!(problems.len(), seeds.len());
     let n = problems.len();
     let parallelism = if n <= 1 { 1 } else { threads };
-    // Each problem is solved exactly once; the Mutex hands out the `&mut`
-    // the solver needs without cloning the problem.
     let slots: Vec<std::sync::Mutex<CohortProblem>> =
         problems.into_iter().map(std::sync::Mutex::new).collect();
     crate::util::pool::map_indexed(n, parallelism, |i| {
         let mut p = slots[i].lock().unwrap();
-        solve_ligd(&mut p, model, opts, warm_start)
+        solve_ligd_seeded(&mut p, model, opts, warm_start, seeds[i].as_ref())
     })
+}
+
+/// Partition cohorts (given by their AP) into solver waves by index.
+/// Sequential (`threads == 1`): one cohort per wave, in formation order —
+/// the exact legacy algorithm. Parallel: one cohort per AP per wave
+/// (cohorts of distinct cells only couple through inter-cell interference,
+/// which sequential planning also only folds with a one-wave lag for
+/// *future* cohorts).
+fn wave_partition(aps: &[usize], n_aps: usize, threads: usize) -> Vec<Vec<usize>> {
+    if threads <= 1 {
+        return (0..aps.len()).map(|i| vec![i]).collect();
+    }
+    let mut per_ap: Vec<std::collections::VecDeque<usize>> =
+        (0..n_aps).map(|_| Default::default()).collect();
+    for (i, &ap) in aps.iter().enumerate() {
+        per_ap[ap].push_back(i);
+    }
+    let mut waves = Vec::new();
+    loop {
+        let mut wave = Vec::new();
+        for q in per_ap.iter_mut() {
+            if let Some(i) = q.pop_front() {
+                wave.push(i);
+            }
+        }
+        if wave.is_empty() {
+            break;
+        }
+        waves.push(wave);
+    }
+    waves
 }
 
 /// Plan ERA decisions with explicit [`PlanOptions`].
@@ -263,70 +330,78 @@ fn plan_era_impl(
     active: Option<&[bool]>,
     popts: &PlanOptions,
 ) -> (Vec<Decision>, PlanStats) {
-    let nu = net.num_users();
+    let (ds, stats, _) = plan_epoch_full(cfg, net, model, active, popts, false);
+    (ds, stats)
+}
+
+/// Fresh planning state for one pass.
+fn new_plan_state(cfg: &Config, net: &Network, model: &ModelProfile) -> PlanState {
     let n_aps = cfg.network.num_aps;
     let m = cfg.network.num_subchannels;
-    let mut st = PlanState {
-        decisions: vec![Decision::device_only(model); nu],
+    PlanState {
+        decisions: vec![Decision::device_only(model); net.num_users()],
         load: ChannelLoad::new(n_aps, m, cfg.network.max_users_per_subchannel),
         bg_up_acc: vec![vec![0.0f64; m]; n_aps],
         ap_ch_power: vec![vec![0.0f64; m]; n_aps],
         stats: PlanStats::default(),
-    };
+    }
+}
+
+/// The full (every cohort re-solved) planning pass. With `capture` the
+/// per-cohort `(Cohort, CohortSolution)` pairs are returned so the
+/// incremental planner can (re)populate its [`PlanCache`] from a forced
+/// full re-scan without a second solve.
+#[allow(clippy::type_complexity)]
+fn plan_epoch_full(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    active: Option<&[bool]>,
+    popts: &PlanOptions,
+    capture: bool,
+) -> (Vec<Decision>, PlanStats, Vec<(Cohort, CohortSolution)>) {
+    let mut st = new_plan_state(cfg, net, model);
     let gd_opts = GdOptions::from_config(&cfg.optimizer);
 
-    let cohorts = form_cohorts_masked(cfg, net, &st.load, active);
+    let mut cohorts = form_cohorts_masked(cfg, net, &st.load, active);
     st.stats.cohorts = cohorts.len();
-
-    // Wave partition. Sequential (threads == 1): one cohort per wave, in
-    // form_cohorts order — the exact legacy algorithm. Parallel: one cohort
-    // per AP per wave (cohorts of distinct cells only couple through
-    // inter-cell interference, which sequential planning also only folds
-    // with a one-wave lag for *future* cohorts).
-    let waves: Vec<Vec<Cohort>> = if popts.threads <= 1 {
-        cohorts.into_iter().map(|c| vec![c]).collect()
-    } else {
-        let mut per_ap: Vec<std::collections::VecDeque<Cohort>> =
-            (0..n_aps).map(|_| Default::default()).collect();
-        for c in cohorts {
-            per_ap[c.ap].push_back(c);
-        }
-        let mut waves = Vec::new();
-        loop {
-            let mut wave = Vec::new();
-            for q in per_ap.iter_mut() {
-                if let Some(c) = q.pop_front() {
-                    wave.push(c);
-                }
-            }
-            if wave.is_empty() {
-                break;
-            }
-            waves.push(wave);
-        }
-        waves
-    };
+    let aps: Vec<usize> = cohorts.iter().map(|c| c.ap).collect();
+    let waves = wave_partition(&aps, cfg.network.num_aps, popts.threads);
     st.stats.waves = waves.len();
+    let mut captured = Vec::new();
 
-    for mut wave in waves {
+    for wave in waves {
         let problems: Vec<CohortProblem> = wave
-            .iter_mut()
-            .map(|c| prepare_cohort(cfg, net, &st, c))
+            .iter()
+            .map(|&i| prepare_cohort(cfg, net, &st, &mut cohorts[i]))
             .collect();
         let solutions = solve_wave(problems, model, &gd_opts, popts.warm_start, popts.threads);
-        for (c, sol) in wave.iter().zip(solutions.iter()) {
-            round_and_commit(cfg, net, model, &mut st, c, sol);
+        for (&i, sol) in wave.iter().zip(solutions.into_iter()) {
+            let c = &cohorts[i];
+            st.stats.total_gd_iters += sol.total_iters;
+            round_and_commit(cfg, net, model, &mut st, c.ap, &c.users, &c.channels, &sol);
+            if capture {
+                captured.push((c.clone(), sol));
+            }
         }
     }
+    st.stats.cohorts_resolved = st.stats.cohorts;
 
-    // ---- Regret pass (admission control) --------------------------------
-    // Sequential cohort planning sees only *past* interference; cohorts
-    // planned early can be swamped by spectrum that fills up after them.
-    // Re-score the realized NOMA rates under the full committed plan and
-    // demote any offloader whose realized delay is worse than both its
-    // device-only delay and its QoE threshold — offloading that hurts is
-    // never admitted. (One pass; demotions only reduce interference, so
-    // the survivors' realized rates can only improve.)
+    regret_pass(cfg, net, model, &mut st);
+    (st.decisions, st.stats, captured)
+}
+
+/// Regret pass (admission control). Sequential cohort planning sees only
+/// *past* interference; cohorts planned early can be swamped by spectrum
+/// that fills up after them. Re-score the realized NOMA rates under the
+/// full committed plan and demote any offloader whose realized delay is
+/// worse than both its device-only delay and its QoE threshold —
+/// offloading that hurts is never admitted. (One pass; demotions only
+/// reduce interference, so the survivors' realized rates can only
+/// improve.) On the incremental path this doubles as the safety net that
+/// catches a reused cohort whose cached plan went stale against the
+/// drifted interference state.
+fn regret_pass(cfg: &Config, net: &Network, model: &ModelProfile, st: &mut PlanState) {
     let alloc: Vec<crate::net::LinkAssignment> = st
         .decisions
         .iter()
@@ -340,7 +415,7 @@ fn plan_era_impl(
         })
         .collect();
     let rates = net.rates(&alloc);
-    for u in 0..nu {
+    for u in 0..net.num_users() {
         let d = st.decisions[u];
         if d.up_ch.is_none() {
             continue;
@@ -360,8 +435,165 @@ fn plan_era_impl(
             st.stats.demotions += 1;
         }
     }
+}
 
+/// Incremental epoch re-plan (the dynamic serving engine's steady-state
+/// path, DESIGN.md §2d). Cohorts whose local fingerprint is unchanged
+/// since the cached solve are *clean*: their committed [`CohortSolution`]
+/// is replayed verbatim — zero solver work. Everyone else is *dirty* and
+/// re-solved, seeded from the cached refined point with the Li-GD layer
+/// scan windowed around the cached splits (full-scan fallback when the
+/// windowed optimum clips). Every `cache.full_rescan_every` epochs (and
+/// whenever the cache is empty) the whole population is re-solved and the
+/// cache rebuilt, which bounds the drift reused solutions can accumulate
+/// against the moving interference state. Rounding, cluster caps, SIC
+/// checks, and the regret pass always run against the *live* committed
+/// state, so every emitted plan is feasible regardless of cache staleness.
+pub fn plan_era_cached(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    active: &[bool],
+    popts: &PlanOptions,
+    cache: &mut PlanCache,
+) -> (Vec<Decision>, PlanStats) {
+    let epoch = cache.epoch;
+    cache.epoch += 1;
+    let forced = cache.is_empty()
+        || (cache.full_rescan_every > 0 && epoch % cache.full_rescan_every as u64 == 0);
+    if forced {
+        let (ds, stats, captured) =
+            plan_epoch_full(cfg, net, model, Some(active), popts, true);
+        cache.entries.clear();
+        let mut slot_of_ap = vec![0usize; cfg.network.num_aps];
+        for (c, sol) in captured {
+            let slot = slot_of_ap[c.ap];
+            slot_of_ap[c.ap] += 1;
+            cache.entries.insert(
+                (c.ap, slot),
+                CacheEntry {
+                    fingerprint: cohort_fingerprint(net, c.ap, &c.users),
+                    channels: c.channels,
+                    solution: sol,
+                },
+            );
+        }
+        return (ds, stats);
+    }
+
+    let mut st = new_plan_state(cfg, net, model);
+    let gd_opts = GdOptions::from_config(&cfg.optimizer);
+
+    // Form this epoch's cohorts and classify each against the cache. The
+    // fingerprint is cohort-local, so classification happens once up front
+    // — clean cohorts never even build a `CohortProblem`.
+    let mut cohorts = form_cohorts_masked(cfg, net, &st.load, Some(active));
+    st.stats.cohorts = cohorts.len();
+    let mut slot_of_ap = vec![0usize; cfg.network.num_aps];
+    let mut slots = Vec::with_capacity(cohorts.len());
+    let mut fps = Vec::with_capacity(cohorts.len());
+    let mut clean = Vec::with_capacity(cohorts.len());
+    for c in &cohorts {
+        let slot = slot_of_ap[c.ap];
+        slot_of_ap[c.ap] += 1;
+        let fp = cohort_fingerprint(net, c.ap, &c.users);
+        let is_clean = cache
+            .entries
+            .get(&(c.ap, slot))
+            .map_or(false, |e| e.fingerprint == fp);
+        slots.push(slot);
+        fps.push(fp);
+        clean.push(is_clean);
+    }
+
+    let aps: Vec<usize> = cohorts.iter().map(|c| c.ap).collect();
+    let waves = wave_partition(&aps, cfg.network.num_aps, popts.threads);
+    st.stats.waves = waves.len();
+
+    for wave in waves {
+        // Prepare + seed only the wave's dirty cohorts.
+        let dirty: Vec<usize> = wave.iter().copied().filter(|&i| !clean[i]).collect();
+        let problems: Vec<CohortProblem> = dirty
+            .iter()
+            .map(|&i| prepare_cohort(cfg, net, &st, &mut cohorts[i]))
+            .collect();
+        let seeds: Vec<Option<EpochSeed<'_>>> = dirty
+            .iter()
+            .map(|&i| {
+                cache.entries.get(&(cohorts[i].ap, slots[i])).map(|e| EpochSeed {
+                    x: &e.solution.x,
+                    splits: &e.solution.split,
+                    window: cache.window,
+                })
+            })
+            .collect();
+        // All-clean waves (the zero-churn steady state) skip the solve
+        // harness entirely — the epoch is pure cache replay.
+        let solved = if dirty.is_empty() {
+            Vec::new()
+        } else {
+            solve_wave_seeded(
+                problems,
+                seeds,
+                model,
+                &gd_opts,
+                popts.warm_start,
+                popts.threads,
+            )
+        };
+
+        // Commit the whole wave in fixed order (clean cohorts replay their
+        // cached solution against the cached channel list), then fold the
+        // fresh solves back into the cache.
+        let mut di = 0usize;
+        for &i in &wave {
+            let c = &cohorts[i];
+            if clean[i] {
+                let e = cache.entries.get(&(c.ap, slots[i])).expect("clean ⇒ cached");
+                round_and_commit(cfg, net, model, &mut st, c.ap, &c.users, &e.channels, &e.solution);
+                st.stats.cohorts_reused += 1;
+            } else {
+                let (sol, fell_back) = &solved[di];
+                di += 1;
+                st.stats.total_gd_iters += sol.total_iters;
+                if *fell_back {
+                    st.stats.window_fallbacks += 1;
+                }
+                round_and_commit(cfg, net, model, &mut st, c.ap, &c.users, &c.channels, sol);
+                st.stats.cohorts_resolved += 1;
+            }
+        }
+        for (&i, (sol, _)) in dirty.iter().zip(solved.into_iter()) {
+            let c = &mut cohorts[i];
+            cache.entries.insert(
+                (c.ap, slots[i]),
+                CacheEntry {
+                    fingerprint: fps[i],
+                    channels: std::mem::take(&mut c.channels),
+                    solution: sol,
+                },
+            );
+        }
+    }
+
+    // Prune entries whose slot no longer exists (a shrunken AP).
+    cache
+        .entries
+        .retain(|&(ap, slot), _| slot < slot_of_ap[ap]);
+
+    regret_pass(cfg, net, model, &mut st);
     (st.decisions, st.stats)
+}
+
+/// [`PlanInfo`] projection of a [`PlanStats`].
+fn info_of(stats: &PlanStats) -> PlanInfo {
+    PlanInfo {
+        cohorts: stats.cohorts,
+        gd_iters: stats.total_gd_iters,
+        cohorts_reused: stats.cohorts_reused,
+        cohorts_resolved: stats.cohorts_resolved,
+        window_fallbacks: stats.window_fallbacks,
+    }
 }
 
 /// [`Strategy`] wrapper so ERA slots into the same evaluation harness and
@@ -413,13 +645,7 @@ impl Strategy for EraStrategy {
                 threads: self.threads,
             },
         );
-        (
-            ds,
-            PlanInfo {
-                cohorts: stats.cohorts,
-                gd_iters: stats.total_gd_iters,
-            },
-        )
+        (ds, info_of(&stats))
     }
 
     fn decide_masked(
@@ -439,13 +665,29 @@ impl Strategy for EraStrategy {
                 threads: self.threads,
             },
         );
-        (
-            ds,
-            PlanInfo {
-                cohorts: stats.cohorts,
-                gd_iters: stats.total_gd_iters,
+        (ds, info_of(&stats))
+    }
+
+    fn decide_incremental(
+        &self,
+        cfg: &Config,
+        net: &Network,
+        model: &ModelProfile,
+        active: &[bool],
+        cache: &mut PlanCache,
+    ) -> (Vec<Decision>, PlanInfo) {
+        let (ds, stats) = plan_era_cached(
+            cfg,
+            net,
+            model,
+            active,
+            &PlanOptions {
+                warm_start: self.warm_start,
+                threads: self.threads,
             },
-        )
+            cache,
+        );
+        (ds, info_of(&stats))
     }
 
     fn channel_model(&self) -> ChannelModel {
@@ -586,6 +828,111 @@ mod tests {
             d_half.iter().enumerate().any(|(u, d)| half[u] && d.offloads(&model)),
             "some active user should still offload"
         );
+    }
+
+    #[test]
+    fn cached_plan_populates_then_replays_clean_epochs_exactly() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 33);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        let active: Vec<bool> = (0..net.num_users()).map(|u| u % 3 != 0).collect();
+        let (d_full, s_full) = plan_era_masked(&cfg, &net, &model, &active, &popts);
+        assert_eq!(s_full.cohorts_resolved, s_full.cohorts);
+        assert_eq!(s_full.cohorts_reused, 0);
+
+        let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        let (d0, s0) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(d0, d_full, "cache-population epoch == full masked plan");
+        assert_eq!(s0.total_gd_iters, s_full.total_gd_iters);
+        assert_eq!(cache.len(), s0.cohorts);
+        assert_eq!(cache.epoch, 1);
+
+        // Unchanged population → every fingerprint clean → the cached
+        // solutions replay to byte-identical decisions with zero solver
+        // work.
+        let (d1, s1) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(d1, d_full);
+        assert_eq!(s1.cohorts_reused, s1.cohorts);
+        assert_eq!(s1.cohorts_resolved, 0);
+        assert_eq!(s1.total_gd_iters, 0, "clean epoch runs no GD");
+    }
+
+    #[test]
+    fn full_rescan_every_one_is_exactly_the_full_replan() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 34);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        let mut cache = PlanCache::new(1, cfg.optimizer.replan_layer_window);
+        // every epoch forced full — even across changing masks
+        for step in 0..3u64 {
+            let active: Vec<bool> = (0..net.num_users())
+                .map(|u| (u as u64 + step) % 3 != 0)
+                .collect();
+            let (d_full, s_full) = plan_era_masked(&cfg, &net, &model, &active, &popts);
+            let (d_inc, s_inc) =
+                plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+            assert_eq!(d_inc, d_full, "epoch {step}");
+            assert_eq!(s_inc.total_gd_iters, s_full.total_gd_iters);
+            assert_eq!(s_inc.cohorts_reused, 0);
+            assert_eq!(s_inc.cohorts_resolved, s_inc.cohorts);
+        }
+    }
+
+    #[test]
+    fn sparse_churn_resolves_only_touched_cohorts_and_stays_feasible() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48; // several cohorts per AP
+        let net = Network::generate(&cfg, 35);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        let mut active = vec![true; net.num_users()];
+        let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+
+        // One departure — the churn delta. Removing the *first* member of
+        // AP 0 shifts every chunk of that AP (all its cohorts go dirty)
+        // while the other AP's cohorts stay clean.
+        let departed = *net.topo.users_of_ap(0).first().expect("AP 0 has users");
+        active[departed] = false;
+        let (ds, stats) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(
+            stats.cohorts_reused + stats.cohorts_resolved,
+            stats.cohorts,
+            "every cohort is either reused or re-solved"
+        );
+        assert!(stats.cohorts_reused > 0, "untouched cohorts must be clean");
+        assert!(stats.cohorts_resolved >= 1, "the touched cohort re-solves");
+        assert!(
+            stats.cohorts_resolved < stats.cohorts,
+            "sparse churn must not dirty everything"
+        );
+        assert!(
+            stats.window_fallbacks <= stats.cohorts_resolved,
+            "only dirty re-solves can fall back"
+        );
+        // the emitted plan stays feasible regardless of cache reuse
+        assert!(!ds[departed].offloads(&model), "departed user gets nothing");
+        let mut load = vec![
+            vec![0usize; cfg.network.num_subchannels];
+            cfg.network.num_aps
+        ];
+        for (u, d) in ds.iter().enumerate() {
+            if let Some(ch) = d.up_ch {
+                assert!(active[u], "inactive user {u} got spectrum");
+                load[net.topo.user_ap[u]][ch] += 1;
+                assert!(load[net.topo.user_ap[u]][ch] <= cfg.network.max_users_per_subchannel);
+            }
+        }
+
+        // the user comes back: the same cohorts dirty again, then the
+        // population is steady and the next epoch is all-clean
+        active[departed] = true;
+        let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        let (_, s3) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(s3.cohorts_reused, s3.cohorts);
+        assert_eq!(s3.total_gd_iters, 0);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   era plan    [--model M] [--preset P] [--seed N] [--threads N]
 //!   era serve   [--model M] [--preset P] [--strategy S] [--workers N]
 //!   era ligd-demo                                     Li-GD vs cold GD iterations
+//!   era bench-diff --base A.json --new B.json         diff era-bench-v1 records
 //!   era info                                          model zoo / scenario presets
 //!
 //! Every experiment path goes through the scenario engine
@@ -47,16 +48,18 @@ fn main() {
         "plan" => cmd_plan(&flags),
         "serve" => cmd_serve(&flags),
         "ligd-demo" => cmd_ligd_demo(&flags),
+        "bench-diff" => cmd_bench_diff(&flags),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: era <run|figures|plan|serve|ligd-demo|info> [flags]\n\
-                 run      --scenario FILE|PRESET --threads N --out PATH --md\n\
-                 figures  --fig N --scale S --out PATH   regenerate paper figures\n\
-                 plan     --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N --threads N\n\
-                 serve    --model M --preset P --strategy S --workers N --artifacts DIR --tasks K\n\
-                 ligd-demo                               Li-GD vs cold-start GD\n\
-                 info                                    model zoo + scenario presets"
+                "usage: era <run|figures|plan|serve|ligd-demo|bench-diff|info> [flags]\n\
+                 run        --scenario FILE|PRESET --threads N --out PATH --md\n\
+                 figures    --fig N --scale S --out PATH   regenerate paper figures\n\
+                 plan       --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N --threads N\n\
+                 serve      --model M --preset P --strategy S --workers N --artifacts DIR --tasks K\n\
+                 ligd-demo                                 Li-GD vs cold-start GD\n\
+                 bench-diff --base BENCH.json --new BENCH.json --warn-pct 25 [--gate]\n\
+                 info                                      model zoo + scenario presets"
             );
             Ok(())
         }
@@ -367,6 +370,73 @@ fn cmd_ligd_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             r.gd_iters,
             r.plan_wall_s * 1e3
         );
+    }
+    Ok(())
+}
+
+/// `era bench-diff --base <baseline.json> --new <current.json>`: diff two
+/// `era-bench-v1` records and warn (GitHub-annotation format, so CI
+/// surfaces it) on any matched entry regressing more than `--warn-pct`
+/// (default 25%). Non-gating by default — exit 0 regardless — because
+/// shared CI runners are too noisy for a hard perf gate (EXPERIMENTS.md
+/// §Perf); `--gate` exits 1 on regression for quiet-machine use.
+fn cmd_bench_diff(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let read = |key: &str| -> anyhow::Result<Vec<(String, f64)>> {
+        let path = flags
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("--{key} <BENCH.json> required"))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("failed to read {path}: {e}"))?;
+        let entries = era::benchkit::parse_json(&text);
+        anyhow::ensure!(!entries.is_empty(), "no bench entries in {path}");
+        Ok(entries)
+    };
+    let base = read("base")?;
+    let new = read("new")?;
+    let warn_pct: f64 = flags
+        .get("warn-pct")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(25.0);
+    let deltas = era::benchkit::compare(&base, &new);
+    if deltas.is_empty() {
+        // A brand-new bench has no baseline row yet — that is a trajectory
+        // gap to fix at the next quiet-machine refresh, not a CI failure.
+        println!(
+            "no bench names in common ({} baseline / {} current entries); nothing to diff",
+            base.len(),
+            new.len()
+        );
+        return Ok(());
+    }
+    let mut regressed = 0usize;
+    for d in &deltas {
+        let pct = d.pct();
+        println!(
+            "{:<48} base {:>14.0} ns  new {:>14.0} ns  {:>+7.1}%",
+            d.name, d.base_ns, d.new_ns, pct
+        );
+        if pct > warn_pct {
+            regressed += 1;
+            // `::warning::` renders as a non-gating annotation in GitHub CI.
+            println!(
+                "::warning::hot-path bench `{}` regressed {:.1}% vs baseline ({:.0} -> {:.0} ns/iter)",
+                d.name, pct, d.base_ns, d.new_ns
+            );
+        }
+    }
+    let skipped = new.len() - deltas.len();
+    if skipped > 0 {
+        println!("({skipped} entries without a baseline row were skipped)");
+    }
+    if regressed > 0 {
+        eprintln!(
+            "{regressed}/{} matched benches regressed > {warn_pct}%",
+            deltas.len()
+        );
+        if flags.contains_key("gate") {
+            anyhow::bail!("perf gate failed");
+        }
     }
     Ok(())
 }

@@ -10,7 +10,8 @@ pub mod workspace;
 
 pub use cohort::{CohortProblem, CohortVars};
 pub use ligd::{
-    solve_gd, solve_gd_ws, solve_ligd, solve_ligd_ws, CohortSolution, GdOptions, GdReport,
+    solve_gd, solve_gd_ws, solve_ligd, solve_ligd_seeded, solve_ligd_seeded_ws, solve_ligd_ws,
+    CohortSolution, EpochSeed, GdOptions, GdReport,
 };
 pub use utility::{eval, Evald};
 pub use workspace::{with_thread_workspace, LigdWorkspace};

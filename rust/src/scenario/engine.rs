@@ -147,10 +147,14 @@ impl RunRecord {
     }
 
     /// Extra column names appended when any record carries dynamics —
-    /// aligned with the tail of [`RunRecord::to_csv_row_dynamic`].
+    /// aligned with the tail of [`RunRecord::to_csv_row_dynamic`]. The
+    /// `dyn_cohorts_*` / `dyn_cache_hit_frac` columns aggregate the
+    /// incremental re-planner's per-epoch cache statistics (all-resolved /
+    /// 0.0 on the full re-plan path).
     pub fn csv_dynamics_columns() -> &'static str {
         "ep_dropped,dyn_epochs,dyn_peak_active,dyn_mean_active,\
-         dyn_arrivals,dyn_departures,dyn_rate_changes,dyn_handoffs,dyn_qoe_miss_traj"
+         dyn_arrivals,dyn_departures,dyn_rate_changes,dyn_handoffs,\
+         dyn_cohorts_reused,dyn_cohorts_resolved,dyn_cache_hit_frac,dyn_qoe_miss_traj"
     }
 
     /// Header for grids with dynamic-serving cells.
@@ -171,8 +175,15 @@ impl RunRecord {
             Some(d) => {
                 let traj: Vec<String> =
                     d.epochs.iter().map(|e| f(e.qoe_miss_frac)).collect();
+                let reused: usize = d.epochs.iter().map(|e| e.cohorts_reused).sum();
+                let resolved: usize = d.epochs.iter().map(|e| e.cohorts_resolved).sum();
+                let hit = if reused + resolved == 0 {
+                    0.0
+                } else {
+                    reused as f64 / (reused + resolved) as f64
+                };
                 format!(
-                    "{},{},{},{},{},{},{},{}",
+                    "{},{},{},{},{},{},{},{},{},{},{}",
                     d.epochs.len(),
                     d.peak_active,
                     f(d.mean_active),
@@ -180,10 +191,13 @@ impl RunRecord {
                     d.churn_departures,
                     d.churn_rate_changes,
                     d.churn_handoffs,
+                    reused,
+                    resolved,
+                    f(hit),
                     traj.join(";")
                 )
             }
-            None => "-,-,-,-,-,-,-,-".to_string(),
+            None => "-,-,-,-,-,-,-,-,-,-,-".to_string(),
         };
         format!("{},{},{}", self.to_csv_row(), ep_dropped, tail)
     }
@@ -400,14 +414,18 @@ pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::
                 )
             };
             let delta = spec.replan_interval_s.unwrap_or(cfg.workload.episode_s);
-            let dy = crate::sim::run_dynamic(
+            let dy = crate::sim::run_dynamic_opts(
                 cfg,
                 net,
                 &model,
                 strat.as_ref(),
                 &schedule,
                 &trace,
-                delta,
+                &crate::sim::DynamicOptions {
+                    replan_interval_s: delta,
+                    incremental: spec.incremental,
+                    full_rescan_every: spec.full_rescan_every,
+                },
             );
             let st = crate::sim::stats(&dy.outcome.completions, cfg.workload.episode_s);
             let (arrivals, departures, rate_changes, handoffs) = schedule.counts();

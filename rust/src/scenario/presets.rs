@@ -12,6 +12,7 @@ pub const NAMES: &[&str] = &[
     "qoe-sweep",
     "workload",
     "churn",
+    "churn-incremental",
     "ligd",
 ];
 
@@ -95,6 +96,18 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
             spec.trace_seed = Some(4242);
             Some(spec)
         }
+        // The churn workload re-planned through the incremental
+        // dirty-cohort planner (PlanCache + cross-epoch Li-GD warm starts,
+        // DESIGN.md §2d): identical serving scenario, but steady-state
+        // epochs only re-solve the cohorts the churn delta touched. The
+        // periodic full re-scan bounds cache drift.
+        "churn-incremental" => {
+            let mut spec = by_name("churn")?;
+            spec.name = "churn-incremental".into();
+            spec.incremental = true;
+            spec.full_rescan_every = 8;
+            Some(spec)
+        }
         // Li-GD vs cold-start GD iteration comparison (Corollary 4).
         "ligd" => Some(
             ScenarioSpec::new("ligd", cfg::smoke()).with_strategies(&["era", "era-cold"]),
@@ -127,6 +140,22 @@ mod tests {
         assert_eq!(spec.replan_interval_s, Some(0.125));
         assert!(spec.base.churn.any());
         // round-trips through the TOML grammar like every other preset
+        let text = spec.to_toml();
+        let reparsed = ScenarioSpec::from_str(&text).unwrap();
+        assert_eq!(reparsed, spec);
+    }
+
+    #[test]
+    fn churn_incremental_preset_enables_the_plan_cache() {
+        let spec = by_name("churn-incremental").unwrap();
+        assert!(spec.episode && spec.episode_churn && spec.incremental);
+        assert_eq!(spec.full_rescan_every, 8);
+        assert!(spec.is_dynamic());
+        // same serving scenario as the churn preset, different planner path
+        let churn = by_name("churn").unwrap();
+        assert_eq!(spec.base, churn.base);
+        assert_eq!(spec.replan_interval_s, churn.replan_interval_s);
+        // round-trips through the TOML grammar
         let text = spec.to_toml();
         let reparsed = ScenarioSpec::from_str(&text).unwrap();
         assert_eq!(reparsed, spec);

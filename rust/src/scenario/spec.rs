@@ -82,6 +82,14 @@ pub struct ScenarioSpec {
     /// legacy fixed-count workload is kept, so re-planning is the only
     /// variable vs the static path.
     pub replan_interval_s: Option<f64>,
+    /// Dynamic serving: re-plan incrementally through the cross-epoch
+    /// dirty-cohort `PlanCache` (TOML key `episode.incremental`). Default
+    /// false — the legacy full re-plan per epoch.
+    pub incremental: bool,
+    /// Incremental mode: force a full re-solve every N epochs (TOML key
+    /// `episode.full_rescan_every`; 0 = never force, 1 = every epoch ≡
+    /// the non-incremental path).
+    pub full_rescan_every: usize,
     /// Axis key whose value index additionally offsets the cell's network
     /// seed (paper figures that re-draw the network per sweep point).
     pub seed_axis: Option<String>,
@@ -101,6 +109,8 @@ const TOP_KEYS: &[&str] = &[
     "episode",
     "episode.churn",
     "episode.replan_interval_s",
+    "episode.incremental",
+    "episode.full_rescan_every",
     "seed_axis",
     "trace_seed",
     "plan_threads",
@@ -120,6 +130,8 @@ impl ScenarioSpec {
             episode: false,
             episode_churn: false,
             replan_interval_s: None,
+            incremental: false,
+            full_rescan_every: 0,
             seed_axis: None,
             trace_seed: None,
             plan_threads: 1,
@@ -129,7 +141,7 @@ impl ScenarioSpec {
     /// True when the episode runs through the dynamic serving engine
     /// (`sim::run_dynamic`) rather than the legacy static path.
     pub fn is_dynamic(&self) -> bool {
-        self.episode_churn || self.replan_interval_s.is_some()
+        self.episode_churn || self.replan_interval_s.is_some() || self.incremental
     }
 
     /// Replace the strategy list.
@@ -274,6 +286,21 @@ impl ScenarioSpec {
                 anyhow::anyhow!("episode.replan_interval_s must be a number")
             })?);
         }
+        if let Some(v) = top.get("episode.incremental") {
+            spec.incremental = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("episode.incremental must be a boolean"))?;
+        }
+        if let Some(v) = top.get("episode.full_rescan_every") {
+            let f = v.as_f64().ok_or_else(|| {
+                anyhow::anyhow!("episode.full_rescan_every must be an integer")
+            })?;
+            anyhow::ensure!(
+                f >= 0.0 && f.fract() == 0.0,
+                "episode.full_rescan_every must be a non-negative integer (got {f})"
+            );
+            spec.full_rescan_every = f as usize;
+        }
         if let Some(v) = top.get("seed_axis") {
             spec.seed_axis = Some(
                 v.as_str()
@@ -374,9 +401,13 @@ impl ScenarioSpec {
         if self.is_dynamic() {
             anyhow::ensure!(
                 self.episode,
-                "episode.churn / episode.replan_interval_s require episode = true"
+                "episode.churn / episode.replan_interval_s / episode.incremental require episode = true"
             );
         }
+        anyhow::ensure!(
+            self.full_rescan_every == 0 || self.incremental,
+            "episode.full_rescan_every requires episode.incremental = true"
+        );
         self.base.validate()?;
         Ok(())
     }
@@ -403,6 +434,15 @@ impl ScenarioSpec {
             s.push_str(&format!(
                 "episode.replan_interval_s = {}\n",
                 TomlValue::Float(d).to_toml()
+            ));
+        }
+        if self.incremental {
+            s.push_str("episode.incremental = true\n");
+        }
+        if self.full_rescan_every != 0 {
+            s.push_str(&format!(
+                "episode.full_rescan_every = {}\n",
+                self.full_rescan_every
             ));
         }
         if let Some(k) = &self.seed_axis {
@@ -495,6 +535,43 @@ mod tests {
     }
 
     #[test]
+    fn incremental_keys_parse_and_validate() {
+        let spec = ScenarioSpec::from_str(
+            "episode = true\nepisode.incremental = true\nepisode.full_rescan_every = 8\n",
+        )
+        .unwrap();
+        assert!(spec.incremental);
+        assert_eq!(spec.full_rescan_every, 8);
+        assert!(spec.is_dynamic(), "incremental cells run the dynamic engine");
+        // defaults preserve today's behavior
+        let plain = ScenarioSpec::from_str("episode = true\n").unwrap();
+        assert!(!plain.incremental);
+        assert_eq!(plain.full_rescan_every, 0);
+        assert!(!plain.is_dynamic());
+        // incremental without episode is rejected
+        let e = ScenarioSpec::from_str("episode.incremental = true\n").unwrap_err();
+        assert!(e.to_string().contains("require episode = true"), "{e}");
+        // full_rescan_every without incremental is rejected
+        let e = ScenarioSpec::from_str("episode = true\nepisode.full_rescan_every = 4\n")
+            .unwrap_err();
+        assert!(
+            e.to_string().contains("requires episode.incremental"),
+            "{e}"
+        );
+        // fractional and negative values are rejected, never truncated
+        for bad in ["8.7", "-4"] {
+            let text = format!(
+                "episode = true\nepisode.incremental = true\nepisode.full_rescan_every = {bad}\n"
+            );
+            let e = ScenarioSpec::from_str(&text).unwrap_err();
+            assert!(
+                e.to_string().contains("non-negative integer"),
+                "{bad}: {e}"
+            );
+        }
+    }
+
+    #[test]
     fn toml_round_trip_full_spec() {
         let mut spec = ScenarioSpec::new("rt", cfg_presets::smoke())
             .with_strategies(&["era", "dina"])
@@ -504,6 +581,8 @@ mod tests {
         spec.episode = true;
         spec.episode_churn = true;
         spec.replan_interval_s = Some(0.125);
+        spec.incremental = true;
+        spec.full_rescan_every = 4;
         spec.seed_axis = Some("network.num_users".into());
         spec.trace_seed = Some(12);
         spec.plan_threads = 2;

@@ -28,6 +28,9 @@ use std::collections::BinaryHeap;
 #[derive(Clone, Copy, Debug)]
 pub struct Completion {
     pub id: u64,
+    /// Index of the request in the episode's trace (ids can be arbitrary;
+    /// the position is what epoch bucketing and phase lookup key on).
+    pub req: usize,
     pub user: usize,
     pub arrival_s: f64,
     pub finish_s: f64,
@@ -56,6 +59,8 @@ pub enum DropReason {
 #[derive(Clone, Copy, Debug)]
 pub struct DroppedRequest {
     pub id: u64,
+    /// Index of the request in the episode's trace.
+    pub req: usize,
     pub user: usize,
     pub arrival_s: f64,
     pub reason: DropReason,
@@ -199,6 +204,7 @@ fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome
         if !finite {
             dropped.push(DroppedRequest {
                 id: rq.id,
+                req: idx,
                 user: rq.user,
                 arrival_s: rq.arrival_s,
                 reason: DropReason::NonFinitePhase,
@@ -214,6 +220,7 @@ fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome
         } else {
             completions.push(Completion {
                 id: rq.id,
+                req: idx,
                 user: rq.user,
                 arrival_s: rq.arrival_s,
                 finish_s: rq.arrival_s + ph.pre_edge_s,
@@ -243,6 +250,7 @@ fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome
                 let queue_s = (edge_start[req] - (rq.arrival_s + ph.pre_edge_s)).max(0.0);
                 completions.push(Completion {
                     id: rq.id,
+                    req,
                     user: rq.user,
                     arrival_s: rq.arrival_s,
                     finish_s: ev.t + ph.post_edge_s,
@@ -318,6 +326,18 @@ pub struct EpochRecord {
     pub offloaders: usize,
     pub cohorts: usize,
     pub gd_iters: usize,
+    /// Cohorts reused verbatim from the cross-epoch plan cache (0 on the
+    /// non-incremental path and for non-cohort strategies).
+    pub cohorts_reused: usize,
+    /// Cohorts actually re-solved this epoch (== `cohorts` on the
+    /// non-incremental path for cohort strategies).
+    pub cohorts_resolved: usize,
+    /// `reused / (reused + resolved)` — 0 when nothing was planned.
+    pub cache_hit_frac: f64,
+    /// Dirty re-solves whose windowed scan clipped and re-ran full — a
+    /// window systematically too narrow shows up here as fallbacks ≈
+    /// resolved (strictly more work than plain full re-solves).
+    pub window_fallbacks: usize,
     /// Wall-clock re-planning time (never emitted in deterministic CSV).
     pub plan_wall_s: f64,
     /// Requests arriving in this epoch.
@@ -362,7 +382,57 @@ pub fn run_dynamic(
     trace: &[Request],
     replan_interval_s: f64,
 ) -> DynamicOutcome {
+    run_dynamic_opts(
+        cfg,
+        net,
+        model,
+        strat,
+        schedule,
+        trace,
+        &DynamicOptions {
+            replan_interval_s,
+            ..DynamicOptions::default()
+        },
+    )
+}
+
+/// Knobs of the dynamic serving engine beyond the re-plan interval.
+#[derive(Clone, Copy, Debug)]
+pub struct DynamicOptions {
+    /// Epoch length Δ (non-finite or ≤ 0 ⇒ one epoch per episode).
+    pub replan_interval_s: f64,
+    /// Re-plan through [`Strategy::decide_incremental`] with a cross-epoch
+    /// `PlanCache` (the dirty-cohort planner, DESIGN.md §2d). Off by
+    /// default — the legacy full re-plan per epoch.
+    pub incremental: bool,
+    /// Incremental mode: force a full re-solve every N epochs (0 = never
+    /// force one beyond the initial cache population; 1 = every epoch,
+    /// which is byte-identical to the non-incremental path).
+    pub full_rescan_every: usize,
+}
+
+impl Default for DynamicOptions {
+    fn default() -> Self {
+        Self {
+            replan_interval_s: f64::INFINITY,
+            incremental: false,
+            full_rescan_every: 0,
+        }
+    }
+}
+
+/// [`run_dynamic`] with explicit [`DynamicOptions`].
+pub fn run_dynamic_opts(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    strat: &dyn Strategy,
+    schedule: &ChurnSchedule,
+    trace: &[Request],
+    opts: &DynamicOptions,
+) -> DynamicOutcome {
     let episode_s = cfg.workload.episode_s.max(1e-9);
+    let replan_interval_s = opts.replan_interval_s;
     let delta = if replan_interval_s.is_finite() && replan_interval_s > 0.0 {
         replan_interval_s.min(episode_s)
     } else {
@@ -370,9 +440,15 @@ pub fn run_dynamic(
     };
     let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
     // The single forward cursor below assigns requests to epochs; an
-    // unsorted trace would silently get the wrong epoch's plan.
+    // unsorted trace would silently get the wrong epoch's plan. Sortedness
+    // is checked under `total_cmp` (the order the trace generators sort
+    // by), so a pathological NaN arrival — which sorts last — passes
+    // through to the DES admission layer and surfaces as an explicit
+    // `NonFinitePhase` drop instead of tripping this assert.
     assert!(
-        trace.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        trace
+            .windows(2)
+            .all(|w| w[0].arrival_s.total_cmp(&w[1].arrival_s) != Ordering::Greater),
         "run_dynamic requires a trace sorted by arrival_s"
     );
 
@@ -384,9 +460,20 @@ pub fn run_dynamic(
     };
 
     let mut phases: Vec<Phases> = Vec::with_capacity(trace.len());
-    let mut epoch_of_id: std::collections::HashMap<u64, usize> =
-        std::collections::HashMap::with_capacity(trace.len());
+    // Epoch of each request, indexed by trace position (the trace is
+    // sorted and consumed by the forward cursor below — no id lookup
+    // structure needed).
+    let mut epoch_of_pos: Vec<usize> = Vec::with_capacity(trace.len());
     let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
+    // Cross-epoch plan cache for the incremental re-planner.
+    let mut cache = if opts.incremental {
+        Some(crate::coordinator::PlanCache::new(
+            opts.full_rescan_every,
+            cfg.optimizer.replan_layer_window,
+        ))
+    } else {
+        None
+    };
     let mut next_req = 0usize; // trace cursor
     // Incrementally replayed schedule state (events are time-sorted):
     // the activity mask and — when handoffs exist — the association.
@@ -415,17 +502,26 @@ pub fn run_dynamic(
         }
         let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
         let tp = std::time::Instant::now();
-        let (ds, info) = strat.decide_masked(cfg, net_e, model, &active);
+        let (ds, info) = match cache.as_mut() {
+            Some(c) => strat.decide_incremental(cfg, net_e, model, &active, c),
+            None => strat.decide_masked(cfg, net_e, model, &active),
+        };
         let plan_wall_s = tp.elapsed().as_secs_f64();
         let (up, down) = crate::metrics::rates_for(cfg, net_e, &ds, strat.channel_model());
         let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
         let start_req = next_req;
-        while next_req < trace.len() && trace[next_req].arrival_s < t1 {
+        // The final epoch consumes every remaining request *unconditionally*
+        // — `arrival_s < t1` would leave a NaN arrival (`NaN < ∞` is false)
+        // without phases and crash the DES; consumed here it becomes an
+        // explicit `NonFinitePhase` drop at admission.
+        let last = e + 1 == n_epochs;
+        while next_req < trace.len() && (last || trace[next_req].arrival_s < t1) {
             let rq = &trace[next_req];
             phases.push(phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down));
-            epoch_of_id.insert(rq.id, e);
+            epoch_of_pos.push(e);
             next_req += 1;
         }
+        let planned = info.cohorts_reused + info.cohorts_resolved;
         epochs.push(EpochRecord {
             epoch: e,
             t_start_s: t0,
@@ -433,6 +529,14 @@ pub fn run_dynamic(
             offloaders,
             cohorts: info.cohorts,
             gd_iters: info.gd_iters,
+            cohorts_reused: info.cohorts_reused,
+            cohorts_resolved: info.cohorts_resolved,
+            cache_hit_frac: if planned == 0 {
+                0.0
+            } else {
+                info.cohorts_reused as f64 / planned as f64
+            },
+            window_fallbacks: info.window_fallbacks,
             plan_wall_s,
             requests: next_req - start_req,
             completed: 0,
@@ -452,7 +556,7 @@ pub fn run_dynamic(
     let mut queue_sum = vec![0.0f64; n_epochs];
     let mut miss = vec![0usize; n_epochs];
     for c in &outcome.completions {
-        let e = epoch_of_id[&c.id];
+        let e = epoch_of_pos[c.req];
         epochs[e].completed += 1;
         lat_sum[e] += c.latency();
         queue_sum[e] += c.queue_s;
@@ -461,7 +565,7 @@ pub fn run_dynamic(
         }
     }
     for d in &outcome.dropped {
-        epochs[epoch_of_id[&d.id]].dropped += 1;
+        epochs[epoch_of_pos[d.req]].dropped += 1;
     }
     for (e, rec) in epochs.iter_mut().enumerate() {
         if rec.completed > 0 {
@@ -692,6 +796,140 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.finish_s, b.finish_s);
             assert_eq!(a.queue_s, b.queue_s);
+        }
+    }
+
+    #[test]
+    fn dynamic_nan_arrival_is_an_explicit_drop_not_a_panic() {
+        // A NaN arrival sorts last under total_cmp; the final epoch must
+        // still consume it so the DES rejects it as a NonFinitePhase drop
+        // (same bug class as the trace-sort and event-heap fixes).
+        let (cfg, net, model) = setup();
+        let strat = Neurosurgeon;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let mut tr = crate::trace::dynamic_trace(&cfg, &sched, 23);
+        let n_finite = tr.len();
+        tr.push(Request {
+            id: n_finite as u64 + 1_000_000,
+            user: 0,
+            arrival_s: f64::NAN,
+        });
+        let dynr = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.25);
+        assert_eq!(
+            dynr.outcome.completions.len() + dynr.outcome.dropped.len(),
+            tr.len(),
+            "conservation"
+        );
+        assert_eq!(dynr.outcome.dropped.len(), 1);
+        assert_eq!(
+            dynr.outcome.dropped[0].reason,
+            DropReason::NonFinitePhase
+        );
+        assert_eq!(dynr.outcome.completions.len(), n_finite);
+    }
+
+    #[test]
+    fn incremental_churn_off_matches_full_replan_byte_for_byte() {
+        // Acceptance: with churn off, the incremental engine must replay
+        // the cached epoch to byte-identical serving results — reuse is
+        // exact when nothing changed.
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.optimizer.max_iters = 60;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 19);
+        let strat = crate::coordinator::EraStrategy::default();
+        let full = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.125);
+        let inc = run_dynamic_opts(
+            &cfg,
+            &net,
+            &model,
+            &strat,
+            &sched,
+            &tr,
+            &DynamicOptions {
+                replan_interval_s: 0.125,
+                incremental: true,
+                full_rescan_every: 0,
+            },
+        );
+        assert_eq!(full.epochs.len(), 4);
+        assert_eq!(inc.outcome.completions.len(), full.outcome.completions.len());
+        for (a, b) in inc
+            .outcome
+            .completions
+            .iter()
+            .zip(full.outcome.completions.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish_s, b.finish_s);
+            assert_eq!(a.queue_s, b.queue_s);
+        }
+        for (a, b) in inc.epochs.iter().zip(full.epochs.iter()) {
+            assert_eq!(a.offloaders, b.offloaders);
+            assert_eq!(a.mean_latency_s, b.mean_latency_s);
+            assert_eq!(a.qoe_miss_frac, b.qoe_miss_frac);
+        }
+        // steady state: everything after the populate epoch is pure reuse
+        assert!(inc.epochs[1..].iter().all(|e| {
+            e.cohorts_reused == e.cohorts && e.cohorts_resolved == 0 && e.gd_iters == 0
+        }));
+        assert!((inc.epochs[1].cache_hit_frac - 1.0).abs() < 1e-12);
+        assert!(full.epochs.iter().all(|e| e.cohorts_reused == 0));
+    }
+
+    #[test]
+    fn incremental_full_rescan_every_epoch_is_identical_under_churn() {
+        // Acceptance: full_rescan_every = 1 forces a full re-solve each
+        // epoch — byte-identical results *and* cache statistics vs the
+        // non-incremental path, even with churn and handoffs in flight.
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.optimizer.max_iters = 60;
+        cfg.churn.initial_active_frac = 0.5;
+        cfg.churn.arrival_rate_hz = 6.0;
+        cfg.churn.departure_rate_hz = 0.3;
+        cfg.churn.handoff_hz = 0.2;
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, 43);
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 44);
+        let strat = crate::coordinator::EraStrategy::default();
+        let full = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.125);
+        let inc = run_dynamic_opts(
+            &cfg,
+            &net,
+            &model,
+            &strat,
+            &sched,
+            &tr,
+            &DynamicOptions {
+                replan_interval_s: 0.125,
+                incremental: true,
+                full_rescan_every: 1,
+            },
+        );
+        assert_eq!(inc.outcome.completions.len(), full.outcome.completions.len());
+        for (a, b) in inc
+            .outcome
+            .completions
+            .iter()
+            .zip(full.outcome.completions.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish_s, b.finish_s);
+            assert_eq!(a.queue_s, b.queue_s);
+        }
+        for (a, b) in inc.epochs.iter().zip(full.epochs.iter()) {
+            assert_eq!(a.offloaders, b.offloaders);
+            assert_eq!(a.gd_iters, b.gd_iters);
+            assert_eq!(a.cohorts_reused, b.cohorts_reused);
+            assert_eq!(a.cohorts_resolved, b.cohorts_resolved);
+            assert_eq!(a.cache_hit_frac, b.cache_hit_frac);
+            assert_eq!(a.window_fallbacks, 0, "forced-full epochs never window");
+            assert_eq!(b.window_fallbacks, 0);
+            assert_eq!(a.mean_latency_s, b.mean_latency_s);
+            assert_eq!(a.qoe_miss_frac, b.qoe_miss_frac);
         }
     }
 

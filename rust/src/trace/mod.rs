@@ -16,6 +16,15 @@ pub struct Request {
     pub arrival_s: f64,
 }
 
+/// Sort a trace by arrival time. `f64::total_cmp` keeps this a total
+/// order even for NaN timestamps (same bug class as the event-heap fix in
+/// `sim::Ev::cmp` — a `partial_cmp(..).unwrap()` here would panic the
+/// moment a pathological arrival slipped in; with `total_cmp` the DES
+/// admission layer rejects it as a `NonFinitePhase` drop instead).
+fn sort_by_arrival(out: &mut [Request]) {
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+}
+
 /// Generate Poisson arrivals per user over `episode_s` seconds.
 pub fn poisson_trace(cfg: &Config, seed: u64) -> Vec<Request> {
     let mut rng = Pcg32::new(seed, 0x7ACE);
@@ -36,7 +45,7 @@ pub fn poisson_trace(cfg: &Config, seed: u64) -> Vec<Request> {
             id += 1;
         }
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    sort_by_arrival(&mut out);
     out
 }
 
@@ -56,7 +65,7 @@ pub fn fixed_count_trace(cfg: &Config, k: usize, seed: u64) -> Vec<Request> {
             id += 1;
         }
     }
-    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    sort_by_arrival(&mut out);
     out
 }
 
@@ -353,6 +362,34 @@ mod tests {
         let tr = fixed_count_trace(&cfg, 3, 7);
         assert_eq!(tr.len(), cfg.network.num_users * 3);
         assert!(tr.iter().all(|r| r.arrival_s < cfg.workload.episode_s));
+    }
+
+    #[test]
+    fn trace_sort_survives_nan_arrivals() {
+        // Regression: both trace generators used to sort with
+        // `partial_cmp(..).unwrap()`, which panics on a NaN arrival time.
+        // `total_cmp` must keep sorting total (NaN ordered after +∞) so
+        // the DES admission layer gets to reject the request explicitly.
+        let mut reqs: Vec<Request> = [2.0, f64::NAN, 0.5, f64::INFINITY, 1.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Request {
+                id: i as u64,
+                user: 0,
+                arrival_s: t,
+            })
+            .collect();
+        sort_by_arrival(&mut reqs); // must not panic
+        let finite: Vec<f64> = reqs
+            .iter()
+            .map(|r| r.arrival_s)
+            .filter(|t| t.is_finite())
+            .collect();
+        assert_eq!(finite, vec![0.5, 1.0, 2.0], "finite prefix stays sorted");
+        assert!(
+            reqs.last().unwrap().arrival_s.is_nan(),
+            "NaN sorts to the end under total_cmp"
+        );
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Heap-allocation accounting for the Li-GD hot path (ISSUE 2 acceptance:
-//! zero heap allocations per GD iteration in the steady state).
+//! zero heap allocations per GD iteration in the steady state; extended by
+//! ISSUE 4 to the masked/incremental re-plan path).
 //!
 //! This binary installs a counting global allocator and holds a single
 //! `#[test]` so no concurrent test can pollute the counter. The contract:
@@ -9,12 +10,19 @@
 //!   seen the cohort shape;
 //! * `solve_ligd_ws` performs a small constant number — exactly the
 //!   vectors packaged into the returned `CohortSolution` — independent of
-//!   the iteration budget.
+//!   the iteration budget;
+//! * a cache-hit `plan_era_cached` epoch (every cohort clean) performs
+//!   **zero solver-core work** at steady state: no GD iterations, and its
+//!   allocation count is reproducible and independent of the GD budget —
+//!   every remaining allocation is plan packaging (decisions, cohort
+//!   formation, the rate vectors of the regret pass), none of it scales
+//!   with solver effort.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use era::config::presets;
+use era::coordinator::{plan_era_cached, plan_era_masked, PlanCache, PlanOptions};
 use era::models::zoo;
 use era::net::Network;
 use era::optimizer::{solve_gd_ws, solve_ligd_ws, CohortProblem, GdOptions, LigdWorkspace};
@@ -127,10 +135,56 @@ fn ligd_hot_path_is_allocation_free_in_steady_state() {
         short_delta, long_delta,
         "allocation count must not scale with the iteration budget"
     );
-    // Exactly the CohortSolution's owned vectors (9 of them) plus nothing
+    // Exactly the CohortSolution's owned vectors (10 of them) plus nothing
     // hidden; keep a little headroom for std internals.
     assert!(
         short_delta <= 16,
         "expected packaging-only allocations, got {short_delta}"
+    );
+
+    // ---- incremental re-plan: cache-hit epochs do zero solver work -----
+    let cfg = presets::smoke();
+    let net = Network::generate(&cfg, 23);
+    let active: Vec<bool> = (0..net.num_users()).map(|u| u % 2 == 0).collect();
+    let popts = PlanOptions::default();
+    let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+    // reference: a full masked re-plan runs the solver every epoch
+    let before = allocs();
+    let (_, s_full) = plan_era_masked(&cfg, &net, &model, &active, &popts);
+    let full_delta = allocs() - before;
+    assert!(s_full.total_gd_iters > 0);
+    // epoch 0 populates the cache; epoch 1 warms every remaining buffer
+    let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+    let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+
+    let before = allocs();
+    let (_, s_hit) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+    let hit_delta = allocs() - before;
+    assert_eq!(s_hit.total_gd_iters, 0, "cache-hit epoch must not run GD");
+    assert_eq!(s_hit.cohorts_reused, s_hit.cohorts);
+    assert_eq!(s_hit.cohorts_resolved, 0);
+
+    let before = allocs();
+    let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+    let hit_repeat = allocs() - before;
+    assert_eq!(
+        hit_delta, hit_repeat,
+        "cache-hit allocation count must be reproducible"
+    );
+    // Quadrupling the GD budget must change nothing — the clean path never
+    // enters the solver core, so no allocation can scale with it.
+    let mut cfg_long = cfg.clone();
+    cfg_long.optimizer.max_iters *= 4;
+    let before = allocs();
+    let (_, s_long) = plan_era_cached(&cfg_long, &net, &model, &active, &popts, &mut cache);
+    let hit_long = allocs() - before;
+    assert_eq!(s_long.total_gd_iters, 0);
+    assert_eq!(
+        hit_delta, hit_long,
+        "cache-hit allocations must be independent of the GD budget"
+    );
+    assert!(
+        hit_delta < full_delta,
+        "cache-hit epoch ({hit_delta} allocs) must be cheaper than a full re-plan ({full_delta})"
     );
 }

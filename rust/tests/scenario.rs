@@ -295,3 +295,108 @@ fn density_shaped_grid_is_thread_invariant_across_all_strategies() {
         assert!(r1.iter().any(|r| r.strategy == *s), "missing strategy {s}");
     }
 }
+
+#[test]
+fn incremental_full_rescan_rows_are_byte_identical_to_full_replan() {
+    // Acceptance (ISSUE 4): with `episode.full_rescan_every = 1` every
+    // incremental epoch is a forced full re-solve — the emitted CSV rows
+    // (cache-statistics columns included) must be byte-identical to the
+    // non-incremental dynamic path.
+    let mut spec = ScenarioSpec::from_preset("churn").unwrap();
+    spec.base.network.num_users = 14;
+    spec.base.optimizer.max_iters = 25;
+    spec.base.workload.episode_s = 0.5;
+    spec.base.workload.arrival_rate_hz = 15.0;
+    spec.strategies = vec!["era".into()];
+    spec.axes.clear();
+    let mut inc = spec.clone();
+    inc.incremental = true;
+    inc.full_rescan_every = 1;
+    let full_csv = to_csv(&Engine::new(2).run(&spec).unwrap());
+    let inc_csv = to_csv(&Engine::new(2).run(&inc).unwrap());
+    assert_eq!(inc_csv, full_csv, "full_rescan_every=1 ≡ full re-plan");
+}
+
+#[test]
+fn incremental_churn_off_rows_match_modulo_cache_columns() {
+    // Acceptance (ISSUE 4): with churn off, incremental serving results are
+    // byte-identical to the full re-plan path — the only columns allowed to
+    // differ are the cache-statistics ones (which must then show full
+    // reuse: the steady-state epochs replay cached solves verbatim).
+    let mut base = presets::smoke();
+    base.network.num_users = 14;
+    base.optimizer.max_iters = 25;
+    base.workload.episode_s = 0.5;
+    base.workload.tasks_per_user = 4.0; // replan-only keeps fixed-count
+    let mut spec = ScenarioSpec::new("inc-off", base).with_strategies(&["era"]);
+    spec.episode = true;
+    spec.replan_interval_s = Some(0.125);
+    spec.trace_seed = Some(7);
+    let mut inc = spec.clone();
+    inc.incremental = true;
+    let full_csv = to_csv(&Engine::new(1).run(&spec).unwrap());
+    let inc_csv = to_csv(&Engine::new(1).run(&inc).unwrap());
+
+    let header: Vec<&str> = full_csv.lines().next().unwrap().split(',').collect();
+    assert_eq!(inc_csv.lines().next().unwrap().split(',').count(), header.len());
+    let cache_cols = ["dyn_cohorts_reused", "dyn_cohorts_resolved", "dyn_cache_hit_frac"];
+    for c in cache_cols {
+        assert!(header.contains(&c), "missing column {c}");
+    }
+    for (fl, il) in full_csv.lines().zip(inc_csv.lines()).skip(1) {
+        let fv: Vec<&str> = fl.split(',').collect();
+        let iv: Vec<&str> = il.split(',').collect();
+        assert_eq!(fv.len(), iv.len());
+        for (k, (f, i)) in header.iter().zip(fv.iter().zip(iv.iter())) {
+            if cache_cols.contains(k) {
+                continue;
+            }
+            assert_eq!(f, i, "column {k} must be byte-identical");
+        }
+        // 4 epochs: 1 populate + 3 all-clean ⇒ hit frac 3/4
+        let hit_idx = header.iter().position(|k| *k == "dyn_cache_hit_frac").unwrap();
+        let hit: f64 = iv[hit_idx].parse().unwrap();
+        assert!(hit > 0.7, "steady-state epochs must reuse the cache (hit={hit})");
+        let full_hit: f64 = fv[hit_idx].parse().unwrap();
+        assert_eq!(full_hit, 0.0, "full path never reuses");
+    }
+}
+
+#[test]
+fn churn_incremental_preset_runs_end_to_end() {
+    // CI-sized `era run --scenario churn-incremental`: the dirty-cohort
+    // planner survives real churn (arrivals, departures, handoffs), keeps
+    // request conservation, reuses cohorts in steady state, and stays
+    // deterministic across engine thread counts.
+    let mut spec = ScenarioSpec::from_preset("churn-incremental").unwrap();
+    spec.base.network.num_users = 16;
+    spec.base.optimizer.max_iters = 25;
+    spec.base.workload.episode_s = 0.5;
+    spec.base.workload.arrival_rate_hz = 15.0;
+    spec.replan_interval_s = Some(0.125);
+    spec.strategies = vec!["era".into(), "neurosurgeon".into()];
+    spec.axes.clear();
+    let records = Engine::new(2).run(&spec).unwrap();
+    assert_eq!(records.len(), 2);
+    let csv = to_csv(&records);
+    assert!(csv.lines().next().unwrap().contains("dyn_cache_hit_frac"));
+    for r in &records {
+        let ep = r.episode.as_ref().expect("episode");
+        let dy = r.dynamics.as_ref().expect("dynamics");
+        let requests: usize = dy.epochs.iter().map(|e| e.requests).sum();
+        let accounted: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(requests, accounted, "{}: epoch conservation", r.strategy);
+        assert_eq!(requests, ep.n + ep.dropped, "{}: total conservation", r.strategy);
+        for e in &dy.epochs {
+            assert_eq!(
+                e.cohorts_reused + e.cohorts_resolved,
+                if r.strategy == "era" { e.cohorts } else { 0 },
+                "{} epoch {}: reuse accounting",
+                r.strategy,
+                e.epoch
+            );
+        }
+    }
+    let again = Engine::new(1).run(&spec).unwrap();
+    assert_eq!(csv, to_csv(&again), "thread invariance");
+}
