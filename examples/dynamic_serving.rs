@@ -10,10 +10,14 @@
 use era::scenario::{Engine, ScenarioSpec};
 
 fn main() {
-    // The incremental variant of the churn preset: identical serving
+    // The churn-stable variant of the churn preset: identical serving
     // scenario, but each epoch re-plans through the dirty-cohort
-    // PlanCache (DESIGN.md §2d) — watch the reuse columns below.
-    let mut spec = ScenarioSpec::from_preset("churn-incremental").expect("preset");
+    // PlanCache with *churn-stable cohort identity* (DESIGN.md §2e) —
+    // fill-the-gap slot formation plus member-set cache keys, so a churn
+    // event dirties only the cohort(s) it touches, and the background
+    // fingerprint re-solves exactly the cohorts whose interference
+    // materially drifted. Watch the reuse columns below.
+    let mut spec = ScenarioSpec::from_preset("churn-stable").expect("preset");
     // one sweep point is enough for the demo; keep the crowded setting
     spec.axes.clear();
     spec.strategies = vec!["era".into(), "neurosurgeon".into()];
@@ -32,7 +36,8 @@ fn main() {
         spec.base.compute.edge_pool_units,
     );
     println!(
-        "incremental planner on (full re-scan every {} epochs)\n",
+        "incremental planner on: stable cohorts, bg tolerance {}, full re-scan every {} epochs (backstop)\n",
+        spec.base.optimizer.bg_tolerance,
         spec.full_rescan_every,
     );
 
@@ -81,5 +86,6 @@ fn main() {
         println!();
     }
     println!("Re-planning tracks the active population; the static plan cannot —");
-    println!("and the plan cache makes each steady-state epoch cost the churn, not the population.");
+    println!("and with churn-stable cohort identity each epoch re-solves only the");
+    println!("cohorts the churn actually touched, not every downstream cohort of an AP.");
 }

@@ -30,11 +30,12 @@ impl Strategy for Dina {
             .map(|u| {
                 // best channel by uplink gain
                 let ap = net.topo.user_ap[u];
+                // `total_cmp`: a NaN gain draw must not panic the baseline
+                // (and `max_by` under a total order is tie-deterministic —
+                // last maximal index — so rows stay thread-invariant)
                 let best_ch = (0..m)
                     .max_by(|&a, &b| {
-                        net.channels.up[u][ap][a]
-                            .partial_cmp(&net.channels.up[u][ap][b])
-                            .unwrap()
+                        net.channels.up[u][ap][a].total_cmp(&net.channels.up[u][ap][b])
                     })
                     .unwrap();
                 let up = helpers::est_up_rate(cfg, net, u, best_ch);
@@ -51,7 +52,9 @@ impl Strategy for Dina {
                 (u, t_dev - best.1, best.0, best_ch)
             })
             .collect();
-        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // stable sort + total order: equal-gain users keep ascending id
+        // order deterministically, NaN gains sink instead of panicking
+        ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
 
         // Greedy matching with per-(ap, channel) capacity.
         let mut load = vec![vec![0usize; m]; cfg.network.num_aps];
@@ -65,12 +68,11 @@ impl Strategy for Dina {
             // preferred channel, else next-best with capacity
             let mut chosen = None;
             let mut order: Vec<usize> = (0..m).collect();
-            order.sort_by(|&a, &b| {
-                net.channels.up[u][ap][b]
-                    .partial_cmp(&net.channels.up[u][ap][a])
-                    .unwrap()
-            });
-            debug_assert_eq!(order[0], best_ch);
+            order.sort_by(|&a, &b| net.channels.up[u][ap][b].total_cmp(&net.channels.up[u][ap][a]));
+            debug_assert_eq!(
+                net.channels.up[u][ap][order[0]].to_bits(),
+                net.channels.up[u][ap][best_ch].to_bits()
+            );
             for ch in order {
                 if load[ap][ch] < cap {
                     chosen = Some(ch);

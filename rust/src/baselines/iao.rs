@@ -133,8 +133,7 @@ mod tests {
             members.sort_by(|&a, &b| {
                 model
                     .edge_flops(ds[a].split)
-                    .partial_cmp(&model.edge_flops(ds[b].split))
-                    .unwrap()
+                    .total_cmp(&model.edge_flops(ds[b].split))
             });
             for w in members.windows(2) {
                 let (lo, hi) = (w[0], w[1]);

@@ -122,6 +122,20 @@ pub struct OptimizerConfig {
     /// Incremental re-plan (DESIGN.md §2d): Li-GD layer-scan half-width
     /// around the cached optimal splits when re-solving a dirty cohort.
     pub replan_layer_window: usize,
+    /// Churn-stable cohort formation (DESIGN.md §2e): the incremental
+    /// planner keeps a persistent user→slot table per AP and fills
+    /// departure holes with the next activation instead of re-chunking, so
+    /// one churn event perturbs one cohort instead of every downstream
+    /// cohort of that AP; the plan cache is then keyed by member set
+    /// instead of formation position. Off by default — the chunk-based
+    /// formation and positional keys of §2d, byte-identical to before.
+    pub stable_cohorts: bool,
+    /// Relative tolerance of the committed-background fingerprint
+    /// (DESIGN.md §2e): a cached cohort whose per-channel interference
+    /// background drifted by more than this fraction since its solve is
+    /// re-solved even when its local fingerprint is clean. `0` disables
+    /// the check (drift is then bounded only by `full_rescan_every`).
+    pub bg_tolerance: f64,
 }
 
 /// User churn model for the dynamic serving engine (companion work arXiv
@@ -230,6 +244,8 @@ impl Default for OptimizerConfig {
             resource_scale: 0.02,
             delay_scale: 50.0,
             replan_layer_window: 2,
+            stable_cohorts: false,
+            bg_tolerance: 0.0,
         }
     }
 }
@@ -383,6 +399,12 @@ impl Config {
             ("optimizer", "resource_scale") => self.optimizer.resource_scale = f!(),
             ("optimizer", "delay_scale") => self.optimizer.delay_scale = f!(),
             ("optimizer", "replan_layer_window") => self.optimizer.replan_layer_window = u!(),
+            ("optimizer", "stable_cohorts") => {
+                self.optimizer.stable_cohorts = val
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("expected boolean, got {val:?}"))?
+            }
+            ("optimizer", "bg_tolerance") => self.optimizer.bg_tolerance = f!(),
             ("workload", "model") => {
                 self.workload.model = val
                     .as_str()
@@ -469,9 +491,11 @@ impl Config {
         s.push_str(&format!("resource_scale = {}\n", f(o.resource_scale)));
         s.push_str(&format!("delay_scale = {}\n", f(o.delay_scale)));
         s.push_str(&format!(
-            "replan_layer_window = {}\n\n",
+            "replan_layer_window = {}\n",
             o.replan_layer_window
         ));
+        s.push_str(&format!("stable_cohorts = {}\n", o.stable_cohorts));
+        s.push_str(&format!("bg_tolerance = {}\n\n", f(o.bg_tolerance)));
         s.push_str("[workload]\n");
         s.push_str(&format!("model = {:?}\n", w.model));
         s.push_str(&format!("tasks_per_user = {}\n", f(w.tasks_per_user)));
@@ -513,6 +537,10 @@ impl Config {
         anyhow::ensure!(
             o.replan_layer_window >= 1,
             "optimizer.replan_layer_window must be >= 1"
+        );
+        anyhow::ensure!(
+            o.bg_tolerance >= 0.0 && o.bg_tolerance.is_finite(),
+            "optimizer.bg_tolerance must be a finite number >= 0"
         );
         let ch = &self.churn;
         anyhow::ensure!(
@@ -606,6 +634,8 @@ mod tests {
         cfg.qoe.expected_finish_mean_s = 0.0125;
         cfg.optimizer.max_iters = 123;
         cfg.optimizer.replan_layer_window = 3;
+        cfg.optimizer.stable_cohorts = true;
+        cfg.optimizer.bg_tolerance = 0.125;
         cfg.workload.model = "nin".into();
         cfg.churn.initial_active_frac = 0.35;
         cfg.churn.arrival_rate_hz = 4.5;
@@ -614,6 +644,21 @@ mod tests {
         cfg.churn.handoff_hz = 0.0625;
         let parsed = Config::from_str(&cfg.to_toml()).unwrap();
         assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn stable_cohort_keys_parse_and_validate() {
+        let c = Config::from_str("[optimizer]\nstable_cohorts = true\nbg_tolerance = 0.05\n")
+            .unwrap();
+        assert!(c.optimizer.stable_cohorts);
+        assert_eq!(c.optimizer.bg_tolerance, 0.05);
+        let d = Config::default();
+        assert!(!d.optimizer.stable_cohorts, "defaults keep the §2d path");
+        assert_eq!(d.optimizer.bg_tolerance, 0.0);
+        let e = Config::from_str("[optimizer]\nbg_tolerance = -0.5\n").unwrap_err();
+        assert!(e.to_string().contains("bg_tolerance"), "{e}");
+        let e = Config::from_str("[optimizer]\nstable_cohorts = 1\n").unwrap_err();
+        assert!(e.to_string().contains("boolean"), "{e}");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Cross-epoch plan cache for the incremental re-planner (DESIGN.md §2d).
+//! Cross-epoch plan cache for the incremental re-planner (DESIGN.md §2d/§2e).
 //!
 //! The dynamic serving engine re-plans every epoch, but under sparse churn
 //! most cohorts are untouched between consecutive epochs. A [`PlanCache`]
@@ -14,15 +14,33 @@
 //! splits). A forced full re-solve every [`PlanCache::full_rescan_every`]
 //! epochs bounds the drift that stale cross-cohort interference can
 //! accumulate.
+//!
+//! Cache identity (§2e): entries are keyed by a 64-bit FNV [`CohortKey`].
+//! With `optimizer.stable_cohorts` off the key is *positional* — `(ap,
+//! formation slot)`, the §2d scheme, byte-identical behavior. With it on,
+//! cohorts come from the persistent fill-the-gap
+//! [`crate::coordinator::cohort::SlotTable`] and the key is the
+//! *member set* (order-insensitive over sorted user ids + AP), so a churn
+//! event invalidates exactly the cohort(s) whose membership it touched and
+//! a cohort that keeps its members always stays a hit — even when a
+//! neighbor cohort shrinks or disappears. With `optimizer.bg_tolerance >
+//! 0` each entry additionally records a quantized fingerprint of the
+//! committed interference background it was solved against; a clean
+//! cohort whose background has *materially* drifted since its solve is
+//! re-solved instead of replayed, demoting `full_rescan_every` from the
+//! correctness mechanism to a backstop.
 
+use super::cohort::SlotTable;
 use crate::net::Network;
 use crate::optimizer::CohortSolution;
 use std::collections::HashMap;
 
-/// Cache key: `(ap, cohort slot within that AP's formation order)`. Slot
-/// positions are stable while an AP's active membership is stable; any
-/// membership shift changes the fingerprint and dirties the slot anyway.
-pub(crate) type CohortKey = (usize, usize);
+/// Cache key: 64-bit FNV over either `(ap, formation slot)` (positional,
+/// `stable_cohorts` off) or `(ap, sorted member ids)` (member-set,
+/// `stable_cohorts` on). A key collision can at worst cause a spurious
+/// re-solve or eviction, never a wrong replay — reuse is always gated by
+/// the full cohort fingerprint as well.
+pub(crate) type CohortKey = u64;
 
 /// One cached cohort solve.
 pub(crate) struct CacheEntry {
@@ -33,6 +51,9 @@ pub(crate) struct CacheEntry {
     /// The committed solution; `solution.x` doubles as the cross-epoch
     /// warm-start seed and `solution.split` centers the windowed scan.
     pub solution: CohortSolution,
+    /// Quantized committed-background fingerprint at solve time (see
+    /// [`bg_quantize`]); `0` when `optimizer.bg_tolerance` is disabled.
+    pub bg_fp: u64,
 }
 
 /// Cross-epoch state owned by the dynamic serving engine (one per
@@ -51,6 +72,15 @@ pub struct PlanCache {
     /// dirty re-solves (`cfg.optimizer.replan_layer_window`).
     pub window: usize,
     pub(crate) entries: HashMap<CohortKey, CacheEntry>,
+    /// Persistent fill-the-gap slot table (`optimizer.stable_cohorts`);
+    /// untouched on the positional path.
+    pub(crate) slots: SlotTable,
+    /// Stable mode: last epoch's cache key per `(ap, slot group)`. When a
+    /// cohort's member set changed (its member-set lookup misses), this
+    /// hands the dirty re-solve the *previous* solve of the same slot
+    /// group as a warm-start seed — the §2d positional-seeding behavior,
+    /// kept under member-set keying.
+    pub(crate) seed_of: HashMap<(usize, usize), CohortKey>,
 }
 
 impl PlanCache {
@@ -60,6 +90,8 @@ impl PlanCache {
             full_rescan_every,
             window,
             entries: HashMap::new(),
+            slots: SlotTable::default(),
+            seed_of: HashMap::new(),
         }
     }
 
@@ -72,23 +104,31 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
-    /// Drop every cached solve (the next re-plan is a full one).
+    /// Drop every cached solve (the next re-plan is a full one). The slot
+    /// table is kept — cohort *identity* survives a cache flush.
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.seed_of.clear();
     }
 }
 
 /// FNV-1a over the bytes fed in — deterministic across runs and platforms
 /// (f64 values hash by their IEEE-754 bit pattern).
-struct Fnv(u64);
+pub(crate) struct Fnv(pub u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl Fnv {
-    fn new() -> Self {
+    pub fn new() -> Self {
         Fnv(0xcbf2_9ce4_8422_2325)
     }
 
     #[inline]
-    fn u64(&mut self, v: u64) {
+    pub fn u64(&mut self, v: u64) {
         for b in v.to_le_bytes() {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
@@ -96,9 +136,58 @@ impl Fnv {
     }
 
     #[inline]
-    fn f64(&mut self, v: f64) {
+    pub fn f64(&mut self, v: f64) {
         self.u64(v.to_bits());
     }
+}
+
+/// Positional cache key (`stable_cohorts` off): `(ap, formation slot)`.
+pub(crate) fn positional_key(ap: usize, slot: usize) -> CohortKey {
+    let mut h = Fnv::new();
+    h.u64(0x706f_7369); // "posi" domain tag: never collides with member-set keys
+    h.u64(ap as u64);
+    h.u64(slot as u64);
+    h.0
+}
+
+/// Member-set cache key (`stable_cohorts` on): order-insensitive FNV over
+/// the sorted member ids plus the AP. Two cohorts with the same members at
+/// the same AP get the same key regardless of how the members were listed.
+pub(crate) fn member_set_key(ap: usize, users: &[usize]) -> CohortKey {
+    let mut h = Fnv::new();
+    h.u64(0x6d65_6d62); // "memb" domain tag
+    h.u64(ap as u64);
+    h.u64(users.len() as u64);
+    // The planner always passes the canonical ascending member list
+    // (`form_cohorts_stable` sorts), so the hot path hashes the slice
+    // directly; an unsorted caller pays one sort copy for the documented
+    // order-insensitivity.
+    if users.windows(2).all(|w| w[0] <= w[1]) {
+        for &u in users {
+            h.u64(u as u64);
+        }
+    } else {
+        let mut ids: Vec<usize> = users.to_vec();
+        ids.sort_unstable();
+        for u in ids {
+            h.u64(u as u64);
+        }
+    }
+    h.0
+}
+
+/// Quantize one committed-background power (W) into a relative bucket of
+/// width `ln(1 + tol)` on the log scale: two backgrounds land in the same
+/// bucket when they differ by less than roughly `tol` relative. Values at
+/// or below the floor (including NaN — churned rates can produce one)
+/// collapse into a single "negligible" bucket, so a background appearing
+/// from or vanishing into nothing is always a material change.
+pub(crate) fn bg_quantize(v: f64, tol: f64) -> i64 {
+    const FLOOR: f64 = 1e-30;
+    if v.is_nan() || v <= FLOOR {
+        return i64::MIN;
+    }
+    (v.ln() / (1.0 + tol).ln()).floor() as i64
 }
 
 /// Cohort-local fingerprint: everything the cohort's solver inputs depend
@@ -106,8 +195,8 @@ impl Fnv {
 /// AP association, per-user uplink/downlink gain rows at that AP, device
 /// capability, QoE threshold). Identical fingerprint ⇒ identical local
 /// subproblem ⇒ the cached solve is exact for it (the background the
-/// solution was computed against can drift; the rescan safeguard bounds
-/// that — DESIGN.md §2d).
+/// solution was computed against can drift; the background fingerprint
+/// and the rescan backstop bound that — DESIGN.md §2d/§2e).
 pub(crate) fn cohort_fingerprint(net: &Network, ap: usize, users: &[usize]) -> u64 {
     let mut h = Fnv::new();
     h.u64(ap as u64);
@@ -158,5 +247,33 @@ mod tests {
         assert_eq!(cache.window, 2);
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn member_set_key_is_order_insensitive_and_set_sensitive() {
+        let k1 = member_set_key(0, &[3, 7, 11]);
+        assert_eq!(k1, member_set_key(0, &[11, 3, 7]), "order-insensitive");
+        assert_ne!(k1, member_set_key(1, &[3, 7, 11]), "AP matters");
+        assert_ne!(k1, member_set_key(0, &[3, 7]), "membership matters");
+        assert_ne!(k1, member_set_key(0, &[3, 7, 12]));
+        // disjoint from every positional key by domain tag construction
+        assert_ne!(k1, positional_key(0, 3));
+        assert_ne!(positional_key(0, 1), positional_key(1, 0));
+    }
+
+    #[test]
+    fn bg_quantize_buckets_relative_drift() {
+        let tol = 0.1;
+        let v = 3.2e-14;
+        // < tol relative drift stays in the same bucket for most draws;
+        // pick a value safely inside a bucket
+        let q = bg_quantize(v, tol);
+        assert_eq!(q, bg_quantize(v * 1.0001, tol), "tiny drift ignored");
+        assert_ne!(q, bg_quantize(v * 2.0, tol), "2× drift is material");
+        // the negligible bucket swallows zero, tiny, and NaN alike
+        assert_eq!(bg_quantize(0.0, tol), i64::MIN);
+        assert_eq!(bg_quantize(1e-31, tol), i64::MIN);
+        assert_eq!(bg_quantize(f64::NAN, tol), i64::MIN);
+        assert_ne!(bg_quantize(1e-15, tol), i64::MIN);
     }
 }

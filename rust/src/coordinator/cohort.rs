@@ -38,14 +38,24 @@ impl ChannelLoad {
     pub fn candidates(&self, ap: usize, k: usize) -> Vec<usize> {
         let mut order: Vec<usize> = (0..self.counts[ap].len()).collect();
         order.sort_by_key(|&c| self.counts[ap][c]);
-        order.into_iter().take(k).collect()
+        // Capacity first: channels with room (least-loaded order), then —
+        // only if fewer than `k` have room — pad with the least-loaded
+        // saturated ones. The stable sort keeps both halves least-loaded
+        // ordered, so the padding really is "globally least-loaded".
+        let (roomy, full): (Vec<usize>, Vec<usize>) =
+            order.into_iter().partition(|&c| self.has_room(ap, c));
+        roomy.into_iter().chain(full).take(k).collect()
     }
 
     /// Gain-aware candidates: within the least-loaded tier, prefer the
     /// channels where the cohort's users actually have good fading draws
     /// (score = Σ_user gain / (1 + load)). This is what lets the NOMA
     /// planner exploit multi-user channel diversity instead of handing it
-    /// to the matching-based baselines.
+    /// to the matching-based baselines. Same capacity contract as
+    /// [`ChannelLoad::candidates`]: channels with room lead (best score
+    /// first); cap-saturated ones only pad when fewer than `k` have room —
+    /// handing the solver a channel it cannot commit wastes its power
+    /// budget on a guaranteed rounding fallback.
     pub fn candidates_for(
         &self,
         ap: usize,
@@ -60,8 +70,18 @@ impl ChannelLoad {
                 (c, g / (1.0 + self.counts[ap][c] as f64))
             })
             .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        scored.into_iter().take(k).map(|(c, _)| c).collect()
+        // `total_cmp`: a NaN gain draw must not panic the planner hot path
+        // (NaN scores sort deterministically instead).
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+        let (roomy, full): (Vec<(usize, f64)>, Vec<(usize, f64)>) = scored
+            .into_iter()
+            .partition(|&(c, _)| self.has_room(ap, c));
+        roomy
+            .into_iter()
+            .chain(full)
+            .take(k)
+            .map(|(c, _)| c)
+            .collect()
     }
 
     pub fn commit(&mut self, ap: usize, ch: usize) {
@@ -89,7 +109,7 @@ impl ChannelLoad {
             .min()?;
         (0..self.counts[ap].len())
             .filter(|&c| self.has_room(ap, c) && self.counts[ap][c] <= min_load + 1)
-            .max_by(|&a, &b| gains[a].partial_cmp(&gains[b]).unwrap())
+            .max_by(|&a, &b| gains[a].total_cmp(&gains[b]))
     }
 }
 
@@ -128,6 +148,125 @@ pub fn form_cohorts_masked(
                     &net.channels.up,
                 ),
             });
+        }
+    }
+    cohorts
+}
+
+/// Persistent user → cohort-slot assignment per AP — the churn-stable
+/// alternative to chunk-based formation (DESIGN.md §2e).
+///
+/// Each AP owns a slot vector; slot `i` belongs to cohort group `i /
+/// cohort_users`. A departing (or handed-off) user leaves a hole at its
+/// slot; the next activation fills the lowest hole before new slots are
+/// appended. Slot indices therefore never shift, so one churn event
+/// perturbs exactly the cohort group(s) it touches — a departure dirties
+/// one cohort, a handoff at most two — instead of re-chunking every
+/// downstream cohort of the AP the way `form_cohorts_masked` does.
+///
+/// The table is cross-epoch state: it lives in
+/// [`crate::coordinator::PlanCache`] and is only consulted by the
+/// incremental planner when `optimizer.stable_cohorts` is set.
+#[derive(Clone, Debug, Default)]
+pub struct SlotTable {
+    /// `slots[ap][i]` = user occupying slot `i` of AP `ap` (`None` = hole).
+    slots: Vec<Vec<Option<usize>>>,
+    /// Inverse map: `slot_of[user]` = `(ap, slot index)` when assigned.
+    slot_of: Vec<Option<(usize, usize)>>,
+}
+
+impl SlotTable {
+    /// Bring the table in sync with the current association + activity
+    /// mask: evict departed/moved users (leaving holes), then admit new
+    /// active users in ascending id order — each fills the lowest hole of
+    /// its AP, else appends. Trailing holes are truncated (kept indices
+    /// never shift). Deterministic in `(net, active)`.
+    fn sync(&mut self, cfg: &Config, net: &Network, active: Option<&[bool]>) {
+        let n_aps = cfg.network.num_aps;
+        let nu = net.num_users();
+        if self.slots.len() != n_aps || self.slot_of.len() != nu {
+            // population shape changed (new episode / new network): reset
+            self.slots = vec![Vec::new(); n_aps];
+            self.slot_of = vec![None; nu];
+        }
+        let is_active = |u: usize| active.map_or(true, |m| m[u]);
+        for u in 0..nu {
+            if let Some((ap, idx)) = self.slot_of[u] {
+                if !is_active(u) || net.topo.user_ap[u] != ap {
+                    self.slots[ap][idx] = None;
+                    self.slot_of[u] = None;
+                }
+            }
+        }
+        for u in 0..nu {
+            if self.slot_of[u].is_none() && is_active(u) {
+                let ap = net.topo.user_ap[u];
+                let row = &mut self.slots[ap];
+                let idx = match row.iter().position(|s| s.is_none()) {
+                    Some(hole) => hole,
+                    None => {
+                        row.push(None);
+                        row.len() - 1
+                    }
+                };
+                row[idx] = Some(u);
+                self.slot_of[u] = Some((ap, idx));
+            }
+        }
+        for row in &mut self.slots {
+            while matches!(row.last(), Some(None)) {
+                row.pop();
+            }
+        }
+    }
+
+    /// Number of slots currently tracked for `ap` (diagnostics/tests).
+    pub fn slots_of_ap(&self, ap: usize) -> usize {
+        self.slots.get(ap).map_or(0, |row| row.len())
+    }
+}
+
+/// Churn-stable cohort formation: sync the persistent [`SlotTable`] with
+/// the active set, then emit one cohort per non-empty slot group. Members
+/// are listed in ascending user id (the canonical order — a cohort's
+/// member *set* fully determines its solver inputs, which is what lets
+/// the plan cache key solutions by member set). Returns each cohort with
+/// its stable slot-group index.
+///
+/// For a fresh table with no churn history this produces exactly the same
+/// cohorts as [`form_cohorts_masked`] (users admitted in ascending order
+/// fill slots in order ⇒ the chunks), so churn-off behavior is identical.
+pub fn form_cohorts_stable(
+    cfg: &Config,
+    net: &Network,
+    load: &ChannelLoad,
+    active: Option<&[bool]>,
+    table: &mut SlotTable,
+) -> Vec<(usize, Cohort)> {
+    table.sync(cfg, net, active);
+    let k = cfg.optimizer.cohort_users;
+    let mut cohorts = Vec::new();
+    for ap in 0..cfg.network.num_aps {
+        for (group, slots) in table.slots[ap].chunks(k).enumerate() {
+            let mut users: Vec<usize> = slots.iter().filter_map(|&s| s).collect();
+            if users.is_empty() {
+                continue;
+            }
+            users.sort_unstable();
+            let channels = load.candidates_for(
+                ap,
+                cfg.optimizer.cohort_channels,
+                &users,
+                &net.channels.up,
+            );
+            cohorts.push((
+                group,
+                Cohort {
+                    ap,
+                    users,
+                    channels,
+                },
+            ));
         }
     }
     cohorts
@@ -189,5 +328,152 @@ mod tests {
         // candidates prefer empties
         let cand = load.candidates(0, 2);
         assert!(!cand.contains(&0));
+
+        // The documented capacity contract: channels with room come first,
+        // saturated ones only pad when fewer than `k` have room. Channel 0
+        // is at cap (2) and channel 1 at 1 commit — with k = 4 every
+        // channel is returned, but 0 must come *last* despite the sort
+        // being purely load-ordered before the fix.
+        load.commit(0, 1);
+        let cand = load.candidates(0, 4);
+        assert_eq!(cand.len(), 4);
+        assert_eq!(cand[3], 0, "cap-saturated channel pads last: {cand:?}");
+        assert_eq!(&cand[..2], &[2, 3], "empties lead");
+        assert_eq!(cand[2], 1);
+        // and with k small enough, a saturated channel is never returned
+        for k in 1..=3 {
+            assert!(
+                !load.candidates(0, k).contains(&0),
+                "k={k} returned a channel with no capacity"
+            );
+        }
+    }
+
+    #[test]
+    fn gain_aware_candidates_respect_capacity_first() {
+        // The live-path variant of the `candidates` contract: a channel at
+        // the cluster cap is only returned when fewer than `k` channels
+        // have room, however good its gain.
+        let mut load = ChannelLoad::new(1, 3, 1);
+        load.commit(0, 0); // channel 0 saturated
+        let up_gains = vec![vec![vec![100.0, 1.0, 2.0]]]; // ch 0 gain dominates
+        let cand = load.candidates_for(0, 2, &[0], &up_gains);
+        assert_eq!(cand, vec![2, 1], "saturated best-gain channel excluded");
+        let all = load.candidates_for(0, 3, &[0], &up_gains);
+        assert_eq!(all, vec![2, 1, 0], "padded last when k exceeds the room");
+    }
+
+    #[test]
+    fn nan_gain_draws_do_not_panic_candidate_selection() {
+        // Regression: `candidates_for` / `best_fallback` used
+        // `partial_cmp(..).unwrap()`, which panics the planner on a single
+        // NaN gain. They must stay total and deterministic instead.
+        let load = ChannelLoad::new(1, 3, 2);
+        let up_gains = vec![vec![vec![f64::NAN, 1.0, 2.0]]]; // user 0, ap 0
+        let cand = load.candidates_for(0, 2, &[0], &up_gains);
+        assert_eq!(cand.len(), 2);
+        let gains = [f64::NAN, 0.5, 0.25];
+        let fb = load.best_fallback(0, &gains);
+        assert!(fb.is_some(), "a NaN gain must not wipe out the fallback");
+    }
+
+    #[test]
+    fn stable_formation_matches_chunks_without_churn() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 3);
+        let load = ChannelLoad::new(cfg.network.num_aps, cfg.network.num_subchannels, 3);
+        let active: Vec<bool> = (0..net.num_users()).map(|u| u % 3 != 0).collect();
+        let chunked = form_cohorts_masked(&cfg, &net, &load, Some(&active));
+        let mut table = SlotTable::default();
+        let stable = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        assert_eq!(stable.len(), chunked.len());
+        for ((group, s), c) in stable.iter().zip(chunked.iter()) {
+            assert_eq!(s.ap, c.ap);
+            assert_eq!(s.users, c.users, "fresh table == chunks");
+            assert_eq!(s.channels, c.channels);
+            let _ = group;
+        }
+        // re-forming with the same mask is a fixed point
+        let again = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        for ((ga, a), (gb, b)) in stable.iter().zip(again.iter()) {
+            assert_eq!(ga, gb);
+            assert_eq!(a.users, b.users);
+        }
+    }
+
+    #[test]
+    fn departure_perturbs_one_cohort_and_the_hole_is_refilled() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48; // several cohorts per AP
+        let net = Network::generate(&cfg, 11);
+        let load = ChannelLoad::new(cfg.network.num_aps, cfg.network.num_subchannels, 3);
+        let mut active = vec![true; net.num_users()];
+        let mut table = SlotTable::default();
+        let before = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+
+        // Depart the *first* member of AP 0 — the chunk formation's worst
+        // case (it shifts every downstream chunk of that AP).
+        let departed = *net.topo.users_of_ap(0).first().expect("AP 0 has users");
+        active[departed] = false;
+        let after = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        let changed: Vec<usize> = before
+            .iter()
+            .filter(|(g, c)| {
+                !after
+                    .iter()
+                    .any(|(g2, c2)| *g2 == *g && c2.ap == c.ap && c2.users == c.users)
+            })
+            .map(|(g, _)| *g)
+            .collect();
+        assert_eq!(changed.len(), 1, "exactly one cohort changed: {changed:?}");
+
+        // A re-arrival fills the hole: membership reverts exactly.
+        active[departed] = true;
+        let back = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        assert_eq!(back.len(), before.len());
+        for ((ga, a), (gb, b)) in back.iter().zip(before.iter()) {
+            assert_eq!(ga, gb);
+            assert_eq!(a.users, b.users, "hole refilled by the returning user");
+        }
+    }
+
+    #[test]
+    fn handoff_perturbs_at_most_two_cohorts() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48;
+        let net = Network::generate(&cfg, 12);
+        assert!(cfg.network.num_aps >= 2, "handoff needs two APs");
+        let load = ChannelLoad::new(cfg.network.num_aps, cfg.network.num_subchannels, 3);
+        let active = vec![true; net.num_users()];
+        let mut table = SlotTable::default();
+        let before = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+
+        // Hand the first user of AP 0 off to AP 1 on a cloned network.
+        let mover = *net.topo.users_of_ap(0).first().expect("AP 0 has users");
+        let mut net2 = net.clone();
+        net2.topo.user_ap[mover] = 1;
+        let after = form_cohorts_stable(&cfg, &net2, &load, Some(&active), &mut table);
+        let changed = before
+            .iter()
+            .filter(|(g, c)| {
+                !after
+                    .iter()
+                    .any(|(g2, c2)| *g2 == *g && c2.ap == c.ap && c2.users == c.users)
+            })
+            .count();
+        let appeared = after
+            .iter()
+            .filter(|(g, c)| {
+                !before
+                    .iter()
+                    .any(|(g2, c2)| *g2 == *g && c2.ap == c.ap && c2.users == c.users)
+            })
+            .count();
+        assert!(changed <= 2, "handoff changed {changed} source cohorts");
+        assert!(appeared <= 2, "handoff produced {appeared} new cohorts");
+        // the mover really lives in AP 1 now
+        assert!(after
+            .iter()
+            .any(|(_, c)| c.ap == 1 && c.users.contains(&mover)));
     }
 }

@@ -29,9 +29,9 @@ use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
 use crate::optimizer::{solve_ligd_seeded, CohortProblem, CohortSolution, EpochSeed, GdOptions};
-use cache::{cohort_fingerprint, CacheEntry};
+use cache::{cohort_fingerprint, member_set_key, positional_key, CacheEntry, CohortKey, Fnv};
 pub use cache::PlanCache;
-use cohort::{form_cohorts_masked, ChannelLoad, Cohort};
+use cohort::{form_cohorts_masked, form_cohorts_stable, ChannelLoad, Cohort, SlotTable};
 
 /// Planner statistics (Corollary 2/4 instrumentation).
 #[derive(Clone, Debug, Default)]
@@ -52,6 +52,11 @@ pub struct PlanStats {
     pub cohorts_resolved: usize,
     /// Dirty re-solves whose windowed layer scan clipped and re-ran full.
     pub window_fallbacks: usize,
+    /// Fingerprint-clean cohorts re-solved because their committed
+    /// interference background drifted past `optimizer.bg_tolerance`
+    /// (counted inside `cohorts_resolved`; always 0 with the tolerance
+    /// disabled or outside the incremental path).
+    pub bg_resolves: usize,
 }
 
 /// Planner knobs.
@@ -347,23 +352,93 @@ fn new_plan_state(cfg: &Config, net: &Network, model: &ModelProfile) -> PlanStat
     }
 }
 
-/// The full (every cohort re-solved) planning pass. With `capture` the
-/// per-cohort `(Cohort, CohortSolution)` pairs are returned so the
-/// incremental planner can (re)populate its [`PlanCache`] from a forced
-/// full re-scan without a second solve.
-#[allow(clippy::type_complexity)]
-fn plan_epoch_full(
+/// One cohort captured by a full (re)planning pass, for cache population:
+/// its stable slot-group index, the cohort itself, the committed solution,
+/// and the quantized background fingerprint at solve time.
+struct CapturedCohort {
+    group: usize,
+    cohort: Cohort,
+    solution: CohortSolution,
+    bg_fp: u64,
+}
+
+/// Quantized fingerprint of the committed interference background a cohort
+/// faces in planning state `st`: per-candidate-channel uplink background
+/// received at its AP plus the per-(user, channel) downlink co-channel
+/// power from other APs — exactly the `bg_up`/`bg_down` constants
+/// [`prepare_cohort`] feeds the solver, bucketed to `tol` relative
+/// (DESIGN.md §2e). Two fingerprints match iff every background term is
+/// within roughly `tol` of the reference.
+fn cohort_bg_fp(
+    cfg: &Config,
+    net: &Network,
+    st: &PlanState,
+    ap: usize,
+    users: &[usize],
+    channels: &[usize],
+    tol: f64,
+) -> u64 {
+    let n_aps = cfg.network.num_aps;
+    let mut h = Fnv::new();
+    for &ch in channels {
+        h.u64(cache::bg_quantize(st.bg_up_acc[ap][ch], tol) as u64);
+    }
+    for &u in users {
+        for &ch in channels {
+            let mut s = 0.0;
+            for x in 0..n_aps {
+                if x != ap {
+                    s += st.ap_ch_power[x][ch] * net.channels.down[u][x][ch];
+                }
+            }
+            h.u64(cache::bg_quantize(s, tol) as u64);
+        }
+    }
+    h.0
+}
+
+/// [`cohort_bg_fp`] for a just-prepared cohort — the value cached
+/// alongside its solve (`0` when the tolerance is disabled or the caller
+/// isn't capturing). Shared by the full-capture and dirty-re-solve paths
+/// so the stored fingerprint can never desynchronize from the drift check.
+fn prepared_bg_fp(
+    cfg: &Config,
+    net: &Network,
+    st: &PlanState,
+    c: &Cohort,
+    enabled: bool,
+    tol: f64,
+) -> u64 {
+    if enabled && tol > 0.0 {
+        cohort_bg_fp(cfg, net, st, c.ap, &c.users, &c.channels, tol)
+    } else {
+        0
+    }
+}
+
+/// The shared full-solve planning harness: wave-partition `cohorts`, solve
+/// every one, round-and-commit in fixed order, run the regret pass. With
+/// `capture` each cohort comes back as a [`CapturedCohort`] (its
+/// background fingerprint taken at *prepare* time — the state its solve
+/// actually ran against) so the incremental planner can (re)populate its
+/// [`PlanCache`] from a forced full re-scan without a second solve.
+/// `groups[i]` is cohort `i`'s stable slot-group index (formation order on
+/// the chunked path).
+#[allow(clippy::too_many_arguments)]
+fn plan_cohorts(
     cfg: &Config,
     net: &Network,
     model: &ModelProfile,
-    active: Option<&[bool]>,
+    mut st: PlanState,
+    mut cohorts: Vec<Cohort>,
+    groups: &[usize],
     popts: &PlanOptions,
     capture: bool,
-) -> (Vec<Decision>, PlanStats, Vec<(Cohort, CohortSolution)>) {
-    let mut st = new_plan_state(cfg, net, model);
+) -> (Vec<Decision>, PlanStats, Vec<CapturedCohort>) {
+    debug_assert_eq!(cohorts.len(), groups.len());
     let gd_opts = GdOptions::from_config(&cfg.optimizer);
+    let tol = cfg.optimizer.bg_tolerance;
 
-    let mut cohorts = form_cohorts_masked(cfg, net, &st.load, active);
     st.stats.cohorts = cohorts.len();
     let aps: Vec<usize> = cohorts.iter().map(|c| c.ap).collect();
     let waves = wave_partition(&aps, cfg.network.num_aps, popts.threads);
@@ -371,17 +446,27 @@ fn plan_epoch_full(
     let mut captured = Vec::new();
 
     for wave in waves {
+        let mut wave_bg = Vec::with_capacity(wave.len());
         let problems: Vec<CohortProblem> = wave
             .iter()
-            .map(|&i| prepare_cohort(cfg, net, &st, &mut cohorts[i]))
+            .map(|&i| {
+                let p = prepare_cohort(cfg, net, &st, &mut cohorts[i]);
+                wave_bg.push(prepared_bg_fp(cfg, net, &st, &cohorts[i], capture, tol));
+                p
+            })
             .collect();
         let solutions = solve_wave(problems, model, &gd_opts, popts.warm_start, popts.threads);
-        for (&i, sol) in wave.iter().zip(solutions.into_iter()) {
+        for ((k, &i), sol) in wave.iter().enumerate().zip(solutions.into_iter()) {
             let c = &cohorts[i];
             st.stats.total_gd_iters += sol.total_iters;
             round_and_commit(cfg, net, model, &mut st, c.ap, &c.users, &c.channels, &sol);
             if capture {
-                captured.push((c.clone(), sol));
+                captured.push(CapturedCohort {
+                    group: groups[i],
+                    cohort: c.clone(),
+                    solution: sol,
+                    bg_fp: wave_bg[k],
+                });
             }
         }
     }
@@ -389,6 +474,50 @@ fn plan_epoch_full(
 
     regret_pass(cfg, net, model, &mut st);
     (st.decisions, st.stats, captured)
+}
+
+/// Formation-order slot indices per AP — the §2d positional identity of
+/// chunk-formed cohorts.
+fn formation_slots(cfg: &Config, cohorts: &[Cohort]) -> Vec<usize> {
+    let mut slot_of_ap = vec![0usize; cfg.network.num_aps];
+    cohorts
+        .iter()
+        .map(|c| {
+            let s = slot_of_ap[c.ap];
+            slot_of_ap[c.ap] += 1;
+            s
+        })
+        .collect()
+}
+
+/// [`form_cohorts_stable`] split into the parallel `(groups, cohorts)`
+/// vectors [`plan_cohorts`] and the classification loop index by.
+fn form_stable_unzipped(
+    cfg: &Config,
+    net: &Network,
+    load: &ChannelLoad,
+    active: &[bool],
+    table: &mut SlotTable,
+) -> (Vec<usize>, Vec<Cohort>) {
+    form_cohorts_stable(cfg, net, load, Some(active), table)
+        .into_iter()
+        .unzip()
+}
+
+/// The full (every cohort re-solved) planning pass over chunk-formed
+/// cohorts — see [`plan_cohorts`].
+fn plan_epoch_full(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    active: Option<&[bool]>,
+    popts: &PlanOptions,
+    capture: bool,
+) -> (Vec<Decision>, PlanStats, Vec<CapturedCohort>) {
+    let st = new_plan_state(cfg, net, model);
+    let cohorts = form_cohorts_masked(cfg, net, &st.load, active);
+    let groups = formation_slots(cfg, &cohorts);
+    plan_cohorts(cfg, net, model, st, cohorts, &groups, popts, capture)
 }
 
 /// Regret pass (admission control). Sequential cohort planning sees only
@@ -438,7 +567,7 @@ fn regret_pass(cfg: &Config, net: &Network, model: &ModelProfile, st: &mut PlanS
 }
 
 /// Incremental epoch re-plan (the dynamic serving engine's steady-state
-/// path, DESIGN.md §2d). Cohorts whose local fingerprint is unchanged
+/// path, DESIGN.md §2d/§2e). Cohorts whose local fingerprint is unchanged
 /// since the cached solve are *clean*: their committed [`CohortSolution`]
 /// is replayed verbatim — zero solver work. Everyone else is *dirty* and
 /// re-solved, seeded from the cached refined point with the Li-GD layer
@@ -449,6 +578,15 @@ fn regret_pass(cfg: &Config, net: &Network, model: &ModelProfile, st: &mut PlanS
 /// against the moving interference state. Rounding, cluster caps, SIC
 /// checks, and the regret pass always run against the *live* committed
 /// state, so every emitted plan is feasible regardless of cache staleness.
+///
+/// With `optimizer.stable_cohorts` (§2e) cohorts come from the persistent
+/// fill-the-gap slot table carried in the cache — one churn event then
+/// dirties only the cohort(s) whose membership it touched — and entries
+/// are keyed by member set, so a cohort that keeps its members survives
+/// any neighbor's churn as a cache hit. With `optimizer.bg_tolerance > 0`
+/// a clean cohort whose committed interference background drifted past
+/// the tolerance since its solve is re-solved instead of replayed, making
+/// the periodic re-scan a backstop rather than the correctness mechanism.
 pub fn plan_era_cached(
     cfg: &Config,
     net: &Network,
@@ -457,24 +595,39 @@ pub fn plan_era_cached(
     popts: &PlanOptions,
     cache: &mut PlanCache,
 ) -> (Vec<Decision>, PlanStats) {
+    let stable = cfg.optimizer.stable_cohorts;
+    let tol = cfg.optimizer.bg_tolerance;
     let epoch = cache.epoch;
     cache.epoch += 1;
     let forced = cache.is_empty()
         || (cache.full_rescan_every > 0 && epoch % cache.full_rescan_every as u64 == 0);
     if forced {
-        let (ds, stats, captured) =
-            plan_epoch_full(cfg, net, model, Some(active), popts, true);
+        let (ds, stats, captured) = if stable {
+            // The forced re-scan must keep the slot table in sync too —
+            // cohort identity survives full re-solves.
+            let st = new_plan_state(cfg, net, model);
+            let (groups, cohorts) =
+                form_stable_unzipped(cfg, net, &st.load, active, &mut cache.slots);
+            plan_cohorts(cfg, net, model, st, cohorts, &groups, popts, true)
+        } else {
+            plan_epoch_full(cfg, net, model, Some(active), popts, true)
+        };
         cache.entries.clear();
-        let mut slot_of_ap = vec![0usize; cfg.network.num_aps];
-        for (c, sol) in captured {
-            let slot = slot_of_ap[c.ap];
-            slot_of_ap[c.ap] += 1;
+        cache.seed_of.clear();
+        for cc in captured {
+            let key = if stable {
+                member_set_key(cc.cohort.ap, &cc.cohort.users)
+            } else {
+                positional_key(cc.cohort.ap, cc.group)
+            };
+            cache.seed_of.insert((cc.cohort.ap, cc.group), key);
             cache.entries.insert(
-                (c.ap, slot),
+                key,
                 CacheEntry {
-                    fingerprint: cohort_fingerprint(net, c.ap, &c.users),
-                    channels: c.channels,
-                    solution: sol,
+                    fingerprint: cohort_fingerprint(net, cc.cohort.ap, &cc.cohort.users),
+                    channels: cc.cohort.channels,
+                    solution: cc.solution,
+                    bg_fp: cc.bg_fp,
                 },
             );
         }
@@ -486,22 +639,32 @@ pub fn plan_era_cached(
 
     // Form this epoch's cohorts and classify each against the cache. The
     // fingerprint is cohort-local, so classification happens once up front
-    // — clean cohorts never even build a `CohortProblem`.
-    let mut cohorts = form_cohorts_masked(cfg, net, &st.load, Some(active));
+    // — clean cohorts never even build a `CohortProblem`. Stable mode
+    // (DESIGN.md §2e) forms from the persistent fill-the-gap slot table
+    // and keys by member set; otherwise chunks + positional keys (§2d).
+    let (groups, mut cohorts): (Vec<usize>, Vec<Cohort>) = if stable {
+        form_stable_unzipped(cfg, net, &st.load, active, &mut cache.slots)
+    } else {
+        let cohorts = form_cohorts_masked(cfg, net, &st.load, Some(active));
+        let groups = formation_slots(cfg, &cohorts);
+        (groups, cohorts)
+    };
     st.stats.cohorts = cohorts.len();
-    let mut slot_of_ap = vec![0usize; cfg.network.num_aps];
-    let mut slots = Vec::with_capacity(cohorts.len());
+    let mut keys: Vec<CohortKey> = Vec::with_capacity(cohorts.len());
     let mut fps = Vec::with_capacity(cohorts.len());
     let mut clean = Vec::with_capacity(cohorts.len());
-    for c in &cohorts {
-        let slot = slot_of_ap[c.ap];
-        slot_of_ap[c.ap] += 1;
+    for (c, &group) in cohorts.iter().zip(groups.iter()) {
+        let key = if stable {
+            member_set_key(c.ap, &c.users)
+        } else {
+            positional_key(c.ap, group)
+        };
         let fp = cohort_fingerprint(net, c.ap, &c.users);
         let is_clean = cache
             .entries
-            .get(&(c.ap, slot))
+            .get(&key)
             .map_or(false, |e| e.fingerprint == fp);
-        slots.push(slot);
+        keys.push(key);
         fps.push(fp);
         clean.push(is_clean);
     }
@@ -511,16 +674,63 @@ pub fn plan_era_cached(
     st.stats.waves = waves.len();
 
     for wave in waves {
-        // Prepare + seed only the wave's dirty cohorts.
-        let dirty: Vec<usize> = wave.iter().copied().filter(|&i| !clean[i]).collect();
+        // Classify the wave: fingerprint-dirty cohorts always re-solve;
+        // with `bg_tolerance` set, a fingerprint-clean cohort whose
+        // committed background drifted materially since its solve (checked
+        // against the same pre-wave state its re-solve would run on) is
+        // re-solved too instead of replaying a stale solution.
+        let mut resolve: Vec<bool> = wave.iter().map(|&i| !clean[i]).collect();
+        if tol > 0.0 {
+            for (k, &i) in wave.iter().enumerate() {
+                if clean[i] {
+                    let e = cache.entries.get(&keys[i]).expect("clean ⇒ cached");
+                    let cur = cohort_bg_fp(
+                        cfg,
+                        net,
+                        &st,
+                        cohorts[i].ap,
+                        &cohorts[i].users,
+                        &e.channels,
+                        tol,
+                    );
+                    if cur != e.bg_fp {
+                        resolve[k] = true;
+                        st.stats.bg_resolves += 1;
+                    }
+                }
+            }
+        }
+        let dirty: Vec<usize> = wave
+            .iter()
+            .zip(resolve.iter())
+            .filter(|&(_, &r)| r)
+            .map(|(&i, _)| i)
+            .collect();
+        // Prepare + seed only the re-solving cohorts; record the quantized
+        // background each solve runs against for its cache entry.
+        let mut dirty_bg = Vec::with_capacity(dirty.len());
         let problems: Vec<CohortProblem> = dirty
             .iter()
-            .map(|&i| prepare_cohort(cfg, net, &st, &mut cohorts[i]))
+            .map(|&i| {
+                let p = prepare_cohort(cfg, net, &st, &mut cohorts[i]);
+                dirty_bg.push(prepared_bg_fp(cfg, net, &st, &cohorts[i], true, tol));
+                p
+            })
             .collect();
         let seeds: Vec<Option<EpochSeed<'_>>> = dirty
             .iter()
             .map(|&i| {
-                cache.entries.get(&(cohorts[i].ap, slots[i])).map(|e| EpochSeed {
+                // Member-set lookup first; when the set changed (stable
+                // mode), fall back to the slot group's previous solve so a
+                // membership-dirty cohort still gets the §2d windowed
+                // warm start (shape-gated inside the solver).
+                let entry = cache.entries.get(&keys[i]).or_else(|| {
+                    cache
+                        .seed_of
+                        .get(&(cohorts[i].ap, groups[i]))
+                        .and_then(|k| cache.entries.get(k))
+                });
+                entry.map(|e| EpochSeed {
                     x: &e.solution.x,
                     splits: &e.solution.split,
                     window: cache.window,
@@ -546,12 +756,47 @@ pub fn plan_era_cached(
         // cached solution against the cached channel list), then fold the
         // fresh solves back into the cache.
         let mut di = 0usize;
-        for &i in &wave {
+        for (k, &i) in wave.iter().enumerate() {
             let c = &cohorts[i];
-            if clean[i] {
-                let e = cache.entries.get(&(c.ap, slots[i])).expect("clean ⇒ cached");
-                round_and_commit(cfg, net, model, &mut st, c.ap, &c.users, &e.channels, &e.solution);
-                st.stats.cohorts_reused += 1;
+            if !resolve[k] {
+                let e = cache.entries.get(&keys[i]).expect("clean ⇒ cached");
+                // Collision hardening: a dirty insert from an earlier wave
+                // could in principle (p ≈ 2⁻⁶⁴) have overwritten this key
+                // with another cohort's solve. Reuse stays gated by the
+                // fingerprint so a key collision can only ever cost a
+                // re-solve, never commit the wrong solution (the §2e
+                // cache-key contract).
+                if e.fingerprint == fps[i] {
+                    round_and_commit(
+                        cfg,
+                        net,
+                        model,
+                        &mut st,
+                        c.ap,
+                        &c.users,
+                        &e.channels,
+                        &e.solution,
+                    );
+                    st.stats.cohorts_reused += 1;
+                } else {
+                    let mut prob = prepare_cohort(cfg, net, &st, &mut cohorts[i]);
+                    let bg_fp = prepared_bg_fp(cfg, net, &st, &cohorts[i], true, tol);
+                    let (sol, _) =
+                        solve_ligd_seeded(&mut prob, model, &gd_opts, popts.warm_start, None);
+                    st.stats.total_gd_iters += sol.total_iters;
+                    let c = &mut cohorts[i];
+                    round_and_commit(cfg, net, model, &mut st, c.ap, &c.users, &c.channels, &sol);
+                    st.stats.cohorts_resolved += 1;
+                    cache.entries.insert(
+                        keys[i],
+                        CacheEntry {
+                            fingerprint: fps[i],
+                            channels: std::mem::take(&mut c.channels),
+                            solution: sol,
+                            bg_fp,
+                        },
+                    );
+                }
             } else {
                 let (sol, fell_back) = &solved[di];
                 di += 1;
@@ -563,23 +808,32 @@ pub fn plan_era_cached(
                 st.stats.cohorts_resolved += 1;
             }
         }
-        for (&i, (sol, _)) in dirty.iter().zip(solved.into_iter()) {
+        for ((&i, (sol, _)), bg_fp) in dirty
+            .iter()
+            .zip(solved.into_iter())
+            .zip(dirty_bg.into_iter())
+        {
             let c = &mut cohorts[i];
             cache.entries.insert(
-                (c.ap, slots[i]),
+                keys[i],
                 CacheEntry {
                     fingerprint: fps[i],
                     channels: std::mem::take(&mut c.channels),
                     solution: sol,
+                    bg_fp,
                 },
             );
         }
     }
 
-    // Prune entries whose slot no longer exists (a shrunken AP).
-    cache
-        .entries
-        .retain(|&(ap, slot), _| slot < slot_of_ap[ap]);
+    // Record this epoch's identity and prune entries no cohort claims any
+    // more (a member set that dissolved, or a slot past a shrunken AP).
+    for ((c, &group), &key) in cohorts.iter().zip(groups.iter()).zip(keys.iter()) {
+        cache.seed_of.insert((c.ap, group), key);
+    }
+    let live: std::collections::HashSet<CohortKey> = keys.iter().copied().collect();
+    cache.entries.retain(|k, _| live.contains(k));
+    cache.seed_of.retain(|_, k| live.contains(k));
 
     regret_pass(cfg, net, model, &mut st);
     (st.decisions, st.stats)
@@ -933,6 +1187,258 @@ mod tests {
         let (_, s3) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
         assert_eq!(s3.cohorts_reused, s3.cohorts);
         assert_eq!(s3.total_gd_iters, 0);
+    }
+
+    #[test]
+    fn stable_cohorts_churn_off_is_byte_identical_to_positional() {
+        // Acceptance: with a static population, `stable_cohorts` (and a
+        // live bg tolerance) must not change a single decision or
+        // statistic vs the §2d positional path — the slot table degrades
+        // to chunks and every background replays bit-equal.
+        let cfg = presets::smoke();
+        let mut cfg_stable = cfg.clone();
+        cfg_stable.optimizer.stable_cohorts = true;
+        cfg_stable.optimizer.bg_tolerance = 0.05;
+        let net = Network::generate(&cfg, 36);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        let active: Vec<bool> = (0..net.num_users()).map(|u| u % 4 != 1).collect();
+        let mut c_pos = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        let mut c_st = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        for step in 0..3 {
+            let (d_pos, s_pos) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut c_pos);
+            let (d_st, s_st) =
+                plan_era_cached(&cfg_stable, &net, &model, &active, &popts, &mut c_st);
+            assert_eq!(d_pos, d_st, "epoch {step}");
+            assert_eq!(s_pos.total_gd_iters, s_st.total_gd_iters);
+            assert_eq!(s_pos.cohorts, s_st.cohorts);
+            assert_eq!(s_pos.cohorts_reused, s_st.cohorts_reused);
+            assert_eq!(s_pos.cohorts_resolved, s_st.cohorts_resolved);
+            assert_eq!(s_st.bg_resolves, 0, "static replay never drifts");
+        }
+    }
+
+    #[test]
+    fn stable_departure_dirties_at_most_one_cohort() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48;
+        cfg.optimizer.stable_cohorts = true;
+        let net = Network::generate(&cfg, 37);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        let mut active = vec![true; net.num_users()];
+        let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+
+        // The chunk formation's worst case: departing the *first* member
+        // of AP 0 used to dirty every cohort of that AP. Fill-the-gap +
+        // member-set keys pin it to exactly the one cohort it left.
+        let departed = *net.topo.users_of_ap(0).first().expect("AP 0 has users");
+        active[departed] = false;
+        let (ds, stats) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(stats.cohorts_reused + stats.cohorts_resolved, stats.cohorts);
+        assert!(
+            stats.cohorts_resolved <= 1,
+            "departure dirtied {} cohorts",
+            stats.cohorts_resolved
+        );
+        assert!(!ds[departed].offloads(&model));
+
+        // Re-arrival fills the hole it left: again at most one re-solve,
+        // and afterwards the steady state is all-clean.
+        active[departed] = true;
+        let (_, s2) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert!(s2.cohorts_resolved <= 1, "re-arrival resolved {}", s2.cohorts_resolved);
+        let (_, s3) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(s3.cohorts_reused, s3.cohorts);
+        assert_eq!(s3.total_gd_iters, 0);
+    }
+
+    #[test]
+    fn stable_churn_events_dirty_only_affected_cohorts() {
+        // Property (ISSUE 5): under stable cohorts a single churn event
+        // re-solves at most the cohorts it touches — ≤ 1 for a departure
+        // or activation, ≤ 2 for a handoff — across random populations,
+        // event targets, and thread counts.
+        forall("stable churn locality", 6, |g| {
+            let mut cfg = presets::smoke();
+            cfg.network.num_users = g.usize_in(24, 56);
+            cfg.optimizer.stable_cohorts = true;
+            cfg.optimizer.max_iters = 40;
+            let net = Network::generate(&cfg, 600 + g.case as u64);
+            let model = zoo::nin();
+            let popts = PlanOptions {
+                warm_start: true,
+                threads: 1 + (g.case % 2),
+            };
+            let nu = net.num_users();
+            let mut active: Vec<bool> = (0..nu).map(|u| u % 5 != 2).collect();
+            let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+            let _ = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+
+            match g.case % 3 {
+                0 => {
+                    // departure of a random active user
+                    let start = g.usize_in(0, nu - 1);
+                    let u = (0..nu).cycle().skip(start).find(|&u| active[u]).unwrap();
+                    active[u] = false;
+                    let (_, s) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+                    assert!(s.cohorts_resolved <= 1, "departure: {}", s.cohorts_resolved);
+                }
+                1 => {
+                    // activation of a random inactive user
+                    let start = g.usize_in(0, nu - 1);
+                    let u = (0..nu).cycle().skip(start).find(|&u| !active[u]).unwrap();
+                    active[u] = true;
+                    let (_, s) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+                    assert!(s.cohorts_resolved <= 1, "activation: {}", s.cohorts_resolved);
+                }
+                _ => {
+                    // handoff of a random active user to the other AP
+                    let start = g.usize_in(0, nu - 1);
+                    let u = (0..nu).cycle().skip(start).find(|&u| active[u]).unwrap();
+                    let mut net2 = net.clone();
+                    net2.topo.user_ap[u] = (net.topo.user_ap[u] + 1) % cfg.network.num_aps;
+                    let (_, s) = plan_era_cached(&cfg, &net2, &model, &active, &popts, &mut cache);
+                    assert!(s.cohorts_resolved <= 2, "handoff: {}", s.cohorts_resolved);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn stable_keys_at_least_halve_dirty_resolves_under_sparse_churn() {
+        // ISSUE 5 acceptance: under a sparse-churn workload the stable
+        // scheme must re-solve at least 2× fewer cohorts per churn event
+        // than the positional (ap, slot) baseline, with the emitted plans
+        // staying feasible.
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48; // 3 cohorts per AP
+        cfg.optimizer.max_iters = 40;
+        let mut cfg_stable = cfg.clone();
+        cfg_stable.optimizer.stable_cohorts = true;
+        let net = Network::generate(&cfg, 38);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+
+        // head user of every non-empty AP (toggling a head is the worst
+        // case for chunk re-formation: the whole AP re-chunks)
+        let heads: Vec<usize> = (0..cfg.network.num_aps)
+            .filter_map(|a| net.topo.users_of_ap(a).first().copied())
+            .collect();
+        assert!(!heads.is_empty());
+        let run = |cfg: &Config| -> usize {
+            let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+            let mut active = vec![true; net.num_users()];
+            let _ = plan_era_cached(cfg, &net, &model, &active, &popts, &mut cache);
+            let mut resolved = 0usize;
+            for e in 0..8usize {
+                // one churn event per epoch
+                let u = heads[e % heads.len()];
+                active[u] = !active[u];
+                let (ds, s) = plan_era_cached(cfg, &net, &model, &active, &popts, &mut cache);
+                assert_eq!(s.cohorts_reused + s.cohorts_resolved, s.cohorts);
+                resolved += s.cohorts_resolved;
+                let mut load = vec![
+                    vec![0usize; cfg.network.num_subchannels];
+                    cfg.network.num_aps
+                ];
+                for (u, d) in ds.iter().enumerate() {
+                    if let Some(ch) = d.up_ch {
+                        assert!(active[u]);
+                        load[net.topo.user_ap[u]][ch] += 1;
+                        let cap = cfg.network.max_users_per_subchannel;
+                        assert!(load[net.topo.user_ap[u]][ch] <= cap);
+                    }
+                }
+            }
+            resolved
+        };
+        let resolved_pos = run(&cfg);
+        let resolved_stable = run(&cfg_stable);
+        assert!(
+            resolved_stable * 2 <= resolved_pos,
+            "stable {resolved_stable} vs positional {resolved_pos} re-solves"
+        );
+        assert!(resolved_stable <= 8, "≤ 1 re-solve per churn event");
+    }
+
+    #[test]
+    fn bg_fingerprint_detects_material_drift_only() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 39);
+        let model = zoo::nin();
+        let mut st = new_plan_state(&cfg, &net, &model);
+        let users: Vec<usize> = net.topo.users_of_ap(0).into_iter().take(4).collect();
+        let channels: Vec<usize> = (0..3).collect();
+        let tol = 0.1;
+        let fp0 = cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol);
+        assert_eq!(
+            fp0,
+            cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol),
+            "deterministic"
+        );
+        // a background appearing on a candidate channel is material
+        st.bg_up_acc[0][1] = (-30.0f64).exp(); // mid-bucket at tol = 0.1
+        let fp1 = cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol);
+        assert_ne!(fp0, fp1);
+        // sub-tolerance drift stays in the same bucket
+        st.bg_up_acc[0][1] *= 1.0001;
+        assert_eq!(fp1, cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol));
+        // 2× drift is material
+        st.bg_up_acc[0][1] *= 2.0;
+        assert_ne!(fp1, cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol));
+        // a non-candidate channel's background is irrelevant
+        let fp2 = cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol);
+        st.bg_up_acc[0][channels.len()] = 1e-3;
+        assert_eq!(fp2, cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol));
+        // other-AP downlink power feeds the per-user background terms
+        if cfg.network.num_aps > 1 {
+            st.ap_ch_power[1][0] = 1e-2;
+            assert_ne!(fp2, cohort_bg_fp(&cfg, &net, &st, 0, &users, &channels, tol));
+        }
+    }
+
+    #[test]
+    fn bg_tolerance_resolves_are_bounded_and_plans_stay_feasible() {
+        // With a live bg tolerance the planner may re-solve *more* cohorts
+        // than the fingerprint-only path (drift chasing), never fewer
+        // reused-than-possible bookkeeping errors; plans stay feasible and
+        // every cohort is still either reused or re-solved.
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48;
+        cfg.optimizer.stable_cohorts = true;
+        cfg.optimizer.max_iters = 40;
+        let mut cfg_tight = cfg.clone();
+        cfg_tight.optimizer.bg_tolerance = 1e-6; // any drift is material
+        let net = Network::generate(&cfg, 40);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+
+        let run = |cfg: &Config| -> (usize, usize) {
+            let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+            let mut active = vec![true; net.num_users()];
+            let _ = plan_era_cached(cfg, &net, &model, &active, &popts, &mut cache);
+            let departed = *net.topo.users_of_ap(0).first().unwrap();
+            active[departed] = false;
+            let (ds, s) = plan_era_cached(cfg, &net, &model, &active, &popts, &mut cache);
+            assert_eq!(s.cohorts_reused + s.cohorts_resolved, s.cohorts);
+            assert!(s.bg_resolves <= s.cohorts_resolved);
+            assert!(!ds[departed].offloads(&model));
+            (s.cohorts_resolved, s.bg_resolves)
+        };
+        let (resolved_off, bg_off) = run(&cfg);
+        let (resolved_tight, bg_tight) = run(&cfg_tight);
+        assert_eq!(bg_off, 0, "tolerance off ⇒ no bg re-solves");
+        assert!(
+            resolved_tight >= resolved_off,
+            "drift detection only adds re-solves ({resolved_tight} < {resolved_off})"
+        );
+        assert_eq!(
+            resolved_tight - resolved_off,
+            bg_tight,
+            "every extra re-solve is bg-attributed"
+        );
     }
 
     #[test]

@@ -432,7 +432,7 @@ mod tests {
         let r_at_1 = |si: usize| {
             let s = &f.series[si];
             s.points.iter().min_by(|a, b| {
-                (a.0 - 1.0).abs().partial_cmp(&(b.0 - 1.0).abs()).unwrap()
+                (a.0 - 1.0).abs().total_cmp(&(b.0 - 1.0).abs())
             }).unwrap().1
         };
         assert!((r_at_1(0) - 0.5).abs() < 0.05);

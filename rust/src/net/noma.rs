@@ -105,11 +105,8 @@ pub fn compute_rates(
             let bg = inter_up(a, m) + noise_w;
             // SIC order: strongest first.
             let mut order = members.clone();
-            order.sort_by(|&x, &y| {
-                ch.up[y][a][m]
-                    .partial_cmp(&ch.up[x][a][m])
-                    .unwrap()
-            });
+            // total order: NaN-safe (rate computation runs every epoch)
+            order.sort_by(|&x, &y| ch.up[y][a][m].total_cmp(&ch.up[x][a][m]));
             // Suffix sums of weaker users' received power.
             let mut weaker = 0.0;
             for idx in (0..order.len()).rev() {
@@ -145,11 +142,7 @@ pub fn compute_rates(
             }
             // Decode order: weakest gain first (paper's ordering).
             let mut order = members.clone();
-            order.sort_by(|&x, &y| {
-                ch.down[x][a][k]
-                    .partial_cmp(&ch.down[y][a][k])
-                    .unwrap()
-            });
+            order.sort_by(|&x, &y| ch.down[x][a][k].total_cmp(&ch.down[y][a][k]));
             // User at rank idx is interfered by components of users ranked
             // after it (stronger users, decoded later at those users).
             let mut stronger_power: Vec<f64> = vec![0.0; order.len()];

@@ -170,13 +170,14 @@ impl CohortProblem {
                 *r = j;
             }
             // unstable sort: no scratch allocation, and identical to the
-            // stable order because fading gains are distinct almost surely
-            row.sort_unstable_by(|&a, &b| self.gu(b, m).partial_cmp(&self.gu(a, m)).unwrap());
+            // stable order because fading gains are distinct almost surely;
+            // `total_cmp` keeps a NaN gain from panicking the hot path
+            row.sort_unstable_by(|&a, &b| self.gu(b, m).total_cmp(&self.gu(a, m)));
             let row = &mut so.down[m * nu..(m + 1) * nu];
             for (j, r) in row.iter_mut().enumerate() {
                 *r = j;
             }
-            row.sort_unstable_by(|&a, &b| self.gd(a, m).partial_cmp(&self.gd(b, m)).unwrap());
+            row.sort_unstable_by(|&a, &b| self.gd(a, m).total_cmp(&self.gd(b, m)));
         }
     }
 }
@@ -366,6 +367,29 @@ mod tests {
             let o = so.down_order(m);
             for w in o.windows(2) {
                 assert!(p.gd(w[0], m) <= p.gd(w[1], m));
+            }
+        }
+    }
+
+    #[test]
+    fn sic_orders_survive_nan_gains() {
+        // Regression (ISSUE 5): the decode-order sorts used
+        // `partial_cmp(..).unwrap()` — one NaN gain draw panicked the
+        // planner hot path. `total_cmp` must keep them total and
+        // deterministic instead.
+        let mut p = tiny_problem();
+        p.g_up[1] = f64::NAN;
+        p.g_down[2] = f64::NAN;
+        let so = p.sic_orders();
+        let so2 = p.sic_orders();
+        for m in 0..p.n_channels {
+            assert_eq!(so.up_order(m), so2.up_order(m), "deterministic");
+            assert_eq!(so.down_order(m), so2.down_order(m));
+            // still a permutation of the users
+            let mut seen = vec![false; p.n_users];
+            for &u in so.up_order(m) {
+                assert!(!seen[u]);
+                seen[u] = true;
             }
         }
     }

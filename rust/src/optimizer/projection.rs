@@ -31,7 +31,10 @@ pub fn project_simplex(row: &mut [f64]) {
         heap = row.to_vec();
         &mut heap
     };
-    sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    // `total_cmp`: a NaN coordinate (e.g. from a poisoned gradient) must
+    // not panic the projection — it sorts deterministically instead and
+    // the clamp below still produces a valid simplex point.
+    sorted.sort_unstable_by(|a, b| b.total_cmp(a));
     let mut cum = 0.0;
     let mut theta = 0.0;
     let mut found = false;
@@ -114,6 +117,18 @@ mod tests {
                 assert!((a - b).abs() < 1e-9);
             }
         });
+    }
+
+    #[test]
+    fn simplex_survives_nan_coordinates() {
+        // Regression (ISSUE 5): the descending sort inside the projection
+        // used `partial_cmp(..).unwrap()` — a NaN coordinate (poisoned
+        // gradient) panicked every GD probe. It must stay total: no panic,
+        // and the output stays non-negative.
+        let mut r = vec![0.4, f64::NAN, 0.2];
+        project_simplex(&mut r);
+        assert!(r.iter().all(|&x| x >= 0.0 || x.is_nan()));
+        assert!(r[0].is_finite() && r[2].is_finite());
     }
 
     #[test]

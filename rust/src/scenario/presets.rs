@@ -13,6 +13,7 @@ pub const NAMES: &[&str] = &[
     "workload",
     "churn",
     "churn-incremental",
+    "churn-stable",
     "ligd",
 ];
 
@@ -108,6 +109,20 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
             spec.full_rescan_every = 8;
             Some(spec)
         }
+        // The incremental churn workload with churn-*stable* cohort
+        // identity (DESIGN.md §2e): fill-the-gap slot formation, member-set
+        // cache keys, and the interference-background fingerprint — each
+        // churn event dirties only the cohort(s) it touches instead of
+        // every downstream cohort of its AP, and material cross-cohort
+        // drift re-solves exactly the affected cohorts (the periodic full
+        // re-scan becomes a pure backstop).
+        "churn-stable" => {
+            let mut spec = by_name("churn-incremental")?;
+            spec.name = "churn-stable".into();
+            spec.base.optimizer.stable_cohorts = true;
+            spec.base.optimizer.bg_tolerance = 0.25;
+            Some(spec)
+        }
         // Li-GD vs cold-start GD iteration comparison (Corollary 4).
         "ligd" => Some(
             ScenarioSpec::new("ligd", cfg::smoke()).with_strategies(&["era", "era-cold"]),
@@ -155,6 +170,22 @@ mod tests {
         let churn = by_name("churn").unwrap();
         assert_eq!(spec.base, churn.base);
         assert_eq!(spec.replan_interval_s, churn.replan_interval_s);
+        // round-trips through the TOML grammar
+        let text = spec.to_toml();
+        let reparsed = ScenarioSpec::from_str(&text).unwrap();
+        assert_eq!(reparsed, spec);
+    }
+
+    #[test]
+    fn churn_stable_preset_enables_stable_identity() {
+        let spec = by_name("churn-stable").unwrap();
+        assert!(spec.episode && spec.episode_churn && spec.incremental);
+        assert!(spec.base.optimizer.stable_cohorts);
+        assert!(spec.base.optimizer.bg_tolerance > 0.0);
+        // same serving scenario as churn-incremental, different identity
+        let inc = by_name("churn-incremental").unwrap();
+        assert_eq!(spec.full_rescan_every, inc.full_rescan_every);
+        assert_eq!(spec.replan_interval_s, inc.replan_interval_s);
         // round-trips through the TOML grammar
         let text = spec.to_toml();
         let reparsed = ScenarioSpec::from_str(&text).unwrap();

@@ -572,6 +572,29 @@ mod tests {
     }
 
     #[test]
+    fn stable_cohort_keys_flow_through_the_scenario_overlay() {
+        // `optimizer.stable_cohorts` / `optimizer.bg_tolerance` are plain
+        // config keys: scenario files reach them via the `[optimizer]`
+        // overlay and can even sweep the tolerance as an axis.
+        let spec = ScenarioSpec::from_str(
+            r#"
+            episode = true
+            episode.churn = true
+            episode.incremental = true
+            [optimizer]
+            stable_cohorts = true
+            [sweep]
+            optimizer.bg_tolerance = [0.0, 0.25]
+            "#,
+        )
+        .unwrap();
+        assert!(spec.base.optimizer.stable_cohorts);
+        assert_eq!(spec.axes.len(), 1);
+        assert_eq!(spec.axes[0].key, "optimizer.bg_tolerance");
+        assert_eq!(spec.num_cells(), 2);
+    }
+
+    #[test]
     fn toml_round_trip_full_spec() {
         let mut spec = ScenarioSpec::new("rt", cfg_presets::smoke())
             .with_strategies(&["era", "dina"])

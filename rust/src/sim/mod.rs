@@ -880,6 +880,133 @@ mod tests {
     }
 
     #[test]
+    fn stable_cohorts_churn_off_matches_full_replan_byte_for_byte() {
+        // ISSUE 5 acceptance (sim layer): with a static population,
+        // stable cohorts + member-set keys + a live bg tolerance must
+        // replay to byte-identical serving results vs the full re-plan
+        // path — the slot table degrades to chunks and nothing drifts.
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.optimizer.max_iters = 60;
+        cfg.optimizer.stable_cohorts = true;
+        cfg.optimizer.bg_tolerance = 0.05;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 19);
+        let strat = crate::coordinator::EraStrategy::default();
+        let full = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.125);
+        let inc = run_dynamic_opts(
+            &cfg,
+            &net,
+            &model,
+            &strat,
+            &sched,
+            &tr,
+            &DynamicOptions {
+                replan_interval_s: 0.125,
+                incremental: true,
+                full_rescan_every: 0,
+            },
+        );
+        assert_eq!(inc.outcome.completions.len(), full.outcome.completions.len());
+        for (a, b) in inc
+            .outcome
+            .completions
+            .iter()
+            .zip(full.outcome.completions.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish_s, b.finish_s);
+            assert_eq!(a.queue_s, b.queue_s);
+        }
+        for (a, b) in inc.epochs.iter().zip(full.epochs.iter()) {
+            assert_eq!(a.offloaders, b.offloaders);
+            assert_eq!(a.mean_latency_s, b.mean_latency_s);
+            assert_eq!(a.qoe_miss_frac, b.qoe_miss_frac);
+        }
+        // steady state: pure reuse, no bg-drift re-solves sneak in
+        assert!(inc.epochs[1..].iter().all(|e| {
+            e.cohorts_reused == e.cohorts && e.cohorts_resolved == 0 && e.gd_iters == 0
+        }));
+    }
+
+    #[test]
+    fn stable_cohorts_raise_cache_hit_rate_under_churn() {
+        // ISSUE 5 acceptance (sim layer): under a sparse departure stream
+        // hitting the head of the fullest AP — chunk re-formation's worst
+        // case — the member-set-keyed stable planner re-solves ≥ 2× fewer
+        // cohorts than the positional baseline, and serving quality stays
+        // in the full re-plan path's regime. The schedule is hand-built
+        // (one departure per epoch boundary) so the bound is
+        // deterministic, not distributional.
+        let (mut cfg, _, model) = setup();
+        cfg.network.num_users = 48;
+        let net = Network::generate(&cfg, 31);
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.optimizer.max_iters = 60;
+        // fullest AP: with 48 users over 2 APs it holds ≥ 24 ⇒ ≥ 3 cohorts
+        let ap = (0..cfg.network.num_aps)
+            .max_by_key(|&a| net.topo.users_of_ap(a).len())
+            .unwrap();
+        let heads: Vec<usize> = net.topo.users_of_ap(ap).into_iter().take(3).collect();
+        assert!(net.topo.users_of_ap(ap).len() >= 24);
+        let sched = ChurnSchedule {
+            initial_active: vec![true; net.num_users()],
+            events: heads
+                .iter()
+                .enumerate()
+                .map(|(k, &u)| crate::trace::ChurnEvent {
+                    t_s: 0.05 + 0.125 * k as f64,
+                    user: u,
+                    kind: ChurnEventKind::Depart,
+                })
+                .collect(),
+        };
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 48);
+        let strat = crate::coordinator::EraStrategy::default();
+        let opts = DynamicOptions {
+            replan_interval_s: 0.125,
+            incremental: true,
+            full_rescan_every: 0,
+        };
+        let full = run_dynamic(&cfg, &net, &model, &strat, &sched, &tr, 0.125);
+        let pos = run_dynamic_opts(&cfg, &net, &model, &strat, &sched, &tr, &opts);
+        let mut cfg_stable = cfg.clone();
+        cfg_stable.optimizer.stable_cohorts = true;
+        let stable = run_dynamic_opts(&cfg_stable, &net, &model, &strat, &sched, &tr, &opts);
+
+        // Epochs 1..: each sees exactly one new departure at the head of
+        // `ap`. Positional re-chunking dirties every cohort of that AP
+        // (≥ 3); fill-the-gap + member-set keys dirty exactly the one
+        // cohort the user left.
+        let resolves = |d: &DynamicOutcome| -> usize {
+            d.epochs[1..].iter().map(|e| e.cohorts_resolved).sum()
+        };
+        assert!(
+            resolves(&stable) * 2 <= resolves(&pos),
+            "stable {} vs positional {} re-solves",
+            resolves(&stable),
+            resolves(&pos)
+        );
+        assert!(resolves(&stable) <= 3, "≤ 1 re-solve per departure");
+        // conservation on every path
+        for d in [&full, &pos, &stable] {
+            assert_eq!(
+                d.outcome.completions.len() + d.outcome.dropped.len(),
+                tr.len()
+            );
+        }
+        // quality stays in the full path's regime (the regret pass + live
+        // rounding/caps/SIC bound staleness; generous margin — this is a
+        // tripwire for gross regressions, not a perf gate)
+        let miss = |d: &DynamicOutcome| {
+            crate::metrics::qoe_miss_frac(&d.outcome.completions, &net)
+        };
+        assert!(miss(&stable) <= miss(&full) + 0.15, "{} vs {}", miss(&stable), miss(&full));
+    }
+
+    #[test]
     fn incremental_full_rescan_every_epoch_is_identical_under_churn() {
         // Acceptance: full_rescan_every = 1 forces a full re-solve each
         // epoch — byte-identical results *and* cache statistics vs the

@@ -363,6 +363,63 @@ fn incremental_churn_off_rows_match_modulo_cache_columns() {
 }
 
 #[test]
+fn stable_cohorts_churn_off_rows_are_byte_identical_at_the_csv_layer() {
+    // Acceptance (ISSUE 5): with churn off, flipping `stable_cohorts` (and
+    // a live `bg_tolerance`) must not change a single CSV byte vs the
+    // positional incremental path — cache-statistics columns included,
+    // since the slot table degrades to chunks and every epoch replays.
+    let mut base = presets::smoke();
+    base.network.num_users = 14;
+    base.optimizer.max_iters = 25;
+    base.workload.episode_s = 0.5;
+    base.workload.tasks_per_user = 4.0; // replan-only keeps fixed-count
+    let mut spec = ScenarioSpec::new("stable-off", base).with_strategies(&["era"]);
+    spec.episode = true;
+    spec.replan_interval_s = Some(0.125);
+    spec.incremental = true;
+    spec.trace_seed = Some(7);
+    let mut stable = spec.clone();
+    stable.base.optimizer.stable_cohorts = true;
+    stable.base.optimizer.bg_tolerance = 0.05;
+    let pos_csv = to_csv(&Engine::new(1).run(&spec).unwrap());
+    let stable_csv = to_csv(&Engine::new(1).run(&stable).unwrap());
+    assert_eq!(stable_csv, pos_csv, "stable_cohorts churn-off ≡ positional");
+}
+
+#[test]
+fn churn_stable_preset_runs_end_to_end() {
+    // CI-sized `era run --scenario churn-stable`: the member-set-keyed
+    // stable planner survives real churn, conserves requests, and stays
+    // deterministic across engine thread counts.
+    let mut spec = ScenarioSpec::from_preset("churn-stable").unwrap();
+    assert!(spec.base.optimizer.stable_cohorts);
+    assert!(spec.base.optimizer.bg_tolerance > 0.0);
+    spec.base.network.num_users = 16;
+    spec.base.optimizer.max_iters = 25;
+    spec.base.workload.episode_s = 0.5;
+    spec.base.workload.arrival_rate_hz = 15.0;
+    spec.replan_interval_s = Some(0.125);
+    spec.strategies = vec!["era".into()];
+    spec.axes.clear();
+    let records = Engine::new(2).run(&spec).unwrap();
+    let csv = to_csv(&records);
+    assert!(csv.lines().next().unwrap().contains("dyn_cache_hit_frac"));
+    for r in &records {
+        let ep = r.episode.as_ref().expect("episode");
+        let dy = r.dynamics.as_ref().expect("dynamics");
+        let requests: usize = dy.epochs.iter().map(|e| e.requests).sum();
+        let accounted: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(requests, accounted, "epoch conservation");
+        assert_eq!(requests, ep.n + ep.dropped, "total conservation");
+        for e in &dy.epochs {
+            assert_eq!(e.cohorts_reused + e.cohorts_resolved, e.cohorts);
+        }
+    }
+    let again = Engine::new(1).run(&spec).unwrap();
+    assert_eq!(csv, to_csv(&again), "thread invariance");
+}
+
+#[test]
 fn churn_incremental_preset_runs_end_to_end() {
     // CI-sized `era run --scenario churn-incremental`: the dirty-cohort
     // planner survives real churn (arrivals, departures, handoffs), keeps
