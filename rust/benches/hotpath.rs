@@ -14,9 +14,12 @@
 //!   replan_epoch        one dynamic-serving re-plan epoch (50% active)
 //!   replan_epoch_incremental  steady-state incremental epoch (sparse churn)
 //!   replan_epoch_stable steady-state epoch, churn-stable cohorts (§2e)
+//!   replan_epoch_o_churn  steady-state epoch, full §2f stack (trust-static
+//!                       keys + incremental rates + slot compaction)
 //!   plan_era_cached     all-clean cache replay (zero-churn floor)
 //!   scenario_grid       scenario engine over a smoke grid (8 cells)
 //!   noma_rates_250u     full-network NOMA rate computation
+//!   rates_delta_2ch     incremental 2-channel rate refresh (§2f RateCache)
 //!   episode_des         discrete-event serving episode (2k requests)
 //!   xla_gd_chunk        AOT GD chunk via PJRT (when artifacts exist)
 
@@ -245,6 +248,57 @@ fn main() {
             100.0 * reused as f64 / (reused + resolved).max(1) as f64
         );
     }
+    if want("replan_epoch_o_churn") {
+        // The full §2f O(churn) epoch: churn-stable identity plus
+        // trust-static classification (membership equality instead of the
+        // O(users × channels) gain hash), slot-table compaction, and the
+        // incremental RateCache feeding the regret pass — the per-epoch
+        // cost the serving engine actually pays with the periodic re-scan
+        // retired. The printed rate-recompute average should sit at the
+        // dirty-channel count, nowhere near 2 × subchannels.
+        let mut cfg_oc = cfg.clone();
+        cfg_oc.optimizer.stable_cohorts = true;
+        cfg_oc.optimizer.slot_compact_frac = 0.25;
+        let nu = net.num_users();
+        let mut active: Vec<bool> = (0..nu).map(|u| u % 2 == 0).collect();
+        let popts = era::coordinator::PlanOptions {
+            warm_start: true,
+            threads: 1,
+        };
+        let mut cache =
+            era::coordinator::PlanCache::new(0, cfg_oc.optimizer.replan_layer_window);
+        cache.trust_static = true; // gains are frozen for the bench's lifetime
+        std::hint::black_box(era::coordinator::plan_era_cached(
+            &cfg_oc, &net, &model, &active, &popts, &mut cache,
+        ));
+        let mut k = 0usize;
+        let mut resolved = 0usize;
+        let mut rate_ch = 0usize;
+        results.push(bench(
+            "replan_epoch_o_churn (250 users, sparse churn)",
+            2,
+            2.0,
+            500,
+            || {
+                active[(2 * k) % nu] ^= true;
+                active[(2 * k + 1) % nu] ^= true;
+                k += 1;
+                let (_, stats) = era::coordinator::plan_era_cached(
+                    &cfg_oc, &net, &model, &active, &popts, &mut cache,
+                );
+                resolved += stats.cohorts_resolved;
+                rate_ch += stats.rate_channels_recomputed;
+                std::hint::black_box(stats.cohorts);
+            },
+        ));
+        println!(
+            "# replan_epoch_o_churn: {:.2} re-solves/event, {:.1} rate \
+             channel-directions recomputed/epoch (full pass = {}) over {k} events",
+            resolved as f64 / k.max(1) as f64,
+            rate_ch as f64 / k.max(1) as f64,
+            2 * cfg_oc.network.num_subchannels
+        );
+    }
     if want("plan_era_cached") {
         // The zero-churn floor: every cohort fingerprint is clean, the
         // whole epoch is cache replay + rounding + the regret pass — no
@@ -285,20 +339,46 @@ fn main() {
         ));
     }
     let (ds, _) = era::coordinator::plan_era(&cfg, &net, &model);
+    let alloc: Vec<era::net::LinkAssignment> = ds
+        .iter()
+        .map(|d| era::net::LinkAssignment {
+            up_ch: d.up_ch,
+            down_ch: d.down_ch,
+            p_up: d.p_up,
+            p_down: d.p_down,
+            r: d.r,
+            split: d.split,
+        })
+        .collect();
     if want("noma_rates_250u") {
-        let alloc: Vec<era::net::LinkAssignment> = ds
-            .iter()
-            .map(|d| era::net::LinkAssignment {
-                up_ch: d.up_ch,
-                down_ch: d.down_ch,
-                p_up: d.p_up,
-                p_down: d.p_down,
-                r: d.r,
-                split: d.split,
-            })
-            .collect();
         results.push(bench("noma_rates_250u", 3, 0.5, 10_000, || {
             std::hint::black_box(net.rates(&alloc));
+        }));
+    }
+    if want("rates_delta_2ch") {
+        // §2f acceptance: a two-channel incremental refresh (one uplink
+        // power change + one downlink power change) must beat the full
+        // `noma_rates_250u` pass above by ≥ 10×. The two powers flip
+        // between fixed values each iteration so every update sees a
+        // real (bit-level) delta on exactly two channel-directions.
+        let mut rc = era::net::RateCache::full(&net, alloc.clone());
+        let mut alloc2 = alloc.clone();
+        let ua = alloc2
+            .iter()
+            .position(|a| a.up_ch.is_some())
+            .expect("an uplink offloader");
+        let ub = (0..alloc2.len())
+            .find(|&i| i != ua && alloc2[i].down_ch.is_some())
+            .expect("a second downlink offloader");
+        let (pu, pd) = (alloc2[ua].p_up, alloc2[ub].p_down);
+        let mut flip = false;
+        results.push(bench("rates_delta_2ch", 3, 0.5, 50_000, || {
+            flip = !flip;
+            let s = if flip { 1.5 } else { 1.0 };
+            alloc2[ua].p_up = pu * s;
+            alloc2[ub].p_down = pd * s;
+            let r = rc.update(&net, &alloc2);
+            std::hint::black_box(r.up[ua]);
         }));
     }
     if want("episode_des") {

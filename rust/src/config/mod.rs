@@ -136,6 +136,14 @@ pub struct OptimizerConfig {
     /// re-solved even when its local fingerprint is clean. `0` disables
     /// the check (drift is then bounded only by `full_rescan_every`).
     pub bg_tolerance: f64,
+    /// Slot-table hysteresis compaction (DESIGN.md §2f): a stable-identity
+    /// slot group whose occupancy falls to `⌊cohort_users · frac⌋` or
+    /// below is merged into its nearest non-empty neighbor group (when the
+    /// union fits), taking a one-epoch two-cohort dirtying hit to keep the
+    /// cohort count within a fixed factor of ⌈active / cohort_users⌉ under
+    /// sustained departure skew. `0` disables compaction (groups only ever
+    /// merge by natural refill — the exact pre-§2f behavior).
+    pub slot_compact_frac: f64,
 }
 
 /// User churn model for the dynamic serving engine (companion work arXiv
@@ -245,7 +253,11 @@ impl Default for OptimizerConfig {
             delay_scale: 50.0,
             replan_layer_window: 2,
             stable_cohorts: false,
-            bg_tolerance: 0.0,
+            // 0.25 = the knee of the staleness/re-solve frontier recorded
+            // in EXPERIMENTS.md §ISSUE 6 — drift chasing stays bounded
+            // while `full_rescan_every` can default off (DESIGN.md §2f).
+            bg_tolerance: 0.25,
+            slot_compact_frac: 0.0,
         }
     }
 }
@@ -405,6 +417,7 @@ impl Config {
                     .ok_or_else(|| anyhow::anyhow!("expected boolean, got {val:?}"))?
             }
             ("optimizer", "bg_tolerance") => self.optimizer.bg_tolerance = f!(),
+            ("optimizer", "slot_compact_frac") => self.optimizer.slot_compact_frac = f!(),
             ("workload", "model") => {
                 self.workload.model = val
                     .as_str()
@@ -495,7 +508,11 @@ impl Config {
             o.replan_layer_window
         ));
         s.push_str(&format!("stable_cohorts = {}\n", o.stable_cohorts));
-        s.push_str(&format!("bg_tolerance = {}\n\n", f(o.bg_tolerance)));
+        s.push_str(&format!("bg_tolerance = {}\n", f(o.bg_tolerance)));
+        s.push_str(&format!(
+            "slot_compact_frac = {}\n\n",
+            f(o.slot_compact_frac)
+        ));
         s.push_str("[workload]\n");
         s.push_str(&format!("model = {:?}\n", w.model));
         s.push_str(&format!("tasks_per_user = {}\n", f(w.tasks_per_user)));
@@ -541,6 +558,10 @@ impl Config {
         anyhow::ensure!(
             o.bg_tolerance >= 0.0 && o.bg_tolerance.is_finite(),
             "optimizer.bg_tolerance must be a finite number >= 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&o.slot_compact_frac),
+            "optimizer.slot_compact_frac must be in [0, 1]"
         );
         let ch = &self.churn;
         anyhow::ensure!(
@@ -636,6 +657,7 @@ mod tests {
         cfg.optimizer.replan_layer_window = 3;
         cfg.optimizer.stable_cohorts = true;
         cfg.optimizer.bg_tolerance = 0.125;
+        cfg.optimizer.slot_compact_frac = 0.375;
         cfg.workload.model = "nin".into();
         cfg.churn.initial_active_frac = 0.35;
         cfg.churn.arrival_rate_hz = 4.5;
@@ -648,15 +670,23 @@ mod tests {
 
     #[test]
     fn stable_cohort_keys_parse_and_validate() {
-        let c = Config::from_str("[optimizer]\nstable_cohorts = true\nbg_tolerance = 0.05\n")
-            .unwrap();
+        let c = Config::from_str(
+            "[optimizer]\nstable_cohorts = true\nbg_tolerance = 0.05\nslot_compact_frac = 0.25\n",
+        )
+        .unwrap();
         assert!(c.optimizer.stable_cohorts);
         assert_eq!(c.optimizer.bg_tolerance, 0.05);
+        assert_eq!(c.optimizer.slot_compact_frac, 0.25);
         let d = Config::default();
         assert!(!d.optimizer.stable_cohorts, "defaults keep the §2d path");
-        assert_eq!(d.optimizer.bg_tolerance, 0.0);
+        // §2f ships the bg-fingerprint knee as the default (the fingerprint
+        // replaces the periodic full re-scan); compaction stays opt-in.
+        assert_eq!(d.optimizer.bg_tolerance, 0.25);
+        assert_eq!(d.optimizer.slot_compact_frac, 0.0);
         let e = Config::from_str("[optimizer]\nbg_tolerance = -0.5\n").unwrap_err();
         assert!(e.to_string().contains("bg_tolerance"), "{e}");
+        let e = Config::from_str("[optimizer]\nslot_compact_frac = 1.5\n").unwrap_err();
+        assert!(e.to_string().contains("slot_compact_frac"), "{e}");
         let e = Config::from_str("[optimizer]\nstable_cohorts = 1\n").unwrap_err();
         assert!(e.to_string().contains("boolean"), "{e}");
     }

@@ -31,7 +31,7 @@
 //! correctness mechanism to a backstop.
 
 use super::cohort::SlotTable;
-use crate::net::Network;
+use crate::net::{Network, RateCache};
 use crate::optimizer::CohortSolution;
 use std::collections::HashMap;
 
@@ -44,8 +44,13 @@ pub(crate) type CohortKey = u64;
 
 /// One cached cohort solve.
 pub(crate) struct CacheEntry {
-    /// Cohort-local fingerprint at solve time (see [`cohort_fingerprint`]).
+    /// Cohort-local fingerprint at solve time (see [`cohort_fingerprint`]);
+    /// `0` in trust-static mode, where membership equality replaces it.
     pub fingerprint: u64,
+    /// AP + exact member list at solve time — the trust-static clean check
+    /// and the replay collision gate compare these directly.
+    pub ap: usize,
+    pub users: Vec<usize>,
     /// Candidate channel list the solution's channel indices refer to.
     pub channels: Vec<usize>,
     /// The committed solution; `solution.x` doubles as the cross-epoch
@@ -81,6 +86,16 @@ pub struct PlanCache {
     /// group as a warm-start seed — the §2d positional-seeding behavior,
     /// kept under member-set keying.
     pub(crate) seed_of: HashMap<(usize, usize), CohortKey>,
+    /// §2f incremental rate state for the regret pass: seeded by the first
+    /// forced full plan, then fed per-epoch allocation deltas so all-clean
+    /// epochs recompute zero channels.
+    pub(crate) rates: Option<RateCache>,
+    /// Owner's promise that per-user static inputs (channel gains, device
+    /// FLOPS, QoE thresholds) never change for this cache's lifetime —
+    /// membership/AP equality then replaces the O(users × channels)
+    /// fingerprint hash in clean/dirty classification. `run_dynamic` sets
+    /// this: its churn schedule only flips activity and AP association.
+    pub trust_static: bool,
 }
 
 impl PlanCache {
@@ -92,6 +107,8 @@ impl PlanCache {
             entries: HashMap::new(),
             slots: SlotTable::default(),
             seed_of: HashMap::new(),
+            rates: None,
+            trust_static: false,
         }
     }
 
@@ -105,10 +122,12 @@ impl PlanCache {
     }
 
     /// Drop every cached solve (the next re-plan is a full one). The slot
-    /// table is kept — cohort *identity* survives a cache flush.
+    /// table is kept — cohort *identity* survives a cache flush; the rate
+    /// snapshot is dropped with the solves it scored.
     pub fn clear(&mut self) {
         self.entries.clear();
         self.seed_of.clear();
+        self.rates = None;
     }
 }
 

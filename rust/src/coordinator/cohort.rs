@@ -213,10 +213,92 @@ impl SlotTable {
                 self.slot_of[u] = Some((ap, idx));
             }
         }
+        if cfg.optimizer.slot_compact_frac > 0.0 {
+            for ap in 0..n_aps {
+                self.compact_ap(
+                    ap,
+                    cfg.optimizer.cohort_users,
+                    cfg.optimizer.slot_compact_frac,
+                );
+            }
+        }
         for row in &mut self.slots {
             while matches!(row.last(), Some(None)) {
                 row.pop();
             }
+        }
+    }
+
+    /// Hysteresis compaction (DESIGN.md §2f): sustained departure skew can
+    /// strand many near-empty slot groups, and since groups never merge on
+    /// their own the cohort count drifts arbitrarily far above
+    /// ⌈active / k⌉. Merge each group at or below `⌊k · frac⌋` occupancy
+    /// into its nearest non-empty neighbor group (previous first, then
+    /// next) when the union fits in one group. Members move in ascending
+    /// slot order into the target's lowest holes, so the result is
+    /// deterministic. Each merge dirties exactly the two involved groups —
+    /// a one-epoch re-solve hit that bounds the drift: afterwards every
+    /// surviving ≤`⌊k·frac⌋` group is wedged between groups too full to
+    /// absorb it (> `k − ⌊k·frac⌋` occupancy), so with the default ¼
+    /// fraction the steady-state group count stays within ~8/3 of ideal.
+    fn compact_ap(&mut self, ap: usize, k: usize, frac: f64) {
+        let thresh = ((k as f64) * frac).floor() as usize;
+        if thresh == 0 || k == 0 {
+            return;
+        }
+        let row_len = self.slots[ap].len();
+        let n_groups = row_len.div_ceil(k);
+        let mut occ = vec![0usize; n_groups];
+        for (idx, s) in self.slots[ap].iter().enumerate() {
+            if s.is_some() {
+                occ[idx / k] += 1;
+            }
+        }
+        let groups: Vec<usize> = (0..n_groups).filter(|&g| occ[g] > 0).collect();
+        let mut prev: Option<usize> = None;
+        for (j, &g) in groups.iter().enumerate() {
+            if occ[g] > thresh {
+                prev = Some(g);
+                continue;
+            }
+            let cand_prev = prev.filter(|&p| occ[p] + occ[g] <= k);
+            let cand_next = groups
+                .get(j + 1)
+                .copied()
+                .filter(|&n| occ[n] + occ[g] <= k);
+            let Some(t) = cand_prev.or(cand_next) else {
+                // no neighbor can absorb this group: it survives (the
+                // hysteresis guarantee — both neighbors are > k - thresh)
+                prev = Some(g);
+                continue;
+            };
+            // Move g's members (ascending slot order) into t's lowest
+            // holes; extend the row when t is a partial trailing group.
+            let movers: Vec<usize> = (g * k..(g + 1) * k)
+                .filter(|&i| i < self.slots[ap].len())
+                .filter_map(|i| self.slots[ap][i].take())
+                .collect();
+            let t_end = ((t + 1) * k).min(self.slots[ap].len());
+            let mut holes: Vec<usize> = (t * k..t_end)
+                .filter(|&i| self.slots[ap][i].is_none())
+                .collect();
+            holes.reverse(); // pop() yields the lowest hole first
+            for u in movers {
+                let idx = match holes.pop() {
+                    Some(h) => h,
+                    None => {
+                        debug_assert!(self.slots[ap].len() < (t + 1) * k);
+                        self.slots[ap].push(None);
+                        self.slots[ap].len() - 1
+                    }
+                };
+                self.slots[ap][idx] = Some(u);
+                self.slot_of[u] = Some((ap, idx));
+            }
+            occ[t] += occ[g];
+            occ[g] = 0;
+            // `prev` stays: g vanished, its predecessor is still the
+            // nearest surviving group on the left.
         }
     }
 
@@ -475,5 +557,103 @@ mod tests {
         assert!(after
             .iter()
             .any(|(_, c)| c.ap == 1 && c.users.contains(&mover)));
+    }
+
+    #[test]
+    fn compaction_merges_fragmented_groups_and_dirties_only_them() {
+        // §2f hysteresis compaction: two sub-threshold groups merge into
+        // the nearest absorber, and a group the merge never touches keeps
+        // its member set — only the merged groups' cohorts go dirty.
+        let mut cfg = presets::smoke();
+        cfg.network.num_aps = 1;
+        cfg.network.num_users = 24;
+        cfg.optimizer.cohort_users = 8;
+        cfg.optimizer.slot_compact_frac = 0.25; // thresh = ⌊8·¼⌋ = 2
+        let net = Network::generate(&cfg, 21);
+        let load = ChannelLoad::new(1, cfg.network.num_subchannels, 3);
+        let mut active = vec![true; net.num_users()];
+        let mut table = SlotTable::default();
+        let before = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        assert_eq!(before.len(), 3);
+        let g2_users = before[2].1.users.clone();
+
+        // deplete groups 0 and 1 to two members each; group 2 stays full
+        let ap0 = net.topo.users_of_ap(0);
+        for (slot, &u) in ap0.iter().enumerate() {
+            if matches!(slot, 2..=7 | 10..=15) {
+                active[u] = false;
+            }
+        }
+        let after = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        // group 0 (occ 2) merged into group 1 (occ 2 → 4); group 2 untouched
+        assert_eq!(after.len(), 2);
+        assert_eq!(after[0].0, 1);
+        let expect: Vec<usize> = [0usize, 1, 8, 9].iter().map(|&s| ap0[s]).collect();
+        assert_eq!(after[0].1.users, expect);
+        assert_eq!(after[1].0, 2);
+        assert_eq!(
+            after[1].1.users, g2_users,
+            "the untouched group keeps its member set"
+        );
+
+        // control: with compaction off the same churn leaves 3 fragments
+        let mut cfg_off = cfg.clone();
+        cfg_off.optimizer.slot_compact_frac = 0.0;
+        let mut t2 = SlotTable::default();
+        let all = vec![true; net.num_users()];
+        let _ = form_cohorts_stable(&cfg_off, &net, &load, Some(&all), &mut t2);
+        let frag = form_cohorts_stable(&cfg_off, &net, &load, Some(&active), &mut t2);
+        assert_eq!(frag.len(), 3, "no compaction ⇒ fragments persist");
+    }
+
+    #[test]
+    fn compaction_bounds_cohort_count_under_sustained_departure_skew() {
+        // §2f acceptance: a departure skew that strands every group at ¼
+        // occupancy compacts back to the ideal ⌈active / k⌉ group count
+        // instead of drifting — 8 groups × 2 survivors → 2 full groups.
+        let mut cfg = presets::smoke();
+        cfg.network.num_aps = 1;
+        cfg.network.num_users = 64;
+        cfg.optimizer.cohort_users = 8;
+        cfg.optimizer.slot_compact_frac = 0.25;
+        let net = Network::generate(&cfg, 22);
+        let load = ChannelLoad::new(1, cfg.network.num_subchannels, 3);
+        let mut table = SlotTable::default();
+        let all = vec![true; net.num_users()];
+        let seeded = form_cohorts_stable(&cfg, &net, &load, Some(&all), &mut table);
+        assert_eq!(seeded.len(), 8);
+
+        // keep only the two lowest slots of every group
+        let ap0 = net.topo.users_of_ap(0);
+        let mut active = vec![false; net.num_users()];
+        let mut kept = Vec::new();
+        for g in 0..8usize {
+            for s in [8 * g, 8 * g + 1] {
+                active[ap0[s]] = true;
+                kept.push(ap0[s]);
+            }
+        }
+        let after = form_cohorts_stable(&cfg, &net, &load, Some(&active), &mut table);
+        let ideal = kept.len().div_ceil(cfg.optimizer.cohort_users);
+        assert_eq!(after.len(), ideal, "compaction reaches the ideal count");
+        let mut members: Vec<usize> =
+            after.iter().flat_map(|(_, c)| c.users.clone()).collect();
+        members.sort_unstable();
+        kept.sort_unstable();
+        assert_eq!(members, kept, "no member lost or duplicated");
+        for (_, c) in &after {
+            assert_eq!(c.users.len(), cfg.optimizer.cohort_users, "merged groups are full");
+        }
+        // the table really shrank: the merge chain lands everyone in
+        // groups 1 and 5, and the trailing holes truncate behind them
+        assert_eq!(table.slots_of_ap(0), 48);
+
+        // control: without compaction one fragment per group persists
+        let mut cfg_off = cfg.clone();
+        cfg_off.optimizer.slot_compact_frac = 0.0;
+        let mut t2 = SlotTable::default();
+        let _ = form_cohorts_stable(&cfg_off, &net, &load, Some(&all), &mut t2);
+        let frag = form_cohorts_stable(&cfg_off, &net, &load, Some(&active), &mut t2);
+        assert_eq!(frag.len(), 8, "no compaction ⇒ one fragment per group");
     }
 }

@@ -27,7 +27,7 @@ pub mod server;
 use crate::baselines::{ChannelModel, Decision, PlanInfo, Strategy};
 use crate::config::Config;
 use crate::models::ModelProfile;
-use crate::net::Network;
+use crate::net::{LinkRates, Network, RateCache};
 use crate::optimizer::{solve_ligd_seeded, CohortProblem, CohortSolution, EpochSeed, GdOptions};
 use cache::{cohort_fingerprint, member_set_key, positional_key, CacheEntry, CohortKey, Fnv};
 pub use cache::PlanCache;
@@ -57,6 +57,10 @@ pub struct PlanStats {
     /// (counted inside `cohorts_resolved`; always 0 with the tolerance
     /// disabled or outside the incremental path).
     pub bg_resolves: usize,
+    /// Channel-directions the regret pass recomputed NOMA rates for
+    /// (DESIGN.md §2f): `2 × num_subchannels` on a full pass, the dirty
+    /// channel count on the incremental path, 0 on an all-clean replay.
+    pub rate_channels_recomputed: usize,
 }
 
 /// Planner knobs.
@@ -335,7 +339,7 @@ fn plan_era_impl(
     active: Option<&[bool]>,
     popts: &PlanOptions,
 ) -> (Vec<Decision>, PlanStats) {
-    let (ds, stats, _) = plan_epoch_full(cfg, net, model, active, popts, false);
+    let (ds, stats, _) = plan_epoch_full(cfg, net, model, active, popts, false, None);
     (ds, stats)
 }
 
@@ -434,6 +438,7 @@ fn plan_cohorts(
     groups: &[usize],
     popts: &PlanOptions,
     capture: bool,
+    rates_cache: Option<&mut Option<RateCache>>,
 ) -> (Vec<Decision>, PlanStats, Vec<CapturedCohort>) {
     debug_assert_eq!(cohorts.len(), groups.len());
     let gd_opts = GdOptions::from_config(&cfg.optimizer);
@@ -472,7 +477,7 @@ fn plan_cohorts(
     }
     st.stats.cohorts_resolved = st.stats.cohorts;
 
-    regret_pass(cfg, net, model, &mut st);
+    finish_plan_full(cfg, net, model, &mut st, rates_cache);
     (st.decisions, st.stats, captured)
 }
 
@@ -506,6 +511,7 @@ fn form_stable_unzipped(
 
 /// The full (every cohort re-solved) planning pass over chunk-formed
 /// cohorts — see [`plan_cohorts`].
+#[allow(clippy::too_many_arguments)]
 fn plan_epoch_full(
     cfg: &Config,
     net: &Network,
@@ -513,11 +519,61 @@ fn plan_epoch_full(
     active: Option<&[bool]>,
     popts: &PlanOptions,
     capture: bool,
+    rates_cache: Option<&mut Option<RateCache>>,
 ) -> (Vec<Decision>, PlanStats, Vec<CapturedCohort>) {
     let st = new_plan_state(cfg, net, model);
     let cohorts = form_cohorts_masked(cfg, net, &st.load, active);
     let groups = formation_slots(cfg, &cohorts);
-    plan_cohorts(cfg, net, model, st, cohorts, &groups, popts, capture)
+    plan_cohorts(cfg, net, model, st, cohorts, &groups, popts, capture, rates_cache)
+}
+
+/// The committed decisions as a concrete [`crate::net::LinkAssignment`]
+/// vector (the regret pass and the rate cache both score this view).
+fn alloc_of(decisions: &[Decision]) -> Vec<crate::net::LinkAssignment> {
+    decisions
+        .iter()
+        .map(|d| crate::net::LinkAssignment {
+            up_ch: d.up_ch,
+            down_ch: d.down_ch,
+            p_up: d.p_up,
+            p_down: d.p_down,
+            r: d.r,
+            split: d.split,
+        })
+        .collect()
+}
+
+/// Score the committed plan's realized rates and run the regret pass.
+///
+/// With a rate-cache slot the rates come from a full [`RateCache`] rebuild
+/// (seeding the §2f incremental path for subsequent epochs); without one
+/// this is the legacy full `compute_rates` pass. Either way the table is
+/// bit-identical and `stats.rate_channels_recomputed` records the full
+/// `2 × num_subchannels` cost.
+fn finish_plan_full(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    st: &mut PlanState,
+    rates_cache: Option<&mut Option<RateCache>>,
+) {
+    let alloc = alloc_of(&st.decisions);
+    st.stats.rate_channels_recomputed = 2 * cfg.network.num_subchannels;
+    match rates_cache {
+        Some(slot) => {
+            if let Some(rc) = slot.as_mut() {
+                rc.rebuild(net, alloc);
+            } else {
+                *slot = Some(RateCache::full(net, alloc));
+            }
+            let rates = slot.as_ref().expect("just seeded").rates();
+            regret_pass(cfg, net, model, st, rates);
+        }
+        None => {
+            let rates = net.rates(&alloc);
+            regret_pass(cfg, net, model, st, &rates);
+        }
+    }
 }
 
 /// Regret pass (admission control). Sequential cohort planning sees only
@@ -530,20 +586,13 @@ fn plan_epoch_full(
 /// improve.) On the incremental path this doubles as the safety net that
 /// catches a reused cohort whose cached plan went stale against the
 /// drifted interference state.
-fn regret_pass(cfg: &Config, net: &Network, model: &ModelProfile, st: &mut PlanState) {
-    let alloc: Vec<crate::net::LinkAssignment> = st
-        .decisions
-        .iter()
-        .map(|d| crate::net::LinkAssignment {
-            up_ch: d.up_ch,
-            down_ch: d.down_ch,
-            p_up: d.p_up,
-            p_down: d.p_down,
-            r: d.r,
-            split: d.split,
-        })
-        .collect();
-    let rates = net.rates(&alloc);
+fn regret_pass(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    st: &mut PlanState,
+    rates: &LinkRates,
+) {
     for u in 0..net.num_users() {
         let d = st.decisions[u];
         if d.up_ch.is_none() {
@@ -608,9 +657,27 @@ pub fn plan_era_cached(
             let st = new_plan_state(cfg, net, model);
             let (groups, cohorts) =
                 form_stable_unzipped(cfg, net, &st.load, active, &mut cache.slots);
-            plan_cohorts(cfg, net, model, st, cohorts, &groups, popts, true)
+            plan_cohorts(
+                cfg,
+                net,
+                model,
+                st,
+                cohorts,
+                &groups,
+                popts,
+                true,
+                Some(&mut cache.rates),
+            )
         } else {
-            plan_epoch_full(cfg, net, model, Some(active), popts, true)
+            plan_epoch_full(
+                cfg,
+                net,
+                model,
+                Some(active),
+                popts,
+                true,
+                Some(&mut cache.rates),
+            )
         };
         cache.entries.clear();
         cache.seed_of.clear();
@@ -621,10 +688,20 @@ pub fn plan_era_cached(
                 positional_key(cc.cohort.ap, cc.group)
             };
             cache.seed_of.insert((cc.cohort.ap, cc.group), key);
+            // In trust-static mode membership *is* the fingerprint (the
+            // per-user static inputs are immutable for the cache's
+            // lifetime), so the O(users × channels) gain hash is skipped.
+            let fingerprint = if cache.trust_static {
+                0
+            } else {
+                cohort_fingerprint(net, cc.cohort.ap, &cc.cohort.users)
+            };
             cache.entries.insert(
                 key,
                 CacheEntry {
-                    fingerprint: cohort_fingerprint(net, cc.cohort.ap, &cc.cohort.users),
+                    fingerprint,
+                    ap: cc.cohort.ap,
+                    users: cc.cohort.users,
                     channels: cc.cohort.channels,
                     solution: cc.solution,
                     bg_fp: cc.bg_fp,
@@ -659,11 +736,24 @@ pub fn plan_era_cached(
         } else {
             positional_key(c.ap, group)
         };
-        let fp = cohort_fingerprint(net, c.ap, &c.users);
-        let is_clean = cache
-            .entries
-            .get(&key)
-            .map_or(false, |e| e.fingerprint == fp);
+        // Trust-static mode (§2f): the fingerprint is a pure function of
+        // (AP, member set, per-user static data), and the owner promised
+        // the static data is frozen — exact membership equality against
+        // the entry replaces the O(users × channels) gain hash.
+        let (fp, is_clean) = if cache.trust_static {
+            let is_clean = cache
+                .entries
+                .get(&key)
+                .map_or(false, |e| e.ap == c.ap && e.users == c.users);
+            (0, is_clean)
+        } else {
+            let fp = cohort_fingerprint(net, c.ap, &c.users);
+            let is_clean = cache
+                .entries
+                .get(&key)
+                .map_or(false, |e| e.fingerprint == fp);
+            (fp, is_clean)
+        };
         keys.push(key);
         fps.push(fp);
         clean.push(is_clean);
@@ -765,8 +855,14 @@ pub fn plan_era_cached(
                 // with another cohort's solve. Reuse stays gated by the
                 // fingerprint so a key collision can only ever cost a
                 // re-solve, never commit the wrong solution (the §2e
-                // cache-key contract).
-                if e.fingerprint == fps[i] {
+                // cache-key contract). Trust-static mode gates on exact
+                // membership instead — strictly stronger than a hash.
+                let replay_ok = if cache.trust_static {
+                    e.ap == c.ap && e.users == c.users
+                } else {
+                    e.fingerprint == fps[i]
+                };
+                if replay_ok {
                     round_and_commit(
                         cfg,
                         net,
@@ -791,6 +887,8 @@ pub fn plan_era_cached(
                         keys[i],
                         CacheEntry {
                             fingerprint: fps[i],
+                            ap: c.ap,
+                            users: c.users.clone(),
                             channels: std::mem::take(&mut c.channels),
                             solution: sol,
                             bg_fp,
@@ -818,6 +916,8 @@ pub fn plan_era_cached(
                 keys[i],
                 CacheEntry {
                     fingerprint: fps[i],
+                    ap: c.ap,
+                    users: c.users.clone(),
                     channels: std::mem::take(&mut c.channels),
                     solution: sol,
                     bg_fp,
@@ -835,7 +935,20 @@ pub fn plan_era_cached(
     cache.entries.retain(|k, _| live.contains(k));
     cache.seed_of.retain(|_, k| live.contains(k));
 
-    regret_pass(cfg, net, model, &mut st);
+    // §2f: refresh the realized rates incrementally — the cache diffs the
+    // committed allocation against last epoch's snapshot and recomputes
+    // only the dirty channels (bit-identical to a fresh `compute_rates`).
+    // The cache is seeded by the initial forced pass; a cache that was
+    // cleared out-of-band just pays one full rebuild here.
+    let alloc = alloc_of(&st.decisions);
+    if let Some(rc) = cache.rates.as_mut() {
+        rc.update(net, &alloc);
+    } else {
+        cache.rates = Some(RateCache::full(net, alloc));
+    }
+    let rc = cache.rates.as_ref().expect("just seeded");
+    st.stats.rate_channels_recomputed = rc.last_recompute_channels();
+    regret_pass(cfg, net, model, &mut st, rc.rates());
     (st.decisions, st.stats)
 }
 
@@ -1138,6 +1251,7 @@ mod tests {
     fn sparse_churn_resolves_only_touched_cohorts_and_stays_feasible() {
         let mut cfg = presets::smoke();
         cfg.network.num_users = 48; // several cohorts per AP
+        cfg.optimizer.bg_tolerance = 0.0; // fingerprint-only resolve counts
         let net = Network::generate(&cfg, 35);
         let model = zoo::nin();
         let popts = PlanOptions::default();
@@ -1190,6 +1304,51 @@ mod tests {
     }
 
     #[test]
+    fn regret_rate_recompute_tracks_the_dirty_channels_not_the_total() {
+        // §2f acceptance: the per-epoch NOMA rate refresh touches exactly
+        // the dirty channels, not `2 × num_subchannels`. The channel count
+        // is raised well past anything a single cohort re-solve can dirty
+        // so the crossover back to a full pass cannot trip.
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 48;
+        cfg.network.num_subchannels = 64;
+        cfg.optimizer.stable_cohorts = true;
+        cfg.optimizer.bg_tolerance = 0.0;
+        let net = Network::generate(&cfg, 41);
+        let model = zoo::nin();
+        let popts = PlanOptions::default();
+        let total = 2 * cfg.network.num_subchannels;
+        let mut active = vec![true; net.num_users()];
+        let mut cache = PlanCache::new(0, cfg.optimizer.replan_layer_window);
+        let (d0, s0) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(
+            s0.rate_channels_recomputed, total,
+            "the populate epoch pays one full pass"
+        );
+
+        // Unchanged population → clean replay reproduces the identical
+        // pre-regret allocation → the channel delta is empty.
+        let (_, s1) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert_eq!(s1.cohorts_reused, s1.cohorts);
+        assert_eq!(s1.rate_channels_recomputed, 0, "clean epoch recomputes nothing");
+
+        // One departure of an offloading user dirties one cohort: the
+        // refresh covers that cohort's channel moves and nothing else —
+        // strictly between zero and the channel total.
+        let departed = (0..net.num_users())
+            .find(|&u| d0[u].up_ch.is_some())
+            .expect("someone offloads");
+        active[departed] = false;
+        let (_, s2) = plan_era_cached(&cfg, &net, &model, &active, &popts, &mut cache);
+        assert!(s2.cohorts_resolved >= 1);
+        assert!(
+            s2.rate_channels_recomputed > 0 && s2.rate_channels_recomputed < total,
+            "dirty-channel recompute {} must be > 0 and < {total}",
+            s2.rate_channels_recomputed
+        );
+    }
+
+    #[test]
     fn stable_cohorts_churn_off_is_byte_identical_to_positional() {
         // Acceptance: with a static population, `stable_cohorts` (and a
         // live bg tolerance) must not change a single decision or
@@ -1223,6 +1382,7 @@ mod tests {
         let mut cfg = presets::smoke();
         cfg.network.num_users = 48;
         cfg.optimizer.stable_cohorts = true;
+        cfg.optimizer.bg_tolerance = 0.0; // fingerprint-only resolve counts
         let net = Network::generate(&cfg, 37);
         let model = zoo::nin();
         let popts = PlanOptions::default();
@@ -1264,6 +1424,7 @@ mod tests {
             let mut cfg = presets::smoke();
             cfg.network.num_users = g.usize_in(24, 56);
             cfg.optimizer.stable_cohorts = true;
+            cfg.optimizer.bg_tolerance = 0.0; // fingerprint-only resolve counts
             cfg.optimizer.max_iters = 40;
             let net = Network::generate(&cfg, 600 + g.case as u64);
             let model = zoo::nin();
@@ -1315,6 +1476,7 @@ mod tests {
         let mut cfg = presets::smoke();
         cfg.network.num_users = 48; // 3 cohorts per AP
         cfg.optimizer.max_iters = 40;
+        cfg.optimizer.bg_tolerance = 0.0; // fingerprint-only resolve counts
         let mut cfg_stable = cfg.clone();
         cfg_stable.optimizer.stable_cohorts = true;
         let net = Network::generate(&cfg, 38);
@@ -1409,6 +1571,7 @@ mod tests {
         cfg.network.num_users = 48;
         cfg.optimizer.stable_cohorts = true;
         cfg.optimizer.max_iters = 40;
+        cfg.optimizer.bg_tolerance = 0.0; // the "off" baseline
         let mut cfg_tight = cfg.clone();
         cfg_tight.optimizer.bg_tolerance = 1e-6; // any drift is material
         let net = Network::generate(&cfg, 40);

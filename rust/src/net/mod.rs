@@ -3,10 +3,12 @@
 
 pub mod channel;
 pub mod noma;
+pub mod rates;
 pub mod topology;
 
 pub use channel::ChannelState;
 pub use noma::{compute_rates, LinkAssignment, LinkRates};
+pub use rates::{ChannelDelta, RateCache};
 pub use topology::{path_loss, Pos, Topology};
 
 use crate::config::Config;

@@ -1,0 +1,550 @@
+//! Incremental NOMA rate maintenance (DESIGN.md §2f).
+//!
+//! [`super::noma::compute_rates`] walks every (AP, subchannel) cluster,
+//! which makes each per-epoch rate refresh O(users × subchannels) even
+//! when the plan delta is two cohorts. The SIC rate structure is
+//! channel-local, though: a user's uplink rate depends only on the
+//! co-channel users of its uplink subchannel (own-cell cluster + other-cell
+//! interferers), and likewise for downlink — there are no cross-channel
+//! terms in eq.5–eq.10. So a [`RateCache`] can keep the last allocation,
+//! per-channel membership lists, and the computed [`LinkRates`], and on the
+//! next allocation recompute *only* the channels whose membership, power,
+//! or AP association changed.
+//!
+//! Determinism contract: a dirty channel is recomputed by replaying the
+//! exact floating-point operation sequence `compute_rates` would run for
+//! that channel — same ascending-id interference summation order, same
+//! stable sorts over ascending member lists, same accumulation order — so
+//! the cached table stays **bit-identical** to a fresh `compute_rates` of
+//! the same allocation (property-tested below). When the dirty set exceeds
+//! a crossover fraction of all channel-directions, the cache falls back to
+//! one full `compute_rates` pass, which is trivially identical.
+//!
+//! Staleness contract: per-user static inputs (channel gains, AP geometry)
+//! must not change between [`RateCache::update`] calls without an
+//! intervening [`RateCache::rebuild`]; AP re-association (handoffs) *is*
+//! tracked. Callers whose gains drift (none today — `ChannelState` is
+//! immutable after generation) can mark channels dirty explicitly through
+//! [`RateCache::apply_delta`].
+
+use super::noma::{compute_rates, LinkAssignment, LinkRates};
+use super::Network;
+
+/// One dirty channel-direction for [`RateCache::apply_delta`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelDelta {
+    /// Uplink subchannel `m` must be recomputed.
+    Up(usize),
+    /// Downlink subchannel `k` must be recomputed.
+    Down(usize),
+}
+
+/// Cross-epoch incremental rate state: allocation + association snapshot,
+/// ascending per-channel membership lists, and the rate table they produce.
+#[derive(Clone, Debug)]
+pub struct RateCache {
+    /// Allocation snapshot the cached rates were computed from.
+    alloc: Vec<LinkAssignment>,
+    /// AP association snapshot (handoffs re-cluster users).
+    user_ap: Vec<usize>,
+    /// Ascending user ids on each uplink subchannel (all cells — both the
+    /// own-cell cluster and the other-cell interferers live here).
+    up_members: Vec<Vec<usize>>,
+    /// Ascending user ids on each downlink subchannel.
+    down_members: Vec<Vec<usize>>,
+    rates: LinkRates,
+    /// Fraction of all channel-directions (2 × subchannels) above which an
+    /// update abandons the delta path and runs one full `compute_rates`.
+    crossover: f64,
+    /// Channel-directions recomputed by the most recent
+    /// `update`/`apply_delta`/`rebuild` (2 × subchannels on a full pass).
+    last_recomputed: usize,
+    /// Full-table recomputes performed so far (crossover trips + rebuilds).
+    full_rebuilds: usize,
+}
+
+/// Default crossover: past half of all channel-directions dirty, one full
+/// pass is cheaper than per-channel replay (the delta path re-derives the
+/// same clusters with extra bookkeeping).
+pub const DEFAULT_CROSSOVER: f64 = 0.5;
+
+impl RateCache {
+    /// Build a cache from scratch with one full `compute_rates` pass.
+    pub fn full(net: &Network, alloc: Vec<LinkAssignment>) -> Self {
+        let m = net.channels.num_subchannels;
+        let rates = net.rates(&alloc);
+        let (up_members, down_members) = memberships(&alloc, m);
+        Self {
+            user_ap: net.topo.user_ap.clone(),
+            alloc,
+            up_members,
+            down_members,
+            rates,
+            crossover: DEFAULT_CROSSOVER,
+            last_recomputed: 2 * m,
+            full_rebuilds: 1,
+        }
+    }
+
+    /// The cached rate table.
+    pub fn rates(&self) -> &LinkRates {
+        &self.rates
+    }
+
+    /// Channel-directions recomputed by the last refresh (0 = the new
+    /// allocation was identical to the snapshot).
+    pub fn last_recompute_channels(&self) -> usize {
+        self.last_recomputed
+    }
+
+    /// Full-table recomputes so far (diagnostics).
+    pub fn full_rebuilds(&self) -> usize {
+        self.full_rebuilds
+    }
+
+    /// Replace the snapshot wholesale and recompute everything (forced
+    /// re-plans, population shape changes).
+    pub fn rebuild(&mut self, net: &Network, alloc: Vec<LinkAssignment>) -> &LinkRates {
+        let m = net.channels.num_subchannels;
+        self.rates = net.rates(&alloc);
+        let (up, down) = memberships(&alloc, m);
+        self.up_members = up;
+        self.down_members = down;
+        self.alloc = alloc;
+        self.user_ap = net.topo.user_ap.clone();
+        self.last_recomputed = 2 * m;
+        self.full_rebuilds += 1;
+        &self.rates
+    }
+
+    /// Refresh the table for a new allocation: diff against the snapshot,
+    /// derive the dirty channel-directions, and recompute only those (or
+    /// everything past the crossover). Returns the refreshed table, which
+    /// is bit-identical to `net.rates(alloc)`.
+    pub fn update(&mut self, net: &Network, alloc: &[LinkAssignment]) -> &LinkRates {
+        let m = net.channels.num_subchannels;
+        if alloc.len() != self.alloc.len()
+            || net.topo.user_ap.len() != self.user_ap.len()
+            || self.up_members.len() != m
+        {
+            return self.rebuild(net, alloc.to_vec());
+        }
+        let mut dirty_up = vec![false; m];
+        let mut dirty_down = vec![false; m];
+        for (i, n) in alloc.iter().enumerate() {
+            let o = self.alloc[i];
+            let oap = self.user_ap[i];
+            let nap = net.topo.user_ap[i];
+            let moved = oap != nap;
+            if o.up_ch != n.up_ch {
+                if let Some(c) = o.up_ch {
+                    dirty_up[c] = true;
+                    remove_member(&mut self.up_members[c], i);
+                }
+                if let Some(c) = n.up_ch {
+                    dirty_up[c] = true;
+                    insert_member(&mut self.up_members[c], i);
+                }
+                if n.up_ch.is_none() {
+                    // compute_rates leaves unassigned users at the defaults
+                    self.rates.up[i] = f64::INFINITY;
+                    self.rates.up_sinr[i] = 0.0;
+                }
+            } else if let Some(c) = n.up_ch {
+                if o.p_up.to_bits() != n.p_up.to_bits() || moved {
+                    dirty_up[c] = true;
+                }
+            }
+            if o.down_ch != n.down_ch {
+                if let Some(c) = o.down_ch {
+                    dirty_down[c] = true;
+                    remove_member(&mut self.down_members[c], i);
+                }
+                if let Some(c) = n.down_ch {
+                    dirty_down[c] = true;
+                    insert_member(&mut self.down_members[c], i);
+                }
+                if n.down_ch.is_none() {
+                    self.rates.down[i] = f64::INFINITY;
+                    self.rates.down_sinr[i] = 0.0;
+                }
+            } else if let Some(c) = n.down_ch {
+                if o.p_down.to_bits() != n.p_down.to_bits() || moved {
+                    dirty_down[c] = true;
+                }
+            }
+            self.alloc[i] = *n;
+            self.user_ap[i] = nap;
+        }
+        let n_dirty = dirty_up.iter().filter(|&&d| d).count()
+            + dirty_down.iter().filter(|&&d| d).count();
+        if n_dirty == 0 {
+            self.last_recomputed = 0;
+            return &self.rates;
+        }
+        if (n_dirty as f64) > self.crossover * (2 * m) as f64 {
+            // Past the crossover one full pass is cheaper; membership lists
+            // are already patched and stay valid.
+            self.rates = net.rates(&self.alloc);
+            self.last_recomputed = 2 * m;
+            self.full_rebuilds += 1;
+            return &self.rates;
+        }
+        let deltas: Vec<ChannelDelta> = dirty_up
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d)
+            .map(|(c, _)| ChannelDelta::Up(c))
+            .chain(
+                dirty_down
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &d)| d)
+                    .map(|(c, _)| ChannelDelta::Down(c)),
+            )
+            .collect();
+        self.apply_delta(net, &deltas)
+    }
+
+    /// Recompute exactly the listed channel-directions against the current
+    /// snapshot. `update` derives the delta set itself; this is public for
+    /// callers that know channels went stale for reasons the snapshot diff
+    /// cannot see (e.g. an external gain refresh).
+    pub fn apply_delta(&mut self, net: &Network, deltas: &[ChannelDelta]) -> &LinkRates {
+        let n_aps = net.topo.num_aps();
+        let ch = &net.channels;
+        let bw = net.subchannel_bw_hz;
+        let noise = net.noise_w;
+        let mut cluster: Vec<usize> = Vec::new();
+        for &d in deltas {
+            match d {
+                ChannelDelta::Up(m) => {
+                    // Mirror compute_rates' uplink pass for channel `m`:
+                    // per AP, the ascending own-cell cluster and the
+                    // ascending other-cell interference sum, then the
+                    // strongest-first SIC order with suffix power sums.
+                    for a in 0..n_aps {
+                        cluster.clear();
+                        let mut inter = 0.0;
+                        for &t in &self.up_members[m] {
+                            if self.user_ap[t] == a {
+                                cluster.push(t);
+                            } else {
+                                inter += self.alloc[t].p_up * ch.up[t][a][m];
+                            }
+                        }
+                        if cluster.is_empty() {
+                            continue;
+                        }
+                        let bg = inter + noise;
+                        cluster.sort_by(|&x, &y| ch.up[y][a][m].total_cmp(&ch.up[x][a][m]));
+                        let mut weaker = 0.0;
+                        for idx in (0..cluster.len()).rev() {
+                            let i = cluster[idx];
+                            let sig = self.alloc[i].p_up * ch.up[i][a][m];
+                            let sinr = sig / (weaker + bg);
+                            self.rates.up_sinr[i] = sinr;
+                            self.rates.up[i] = bw * crate::util::log2_1p(sinr);
+                            weaker += sig;
+                        }
+                    }
+                }
+                ChannelDelta::Down(k) => {
+                    // Mirror compute_rates' downlink pass for channel `k`.
+                    // The per-AP co-channel power is rebuilt by a fresh
+                    // ascending summation (never patched in place — an
+                    // add/subtract round trip would change the f64 bits).
+                    let mut apk = vec![0.0f64; n_aps];
+                    for &t in &self.down_members[k] {
+                        apk[self.user_ap[t]] += self.alloc[t].p_down;
+                    }
+                    for a in 0..n_aps {
+                        cluster.clear();
+                        for &t in &self.down_members[k] {
+                            if self.user_ap[t] == a {
+                                cluster.push(t);
+                            }
+                        }
+                        if cluster.is_empty() {
+                            continue;
+                        }
+                        cluster.sort_by(|&x, &y| ch.down[x][a][k].total_cmp(&ch.down[y][a][k]));
+                        let mut stronger_power: Vec<f64> = vec![0.0; cluster.len()];
+                        let mut acc = 0.0;
+                        for idx in (0..cluster.len()).rev() {
+                            stronger_power[idx] = acc;
+                            acc += self.alloc[cluster[idx]].p_down;
+                        }
+                        for (idx, &i) in cluster.iter().enumerate() {
+                            let g = ch.down[i][a][k];
+                            let mut inter = 0.0;
+                            for x in 0..n_aps {
+                                if x != a {
+                                    inter += apk[x] * ch.down[i][x][k];
+                                }
+                            }
+                            let sinr = self.alloc[i].p_down * g
+                                / (stronger_power[idx] * g + inter + noise);
+                            self.rates.down_sinr[i] = sinr;
+                            self.rates.down[i] = bw * crate::util::log2_1p(sinr);
+                        }
+                    }
+                }
+            }
+        }
+        self.last_recomputed = deltas.len();
+        &self.rates
+    }
+}
+
+/// Ascending per-channel membership lists for an allocation.
+fn memberships(alloc: &[LinkAssignment], m: usize) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let mut up = vec![Vec::new(); m];
+    let mut down = vec![Vec::new(); m];
+    for (i, a) in alloc.iter().enumerate() {
+        if let Some(c) = a.up_ch {
+            up[c].push(i);
+        }
+        if let Some(c) = a.down_ch {
+            down[c].push(i);
+        }
+    }
+    (up, down)
+}
+
+/// Insert `u` into an ascending member list (no-op if present).
+fn insert_member(members: &mut Vec<usize>, u: usize) {
+    if let Err(pos) = members.binary_search(&u) {
+        members.insert(pos, u);
+    }
+}
+
+/// Remove `u` from an ascending member list (no-op if absent).
+fn remove_member(members: &mut Vec<usize>, u: usize) {
+    if let Ok(pos) = members.binary_search(&u) {
+        members.remove(pos);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::util::quickcheck::forall;
+
+    fn bits(r: &LinkRates) -> Vec<u64> {
+        r.up
+            .iter()
+            .chain(r.down.iter())
+            .chain(r.up_sinr.iter())
+            .chain(r.down_sinr.iter())
+            .map(|v| v.to_bits())
+            .collect()
+    }
+
+    fn assert_identical(cache: &RateCache, net: &Network, alloc: &[LinkAssignment], ctx: &str) {
+        let fresh = net.rates(alloc);
+        assert_eq!(
+            bits(cache.rates()),
+            bits(&fresh),
+            "{ctx}: cached rates diverged from compute_rates"
+        );
+    }
+
+    fn seed_alloc(net: &Network, m: usize) -> Vec<LinkAssignment> {
+        (0..net.num_users())
+            .map(|i| {
+                if i % 3 == 0 {
+                    LinkAssignment::device_only(9)
+                } else {
+                    LinkAssignment {
+                        up_ch: Some(i % m),
+                        down_ch: Some((i * 7) % m),
+                        p_up: 0.05 + 0.01 * (i % 5) as f64,
+                        p_down: 0.5 + 0.1 * (i % 4) as f64,
+                        r: 2.0,
+                        split: 3,
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn identical_alloc_recomputes_nothing() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 5);
+        let m = cfg.network.num_subchannels;
+        let alloc = seed_alloc(&net, m);
+        let mut rc = RateCache::full(&net, alloc.clone());
+        rc.update(&net, &alloc);
+        assert_eq!(rc.last_recompute_channels(), 0);
+        assert_identical(&rc, &net, &alloc, "no-op update");
+    }
+
+    #[test]
+    fn two_user_power_delta_recomputes_exactly_the_dirty_channels() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 5);
+        let m = cfg.network.num_subchannels;
+        let mut alloc = seed_alloc(&net, m);
+        let mut rc = RateCache::full(&net, alloc.clone());
+        // Two offloaders on known channels: one uplink power change + one
+        // downlink power change ⇒ exactly two dirty channel-directions.
+        let offl: Vec<usize> = (0..net.num_users())
+            .filter(|&i| alloc[i].up_ch.is_some())
+            .collect();
+        let (a, b) = (offl[0], offl[1]);
+        alloc[a].p_up *= 1.5;
+        alloc[b].p_down *= 1.5;
+        rc.update(&net, &alloc);
+        assert_eq!(
+            rc.last_recompute_channels(),
+            2,
+            "one up + one down channel dirty"
+        );
+        assert_identical(&rc, &net, &alloc, "2-channel power delta");
+    }
+
+    #[test]
+    fn departures_and_arrivals_reset_and_restore_rates() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 7);
+        let m = cfg.network.num_subchannels;
+        let mut alloc = seed_alloc(&net, m);
+        let mut rc = RateCache::full(&net, alloc.clone());
+        let u = (0..net.num_users())
+            .find(|&i| alloc[i].up_ch.is_some())
+            .unwrap();
+        let saved = alloc[u];
+        alloc[u] = LinkAssignment::device_only(9);
+        rc.update(&net, &alloc);
+        assert!(rc.rates().up[u].is_infinite(), "departed user resets");
+        assert!(rc.rates().down[u].is_infinite());
+        assert_identical(&rc, &net, &alloc, "departure");
+        alloc[u] = saved;
+        rc.update(&net, &alloc);
+        assert_identical(&rc, &net, &alloc, "re-arrival");
+    }
+
+    #[test]
+    fn handoff_redirties_the_channel_in_both_cells() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 9);
+        let m = cfg.network.num_subchannels;
+        let alloc = seed_alloc(&net, m);
+        let mut rc = RateCache::full(&net, alloc.clone());
+        let u = (0..net.num_users())
+            .find(|&i| alloc[i].up_ch.is_some())
+            .unwrap();
+        let mut net2 = net.clone();
+        net2.topo.user_ap[u] = (net.topo.user_ap[u] + 1) % cfg.network.num_aps;
+        rc.update(&net2, &alloc);
+        assert!(rc.last_recompute_channels() <= 2);
+        assert!(rc.last_recompute_channels() >= 1);
+        assert_identical(&rc, &net2, &alloc, "handoff");
+    }
+
+    #[test]
+    fn crossover_falls_back_to_one_full_pass() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 3);
+        let m = cfg.network.num_subchannels;
+        let mut alloc = seed_alloc(&net, m);
+        let mut rc = RateCache::full(&net, alloc.clone());
+        let rebuilds = rc.full_rebuilds();
+        // Touch every offloader's power: every used channel goes dirty,
+        // which exceeds the crossover fraction.
+        for a in alloc.iter_mut() {
+            if a.up_ch.is_some() {
+                a.p_up *= 2.0;
+                a.p_down *= 2.0;
+            }
+        }
+        rc.update(&net, &alloc);
+        assert_eq!(rc.full_rebuilds(), rebuilds + 1, "crossover tripped");
+        assert_eq!(rc.last_recompute_channels(), 2 * m);
+        assert_identical(&rc, &net, &alloc, "crossover full pass");
+    }
+
+    #[test]
+    fn empty_channel_delta_is_harmless() {
+        let cfg = presets::smoke();
+        let net = Network::generate(&cfg, 3);
+        let m = cfg.network.num_subchannels;
+        let alloc = seed_alloc(&net, m);
+        let mut rc = RateCache::full(&net, alloc.clone());
+        // Explicitly recompute a channel nobody occupies (and one that is
+        // occupied) — both must leave the table bit-identical.
+        let empty = (0..m)
+            .find(|&c| alloc.iter().all(|a| a.up_ch != Some(c)))
+            .unwrap_or(0);
+        rc.apply_delta(&net, &[ChannelDelta::Up(empty), ChannelDelta::Down(empty)]);
+        assert_identical(&rc, &net, &alloc, "empty-channel delta");
+    }
+
+    /// Satellite 2: the differential property test. Randomized sequences of
+    /// churn (assign/unassign), handoffs, and power deltas, checked
+    /// bit-identical against a fresh `compute_rates` after every step —
+    /// including steps big enough to trip the crossover path.
+    #[test]
+    fn incremental_rates_match_compute_rates_bit_for_bit() {
+        forall("rate-cache-differential", 24, |g| {
+            let mut cfg = presets::smoke();
+            cfg.network.num_users = g.usize_in(6, 28);
+            cfg.network.num_subchannels = g.usize_in(2, 10);
+            cfg.network.num_aps = g.usize_in(1, 3);
+            let net = Network::generate(&cfg, 1000 + g.case as u64);
+            let m = cfg.network.num_subchannels;
+            let nu = net.num_users();
+            let mut net_dyn = net.clone();
+            let mut alloc: Vec<LinkAssignment> = (0..nu)
+                .map(|_| LinkAssignment::device_only(9))
+                .collect();
+            let mut rc = RateCache::full(&net_dyn, alloc.clone());
+            for _ in 0..g.usize_in(3, 10) {
+                // one step = a batch of random mutations
+                for _ in 0..g.usize_in(1, nu) {
+                    let u = g.usize_in(0, nu - 1);
+                    match g.usize_in(0, 4) {
+                        0 => {
+                            alloc[u] = LinkAssignment {
+                                up_ch: Some(g.usize_in(0, m - 1)),
+                                down_ch: Some(g.usize_in(0, m - 1)),
+                                p_up: g.log_f64_in(1e-3, 0.2),
+                                p_down: g.log_f64_in(1e-2, 2.0),
+                                r: 1.0,
+                                split: 3,
+                            };
+                        }
+                        1 => alloc[u] = LinkAssignment::device_only(9),
+                        2 => {
+                            if alloc[u].up_ch.is_some() {
+                                alloc[u].p_up *= g.f64_in(0.5, 2.0);
+                                alloc[u].p_down *= g.f64_in(0.5, 2.0);
+                            }
+                        }
+                        3 => {
+                            net_dyn.topo.user_ap[u] =
+                                g.usize_in(0, cfg.network.num_aps - 1);
+                        }
+                        _ => {
+                            if let Some(c) = alloc[u].up_ch {
+                                alloc[u].up_ch = Some((c + 1) % m);
+                            }
+                        }
+                    }
+                }
+                rc.update(&net_dyn, &alloc);
+                let fresh = net_dyn.rates(&alloc);
+                assert_eq!(
+                    bits(rc.rates()),
+                    bits(&fresh),
+                    "case {}: delta path diverged",
+                    g.case
+                );
+                assert!(rc.last_recompute_channels() <= 2 * m);
+            }
+        });
+    }
+}

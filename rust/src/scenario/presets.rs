@@ -100,13 +100,17 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
         // The churn workload re-planned through the incremental
         // dirty-cohort planner (PlanCache + cross-epoch Li-GD warm starts,
         // DESIGN.md §2d): identical serving scenario, but steady-state
-        // epochs only re-solve the cohorts the churn delta touched. The
-        // periodic full re-scan bounds cache drift.
+        // epochs only re-solve the cohorts the churn delta touched. Since
+        // §2f the background fingerprint (`bg_tolerance`, on by default)
+        // catches material cross-cohort drift, so the periodic full
+        // re-scan is retired to an opt-in debug backstop
+        // (`episode.full_rescan_every` in a scenario file re-enables it,
+        // byte-identically to the pre-§2f behavior).
         "churn-incremental" => {
             let mut spec = by_name("churn")?;
             spec.name = "churn-incremental".into();
             spec.incremental = true;
-            spec.full_rescan_every = 8;
+            spec.full_rescan_every = 0;
             Some(spec)
         }
         // The incremental churn workload with churn-*stable* cohort
@@ -114,13 +118,15 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
         // cache keys, and the interference-background fingerprint — each
         // churn event dirties only the cohort(s) it touches instead of
         // every downstream cohort of its AP, and material cross-cohort
-        // drift re-solves exactly the affected cohorts (the periodic full
-        // re-scan becomes a pure backstop).
+        // drift re-solves exactly the affected cohorts. Slot-table
+        // hysteresis compaction (§2f) bounds cohort-count drift under
+        // sustained departure skew.
         "churn-stable" => {
             let mut spec = by_name("churn-incremental")?;
             spec.name = "churn-stable".into();
             spec.base.optimizer.stable_cohorts = true;
             spec.base.optimizer.bg_tolerance = 0.25;
+            spec.base.optimizer.slot_compact_frac = 0.25;
             Some(spec)
         }
         // Li-GD vs cold-start GD iteration comparison (Corollary 4).
@@ -164,7 +170,9 @@ mod tests {
     fn churn_incremental_preset_enables_the_plan_cache() {
         let spec = by_name("churn-incremental").unwrap();
         assert!(spec.episode && spec.episode_churn && spec.incremental);
-        assert_eq!(spec.full_rescan_every, 8);
+        // §2f: the fingerprint replaced the periodic re-scan; it is now an
+        // opt-in debug backstop, off by default.
+        assert_eq!(spec.full_rescan_every, 0);
         assert!(spec.is_dynamic());
         // same serving scenario as the churn preset, different planner path
         let churn = by_name("churn").unwrap();
@@ -182,6 +190,7 @@ mod tests {
         assert!(spec.episode && spec.episode_churn && spec.incremental);
         assert!(spec.base.optimizer.stable_cohorts);
         assert!(spec.base.optimizer.bg_tolerance > 0.0);
+        assert!(spec.base.optimizer.slot_compact_frac > 0.0);
         // same serving scenario as churn-incremental, different identity
         let inc = by_name("churn-incremental").unwrap();
         assert_eq!(spec.full_rescan_every, inc.full_rescan_every);

@@ -465,15 +465,26 @@ pub fn run_dynamic_opts(
     // structure needed).
     let mut epoch_of_pos: Vec<usize> = Vec::with_capacity(trace.len());
     let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
-    // Cross-epoch plan cache for the incremental re-planner.
+    // Cross-epoch plan cache for the incremental re-planner. The dynamic
+    // loop only ever flips activity and AP association — per-user gains,
+    // device FLOPS, and QoE thresholds are frozen for the episode — so the
+    // cache may classify cohorts by membership alone (trust-static mode,
+    // DESIGN.md §2f) instead of hashing every member's gain rows per epoch.
     let mut cache = if opts.incremental {
-        Some(crate::coordinator::PlanCache::new(
+        let mut c = crate::coordinator::PlanCache::new(
             opts.full_rescan_every,
             cfg.optimizer.replan_layer_window,
-        ))
+        );
+        c.trust_static = true;
+        Some(c)
     } else {
         None
     };
+    // Serving-side incremental rate maintenance (§2f): under sparse churn
+    // consecutive epoch plans share most of their allocation, so the
+    // realized NOMA rate table is patched per dirty channel instead of
+    // being rebuilt from scratch each epoch (bit-identical either way).
+    let mut serve_rates: Option<crate::net::RateCache> = None;
     let mut next_req = 0usize; // trace cursor
     // Incrementally replayed schedule state (events are time-sorted):
     // the activity mask and — when handoffs exist — the association.
@@ -507,7 +518,29 @@ pub fn run_dynamic_opts(
             None => strat.decide_masked(cfg, net_e, model, &active),
         };
         let plan_wall_s = tp.elapsed().as_secs_f64();
-        let (up, down) = crate::metrics::rates_for(cfg, net_e, &ds, strat.channel_model());
+        let (up, down) = match strat.channel_model() {
+            crate::baselines::ChannelModel::Noma => {
+                let alloc: Vec<crate::net::LinkAssignment> = ds
+                    .iter()
+                    .map(|d| crate::net::LinkAssignment {
+                        up_ch: d.up_ch,
+                        down_ch: d.down_ch,
+                        p_up: d.p_up,
+                        p_down: d.p_down,
+                        r: d.r,
+                        split: d.split,
+                    })
+                    .collect();
+                if let Some(rc) = serve_rates.as_mut() {
+                    rc.update(net_e, &alloc);
+                } else {
+                    serve_rates = Some(crate::net::RateCache::full(net_e, alloc));
+                }
+                let r = serve_rates.as_ref().expect("just seeded").rates();
+                (r.up.clone(), r.down.clone())
+            }
+            cm => crate::metrics::rates_for(cfg, net_e, &ds, cm),
+        };
         let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
         let start_req = next_req;
         // The final epoch consumes every remaining request *unconditionally*
@@ -945,6 +978,7 @@ mod tests {
         cfg.workload.episode_s = 0.5;
         cfg.workload.arrival_rate_hz = 20.0;
         cfg.optimizer.max_iters = 60;
+        cfg.optimizer.bg_tolerance = 0.0; // fingerprint-only resolve counts
         // fullest AP: with 48 users over 2 APs it holds ≥ 24 ⇒ ≥ 3 cohorts
         let ap = (0..cfg.network.num_aps)
             .max_by_key(|&a| net.topo.users_of_ap(a).len())
