@@ -17,6 +17,8 @@
 //!   replan_epoch_o_churn  steady-state epoch, full §2f stack (trust-static
 //!                       keys + incremental rates + slot compaction)
 //!   plan_era_cached     all-clean cache replay (zero-churn floor)
+//!   plan_shard_100k     sharded steady-state epoch, 100k-user arena (§2g)
+//!   plan_shard_1m       same at 1M users (set ERA_BENCH_LONG=1 to run)
 //!   scenario_grid       scenario engine over a smoke grid (8 cells)
 //!   noma_rates_250u     full-network NOMA rate computation
 //!   rates_delta_2ch     incremental 2-channel rate refresh (§2f RateCache)
@@ -324,6 +326,67 @@ fn main() {
                 ));
             },
         ));
+    }
+    // --- sharded scale-out (§2g) ----------------------------------------
+    // Steady-state sharded epoch over a population-scale arena: sparse
+    // synthetic churn (one depart/arrive toggle + one handoff per epoch),
+    // so the epoch cost is background exchange + the handful of dirty
+    // shards — it must NOT scale with the population. The 1M variant is
+    // identical but for the universe size; its setup alone is seconds, so
+    // it only runs when ERA_BENCH_LONG=1 (the CI smoke sticks to 100k).
+    let bench_shard = |population: usize, name: &str, results: &mut Vec<era::benchkit::BenchResult>| {
+        use era::coordinator::{ShardSource, ShardedPlanner};
+        use era::trace::{ChurnEvent, ChurnEventKind};
+        let mut cfg_m = presets::metro();
+        cfg_m.network.num_users = population;
+        let model_m = zoo::by_name(&cfg_m.workload.model).expect("metro model");
+        let arena = era::net::UserArena::new(&cfg_m, cfg_m.seed);
+        let source = ShardSource::Arena(&arena);
+        let mut planner = ShardedPlanner::new(&cfg_m, &source, &model_m, 0, true);
+        // a fixed 200-user active sliver, independent of the universe size
+        let sliver = 200usize.min(population);
+        for u in 0..sliver {
+            planner.activate(&source, u);
+        }
+        planner.plan_epoch(1); // warm every touched shard
+        let mut k = 0usize;
+        let mut planned = 0usize;
+        let mut skipped = 0usize;
+        results.push(bench(name, 1, 2.0, 200, || {
+            // churn delta for this epoch: retire one sliver user, admit a
+            // fresh one from the universe, and hand one user between APs
+            let depart = k % sliver;
+            let arrive = sliver + k % (population - sliver).max(1);
+            let evs = [
+                ChurnEvent { t_s: 0.0, user: depart, kind: ChurnEventKind::Depart },
+                ChurnEvent { t_s: 0.0, user: arrive, kind: ChurnEventKind::Arrive },
+                ChurnEvent {
+                    t_s: 0.0,
+                    user: arrive,
+                    kind: ChurnEventKind::Handoff { ap: k % cfg_m.network.num_aps },
+                },
+            ];
+            planner.apply_events(&source, &evs);
+            let ep = planner.plan_epoch(1);
+            planned += ep.planned;
+            skipped += ep.skipped;
+            k += 1;
+            std::hint::black_box(ep.planned);
+        }));
+        println!(
+            "# {name}: {:.2} shard solves/epoch, {:.1} skipped/epoch over {k} epochs \
+             ({} shards, {} resident of {population})",
+            planned as f64 / k.max(1) as f64,
+            skipped as f64 / k.max(1) as f64,
+            cfg_m.network.num_aps,
+            planner.resident_users(),
+        );
+    };
+    if want("plan_shard_100k") {
+        bench_shard(100_000, "plan_shard_100k (100 APs, sparse churn)", &mut results);
+    }
+    if want("plan_shard_1m") && std::env::var("ERA_BENCH_LONG").is_ok_and(|v| v == "1") {
+        bench_shard(1_000_000, "plan_shard_1m (100 APs, sparse churn)", &mut results);
     }
     if want("scenario_grid") {
         let spec = era::scenario::ScenarioSpec::from_preset("smoke-grid").expect("preset");

@@ -120,10 +120,30 @@ pub fn write_json(path: &str, suite: &str, results: &[BenchResult]) -> std::io::
     std::fs::write(path, to_json(suite, results))
 }
 
-/// Parse an `era-bench-v1` record back into `(name, ns_per_iter)` pairs.
+/// One parsed `era-bench-v1` result row. `iters == 0` marks a
+/// *provisional* entry: a hand-estimated placeholder checked in before any
+/// machine measured it (e.g. when the build environment lacks a
+/// toolchain). Provisional rows document expectations but must never be
+/// used as a regression baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRow {
+    pub name: String,
+    pub ns_per_iter: f64,
+    pub iters: usize,
+}
+
+impl BenchRow {
+    pub fn is_provisional(&self) -> bool {
+        self.iters == 0
+    }
+}
+
+/// Parse an `era-bench-v1` record into full rows (name, ns/iter, iters).
 /// Hand-rolled (the offline registry has no `serde`); tolerant of
-/// anything [`to_json`] emits — one result object per line.
-pub fn parse_json(text: &str) -> Vec<(String, f64)> {
+/// anything [`to_json`] emits — one result object per line. A line
+/// without an `"iters"` field parses with `iters = 0` (treated as
+/// provisional, which is the conservative reading).
+pub fn parse_json_rows(text: &str) -> Vec<BenchRow> {
     let mut out = Vec::new();
     for line in text.lines() {
         let Some(npos) = line.find("\"name\": \"") else {
@@ -141,11 +161,35 @@ pub fn parse_json(text: &str) -> Vec<(String, f64)> {
         let vend = vrest
             .find(|c| c == ',' || c == '}')
             .unwrap_or(vrest.len());
-        if let Ok(v) = vrest[..vend].trim().parse::<f64>() {
-            out.push((name, v));
-        }
+        let Ok(v) = vrest[..vend].trim().parse::<f64>() else {
+            continue;
+        };
+        let iters = line
+            .find("\"iters\": ")
+            .and_then(|ipos| {
+                let irest = &line[ipos + 9..];
+                let iend = irest
+                    .find(|c| c == ',' || c == '}')
+                    .unwrap_or(irest.len());
+                irest[..iend].trim().parse::<usize>().ok()
+            })
+            .unwrap_or(0);
+        out.push(BenchRow {
+            name,
+            ns_per_iter: v,
+            iters,
+        });
     }
     out
+}
+
+/// Parse an `era-bench-v1` record back into `(name, ns_per_iter)` pairs
+/// (see [`parse_json_rows`] for the iters-aware variant).
+pub fn parse_json(text: &str) -> Vec<(String, f64)> {
+    parse_json_rows(text)
+        .into_iter()
+        .map(|r| (r.name, r.ns_per_iter))
+        .collect()
 }
 
 /// One baseline-vs-current comparison row (matched by bench name).
@@ -291,6 +335,41 @@ mod tests {
         assert_eq!(deltas.len(), 1, "unmatched entries are skipped");
         assert_eq!(deltas[0].name, "replan_epoch (250 users, 50% active)");
         assert!((deltas[0].pct() - 30.0).abs() < 0.5, "{}", deltas[0].pct());
+    }
+
+    #[test]
+    fn rows_expose_iters_and_flag_provisional_baselines() {
+        let rs = vec![
+            BenchResult {
+                name: "measured".into(),
+                iters: 12,
+                mean_s: 1e-3,
+                p50_s: 1e-3,
+                p99_s: 1.1e-3,
+                min_s: 0.9e-3,
+            },
+            BenchResult {
+                name: "provisional".into(),
+                iters: 0,
+                mean_s: 2e-3,
+                p50_s: 2e-3,
+                p99_s: 2e-3,
+                min_s: 2e-3,
+            },
+        ];
+        let rows = parse_json_rows(&to_json("hotpath", &rs));
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].iters, 12);
+        assert!(!rows[0].is_provisional());
+        assert!(rows[1].is_provisional());
+        // a row with no iters field at all reads as provisional
+        let legacy = parse_json_rows("{\"name\": \"old\", \"ns_per_iter\": 5.0}");
+        assert_eq!(legacy.len(), 1);
+        assert!(legacy[0].is_provisional());
+        // the tuple view stays in sync with the row view
+        let pairs = parse_json(&to_json("hotpath", &rs));
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].0, "measured");
     }
 
     #[test]

@@ -33,12 +33,39 @@ pub fn medium() -> Config {
     c
 }
 
+/// Metropolitan scale-out scenario for the sharded planner and the `era
+/// scale` driver (DESIGN.md §2g): 100 APs over a wide area, a 100k-user
+/// population of which only a sliver is active at any instant, and sparse
+/// churn so steady-state epochs touch few shards. The population is a
+/// *universe* — `era scale --users 1000000` stretches it to a million; the
+/// resident footprint must not follow (the arena materializes per-user
+/// state lazily).
+pub fn metro() -> Config {
+    let mut c = Config::default();
+    c.network.num_aps = 100;
+    c.network.num_users = 100_000;
+    c.network.num_subchannels = 50;
+    c.network.bandwidth_hz = 40e6;
+    c.network.cell_radius_m = 2_000.0;
+    c.churn.initial_active_frac = 0.002;
+    c.churn.arrival_rate_hz = 40.0;
+    c.churn.departure_rate_hz = 0.2;
+    c.churn.handoff_hz = 0.05;
+    c.churn.rate_change_hz = 0.0;
+    c.workload.arrival_rate_hz = 2.0;
+    c.workload.episode_s = 2.0;
+    // Cohort identity must survive churn for the shard caches to pay off.
+    c.optimizer.stable_cohorts = true;
+    c
+}
+
 /// Look up a preset by name.
 pub fn by_name(name: &str) -> Option<Config> {
     match name {
         "paper" | "paper_full" | "full" => Some(paper_full()),
         "smoke" | "small" => Some(smoke()),
         "medium" | "bench" => Some(medium()),
+        "metro" | "scale" => Some(metro()),
         _ => None,
     }
 }
@@ -47,9 +74,20 @@ pub fn by_name(name: &str) -> Option<Config> {
 mod tests {
     #[test]
     fn presets_validate() {
-        for name in ["paper", "smoke", "medium"] {
+        for name in ["paper", "smoke", "medium", "metro"] {
             super::by_name(name).unwrap().validate().unwrap();
         }
         assert!(super::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn metro_is_population_scale() {
+        let c = super::metro();
+        assert!(c.network.num_aps >= 100);
+        assert!(c.network.num_users >= 100_000);
+        // the active sliver must be small or the O(active) memory story
+        // degenerates into O(population)
+        assert!(c.churn.initial_active_frac <= 0.01);
+        assert!(c.optimizer.stable_cohorts);
     }
 }

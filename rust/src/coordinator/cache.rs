@@ -35,6 +35,33 @@ use crate::net::{Network, RateCache};
 use crate::optimizer::CohortSolution;
 use std::collections::HashMap;
 
+/// Cross-shard interference injected into a planning pass (DESIGN.md §2g).
+///
+/// The sharded planner gives every AP a compact single-cell network that
+/// contains no other cell, so the inter-cell terms `prepare_cohort` would
+/// normally read off the dense cross-gain tensors arrive here instead:
+/// per-channel power sums committed by the *other* shards last epoch,
+/// attenuated by the AP-pair path-loss matrix. `up[ch]` pre-loads the
+/// uplink background accumulator of every local AP; `down[ch]` adds a
+/// position-independent downlink co-channel floor for every local user.
+/// Both default empty — an empty exchange plans byte-identically to the
+/// un-sharded path.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExtBackground {
+    /// Remote uplink background power (W) received per channel.
+    pub up: Vec<f64>,
+    /// Remote downlink co-channel power (W) per channel, applied uniformly
+    /// to every local user (far-field approximation: at inter-site
+    /// distances the AP-pair attenuation dominates per-user geometry).
+    pub down: Vec<f64>,
+}
+
+impl ExtBackground {
+    pub fn is_empty(&self) -> bool {
+        self.up.is_empty() && self.down.is_empty()
+    }
+}
+
 /// Cache key: 64-bit FNV over either `(ap, formation slot)` (positional,
 /// `stable_cohorts` off) or `(ap, sorted member ids)` (member-set,
 /// `stable_cohorts` on). A key collision can at worst cause a spurious
@@ -96,6 +123,11 @@ pub struct PlanCache {
     /// fingerprint hash in clean/dirty classification. `run_dynamic` sets
     /// this: its churn schedule only flips activity and AP association.
     pub trust_static: bool,
+    /// Cross-shard interference injected by the sharded planner (empty for
+    /// the monolithic path — see [`ExtBackground`]). Participates in the
+    /// §2e background fingerprints, so a drift in remote power dirties
+    /// exactly the cohorts whose quantized background moved.
+    pub ext: ExtBackground,
 }
 
 impl PlanCache {
@@ -109,6 +141,7 @@ impl PlanCache {
             seed_of: HashMap::new(),
             rates: None,
             trust_static: false,
+            ext: ExtBackground::default(),
         }
     }
 

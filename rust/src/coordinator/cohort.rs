@@ -184,6 +184,12 @@ impl SlotTable {
     fn sync(&mut self, cfg: &Config, net: &Network, active: Option<&[bool]>) {
         let n_aps = cfg.network.num_aps;
         let nu = net.num_users();
+        if self.slot_of.len() < nu && self.slots.len() == n_aps {
+            // Population grew in place (shard-local nets append members as
+            // users arrive): extend without disturbing existing slots —
+            // cohort identity must survive admissions.
+            self.slot_of.resize(nu, None);
+        }
         if self.slots.len() != n_aps || self.slot_of.len() != nu {
             // population shape changed (new episode / new network): reset
             self.slots = vec![Vec::new(); n_aps];

@@ -23,6 +23,7 @@
 pub mod cache;
 pub mod cohort;
 pub mod server;
+pub mod shard;
 
 use crate::baselines::{ChannelModel, Decision, PlanInfo, Strategy};
 use crate::config::Config;
@@ -30,7 +31,8 @@ use crate::models::ModelProfile;
 use crate::net::{LinkRates, Network, RateCache};
 use crate::optimizer::{solve_ligd_seeded, CohortProblem, CohortSolution, EpochSeed, GdOptions};
 use cache::{cohort_fingerprint, member_set_key, positional_key, CacheEntry, CohortKey, Fnv};
-pub use cache::PlanCache;
+pub use cache::{ExtBackground, PlanCache};
+pub use shard::{ShardEpoch, ShardSource, ShardedPlanner};
 use cohort::{form_cohorts_masked, form_cohorts_stable, ChannelLoad, Cohort, SlotTable};
 
 /// Planner statistics (Corollary 2/4 instrumentation).
@@ -118,6 +120,11 @@ struct PlanState {
     bg_up_acc: Vec<Vec<f64>>,
     /// Downlink transmitted power per (AP, channel).
     ap_ch_power: Vec<Vec<f64>>,
+    /// Remote downlink co-channel floor per channel, injected by the
+    /// sharded planner ([`cache::ExtBackground`]); empty on the monolithic
+    /// path. Uplink ext power needs no twin field — it is pre-folded into
+    /// `bg_up_acc` at state creation.
+    ext_down: Vec<f64>,
     stats: PlanStats,
 }
 
@@ -151,6 +158,9 @@ fn prepare_cohort(
                 if x != c.ap {
                     s += st.ap_ch_power[x][ch] * net.channels.down[u][x][ch];
                 }
+            }
+            if let Some(&e) = st.ext_down.get(ch) {
+                s += e;
             }
             bg_down.push(s);
         }
@@ -352,8 +362,32 @@ fn new_plan_state(cfg: &Config, net: &Network, model: &ModelProfile) -> PlanStat
         load: ChannelLoad::new(n_aps, m, cfg.network.max_users_per_subchannel),
         bg_up_acc: vec![vec![0.0f64; m]; n_aps],
         ap_ch_power: vec![vec![0.0f64; m]; n_aps],
+        ext_down: Vec::new(),
         stats: PlanStats::default(),
     }
+}
+
+/// [`new_plan_state`] with the cache's cross-shard background pre-folded:
+/// remote uplink power seeds every AP's `bg_up_acc` and the remote downlink
+/// floor rides along for [`prepare_cohort`] / [`cohort_bg_fp`]. An empty
+/// `ext` yields a byte-identical state to [`new_plan_state`].
+fn new_plan_state_ext(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    ext: &cache::ExtBackground,
+) -> PlanState {
+    let mut st = new_plan_state(cfg, net, model);
+    let m = cfg.network.num_subchannels;
+    for (ch, &p) in ext.up.iter().enumerate().take(m) {
+        for acc in st.bg_up_acc.iter_mut() {
+            acc[ch] += p;
+        }
+    }
+    if !ext.down.is_empty() {
+        st.ext_down = ext.down.clone();
+    }
+    st
 }
 
 /// One cohort captured by a full (re)planning pass, for cache population:
@@ -394,6 +428,9 @@ fn cohort_bg_fp(
                 if x != ap {
                     s += st.ap_ch_power[x][ch] * net.channels.down[u][x][ch];
                 }
+            }
+            if let Some(&e) = st.ext_down.get(ch) {
+                s += e;
             }
             h.u64(cache::bg_quantize(s, tol) as u64);
         }
@@ -654,7 +691,7 @@ pub fn plan_era_cached(
         let (ds, stats, captured) = if stable {
             // The forced re-scan must keep the slot table in sync too —
             // cohort identity survives full re-solves.
-            let st = new_plan_state(cfg, net, model);
+            let st = new_plan_state_ext(cfg, net, model, &cache.ext);
             let (groups, cohorts) =
                 form_stable_unzipped(cfg, net, &st.load, active, &mut cache.slots);
             plan_cohorts(
@@ -669,11 +706,16 @@ pub fn plan_era_cached(
                 Some(&mut cache.rates),
             )
         } else {
-            plan_epoch_full(
+            let st = new_plan_state_ext(cfg, net, model, &cache.ext);
+            let cohorts = form_cohorts_masked(cfg, net, &st.load, Some(active));
+            let groups = formation_slots(cfg, &cohorts);
+            plan_cohorts(
                 cfg,
                 net,
                 model,
-                Some(active),
+                st,
+                cohorts,
+                &groups,
                 popts,
                 true,
                 Some(&mut cache.rates),
@@ -711,7 +753,7 @@ pub fn plan_era_cached(
         return (ds, stats);
     }
 
-    let mut st = new_plan_state(cfg, net, model);
+    let mut st = new_plan_state_ext(cfg, net, model, &cache.ext);
     let gd_opts = GdOptions::from_config(&cfg.optimizer);
 
     // Form this epoch's cohorts and classify each against the cache. The

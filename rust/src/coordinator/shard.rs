@@ -1,0 +1,731 @@
+//! Sharded per-AP planner (DESIGN.md §2g).
+//!
+//! One [`Shard`] per access point owns everything that AP needs to plan:
+//! a compact single-cell [`Network`] holding only its (ever-admitted)
+//! members' gain rows at that one AP, a [`PlanCache`] with slot table and
+//! §2f rate cache, the activity mask, and the committed per-channel power
+//! it exports to the rest of the system. Epochs plan **shard-parallel** on
+//! the persistent worker pool; cross-cell coupling flows through a cheap
+//! background-exchange step — each shard publishes its committed uplink /
+//! downlink power per channel, and receives the other shards' power
+//! attenuated by the AP-pair path-loss matrix as an
+//! [`ExtBackground`](super::cache::ExtBackground) injected into its next
+//! plan. The exchange signature is quantized with the same §2e relative
+//! buckets as the background fingerprint, so sub-tolerance drift in a
+//! neighbor's plan does not dirty a clean shard.
+//!
+//! Scaling properties:
+//!
+//! - **O(dirty shards) epochs.** A churn-quiet shard whose quantized
+//!   exchange signature is unchanged is skipped entirely — its previous
+//!   decisions stand. One handoff dirties exactly the source and
+//!   destination shards (pinned by a test below).
+//! - **O(active users) memory.** Driven from a
+//!   [`UserArena`](crate::net::UserArena), a shard materializes a member's
+//!   position/profile/gain row only on admission; the population at large
+//!   costs one `usize` each (the association vector).
+//! - **Deterministic in the thread count.** All shard inputs (events,
+//!   exchange) are fixed before the parallel plan step; each shard plans
+//!   sequentially within itself and results are committed per shard, so
+//!   1 thread and N threads produce byte-identical decisions (pinned by a
+//!   test below).
+//!
+//! Approximations versus the monolithic planner, by design: the exchange
+//! is **lagged** one epoch (shards see neighbors' *previous* committed
+//! power — the standard fixed-point iteration of distributed interference
+//! coordination), uses the **far-field** AP-pair attenuation instead of
+//! per-user cross gains, and the §2f realized-rate/regret pass runs
+//! intra-shard (remote power is a planning constant, not a rate term).
+//! Sharded plans are therefore *not* byte-identical to `plan_era_cached`
+//! on the full network — they are an equally feasible plan of the same
+//! structure whose per-shard cost no longer depends on the system size.
+//!
+//! Local slots are **never recycled**: a departed member keeps its slot
+//! (and its gain row) and reclaims it verbatim on return. Member-set cache
+//! keys under `trust_static` must never collide across physical users, and
+//! a returning user replaying its old slot keeps its cohort identity.
+//! Resident memory is thus O(ever-admitted members per shard) — bounded by
+//! O(active) for the churn processes used here, where returns reuse rows.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::cache::{bg_quantize, ExtBackground};
+use super::{plan_era_cached, PlanCache, PlanOptions, PlanStats};
+use crate::baselines::Decision;
+use crate::config::Config;
+use crate::models::ModelProfile;
+use crate::net::{ap_attenuation_of, ChannelState, Network, Pos, Topology, UserArena, UserProfile};
+use crate::trace::{ChurnEvent, ChurnEventKind};
+use crate::util::pool;
+
+/// Where shards materialize members from: a dense pre-generated
+/// [`Network`] (test scale — the same universe the monolithic planner
+/// sees) or a lazy [`UserArena`] (million-user scale — records exist only
+/// while admitted).
+pub enum ShardSource<'a> {
+    Net(&'a Network),
+    Arena(&'a UserArena),
+}
+
+impl<'a> ShardSource<'a> {
+    pub fn num_users(&self) -> usize {
+        match self {
+            ShardSource::Net(n) => n.num_users(),
+            ShardSource::Arena(a) => a.num_users(),
+        }
+    }
+
+    /// Home association of the whole population (the planner's one
+    /// O(population) structure).
+    pub fn user_aps(&self) -> Vec<usize> {
+        match self {
+            ShardSource::Net(n) => n.topo.user_ap.clone(),
+            ShardSource::Arena(a) => a.user_aps(),
+        }
+    }
+
+    fn num_aps(&self) -> usize {
+        match self {
+            ShardSource::Net(n) => n.topo.num_aps(),
+            ShardSource::Arena(a) => a.num_aps(),
+        }
+    }
+
+    fn ap_positions(&self) -> Vec<Pos> {
+        match self {
+            ShardSource::Net(n) => n.topo.ap_pos.clone(),
+            ShardSource::Arena(a) => a.ap_pos.clone(),
+        }
+    }
+
+    fn attenuation(&self, alpha: f64) -> Vec<Vec<f64>> {
+        match self {
+            ShardSource::Net(n) => ap_attenuation_of(&n.topo, alpha),
+            ShardSource::Arena(a) => a.ap_attenuation(),
+        }
+    }
+
+    /// Materialize `user`'s shard-local data at `ap`:
+    /// `(pos, profile, up_gains, down_gains)`.
+    fn member(&self, user: usize, ap: usize) -> (Pos, UserProfile, Vec<f64>, Vec<f64>) {
+        match self {
+            ShardSource::Net(n) => (
+                n.topo.user_pos[user],
+                n.users[user].clone(),
+                n.channels.up[user][ap].clone(),
+                n.channels.down[user][ap].clone(),
+            ),
+            ShardSource::Arena(a) => {
+                let rec = a.user(user);
+                let (up, down) = a.link_to(user, &rec.pos, ap);
+                (rec.pos, rec.profile, up, down)
+            }
+        }
+    }
+}
+
+/// One AP's planning island.
+struct Shard {
+    /// Physical AP index this shard owns.
+    ap: usize,
+    /// Single-cell config: `num_aps = 1`, `num_users` tracks the local
+    /// slot count, `stable_cohorts` forced on (member-set identity is what
+    /// makes churn inside the shard O(touched cohorts)).
+    cfg: Config,
+    /// Append-only single-AP network of ever-admitted members.
+    net: Network,
+    cache: PlanCache,
+    /// Activity per local slot.
+    active: Vec<bool>,
+    /// Local slot → global user id.
+    global_of: Vec<usize>,
+    /// Global user id → local slot. Slots are never recycled (see module
+    /// docs).
+    slot_of: HashMap<usize, usize>,
+    /// Last plan's decisions, indexed by local slot.
+    decisions: Vec<Decision>,
+    stats: PlanStats,
+    /// Published committed uplink tx power per channel (Σ p_up of members
+    /// assigned that up-channel) from the last plan.
+    up_out: Vec<f64>,
+    /// Published committed downlink tx power per channel.
+    down_out: Vec<f64>,
+    /// Quantized signature of the last *applied* [`ExtBackground`];
+    /// initialized to the signature of all-zero ext so the first exchange
+    /// of a quiet system dirties nothing.
+    ext_sig: Vec<i64>,
+    dirty: bool,
+}
+
+impl Shard {
+    fn new(global_cfg: &Config, ap: usize, ap_pos: Pos, full_rescan_every: usize) -> Self {
+        let m = global_cfg.network.num_subchannels;
+        let mut cfg = global_cfg.clone();
+        cfg.network.num_aps = 1;
+        cfg.network.num_users = 0;
+        cfg.optimizer.stable_cohorts = true;
+        let net = Network {
+            topo: Topology {
+                ap_pos: vec![ap_pos],
+                user_pos: Vec::new(),
+                user_ap: Vec::new(),
+                dist: Vec::new(),
+            },
+            channels: ChannelState {
+                up: Vec::new(),
+                down: Vec::new(),
+                num_subchannels: m,
+            },
+            users: Vec::new(),
+            subchannel_bw_hz: global_cfg.subchannel_bw_hz(),
+            noise_w: global_cfg.noise_power_w(),
+        };
+        let mut cache = PlanCache::new(full_rescan_every, cfg.optimizer.replan_layer_window);
+        cache.trust_static = true;
+        Self {
+            ap,
+            cfg,
+            net,
+            cache,
+            active: Vec::new(),
+            global_of: Vec::new(),
+            slot_of: HashMap::new(),
+            decisions: Vec::new(),
+            stats: PlanStats::default(),
+            up_out: vec![0.0; m],
+            down_out: vec![0.0; m],
+            ext_sig: vec![i64::MIN; 2 * m],
+            dirty: false,
+        }
+    }
+
+    /// Activate `user`, admitting (materializing) it on first contact.
+    fn activate(&mut self, user: usize, source: &ShardSource, model: &ModelProfile) {
+        if let Some(&s) = self.slot_of.get(&user) {
+            if !self.active[s] {
+                self.active[s] = true;
+                self.dirty = true;
+            }
+            return;
+        }
+        let (pos, profile, up, down) = source.member(user, self.ap);
+        let d = pos.dist(&self.net.topo.ap_pos[0]).max(self.cfg.network.min_distance_m);
+        let s = self.net.topo.user_pos.len();
+        self.net.topo.user_pos.push(pos);
+        self.net.topo.user_ap.push(0);
+        self.net.topo.dist.push(vec![d]);
+        self.net.channels.up.push(vec![up]);
+        self.net.channels.down.push(vec![down]);
+        self.net.users.push(profile);
+        self.cfg.network.num_users = s + 1;
+        self.active.push(true);
+        self.global_of.push(user);
+        self.slot_of.insert(user, s);
+        self.decisions.push(Decision::device_only(model));
+        self.dirty = true;
+    }
+
+    fn deactivate(&mut self, user: usize) {
+        if let Some(&s) = self.slot_of.get(&user) {
+            if self.active[s] {
+                self.active[s] = false;
+                self.dirty = true;
+            }
+        }
+    }
+
+    fn any_active(&self) -> bool {
+        self.active.iter().any(|&a| a)
+    }
+
+    /// Plan this shard (sequential within the shard; shards are the
+    /// parallel unit) and republish its committed power.
+    fn plan(&mut self, model: &ModelProfile, warm_start: bool) {
+        let m = self.cfg.network.num_subchannels;
+        if !self.any_active() {
+            // Trivial island: no members to plan, nothing exported. Skip
+            // `plan_era_cached` entirely — an empty cache would force a
+            // (vacuous) full re-scan every epoch.
+            for d in &mut self.decisions {
+                *d = Decision::device_only(model);
+            }
+            self.stats = PlanStats::default();
+            self.up_out = vec![0.0; m];
+            self.down_out = vec![0.0; m];
+            self.dirty = false;
+            return;
+        }
+        let popts = PlanOptions {
+            warm_start,
+            threads: 1,
+        };
+        let (ds, stats) = plan_era_cached(
+            &self.cfg,
+            &self.net,
+            model,
+            &self.active,
+            &popts,
+            &mut self.cache,
+        );
+        let mut up_out = vec![0.0; m];
+        let mut down_out = vec![0.0; m];
+        for (s, d) in ds.iter().enumerate() {
+            if !self.active[s] {
+                continue;
+            }
+            if let Some(ch) = d.up_ch {
+                up_out[ch] += d.p_up;
+            }
+            if let Some(ch) = d.down_ch {
+                down_out[ch] += d.p_down;
+            }
+        }
+        self.decisions = ds;
+        self.stats = stats;
+        self.up_out = up_out;
+        self.down_out = down_out;
+        self.dirty = false;
+    }
+}
+
+/// Per-epoch planning report.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardEpoch {
+    /// Shards re-planned this epoch (churn-dirty or exchange-dirty).
+    pub planned: usize,
+    /// Shards skipped clean (previous decisions stand).
+    pub skipped: usize,
+    /// Shards dirtied by the background exchange alone this epoch
+    /// (counted inside `planned`).
+    pub exchange_dirtied: usize,
+    /// Cohort solves across all planned shards.
+    pub cohorts_resolved: usize,
+    /// Cohorts replayed from shard caches.
+    pub cohorts_reused: usize,
+}
+
+/// The sharded coordinator: routes churn events to shards, runs the
+/// quantized background exchange, and plans dirty shards in parallel.
+pub struct ShardedPlanner {
+    shards: Vec<Mutex<Shard>>,
+    /// Current AP association per global user (updated by handoffs).
+    user_ap: Vec<usize>,
+    /// AP-pair far-field attenuation, `xg[src][dst]`, diagonal 0.
+    xg: Vec<Vec<f64>>,
+    model: ModelProfile,
+    warm_start: bool,
+    /// Exchange quantization tolerance (the §2e bucket width); falls back
+    /// to a fine default when `bg_tolerance` is disabled so the signature
+    /// never divides by `ln(1) = 0`.
+    tol: f64,
+    m: usize,
+}
+
+impl ShardedPlanner {
+    pub fn new(
+        cfg: &Config,
+        source: &ShardSource,
+        model: &ModelProfile,
+        full_rescan_every: usize,
+        warm_start: bool,
+    ) -> Self {
+        let ap_pos = source.ap_positions();
+        let shards = (0..source.num_aps())
+            .map(|ap| Mutex::new(Shard::new(cfg, ap, ap_pos[ap], full_rescan_every)))
+            .collect();
+        Self {
+            shards,
+            user_ap: source.user_aps(),
+            xg: source.attenuation(cfg.network.path_loss_exp),
+            model: model.clone(),
+            warm_start,
+            tol: if cfg.optimizer.bg_tolerance > 0.0 {
+                cfg.optimizer.bg_tolerance
+            } else {
+                1e-6
+            },
+            m: cfg.network.num_subchannels,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Activate `user` in its current shard (initial population, or an
+    /// `Arrive` churn event).
+    pub fn activate(&mut self, source: &ShardSource, user: usize) {
+        let ap = self.user_ap[user];
+        self.shards[ap]
+            .get_mut()
+            .unwrap()
+            .activate(user, source, &self.model);
+    }
+
+    /// Route one churn event. `RateChange` is workload-only — the planner
+    /// ignores it. A handoff deactivates the user in its source shard and
+    /// activates it in the destination: exactly two shards go dirty.
+    pub fn apply_event(&mut self, source: &ShardSource, ev: &ChurnEvent) {
+        match ev.kind {
+            ChurnEventKind::Arrive => self.activate(source, ev.user),
+            ChurnEventKind::Depart => {
+                let ap = self.user_ap[ev.user];
+                self.shards[ap].get_mut().unwrap().deactivate(ev.user);
+            }
+            ChurnEventKind::RateChange { .. } => {}
+            ChurnEventKind::Handoff { ap } => {
+                let from = self.user_ap[ev.user];
+                if ap == from {
+                    return;
+                }
+                self.shards[from].get_mut().unwrap().deactivate(ev.user);
+                self.user_ap[ev.user] = ap;
+                self.shards[ap]
+                    .get_mut()
+                    .unwrap()
+                    .activate(ev.user, source, &self.model);
+            }
+        }
+    }
+
+    pub fn apply_events(&mut self, source: &ShardSource, events: &[ChurnEvent]) {
+        for ev in events {
+            self.apply_event(source, ev);
+        }
+    }
+
+    /// Run one planning epoch: exchange last epoch's committed background,
+    /// then plan every dirty shard in parallel (`threads ≤ 1` = inline).
+    /// Clean shards keep their previous decisions verbatim.
+    pub fn plan_epoch(&mut self, threads: usize) -> ShardEpoch {
+        let n = self.shards.len();
+        // 1. Gather last epoch's published power (cheap: O(APs × channels)).
+        let outs: Vec<(Vec<f64>, Vec<f64>)> = self
+            .shards
+            .iter_mut()
+            .map(|s| {
+                let s = s.get_mut().unwrap();
+                (s.up_out.clone(), s.down_out.clone())
+            })
+            .collect();
+        // 2. Exchange: receiver `a` sees every other shard's power through
+        //    the AP-pair attenuation. Apply only when the quantized
+        //    signature moved — sub-tolerance neighbor drift keeps a clean
+        //    shard clean (same bucket scheme as the §2e fingerprint).
+        let mut exchange_dirtied = 0usize;
+        for a in 0..n {
+            let mut ext = ExtBackground {
+                up: vec![0.0; self.m],
+                down: vec![0.0; self.m],
+            };
+            for (s, (up, down)) in outs.iter().enumerate() {
+                if s == a {
+                    continue;
+                }
+                let g = self.xg[s][a];
+                for ch in 0..self.m {
+                    ext.up[ch] += up[ch] * g;
+                    ext.down[ch] += down[ch] * g;
+                }
+            }
+            let sig: Vec<i64> = ext
+                .up
+                .iter()
+                .chain(ext.down.iter())
+                .map(|&v| bg_quantize(v, self.tol))
+                .collect();
+            let shard = self.shards[a].get_mut().unwrap();
+            if sig != shard.ext_sig {
+                shard.cache.ext = ext;
+                shard.ext_sig = sig;
+                if !shard.dirty {
+                    exchange_dirtied += 1;
+                }
+                shard.dirty = true;
+            }
+        }
+        // 3. Plan dirty shards in parallel. Inputs are fully fixed before
+        //    this step and each shard is an independent island, so the
+        //    result is identical for every thread count.
+        let dirty: Vec<usize> = (0..n)
+            .filter(|&a| self.shards[a].get_mut().unwrap().dirty)
+            .collect();
+        let model = &self.model;
+        let warm = self.warm_start;
+        let shards = &self.shards;
+        pool::map_indexed(dirty.len(), threads, |k| {
+            let mut s = shards[dirty[k]].lock().unwrap();
+            s.plan(model, warm);
+        });
+        let mut report = ShardEpoch {
+            planned: dirty.len(),
+            skipped: n - dirty.len(),
+            exchange_dirtied,
+            ..ShardEpoch::default()
+        };
+        for &a in &dirty {
+            let s = self.shards[a].get_mut().unwrap();
+            report.cohorts_resolved += s.stats.cohorts_resolved;
+            report.cohorts_reused += s.stats.cohorts_reused;
+        }
+        report
+    }
+
+    /// Current AP association of a global user.
+    pub fn ap_of(&self, user: usize) -> usize {
+        self.user_ap[user]
+    }
+
+    /// The current decision for a global user (device-only when inactive
+    /// or never admitted).
+    pub fn decision_of(&self, user: usize) -> Decision {
+        let shard = self.shards[self.user_ap[user]].lock().unwrap();
+        match shard.slot_of.get(&user) {
+            Some(&s) if shard.active[s] => shard.decisions[s],
+            _ => Decision::device_only(&self.model),
+        }
+    }
+
+    /// Realized `(up, down)` NOMA rates for a global user from its shard's
+    /// §2f rate cache (None before the first plan, when inactive, or when
+    /// the shard has no offloaders).
+    pub fn rates_of(&self, user: usize) -> Option<(f64, f64)> {
+        let shard = self.shards[self.user_ap[user]].lock().unwrap();
+        let &s = shard.slot_of.get(&user)?;
+        if !shard.active[s] {
+            return None;
+        }
+        shard.cache.rates.as_ref().map(|rc| {
+            let r = rc.rates();
+            (r.up[s], r.down[s])
+        })
+    }
+
+    /// Currently-active user count across all shards.
+    pub fn active_users(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                s.active.iter().filter(|&&a| a).count()
+            })
+            .sum()
+    }
+
+    /// Ever-admitted member count (resident rows) across all shards — the
+    /// memory-relevant population.
+    pub fn resident_users(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().global_of.len()).sum()
+    }
+
+    /// `(global user, decision)` for every *active* user, sorted by user —
+    /// the byte-identity view the determinism tests compare.
+    pub fn decisions_snapshot(&self) -> Vec<(usize, Decision)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            for (slot, &g) in s.global_of.iter().enumerate() {
+                if s.active[slot] {
+                    out.push((g, s.decisions[slot]));
+                }
+            }
+        }
+        out.sort_by_key(|&(g, _)| g);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::models;
+    use crate::trace::ChurnSchedule;
+
+    fn planner_for(
+        cfg: &Config,
+        source: &ShardSource,
+        model: &ModelProfile,
+        active: &[bool],
+    ) -> ShardedPlanner {
+        let mut p = ShardedPlanner::new(cfg, source, model, 0, true);
+        for (u, &a) in active.iter().enumerate() {
+            if a {
+                p.activate(source, u);
+            }
+        }
+        p
+    }
+
+    fn churny_cfg() -> Config {
+        let mut cfg = presets::smoke();
+        cfg.churn.initial_active_frac = 0.7;
+        cfg.churn.arrival_rate_hz = 3.0;
+        cfg.churn.departure_rate_hz = 0.15;
+        cfg.churn.handoff_hz = 0.1;
+        cfg
+    }
+
+    /// Tentpole determinism pin: shard-parallel planning is byte-identical
+    /// for 1 vs N threads across several churn epochs.
+    #[test]
+    fn shard_plans_are_thread_count_invariant() {
+        let cfg = churny_cfg();
+        let net = Network::generate(&cfg, 11);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, 0xBEEF);
+
+        let mut snaps: Vec<Vec<Vec<(usize, Decision)>>> = Vec::new();
+        for &threads in &[1usize, 2, 8] {
+            let mut p = planner_for(&cfg, &source, &model, &sched.initial_active);
+            let mut per_epoch = Vec::new();
+            let horizon = [0.25f64, 0.5, 0.75, 1.0];
+            let mut cursor = 0usize;
+            for &t1 in &horizon {
+                while cursor < sched.events.len() && sched.events[cursor].t_s <= t1 {
+                    let ev = sched.events[cursor];
+                    p.apply_event(&source, &ev);
+                    cursor += 1;
+                }
+                p.plan_epoch(threads);
+                per_epoch.push(p.decisions_snapshot());
+            }
+            snaps.push(per_epoch);
+        }
+        assert_eq!(snaps[0], snaps[1], "1 vs 2 threads diverged");
+        assert_eq!(snaps[0], snaps[2], "1 vs 8 threads diverged");
+        // sanity: the run actually planned something
+        assert!(snaps[0].iter().any(|s| !s.is_empty()));
+    }
+
+    /// Tentpole locality pin: with the exchange quiet (huge tolerance) and
+    /// periodic re-scans off, one handoff dirties exactly the source and
+    /// destination shards.
+    #[test]
+    fn handoff_dirties_exactly_two_shards() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_aps = 4;
+        cfg.network.num_users = 48;
+        cfg.optimizer.bg_tolerance = 1e9; // exchange never re-dirties
+        let net = Network::generate(&cfg, 5);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let all_active = vec![true; cfg.network.num_users];
+        let mut p = planner_for(&cfg, &source, &model, &all_active);
+
+        let first = p.plan_epoch(2);
+        // every populated cell plans on the first epoch (a cell the
+        // placement left empty has nothing to plan)
+        assert!(first.planned >= 2, "first epoch plans populated shards");
+        let quiet = p.plan_epoch(2);
+        assert_eq!(quiet.planned, 0, "no churn, no exchange drift ⇒ all clean");
+        assert_eq!(quiet.skipped, cfg.network.num_aps);
+
+        let user = 0usize;
+        let from = p.user_ap[user];
+        let to = (from + 1) % cfg.network.num_aps;
+        p.apply_event(
+            &source,
+            &ChurnEvent {
+                t_s: 0.1,
+                user,
+                kind: ChurnEventKind::Handoff { ap: to },
+            },
+        );
+        let after = p.plan_epoch(2);
+        assert_eq!(after.planned, 2, "handoff dirties exactly src + dst");
+        assert_eq!(p.user_ap[user], to);
+        // the moved user keeps a decision in its new shard
+        let _ = p.decision_of(user);
+    }
+
+    /// Departed users fall back to device-only decisions and return to
+    /// their original slot (cache identity survives a depart/arrive cycle).
+    #[test]
+    fn depart_and_return_reuses_the_slot() {
+        let mut cfg = presets::smoke();
+        cfg.optimizer.bg_tolerance = 1e9;
+        let net = Network::generate(&cfg, 7);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let all_active = vec![true; cfg.network.num_users];
+        let mut p = planner_for(&cfg, &source, &model, &all_active);
+        p.plan_epoch(1);
+        let before = p.resident_users();
+
+        let user = 3usize;
+        p.apply_event(
+            &source,
+            &ChurnEvent {
+                t_s: 0.1,
+                user,
+                kind: ChurnEventKind::Depart,
+            },
+        );
+        p.plan_epoch(1);
+        let d = p.decision_of(user);
+        assert_eq!(d, Decision::device_only(&model), "inactive ⇒ device-only");
+        p.apply_event(
+            &source,
+            &ChurnEvent {
+                t_s: 0.2,
+                user,
+                kind: ChurnEventKind::Arrive,
+            },
+        );
+        p.plan_epoch(1);
+        assert_eq!(p.resident_users(), before, "return reuses the slot");
+        assert!(p.active_users() == cfg.network.num_users);
+    }
+
+    /// An arena-driven planner works end-to-end and only materializes the
+    /// users it has admitted.
+    #[test]
+    fn arena_source_is_o_active_resident() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 10_000; // population; only a few admitted
+        let arena = UserArena::new(&cfg, 31);
+        let source = ShardSource::Arena(&arena);
+        let model = models::zoo::by_name("nin").unwrap();
+        let mut p = ShardedPlanner::new(&cfg, &source, &model, 0, true);
+        for u in 0..40 {
+            p.activate(&source, u);
+        }
+        let ep = p.plan_epoch(2);
+        assert_eq!(ep.planned + ep.skipped, cfg.network.num_aps);
+        assert_eq!(p.resident_users(), 40, "resident = admitted, not population");
+        assert_eq!(p.active_users(), 40);
+        let offloaders = (0..40)
+            .filter(|&u| p.decision_of(u).up_ch.is_some())
+            .count();
+        // with smoke-scale capacity most of a 40-user cohort offloads
+        assert!(offloaders > 0, "arena shard planning produced no offloads");
+    }
+
+    /// Neighbor power drift past the tolerance re-dirties via the exchange;
+    /// drift below it does not (quantized signature).
+    #[test]
+    fn exchange_signature_respects_tolerance() {
+        let mut cfg = presets::smoke();
+        cfg.optimizer.bg_tolerance = 0.25;
+        let net = Network::generate(&cfg, 13);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let all_active = vec![true; cfg.network.num_users];
+        let mut p = planner_for(&cfg, &source, &model, &all_active);
+        p.plan_epoch(1);
+        // Steady state: planning again with no churn must converge to
+        // all-clean within a few exchange rounds (the lagged fixed point).
+        let mut planned = usize::MAX;
+        for _ in 0..6 {
+            let ep = p.plan_epoch(1);
+            planned = ep.planned;
+            if planned == 0 {
+                break;
+            }
+        }
+        assert_eq!(planned, 0, "exchange did not settle under tolerance");
+    }
+}

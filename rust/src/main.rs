@@ -6,6 +6,7 @@
 //!   era plan    [--model M] [--preset P] [--seed N] [--threads N]
 //!   era serve   [--model M] [--preset P] [--strategy S] [--workers N]
 //!   era ligd-demo                                     Li-GD vs cold GD iterations
+//!   era scale   [--preset P] [--users N] [--threads N] [--rss-ceiling-mb M]
 //!   era bench-diff --base A.json --new B.json         diff era-bench-v1 records
 //!   era info                                          model zoo / scenario presets
 //!
@@ -48,16 +49,19 @@ fn main() {
         "plan" => cmd_plan(&flags),
         "serve" => cmd_serve(&flags),
         "ligd-demo" => cmd_ligd_demo(&flags),
+        "scale" => cmd_scale(&flags),
         "bench-diff" => cmd_bench_diff(&flags),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: era <run|figures|plan|serve|ligd-demo|bench-diff|info> [flags]\n\
+                "usage: era <run|figures|plan|serve|ligd-demo|scale|bench-diff|info> [flags]\n\
                  run        --scenario FILE|PRESET --threads N --out PATH --md\n\
                  figures    --fig N --scale S --out PATH   regenerate paper figures\n\
                  plan       --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N --threads N\n\
                  serve      --model M --preset P --strategy S --workers N --artifacts DIR --tasks K\n\
                  ligd-demo                                 Li-GD vs cold-start GD\n\
+                 scale      --preset metro --users N --aps N --channels N --replan D --threads N\n\
+                            --rss-ceiling-mb M (exit 1 over ceiling) --quiet\n\
                  bench-diff --base BENCH.json --new BENCH.json --warn-pct 25 [--gate]\n\
                  info                                      model zoo + scenario presets"
             );
@@ -374,6 +378,119 @@ fn cmd_ligd_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `era scale`: one arena-backed, shard-planned, stream-fed dynamic
+/// episode (DESIGN.md §2g) with per-epoch telemetry and a peak-RSS
+/// reading, sized by `--users/--aps/--channels` on top of any preset.
+/// `--rss-ceiling-mb M` turns the run into a memory gate: exit 1 when
+/// `VmHWM` exceeds the ceiling (the CI flat-memory smoke).
+fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let mut cfg = cfg_from_flags(flags)?;
+    if let Some(v) = flags.get("users") {
+        cfg.network.num_users = v.parse()?;
+    }
+    if let Some(v) = flags.get("aps") {
+        cfg.network.num_aps = v.parse()?;
+    }
+    if let Some(v) = flags.get("channels") {
+        cfg.network.num_subchannels = v.parse()?;
+    }
+    if let Some(v) = flags.get("episode") {
+        cfg.workload.episode_s = v.parse()?;
+    }
+    cfg.validate()?;
+    let mut opts = era::sim::scale::ScaleOptions::default();
+    if let Some(v) = flags.get("replan") {
+        opts.replan_interval_s = v.parse()?;
+    }
+    if let Some(v) = flags.get("threads") {
+        opts.threads = v.parse::<usize>()?.max(1);
+    }
+    if let Some(v) = flags.get("full-rescan-every") {
+        opts.full_rescan_every = v.parse()?;
+    }
+    // Decorrelate the two event streams from the topology seed the same way
+    // the scenario engine does for dynamic cells.
+    let churn_seed = cfg.seed ^ 0xC4E2;
+    let trace_seed = cfg.seed ^ 0xD19A;
+    eprintln!(
+        "scale: {} users / {} APs / {} subchannels, episode {} s, Δ = {} s, {} threads",
+        cfg.network.num_users,
+        cfg.network.num_aps,
+        cfg.network.num_subchannels,
+        cfg.workload.episode_s,
+        opts.replan_interval_s,
+        opts.threads
+    );
+    let t0 = std::time::Instant::now();
+    let rep = era::sim::scale::run_scale(&cfg, churn_seed, trace_seed, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    if !flags.contains_key("quiet") {
+        println!(
+            "{:>5} {:>9} {:>9} {:>7} {:>7} {:>8} {:>8} {:>10} {:>10}",
+            "epoch", "active", "resident", "events", "reqs", "planned", "skipped", "plan(ms)", "serve(ms)"
+        );
+        for e in &rep.epochs {
+            println!(
+                "{:>5} {:>9} {:>9} {:>7} {:>7} {:>8} {:>8} {:>10.2} {:>10.2}",
+                e.epoch,
+                e.active_users,
+                e.resident_users,
+                e.events,
+                e.requests,
+                e.planned_shards,
+                e.skipped_shards,
+                e.plan_wall_s * 1e3,
+                e.serve_wall_s * 1e3
+            );
+        }
+    }
+    let max_resident = rep.epochs.iter().map(|e| e.resident_users).max().unwrap_or(0);
+    let planned: usize = rep.epochs.iter().map(|e| e.planned_shards).sum();
+    let skipped: usize = rep.epochs.iter().map(|e| e.skipped_shards).sum();
+    println!(
+        "episode          : {} epochs in {:.2} s ({} shard solves, {} skipped)",
+        rep.epochs.len(),
+        wall,
+        planned,
+        skipped
+    );
+    println!(
+        "requests         : {} completed, {} dropped",
+        rep.outcome.completions.len(),
+        rep.outcome.dropped.len()
+    );
+    if !rep.outcome.completions.is_empty() {
+        let mean_s: f64 = rep
+            .outcome
+            .completions
+            .iter()
+            .map(|c| c.service_s)
+            .sum::<f64>()
+            / rep.outcome.completions.len() as f64;
+        println!("mean service     : {:.3} ms", mean_s * 1e3);
+    }
+    println!(
+        "resident peak    : {} users ({} population)",
+        max_resident, rep.population
+    );
+    match rep.peak_rss_mb {
+        Some(mb) => println!("peak RSS (VmHWM) : {mb:.1} MiB"),
+        None => println!("peak RSS (VmHWM) : unavailable (no procfs)"),
+    }
+    if let Some(ceiling) = flags.get("rss-ceiling-mb") {
+        let ceiling: f64 = ceiling.parse()?;
+        let mb = rep
+            .peak_rss_mb
+            .ok_or_else(|| anyhow::anyhow!("--rss-ceiling-mb needs procfs (Linux)"))?;
+        anyhow::ensure!(
+            mb <= ceiling,
+            "peak RSS {mb:.1} MiB exceeds ceiling {ceiling:.1} MiB — resident memory is scaling with the population"
+        );
+        println!("rss gate         : {mb:.1} MiB <= {ceiling:.1} MiB ok");
+    }
+    Ok(())
+}
+
 /// `era bench-diff --base <baseline.json> --new <current.json>`: diff two
 /// `era-bench-v1` records and warn (GitHub-annotation format, so CI
 /// surfaces it) on any matched entry regressing more than `--warn-pct`
@@ -381,18 +498,45 @@ fn cmd_ligd_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 /// shared CI runners are too noisy for a hard perf gate (EXPERIMENTS.md
 /// §Perf); `--gate` exits 1 on regression for quiet-machine use.
 fn cmd_bench_diff(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let read = |key: &str| -> anyhow::Result<Vec<(String, f64)>> {
+    let read = |key: &str| -> anyhow::Result<Vec<era::benchkit::BenchRow>> {
         let path = flags
             .get(key)
             .ok_or_else(|| anyhow::anyhow!("--{key} <BENCH.json> required"))?;
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("failed to read {path}: {e}"))?;
-        let entries = era::benchkit::parse_json(&text);
+        let entries = era::benchkit::parse_json_rows(&text);
         anyhow::ensure!(!entries.is_empty(), "no bench entries in {path}");
         Ok(entries)
     };
-    let base = read("base")?;
-    let new = read("new")?;
+    // Baseline rows with `iters = 0` are provisional hand-estimates (checked
+    // in before any machine measured them); diffing against one would turn
+    // an estimate error into a phantom regression. Exclude them loudly.
+    let (base, provisional): (Vec<_>, Vec<_>) = read("base")?
+        .into_iter()
+        .partition(|r| !r.is_provisional());
+    let base: Vec<(String, f64)> = base
+        .into_iter()
+        .map(|r| (r.name, r.ns_per_iter))
+        .collect();
+    let new: Vec<(String, f64)> = read("new")?
+        .into_iter()
+        .map(|r| (r.name, r.ns_per_iter))
+        .collect();
+    if !provisional.is_empty() {
+        println!(
+            "({} provisional baseline rows (iters = 0) excluded — refresh the baseline on a quiet machine: {})",
+            provisional.len(),
+            provisional
+                .iter()
+                .map(|r| r.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    anyhow::ensure!(
+        !base.is_empty(),
+        "every baseline row is provisional (iters = 0); nothing to diff against"
+    );
     let warn_pct: f64 = flags
         .get("warn-pct")
         .map(|s| s.parse())

@@ -1,0 +1,296 @@
+//! Lazy per-user network state for million-user populations (DESIGN.md §2g).
+//!
+//! [`Network::generate`] materializes dense `[user][ap][channel]` gain
+//! tensors — ~3 KB per user per AP at 16 subchannels, i.e. hundreds of
+//! gigabytes at 10⁶ users × 10² APs. The sharded scale path never needs
+//! that tensor: a shard only reads its *members'* gains at its *own* AP,
+//! and cross-shard interference enters through the AP-pair-attenuated
+//! background exchange (`coordinator::shard`), not per-user cross gains.
+//!
+//! [`UserArena`] therefore stores nothing per user. Every record is a pure
+//! function of `(seed, user)` — home cell, position, device FLOPS, QoE
+//! threshold — and every gain row a pure function of `(seed, user, ap)`,
+//! regenerated on demand from an independent RNG stream and *dropped* with
+//! the shard-local copy when the user departs. Resident memory is whatever
+//! the shards currently hold: O(active users), never O(population).
+//!
+//! The arena defines its own deterministic universe: it is **not**
+//! byte-compatible with `Network::generate` (which interleaves all draws
+//! on one sequential stream — exactly the O(population) init the scale
+//! path must avoid). Both universes share the same distributions, ring
+//! deployment, and path-loss model.
+
+use crate::config::Config;
+use crate::net::topology::{path_loss, Pos};
+use crate::net::UserProfile;
+use crate::util::rng::Pcg32;
+
+/// Per-(user, ap) RNG stream tag (gain rows).
+const STREAM_LINK: u64 = 0xA31A;
+/// Per-user RNG stream tag (position + profile).
+const STREAM_USER: u64 = 0xA0DE;
+
+#[derive(Clone, Debug)]
+pub struct UserArena {
+    seed: u64,
+    n_users: usize,
+    n_aps: usize,
+    /// Subchannel count of the gain rows.
+    pub num_subchannels: usize,
+    alpha: f64,
+    cell_radius_m: f64,
+    min_distance_m: f64,
+    device_flops_lo: f64,
+    device_flops_hi: f64,
+    qoe_mean_s: f64,
+    qoe_jitter: f64,
+    /// Ring deployment, same geometry as `Topology::generate`.
+    pub ap_pos: Vec<Pos>,
+    pub subchannel_bw_hz: f64,
+    pub noise_w: f64,
+}
+
+/// One materialized user: everything a shard stores while the user is a
+/// member. Dropped on departure, regenerated identically on return.
+#[derive(Clone, Debug)]
+pub struct UserRecord {
+    pub home_ap: usize,
+    pub pos: Pos,
+    pub profile: UserProfile,
+}
+
+impl UserArena {
+    pub fn new(cfg: &Config, seed: u64) -> Self {
+        let n = cfg.network.num_aps;
+        let ring_r = if n == 1 {
+            0.0
+        } else {
+            1.5 * cfg.network.cell_radius_m
+                / (2.0 * (std::f64::consts::PI / n as f64).sin()).max(1.0)
+        };
+        let ap_pos: Vec<Pos> = (0..n)
+            .map(|i| {
+                let th = 2.0 * std::f64::consts::PI * i as f64 / n as f64;
+                Pos {
+                    x: ring_r * th.cos(),
+                    y: ring_r * th.sin(),
+                }
+            })
+            .collect();
+        Self {
+            seed,
+            n_users: cfg.network.num_users,
+            n_aps: n,
+            num_subchannels: cfg.network.num_subchannels,
+            alpha: cfg.network.path_loss_exp,
+            cell_radius_m: cfg.network.cell_radius_m,
+            min_distance_m: cfg.network.min_distance_m,
+            device_flops_lo: cfg.compute.device_flops_lo,
+            device_flops_hi: cfg.compute.device_flops_hi,
+            qoe_mean_s: cfg.qoe.expected_finish_mean_s,
+            qoe_jitter: cfg.qoe.expected_finish_jitter,
+            ap_pos,
+            subchannel_bw_hz: cfg.subchannel_bw_hz(),
+            noise_w: cfg.noise_power_w(),
+        }
+    }
+
+    pub fn num_users(&self) -> usize {
+        self.n_users
+    }
+
+    pub fn num_aps(&self) -> usize {
+        self.n_aps
+    }
+
+    fn user_rng(&self, user: usize, stream: u64) -> Pcg32 {
+        Pcg32::new(
+            self.seed ^ (user as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            stream,
+        )
+    }
+
+    /// Home cell of `user` — O(1), so population-wide association vectors
+    /// (the churn stream's `user_ap`) build in one cheap pass.
+    pub fn home_ap(&self, user: usize) -> usize {
+        if self.n_aps <= 1 {
+            return 0;
+        }
+        self.user_rng(user, STREAM_USER).below(self.n_aps)
+    }
+
+    /// Association vector for the whole population (8 B/user — the only
+    /// O(population) structure the scale path keeps, shared with the
+    /// churn stream's `cur_ap`).
+    pub fn user_aps(&self) -> Vec<usize> {
+        (0..self.n_users).map(|u| self.home_ap(u)).collect()
+    }
+
+    /// Materialize `user`: position uniform in the home cell's disk,
+    /// profile from the same distributions as `Network::generate`.
+    pub fn user(&self, user: usize) -> UserRecord {
+        let mut rng = self.user_rng(user, STREAM_USER);
+        let home = if self.n_aps <= 1 {
+            0
+        } else {
+            rng.below(self.n_aps)
+        };
+        let rr = self.min_distance_m
+            + (self.cell_radius_m - self.min_distance_m) * rng.f64().sqrt();
+        let th = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        let pos = Pos {
+            x: self.ap_pos[home].x + rr * th.cos(),
+            y: self.ap_pos[home].y + rr * th.sin(),
+        };
+        let q = self.qoe_mean_s * rng.uniform(1.0 - self.qoe_jitter, 1.0 + self.qoe_jitter);
+        let device_flops = rng.uniform(self.device_flops_lo, self.device_flops_hi);
+        UserRecord {
+            home_ap: home,
+            pos,
+            profile: UserProfile {
+                device_flops,
+                qoe_threshold_s: q,
+            },
+        }
+    }
+
+    /// Rayleigh-fading gain rows of `user` at `ap`, `(up, down)`, one entry
+    /// per subchannel. Pure in `(seed, user, ap)` — a handoff target's rows
+    /// regenerate identically however often the user bounces between APs.
+    pub fn link_to(&self, user: usize, pos: &Pos, ap: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = self.user_rng(user, STREAM_LINK ^ ((ap as u64) << 16));
+        let d = pos.dist(&self.ap_pos[ap]).max(self.min_distance_m);
+        let pl = path_loss(d, self.alpha);
+        let m = self.num_subchannels;
+        let mut up = Vec::with_capacity(m);
+        let mut down = Vec::with_capacity(m);
+        for _ in 0..m {
+            up.push(rng.rayleigh_power(pl));
+        }
+        for _ in 0..m {
+            down.push(rng.rayleigh_power(pl));
+        }
+        (up, down)
+    }
+
+    /// AP-pair path-loss attenuation matrix `xg[src][dst]` — the far-field
+    /// coupling the background exchange uses in place of per-user cross
+    /// gains (diagonal is 0: a shard never attenuates onto itself).
+    pub fn ap_attenuation(&self) -> Vec<Vec<f64>> {
+        let n = self.n_aps;
+        let mut xg = vec![vec![0.0; n]; n];
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    xg[s][d] = path_loss(
+                        self.ap_pos[s].dist(&self.ap_pos[d]).max(1.0),
+                        self.alpha,
+                    );
+                }
+            }
+        }
+        xg
+    }
+}
+
+/// The same far-field attenuation matrix for a materialized [`Network`]'s
+/// deployment (the test-scale shard path plans against real `Network`s).
+pub fn ap_attenuation_of(topo: &crate::net::Topology, alpha: f64) -> Vec<Vec<f64>> {
+    let n = topo.num_aps();
+    let mut xg = vec![vec![0.0; n]; n];
+    for s in 0..n {
+        for d in 0..n {
+            if s != d {
+                xg[s][d] = path_loss(topo.ap_pos[s].dist(&topo.ap_pos[d]).max(1.0), alpha);
+            }
+        }
+    }
+    xg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn records_are_pure_and_deterministic() {
+        let cfg = presets::smoke();
+        let ar = UserArena::new(&cfg, 42);
+        for u in [0usize, 3, 17] {
+            let a = ar.user(u);
+            let b = ar.user(u);
+            assert_eq!(a.home_ap, b.home_ap);
+            assert_eq!(a.pos, b.pos);
+            assert_eq!(a.profile.device_flops, b.profile.device_flops);
+            assert_eq!(ar.home_ap(u), a.home_ap, "cheap accessor agrees");
+            let (up1, dn1) = ar.link_to(u, &a.pos, a.home_ap);
+            let (up2, dn2) = ar.link_to(u, &a.pos, a.home_ap);
+            assert_eq!(up1, up2);
+            assert_eq!(dn1, dn2);
+            assert!(up1.iter().all(|&g| g > 0.0 && g.is_finite()));
+            assert_eq!(up1.len(), cfg.network.num_subchannels);
+        }
+        let other = UserArena::new(&cfg, 43);
+        assert_ne!(
+            ar.user(3).profile.device_flops,
+            other.user(3).profile.device_flops,
+            "seed changes the universe"
+        );
+    }
+
+    #[test]
+    fn profiles_match_configured_distributions() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 500;
+        let ar = UserArena::new(&cfg, 7);
+        for u in 0..cfg.network.num_users {
+            let r = ar.user(u);
+            assert!(r.home_ap < cfg.network.num_aps);
+            assert!(
+                r.profile.device_flops >= cfg.compute.device_flops_lo
+                    && r.profile.device_flops <= cfg.compute.device_flops_hi
+            );
+            let lo = cfg.qoe.expected_finish_mean_s * (1.0 - cfg.qoe.expected_finish_jitter);
+            let hi = cfg.qoe.expected_finish_mean_s * (1.0 + cfg.qoe.expected_finish_jitter);
+            assert!(r.profile.qoe_threshold_s >= lo && r.profile.qoe_threshold_s <= hi);
+            let d = r.pos.dist(&ar.ap_pos[r.home_ap]);
+            assert!(d <= cfg.network.cell_radius_m + 1e-9);
+        }
+    }
+
+    #[test]
+    fn gains_differ_across_aps_and_channels() {
+        let cfg = presets::smoke();
+        let ar = UserArena::new(&cfg, 11);
+        let r = ar.user(0);
+        let (up0, _) = ar.link_to(0, &r.pos, 0);
+        let (up1, _) = ar.link_to(0, &r.pos, 1);
+        assert_ne!(up0, up1, "independent fading per AP");
+        assert!(up0.windows(2).any(|w| w[0] != w[1]), "fading per channel");
+    }
+
+    #[test]
+    fn attenuation_matrix_is_symmetric_geometry() {
+        let cfg = presets::smoke();
+        let ar = UserArena::new(&cfg, 1);
+        let xg = ar.ap_attenuation();
+        for s in 0..cfg.network.num_aps {
+            assert_eq!(xg[s][s], 0.0);
+            for d in 0..cfg.network.num_aps {
+                assert_eq!(xg[s][d], xg[d][s], "ring distances are symmetric");
+                if s != d {
+                    assert!(xg[s][d] > 0.0 && xg[s][d] < 1.0);
+                }
+            }
+        }
+        // matches the materialized topology's geometry
+        let net = crate::net::Network::generate(&cfg, 3);
+        let xg2 = ap_attenuation_of(&net.topo, cfg.network.path_loss_exp);
+        for s in 0..cfg.network.num_aps {
+            for d in 0..cfg.network.num_aps {
+                assert!((xg[s][d] - xg2[s][d]).abs() <= 1e-12 * xg[s][d].abs().max(1.0));
+            }
+        }
+    }
+}

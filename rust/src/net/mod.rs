@@ -1,11 +1,13 @@
 //! NOMA multi-cell wireless substrate (paper §II):
 //! topology + Rayleigh fading channels + SIC rate computation.
 
+pub mod arena;
 pub mod channel;
 pub mod noma;
 pub mod rates;
 pub mod topology;
 
+pub use arena::{ap_attenuation_of, UserArena, UserRecord};
 pub use channel::ChannelState;
 pub use noma::{compute_rates, LinkAssignment, LinkRates};
 pub use rates::{ChannelDelta, RateCache};

@@ -20,9 +20,11 @@ use crate::baselines::{Decision, Strategy};
 use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
-use crate::trace::{ChurnEventKind, ChurnSchedule, Request};
+use crate::trace::{ChurnEventKind, ChurnSchedule, EpisodeStream, Request};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+pub mod scale;
 
 /// Per-request result.
 #[derive(Clone, Copy, Debug)]
@@ -134,6 +136,12 @@ impl EventQueue {
     fn pop(&mut self) -> Option<Ev> {
         self.heap.pop()
     }
+
+    /// Timestamp of the next event without popping it (the resumable DES
+    /// uses this to stop draining at an epoch boundary).
+    fn peek_t(&self) -> Option<f64> {
+        self.heap.peek().map(|ev| ev.t)
+    }
 }
 
 /// Pre-computed per-request phase durations under one plan.
@@ -159,9 +167,31 @@ fn phases_for(
     rates_up: &[f64],
     rates_down: &[f64],
 ) -> Phases {
+    phases_from_parts(
+        cfg,
+        model,
+        d,
+        net.users[user].device_flops,
+        net.topo.user_ap[user],
+        rates_up[user],
+        rates_down[user],
+    )
+}
+
+/// [`phases_for`] from raw per-user parts — the arena-driven scale path
+/// has no dense [`Network`] to index into.
+fn phases_from_parts(
+    cfg: &Config,
+    model: &ModelProfile,
+    d: &Decision,
+    device_flops: f64,
+    ap: usize,
+    up_rate: f64,
+    down_rate: f64,
+) -> Phases {
     let sc = model.split_constants(d.split);
-    let dev = crate::latency::device_delay(&sc, net.users[user].device_flops);
-    let up = crate::latency::uplink_delay(sc.cut_bits, rates_up[user]);
+    let dev = crate::latency::device_delay(&sc, device_flops);
+    let up = crate::latency::uplink_delay(sc.cut_bits, up_rate);
     let r = d
         .r
         .max(cfg.compute.r_min)
@@ -169,7 +199,7 @@ fn phases_for(
     let edge = crate::latency::server_delay(&sc, r, &cfg.compute);
     let down = crate::latency::downlink_delay(
         cfg.compute.result_bits,
-        rates_down[user],
+        down_rate,
         sc.edge_flops,
     );
     Phases {
@@ -177,7 +207,7 @@ fn phases_for(
         edge_s: edge,
         post_edge_s: down,
         r,
-        ap: net.topo.user_ap[user],
+        ap,
         offloads: sc.edge_flops > 0.0,
     }
 }
@@ -286,6 +316,171 @@ fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome
     EpisodeOutcome {
         completions,
         dropped,
+    }
+}
+
+/// Resumable DES core (DESIGN.md §2g): the same per-AP pool semantics as
+/// [`run_des`], but requests are admitted epoch by epoch and the event heap
+/// drained up to a time limit between admissions, so a streaming driver
+/// never materializes the whole episode trace up front.
+///
+/// Drain safety: every admission pushes its edge-arrival at
+/// `arrival + pre_edge ≥ arrival`, and a later epoch only admits requests
+/// with `arrival ≥ t1`, so draining strictly below `t1` after epoch
+/// `[t0, t1)`'s admissions can never run ahead of an event a future epoch
+/// would insert earlier.
+///
+/// The only semantic difference from the one-shot [`run_des`] is the
+/// sequence numbering used to break *exact* time ties (admissions
+/// interleave with event processing instead of all preceding it) — a
+/// measure-zero distinction under continuous arrival processes, and one
+/// that never affects conservation.
+struct DesCore {
+    pool: Vec<f64>,
+    waiting: Vec<std::collections::VecDeque<usize>>,
+    heap: EventQueue,
+    /// Admitted requests + phases, indexed by admission order (which for
+    /// the epoch-streamed drivers equals trace position).
+    phases: Vec<Phases>,
+    reqs: Vec<Request>,
+    edge_start: Vec<f64>,
+    completions: Vec<Completion>,
+    dropped: Vec<DroppedRequest>,
+}
+
+impl DesCore {
+    fn new(cfg: &Config, n_aps: usize) -> Self {
+        Self {
+            pool: vec![cfg.compute.edge_pool_units; n_aps],
+            waiting: vec![Default::default(); n_aps],
+            heap: EventQueue::default(),
+            phases: Vec::new(),
+            reqs: Vec::new(),
+            edge_start: Vec::new(),
+            completions: Vec::new(),
+            dropped: Vec::new(),
+        }
+    }
+
+    /// Admit one request (same admission semantics as [`run_des`]:
+    /// non-finite phases drop explicitly, device-only completes
+    /// immediately, offloaders enter the event heap).
+    fn admit(&mut self, cfg: &Config, rq: Request, ph: Phases) {
+        let idx = self.phases.len();
+        let finite = rq.arrival_s.is_finite()
+            && ph.pre_edge_s.is_finite()
+            && (!ph.offloads
+                || (ph.edge_s.is_finite() && ph.post_edge_s.is_finite() && ph.r.is_finite()));
+        if !finite {
+            self.dropped.push(DroppedRequest {
+                id: rq.id,
+                req: idx,
+                user: rq.user,
+                arrival_s: rq.arrival_s,
+                reason: DropReason::NonFinitePhase,
+            });
+            self.phases.push(ph);
+            self.reqs.push(rq);
+            self.edge_start.push(0.0);
+            return;
+        }
+        debug_assert!(
+            !ph.offloads || ph.r <= cfg.compute.edge_pool_units,
+            "admission must clamp r to the pool size"
+        );
+        if ph.offloads {
+            self.heap
+                .push(rq.arrival_s + ph.pre_edge_s, EvKind::EdgeArrive { req: idx });
+        } else {
+            self.completions.push(Completion {
+                id: rq.id,
+                req: idx,
+                user: rq.user,
+                arrival_s: rq.arrival_s,
+                finish_s: rq.arrival_s + ph.pre_edge_s,
+                service_s: ph.pre_edge_s,
+                queue_s: 0.0,
+            });
+        }
+        self.phases.push(ph);
+        self.reqs.push(rq);
+        self.edge_start.push(0.0);
+    }
+
+    /// Process events strictly before `t_lim` (same event semantics as the
+    /// [`run_des`] loop).
+    fn drain_until(&mut self, t_lim: f64) {
+        while self.heap.peek_t().is_some_and(|t| t < t_lim) {
+            let ev = self.heap.pop().expect("peeked");
+            match ev.kind {
+                EvKind::EdgeArrive { req } => {
+                    let ph = &self.phases[req];
+                    if self.pool[ph.ap] >= ph.r {
+                        self.pool[ph.ap] -= ph.r;
+                        self.edge_start[req] = ev.t;
+                        self.heap.push(ev.t + ph.edge_s, EvKind::EdgeDone { req });
+                    } else {
+                        self.waiting[ph.ap].push_back(req);
+                        self.edge_start[req] = ev.t; // provisional: queue arrival
+                    }
+                }
+                EvKind::EdgeDone { req } => {
+                    let ph = &self.phases[req];
+                    let ap = ph.ap;
+                    self.pool[ap] += ph.r;
+                    let rq = &self.reqs[req];
+                    let queue_s =
+                        (self.edge_start[req] - (rq.arrival_s + ph.pre_edge_s)).max(0.0);
+                    self.completions.push(Completion {
+                        id: rq.id,
+                        req,
+                        user: rq.user,
+                        arrival_s: rq.arrival_s,
+                        finish_s: ev.t + ph.post_edge_s,
+                        service_s: ph.pre_edge_s + ph.edge_s + ph.post_edge_s,
+                        queue_s,
+                    });
+                    while let Some(&next) = self.waiting[ap].front() {
+                        let np = &self.phases[next];
+                        if self.pool[ap] >= np.r {
+                            self.waiting[ap].pop_front();
+                            self.pool[ap] -= np.r;
+                            self.edge_start[next] = ev.t;
+                            self.heap.push(ev.t + np.edge_s, EvKind::EdgeDone { req: next });
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total requests admitted so far.
+    fn admitted(&self) -> usize {
+        self.phases.len()
+    }
+
+    /// Drain everything left, assert conservation, and return the sorted
+    /// outcome (identical post-conditions to [`run_des`]).
+    fn finish(mut self) -> EpisodeOutcome {
+        self.drain_until(f64::INFINITY);
+        assert_eq!(
+            self.completions.len() + self.dropped.len(),
+            self.reqs.len(),
+            "DES lost requests: {} completed + {} dropped != {} admitted",
+            self.completions.len(),
+            self.dropped.len(),
+            self.reqs.len()
+        );
+        let mut completions = self.completions;
+        let mut dropped = self.dropped;
+        completions.sort_by(|a, b| a.id.cmp(&b.id));
+        dropped.sort_by(|a, b| a.id.cmp(&b.id));
+        EpisodeOutcome {
+            completions,
+            dropped,
+        }
     }
 }
 
@@ -585,6 +780,172 @@ pub fn run_dynamic_opts(
 
     // Bucket per-epoch serving stats by arrival epoch. QoE thresholds live
     // on the immutable base network (handoffs never change them).
+    let mut lat_sum = vec![0.0f64; n_epochs];
+    let mut queue_sum = vec![0.0f64; n_epochs];
+    let mut miss = vec![0usize; n_epochs];
+    for c in &outcome.completions {
+        let e = epoch_of_pos[c.req];
+        epochs[e].completed += 1;
+        lat_sum[e] += c.latency();
+        queue_sum[e] += c.queue_s;
+        if c.latency() > net.users[c.user].qoe_threshold_s {
+            miss[e] += 1;
+        }
+    }
+    for d in &outcome.dropped {
+        epochs[epoch_of_pos[d.req]].dropped += 1;
+    }
+    for (e, rec) in epochs.iter_mut().enumerate() {
+        if rec.completed > 0 {
+            rec.mean_latency_s = lat_sum[e] / rec.completed as f64;
+            rec.mean_queue_s = queue_sum[e] / rec.completed as f64;
+            rec.qoe_miss_frac = miss[e] as f64 / rec.completed as f64;
+        }
+    }
+
+    DynamicOutcome { outcome, epochs }
+}
+
+/// [`run_dynamic_opts`] driven by a lazy [`EpisodeStream`] instead of a
+/// materialized `ChurnSchedule` + trace (DESIGN.md §2g): churn events and
+/// request arrivals are generated per epoch from the same RNG streams
+/// (byte-identical events — pinned in `trace::stream`), admitted into a
+/// resumable [`DesCore`], and the heap drained up to each epoch boundary.
+/// Peak memory no longer includes the up-front O(events + requests)
+/// schedule/trace buffers.
+///
+/// Produces the same completions, drops, and epoch records as
+/// [`run_dynamic_opts`] on `ChurnSchedule::generate(cfg, user_ap,
+/// churn_seed)` + `dynamic_trace(cfg, &schedule, trace_seed)`, except for
+/// `plan_wall_s` (wall clock) and exact-time event ties (measure-zero
+/// under the Poisson workload; see [`DesCore`]).
+pub fn run_dynamic_streamed(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    strat: &dyn Strategy,
+    churn_seed: u64,
+    trace_seed: u64,
+    opts: &DynamicOptions,
+) -> DynamicOutcome {
+    let episode_s = cfg.workload.episode_s.max(1e-9);
+    let replan_interval_s = opts.replan_interval_s;
+    let delta = if replan_interval_s.is_finite() && replan_interval_s > 0.0 {
+        replan_interval_s.min(episode_s)
+    } else {
+        episode_s
+    };
+    let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
+
+    let mut stream = EpisodeStream::new(cfg, &net.topo.user_ap, churn_seed, trace_seed);
+    let mut active = stream.initial_active().to_vec();
+    // Handoffs mutate the association; cloned lazily on the first handoff
+    // (until then the clone would be byte-identical to `net` anyway).
+    let mut net_dyn: Option<Network> = None;
+
+    let mut cache = if opts.incremental {
+        let mut c = crate::coordinator::PlanCache::new(
+            opts.full_rescan_every,
+            cfg.optimizer.replan_layer_window,
+        );
+        c.trust_static = true;
+        Some(c)
+    } else {
+        None
+    };
+    let mut serve_rates: Option<crate::net::RateCache> = None;
+    let mut des = DesCore::new(cfg, cfg.network.num_aps);
+    let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
+    // Arrival epoch by admission index (== trace position; the stream
+    // yields requests in global trace order).
+    let mut epoch_of_pos: Vec<usize> = Vec::new();
+
+    for e in 0..n_epochs {
+        let t0 = e as f64 * delta;
+        let t1 = if e + 1 == n_epochs {
+            f64::INFINITY
+        } else {
+            t0 + delta
+        };
+        let batch = stream.epoch(t0, t1);
+        for ev in &batch.events {
+            match ev.kind {
+                ChurnEventKind::Arrive => active[ev.user] = true,
+                ChurnEventKind::Depart => active[ev.user] = false,
+                ChurnEventKind::RateChange { .. } => {}
+                ChurnEventKind::Handoff { ap } => {
+                    net_dyn.get_or_insert_with(|| net.clone()).topo.user_ap[ev.user] = ap;
+                }
+            }
+        }
+        let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
+        let tp = std::time::Instant::now();
+        let (ds, info) = match cache.as_mut() {
+            Some(c) => strat.decide_incremental(cfg, net_e, model, &active, c),
+            None => strat.decide_masked(cfg, net_e, model, &active),
+        };
+        let plan_wall_s = tp.elapsed().as_secs_f64();
+        let (up, down) = match strat.channel_model() {
+            crate::baselines::ChannelModel::Noma => {
+                let alloc: Vec<crate::net::LinkAssignment> = ds
+                    .iter()
+                    .map(|d| crate::net::LinkAssignment {
+                        up_ch: d.up_ch,
+                        down_ch: d.down_ch,
+                        p_up: d.p_up,
+                        p_down: d.p_down,
+                        r: d.r,
+                        split: d.split,
+                    })
+                    .collect();
+                if let Some(rc) = serve_rates.as_mut() {
+                    rc.update(net_e, &alloc);
+                } else {
+                    serve_rates = Some(crate::net::RateCache::full(net_e, alloc));
+                }
+                let r = serve_rates.as_ref().expect("just seeded").rates();
+                (r.up.clone(), r.down.clone())
+            }
+            cm => crate::metrics::rates_for(cfg, net_e, &ds, cm),
+        };
+        let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
+        let n_reqs = batch.requests.len();
+        for rq in batch.requests {
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            epoch_of_pos.push(e);
+            des.admit(cfg, rq, ph);
+        }
+        des.drain_until(t1);
+        let planned = info.cohorts_reused + info.cohorts_resolved;
+        epochs.push(EpochRecord {
+            epoch: e,
+            t_start_s: t0,
+            active_users: active.iter().filter(|&&a| a).count(),
+            offloaders,
+            cohorts: info.cohorts,
+            gd_iters: info.gd_iters,
+            cohorts_reused: info.cohorts_reused,
+            cohorts_resolved: info.cohorts_resolved,
+            cache_hit_frac: if planned == 0 {
+                0.0
+            } else {
+                info.cohorts_reused as f64 / planned as f64
+            },
+            window_fallbacks: info.window_fallbacks,
+            plan_wall_s,
+            requests: n_reqs,
+            completed: 0,
+            dropped: 0,
+            mean_latency_s: 0.0,
+            mean_queue_s: 0.0,
+            qoe_miss_frac: 0.0,
+        });
+    }
+
+    let outcome = des.finish();
+
+    // Bucket per-epoch serving stats by arrival epoch (same reduction as
+    // `run_dynamic_opts`; QoE thresholds live on the immutable base net).
     let mut lat_sum = vec![0.0f64; n_epochs];
     let mut queue_sum = vec![0.0f64; n_epochs];
     let mut miss = vec![0usize; n_epochs];
@@ -1124,5 +1485,90 @@ mod tests {
             assert_eq!(a.completed, b.completed);
             assert_eq!(a.mean_latency_s, b.mean_latency_s);
         }
+    }
+
+    /// §2g: the streamed engine (lazy churn/trace + resumable DES) matches
+    /// the materialized `run_dynamic_opts` byte for byte — same-seed
+    /// schedule/trace, field-by-field completions/drops, and epoch records
+    /// with the wall clock zeroed.
+    #[test]
+    fn streamed_dynamic_matches_materialized() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 1.0;
+        cfg.workload.arrival_rate_hz = 15.0;
+        cfg.churn.initial_active_frac = 0.6;
+        cfg.churn.arrival_rate_hz = 5.0;
+        cfg.churn.departure_rate_hz = 0.4;
+        cfg.churn.rate_change_hz = 0.3;
+        cfg.churn.handoff_hz = 0.25;
+        let churn_seed = 0x51A9;
+        let trace_seed = 0x7B4C;
+        let strat = Neurosurgeon;
+        let opts = DynamicOptions {
+            replan_interval_s: 0.25,
+            incremental: true,
+            full_rescan_every: 0,
+        };
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, churn_seed);
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, trace_seed);
+        let mat = run_dynamic_opts(&cfg, &net, &model, &strat, &sched, &tr, &opts);
+        let st = run_dynamic_streamed(&cfg, &net, &model, &strat, churn_seed, trace_seed, &opts);
+
+        assert_eq!(st.outcome.completions.len(), mat.outcome.completions.len());
+        for (a, b) in st
+            .outcome
+            .completions
+            .iter()
+            .zip(mat.outcome.completions.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.req, b.req);
+            assert_eq!(a.user, b.user);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.finish_s, b.finish_s);
+            assert_eq!(a.service_s, b.service_s);
+            assert_eq!(a.queue_s, b.queue_s);
+        }
+        assert_eq!(st.outcome.dropped.len(), mat.outcome.dropped.len());
+        for (a, b) in st.outcome.dropped.iter().zip(mat.outcome.dropped.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.req, b.req);
+            assert_eq!(a.user, b.user);
+            assert_eq!(a.reason, b.reason);
+        }
+        assert_eq!(st.epochs.len(), mat.epochs.len());
+        for (a, b) in st.epochs.iter().zip(mat.epochs.iter()) {
+            let mut a = a.clone();
+            let mut b = b.clone();
+            a.plan_wall_s = 0.0;
+            b.plan_wall_s = 0.0;
+            assert_eq!(a, b);
+        }
+    }
+
+    /// A static (no-churn) episode streams identically too — the lazy net
+    /// clone never happens and the one-epoch path exercises `t1 = ∞`.
+    #[test]
+    fn streamed_dynamic_matches_without_churn() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 10.0;
+        let strat = DeviceOnly;
+        let opts = DynamicOptions::default();
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, 1);
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 2);
+        let mat = run_dynamic_opts(&cfg, &net, &model, &strat, &sched, &tr, &opts);
+        let st = run_dynamic_streamed(&cfg, &net, &model, &strat, 1, 2, &opts);
+        assert_eq!(st.outcome.completions.len(), mat.outcome.completions.len());
+        for (a, b) in st
+            .outcome
+            .completions
+            .iter()
+            .zip(mat.outcome.completions.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish_s, b.finish_s);
+        }
+        assert_eq!(st.epochs.len(), mat.epochs.len());
     }
 }

@@ -7,6 +7,9 @@
 use crate::config::Config;
 use crate::util::rng::Pcg32;
 
+pub mod stream;
+pub use stream::{ChurnStream, EpisodeStream, EpochBatch};
+
 /// One inference request.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Request {

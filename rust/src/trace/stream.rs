@@ -1,0 +1,567 @@
+//! Streaming churn + arrival generation (DESIGN.md §2g).
+//!
+//! [`ChurnSchedule::generate`] and [`dynamic_trace`] materialize the whole
+//! episode up front — O(events + requests) resident for the entire run,
+//! which at a million users is gigabytes of trace that the epoch loop then
+//! consumes strictly front-to-back. This module generates the *same byte
+//! stream* lazily, one epoch at a time:
+//!
+//! - [`ChurnStream`] replays the CTMC of [`ChurnSchedule::generate`]
+//!   draw-for-draw. The one event that overshoots the requested horizon is
+//!   held back (`pending`) and released when the horizon catches up, so
+//!   pausing between epochs never perturbs the draw sequence.
+//! - [`EpisodeStream`] adds the per-user Poisson arrival cursors of
+//!   [`dynamic_trace`]. Each cursor owns the exact child RNG the
+//!   materialized generator would have used ([`Pcg32::advance`] jumps the
+//!   root to user `u`'s split point in O(log u)), and the overshoot draw at
+//!   an epoch horizon is kept pending — it is emitted verbatim once the
+//!   horizon passes it, or discarded exactly when a churn event closes the
+//!   segment first, mirroring `emit_arrivals`' discard-at-segment-end.
+//!
+//! Resident state is O(ever-active users): one cursor (~100 B) per user
+//! that has ever been active, plus the population activity/association
+//! bitmaps — never the O(rate × episode × population) request trace.
+//! Byte-identity against the materialized generators is pinned by the
+//! property tests below and in `tests/props.rs`.
+
+use super::{ChurnEvent, ChurnEventKind, Request};
+use crate::config::Config;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// Lazy replay of [`ChurnSchedule::generate`]: same seed stream (0xC4E2),
+/// same draw order, events surfaced incrementally by time horizon.
+#[derive(Clone, Debug)]
+pub struct ChurnStream {
+    rng: Pcg32,
+    episode_s: f64,
+    n: usize,
+    n_aps: usize,
+    arrival_rate_hz: f64,
+    departure_rate_hz: f64,
+    rate_change_hz: f64,
+    handoff_hz: f64,
+    rate_factor_lo: f64,
+    rate_factor_hi: f64,
+    /// Activity mask at the *generation* frontier (events are applied the
+    /// moment they are drawn, exactly like the materialized generator —
+    /// consumers track their own view from the emitted events).
+    active: Vec<bool>,
+    n_active: usize,
+    cur_ap: Vec<usize>,
+    initial_active: Vec<bool>,
+    t: f64,
+    /// A generated event beyond the last requested horizon, not yet
+    /// released. Its state effects are already applied to `active`/`cur_ap`.
+    pending: Option<ChurnEvent>,
+    done: bool,
+}
+
+impl ChurnStream {
+    /// Mirrors the init draws of [`ChurnSchedule::generate`] bit-for-bit.
+    pub fn new(cfg: &Config, user_ap: &[usize], seed: u64) -> Self {
+        let ch = &cfg.churn;
+        let n = user_ap.len();
+        let mut rng = Pcg32::new(seed, 0xC4E2);
+        let frac = ch.initial_active_frac.clamp(0.0, 1.0);
+        let mut active: Vec<bool> = (0..n).map(|_| rng.f64() < frac).collect();
+        if frac > 0.0 && n > 0 && !active.iter().any(|&a| a) {
+            let u = rng.below(n);
+            active[u] = true;
+        }
+        let n_active = active.iter().filter(|&&a| a).count();
+        Self {
+            rng,
+            episode_s: cfg.workload.episode_s,
+            n,
+            n_aps: cfg.network.num_aps,
+            arrival_rate_hz: ch.arrival_rate_hz,
+            departure_rate_hz: ch.departure_rate_hz,
+            rate_change_hz: ch.rate_change_hz,
+            handoff_hz: ch.handoff_hz,
+            rate_factor_lo: ch.rate_factor_lo,
+            rate_factor_hi: ch.rate_factor_hi,
+            initial_active: active.clone(),
+            active,
+            n_active,
+            cur_ap: user_ap.to_vec(),
+            t: 0.0,
+            pending: None,
+            done: false,
+        }
+    }
+
+    /// Activity mask at t = 0 (the same vector the materialized schedule
+    /// exposes as `initial_active`).
+    pub fn initial_active(&self) -> &[bool] {
+        &self.initial_active
+    }
+
+    /// Draw the next CTMC event, applying it to the internal mask
+    /// immediately (identical control flow to the generate loop).
+    fn gen_next(&mut self) -> Option<ChurnEvent> {
+        if self.done {
+            return None;
+        }
+        let n_active = self.n_active;
+        let n_inactive = self.n - n_active;
+        let ra = if n_inactive > 0 {
+            self.arrival_rate_hz
+        } else {
+            0.0
+        };
+        let rd = self.departure_rate_hz * n_active as f64;
+        let rr = self.rate_change_hz * n_active as f64;
+        let rh = if self.n_aps > 1 {
+            self.handoff_hz * n_active as f64
+        } else {
+            0.0
+        };
+        let total = ra + rd + rr + rh;
+        if total <= 0.0 {
+            self.done = true;
+            return None;
+        }
+        self.t += self.rng.exponential(total);
+        if self.t >= self.episode_s {
+            self.done = true;
+            return None;
+        }
+        let pick = self.rng.f64() * total;
+        let ev = if pick < ra {
+            let user = nth_with(&self.active, false, self.rng.below(n_inactive));
+            self.active[user] = true;
+            self.n_active += 1;
+            ChurnEvent {
+                t_s: self.t,
+                user,
+                kind: ChurnEventKind::Arrive,
+            }
+        } else if pick < ra + rd {
+            let user = nth_with(&self.active, true, self.rng.below(n_active));
+            self.active[user] = false;
+            self.n_active -= 1;
+            ChurnEvent {
+                t_s: self.t,
+                user,
+                kind: ChurnEventKind::Depart,
+            }
+        } else if pick < ra + rd + rr {
+            let user = nth_with(&self.active, true, self.rng.below(n_active));
+            let factor = self.rng.uniform(self.rate_factor_lo, self.rate_factor_hi);
+            ChurnEvent {
+                t_s: self.t,
+                user,
+                kind: ChurnEventKind::RateChange { factor },
+            }
+        } else {
+            let user = nth_with(&self.active, true, self.rng.below(n_active));
+            let mut ap = self.rng.below(self.n_aps);
+            if ap == self.cur_ap[user] {
+                ap = (ap + 1) % self.n_aps;
+            }
+            self.cur_ap[user] = ap;
+            ChurnEvent {
+                t_s: self.t,
+                user,
+                kind: ChurnEventKind::Handoff { ap },
+            }
+        };
+        Some(ev)
+    }
+
+    /// Next event with `t_s < t_lim`, if any; an event at or beyond the
+    /// horizon stays pending for a later call with a larger horizon.
+    pub fn next_before(&mut self, t_lim: f64) -> Option<ChurnEvent> {
+        if let Some(e) = self.pending {
+            if e.t_s < t_lim {
+                self.pending = None;
+                return Some(e);
+            }
+            return None;
+        }
+        match self.gen_next() {
+            Some(e) if e.t_s < t_lim => Some(e),
+            Some(e) => {
+                self.pending = Some(e);
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Drain the remaining episode (for tests / one-shot materialization).
+    pub fn collect_all(&mut self) -> Vec<ChurnEvent> {
+        let mut out = Vec::new();
+        while let Some(e) = self.next_before(f64::INFINITY) {
+            out.push(e);
+        }
+        out
+    }
+}
+
+/// Index of the `k`-th user whose mask equals `val` (same contract as the
+/// materialized generator's helper).
+fn nth_with(mask: &[bool], val: bool, k: usize) -> usize {
+    mask.iter()
+        .enumerate()
+        .filter(|(_, &m)| m == val)
+        .map(|(i, _)| i)
+        .nth(k)
+        .expect("churn event for an out-of-range user")
+}
+
+/// Per-user arrival cursor: the child RNG of `dynamic_trace`'s
+/// `root.split(user)` plus the segment-replay state. ~100 B per
+/// ever-active user — the O(active) resident footprint of the stream.
+#[derive(Clone, Debug)]
+struct UserCursor {
+    rng: Pcg32,
+    active: bool,
+    factor: f64,
+    /// Accumulation point of the Poisson chain: the current segment start
+    /// or the last emitted arrival, whichever is later.
+    t_acc: f64,
+    /// A drawn arrival beyond the last horizon, not yet classified: it is
+    /// emitted verbatim if the horizon passes it first, or discarded if a
+    /// churn event closes the segment at or before it — exactly
+    /// `emit_arrivals`' overshoot-discard, deferred.
+    pending: Option<f64>,
+}
+
+impl UserCursor {
+    /// Emit this cursor's arrivals strictly below `bound` into `out`.
+    /// `close_segment` marks `bound` as a true segment end (churn event or
+    /// episode end): the overshoot draw is discarded and the chain restarts
+    /// at `bound`. At a mere epoch horizon the overshoot stays pending.
+    fn resolve_to(&mut self, bound: f64, close_segment: bool, rate: f64, user: usize, out: &mut Vec<Request>) {
+        if self.active && rate > 0.0 && bound > self.t_acc {
+            loop {
+                let x = match self.pending.take() {
+                    Some(x) => x,
+                    None => self.t_acc + self.rng.exponential(rate),
+                };
+                if x >= bound {
+                    if !close_segment {
+                        self.pending = Some(x);
+                    }
+                    break;
+                }
+                out.push(Request {
+                    id: 0, // assigned after the per-epoch sort
+                    user,
+                    arrival_s: x,
+                });
+                self.t_acc = x;
+            }
+        }
+        if close_segment {
+            self.t_acc = bound;
+            self.pending = None;
+        }
+    }
+}
+
+/// One epoch's worth of the episode: the churn events the planner applies
+/// at the epoch start (`t_s <= t0`, matching `run_dynamic`'s replay) and
+/// the requests arriving before the epoch end (`arrival_s < t1`), with
+/// globally consistent ids.
+#[derive(Clone, Debug, Default)]
+pub struct EpochBatch {
+    pub events: Vec<ChurnEvent>,
+    pub requests: Vec<Request>,
+}
+
+/// Streaming equivalent of `ChurnSchedule::generate` + `dynamic_trace`:
+/// feed it the epoch grid and it returns, per epoch, byte-identical events
+/// and requests without ever materializing the episode.
+#[derive(Clone, Debug)]
+pub struct EpisodeStream {
+    churn: ChurnStream,
+    /// Generated churn events not yet released to the planner (their trace
+    /// effects are applied to the cursors at generation time).
+    planner_queue: std::collections::VecDeque<ChurnEvent>,
+    cursors: HashMap<usize, UserCursor>,
+    /// Pristine root of the 0xD19A trace stream; cursor `u` clones it,
+    /// advances `2u` steps and splits — identical to `u` sequential splits.
+    root: Pcg32,
+    base_rate_hz: f64,
+    episode_s: f64,
+    next_id: u64,
+    /// Trace horizon reached so far (arrivals below it are all emitted).
+    frontier: f64,
+}
+
+impl EpisodeStream {
+    pub fn new(cfg: &Config, user_ap: &[usize], churn_seed: u64, trace_seed: u64) -> Self {
+        let churn = ChurnStream::new(cfg, user_ap, churn_seed);
+        let root = Pcg32::new(trace_seed, 0xD19A);
+        let mut cursors = HashMap::new();
+        for (u, &a) in churn.initial_active().iter().enumerate() {
+            if a {
+                cursors.insert(u, Self::make_cursor(&root, u, true));
+            }
+        }
+        Self {
+            churn,
+            planner_queue: Default::default(),
+            cursors,
+            root,
+            base_rate_hz: cfg.workload.arrival_rate_hz,
+            episode_s: cfg.workload.episode_s,
+            next_id: 0,
+            frontier: 0.0,
+        }
+    }
+
+    pub fn initial_active(&self) -> &[bool] {
+        self.churn.initial_active()
+    }
+
+    fn make_cursor(root: &Pcg32, user: usize, active: bool) -> UserCursor {
+        let mut r = root.clone();
+        r.advance(2 * user as u64); // one split = one next_u64 = 2 steps
+        UserCursor {
+            rng: r.split(user as u64),
+            active,
+            factor: 1.0,
+            t_acc: 0.0,
+            pending: None,
+        }
+    }
+
+    /// Apply one churn event to its user's cursor: close the running
+    /// segment at `e.t_s` (emitting its arrivals), then switch state.
+    fn apply_event(&mut self, e: &ChurnEvent, out: &mut Vec<Request>) {
+        let root = &self.root;
+        let c = self
+            .cursors
+            .entry(e.user)
+            .or_insert_with(|| Self::make_cursor(root, e.user, false));
+        let rate = self.base_rate_hz * c.factor;
+        c.resolve_to(e.t_s, true, rate, e.user, out);
+        match e.kind {
+            ChurnEventKind::Arrive => c.active = true,
+            ChurnEventKind::Depart => c.active = false,
+            ChurnEventKind::RateChange { factor } => c.factor = factor,
+            ChurnEventKind::Handoff { .. } => {}
+        }
+    }
+
+    /// Advance one epoch `[t0, t1)`: returns the planner's churn batch
+    /// (`t_s` in (prev t0, t0], i.e. everything not yet released) and the
+    /// epoch's requests (`arrival_s` in [prev horizon, min(t1, episode))),
+    /// sorted and id-stamped in global order. Epochs must be requested in
+    /// increasing time order with `t0 < t1` (the `run_dynamic` grid).
+    pub fn epoch(&mut self, t0: f64, t1: f64) -> EpochBatch {
+        let trace_hi = t1.min(self.episode_s);
+        let mut requests = Vec::new();
+        // Generate churn through the trace horizon; cursors learn their
+        // segment boundaries the moment an event exists.
+        while let Some(e) = self.churn.next_before(trace_hi) {
+            self.apply_event(&e, &mut requests);
+            self.planner_queue.push_back(e);
+        }
+        // Release the planner's inclusive-of-t0 prefix.
+        let mut events = Vec::new();
+        while self
+            .planner_queue
+            .front()
+            .map_or(false, |e| e.t_s <= t0)
+        {
+            events.push(self.planner_queue.pop_front().unwrap());
+        }
+        // Extend every active cursor to the horizon. The final horizon
+        // (the episode end) is a true segment end: overshoots die there.
+        let close = trace_hi >= self.episode_s;
+        if trace_hi > self.frontier || close {
+            let base = self.base_rate_hz;
+            for (&u, c) in self.cursors.iter_mut() {
+                let rate = base * c.factor;
+                c.resolve_to(trace_hi, close, rate, u, &mut requests);
+            }
+            self.frontier = trace_hi;
+        }
+        // Same global order as `dynamic_trace`: the batches partition time,
+        // so a per-batch sort + running counter reproduces its sort + ids.
+        requests.sort_by(|a, b| {
+            a.arrival_s
+                .total_cmp(&b.arrival_s)
+                .then(a.user.cmp(&b.user))
+        });
+        for r in requests.iter_mut() {
+            r.id = self.next_id;
+            self.next_id += 1;
+        }
+        EpochBatch { events, requests }
+    }
+
+    /// Resident cursor count (ever-active users) — the memory telemetry
+    /// the scale driver reports.
+    pub fn cursor_count(&self) -> usize {
+        self.cursors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::trace::{dynamic_trace, ChurnSchedule};
+
+    fn churny_cfg() -> Config {
+        let mut cfg = presets::smoke();
+        cfg.workload.episode_s = 4.0;
+        cfg.workload.arrival_rate_hz = 5.0;
+        cfg.churn.initial_active_frac = 0.5;
+        cfg.churn.arrival_rate_hz = 3.0;
+        cfg.churn.departure_rate_hz = 0.4;
+        cfg.churn.rate_change_hz = 0.3;
+        cfg.churn.handoff_hz = 0.3;
+        cfg
+    }
+
+    fn user_ap(cfg: &Config) -> Vec<usize> {
+        (0..cfg.network.num_users)
+            .map(|u| u % cfg.network.num_aps)
+            .collect()
+    }
+
+    #[test]
+    fn churn_stream_matches_materialized_schedule() {
+        let cfg = churny_cfg();
+        let ua = user_ap(&cfg);
+        for seed in [1u64, 9, 42, 77] {
+            let sched = ChurnSchedule::generate(&cfg, &ua, seed);
+            let mut st = ChurnStream::new(&cfg, &ua, seed);
+            assert_eq!(st.initial_active(), &sched.initial_active[..]);
+            assert_eq!(st.collect_all(), sched.events, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn churn_stream_horizon_cuts_never_change_the_events() {
+        // Draining in awkward slices (including horizons that land exactly
+        // on event times) must release the same events in the same order.
+        let cfg = churny_cfg();
+        let ua = user_ap(&cfg);
+        let sched = ChurnSchedule::generate(&cfg, &ua, 5);
+        assert!(sched.events.len() > 4, "test needs a busy schedule");
+        let mut st = ChurnStream::new(&cfg, &ua, 5);
+        let mut got = Vec::new();
+        // horizon sequence: an exact event time, then tiny steps, then ∞
+        let exact = sched.events[2].t_s;
+        for lim in [0.0, exact, exact, exact * 1.000001, 2.0] {
+            while let Some(e) = st.next_before(lim) {
+                got.push(e);
+            }
+        }
+        while let Some(e) = st.next_before(f64::INFINITY) {
+            got.push(e);
+        }
+        assert_eq!(got, sched.events);
+    }
+
+    /// Reassemble a full episode through `EpisodeStream::epoch` on an
+    /// arbitrary epoch grid and compare to the materialized pair.
+    fn assert_stream_matches(cfg: &Config, churn_seed: u64, trace_seed: u64, n_epochs: usize) {
+        let ua = user_ap(cfg);
+        let sched = ChurnSchedule::generate(cfg, &ua, churn_seed);
+        let trace = dynamic_trace(cfg, &sched, trace_seed);
+        let mut st = EpisodeStream::new(cfg, &ua, churn_seed, trace_seed);
+        assert_eq!(st.initial_active(), &sched.initial_active[..]);
+        let delta = cfg.workload.episode_s / n_epochs as f64;
+        let mut events = Vec::new();
+        let mut requests = Vec::new();
+        for e in 0..n_epochs {
+            let t0 = e as f64 * delta;
+            let t1 = if e + 1 == n_epochs {
+                f64::INFINITY
+            } else {
+                t0 + delta
+            };
+            let b = st.epoch(t0, t1);
+            // the planner batch replays exactly the `t_s <= t0` prefix
+            for ev in &b.events {
+                assert!(ev.t_s <= t0);
+            }
+            for r in &b.requests {
+                assert!(t1.is_infinite() || r.arrival_s < t1);
+                assert!(r.arrival_s >= t0 - delta - 1e-12);
+            }
+            events.extend(b.events);
+            requests.extend(b.requests);
+        }
+        assert_eq!(events, sched.events, "churn events (seed {churn_seed})");
+        assert_eq!(requests, trace, "requests (seeds {churn_seed}/{trace_seed})");
+    }
+
+    #[test]
+    fn episode_stream_is_byte_identical_to_materialized() {
+        let cfg = churny_cfg();
+        assert_stream_matches(&cfg, 21, 22, 4);
+        assert_stream_matches(&cfg, 3, 4, 1);
+        assert_stream_matches(&cfg, 7, 8, 13); // uneven grid
+    }
+
+    #[test]
+    fn episode_stream_matches_across_randomized_configs() {
+        // Satellite: randomized configs/seeds, including epoch boundaries
+        // landing on churn-event times (handoff ordering at boundaries).
+        let mut meta = Pcg32::new(0xBEEF, 1);
+        for trial in 0..12 {
+            let mut cfg = churny_cfg();
+            cfg.network.num_users = 8 + meta.below(40);
+            cfg.network.num_aps = 1 + meta.below(4);
+            cfg.workload.episode_s = 1.0 + meta.f64() * 4.0;
+            cfg.workload.arrival_rate_hz = meta.f64() * 8.0;
+            cfg.churn.initial_active_frac = meta.f64();
+            cfg.churn.arrival_rate_hz = meta.f64() * 4.0;
+            cfg.churn.departure_rate_hz = meta.f64();
+            cfg.churn.rate_change_hz = meta.f64();
+            cfg.churn.handoff_hz = meta.f64();
+            let churn_seed = meta.next_u64();
+            let trace_seed = meta.next_u64();
+            let n_epochs = 1 + meta.below(9);
+            assert_stream_matches(&cfg, churn_seed, trace_seed, n_epochs);
+            let _ = trial;
+        }
+    }
+
+    #[test]
+    fn epoch_boundary_on_exact_event_time_keeps_planner_prefix_inclusive() {
+        // `run_dynamic` applies events with `t_s <= t0`; a boundary landing
+        // exactly on an event must put it in the *earlier* planner batch.
+        let cfg = churny_cfg();
+        let ua = user_ap(&cfg);
+        let sched = ChurnSchedule::generate(&cfg, &ua, 11);
+        assert!(!sched.events.is_empty());
+        let cut = sched.events[0].t_s;
+        let mut st = EpisodeStream::new(&cfg, &ua, 11, 12);
+        let b0 = st.epoch(0.0, cut);
+        assert!(b0.events.is_empty(), "nothing at or before t0 = 0");
+        let b1 = st.epoch(cut, f64::INFINITY);
+        assert_eq!(b1.events.first(), sched.events.first());
+    }
+
+    #[test]
+    fn cursor_count_tracks_ever_active_users() {
+        let cfg = churny_cfg();
+        let ua = user_ap(&cfg);
+        let mut st = EpisodeStream::new(&cfg, &ua, 21, 22);
+        let initial = st.cursor_count();
+        assert_eq!(
+            initial,
+            st.initial_active().iter().filter(|&&a| a).count()
+        );
+        let _ = st.epoch(0.0, f64::INFINITY);
+        let sched = ChurnSchedule::generate(&cfg, &ua, 21);
+        let mut ever: Vec<bool> = sched.initial_active.clone();
+        for e in &sched.events {
+            if matches!(e.kind, ChurnEventKind::Arrive) {
+                ever[e.user] = true;
+            }
+        }
+        assert_eq!(st.cursor_count(), ever.iter().filter(|&&a| a).count());
+    }
+}

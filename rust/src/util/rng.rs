@@ -56,6 +56,30 @@ impl Pcg32 {
         Pcg32::new(s, tag.wrapping_add(0x632B_E5AB))
     }
 
+    /// Jump the generator forward by `delta` `next_u32` steps in
+    /// O(log delta) (the standard PCG LCG jump-ahead: square-and-multiply
+    /// on the affine map). `advance(k)` leaves the generator in exactly the
+    /// state that `k` calls to [`Pcg32::next_u32`] would — this is what
+    /// lets the streaming trace generator materialize the per-user child
+    /// stream of user `u` (which sits `2u` root draws in) without stepping
+    /// the root sequentially through all earlier users.
+    pub fn advance(&mut self, mut delta: u64) {
+        let mut acc_mult: u64 = 1;
+        let mut acc_plus: u64 = 0;
+        let mut cur_mult: u64 = 6_364_136_223_846_793_005;
+        let mut cur_plus: u64 = self.inc;
+        while delta > 0 {
+            if delta & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            delta >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+    }
+
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -171,6 +195,40 @@ mod tests {
         let mut b = Pcg32::new(42, 2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn advance_equals_sequential_stepping() {
+        for &k in &[0u64, 1, 2, 3, 7, 64, 1000, 123_457] {
+            let mut seq = Pcg32::new(99, 4);
+            let mut jump = seq.clone();
+            for _ in 0..k {
+                seq.next_u32();
+            }
+            jump.advance(k);
+            for _ in 0..8 {
+                assert_eq!(seq.next_u32(), jump.next_u32(), "advance({k})");
+            }
+        }
+    }
+
+    #[test]
+    fn advance_composes_with_split() {
+        // The contract the lazy trace cursors rely on: root.advance(2u)
+        // followed by split(u) equals u sequential splits then split(u).
+        let root = Pcg32::new(7, 0xD19A);
+        let user = 1337u64;
+        let mut seq_root = root.clone();
+        for u in 0..user {
+            let _ = seq_root.split(u);
+        }
+        let mut seq_child = seq_root.split(user);
+        let mut jump_root = root.clone();
+        jump_root.advance(2 * user); // each split consumes one next_u64 = 2 steps
+        let mut jump_child = jump_root.split(user);
+        for _ in 0..16 {
+            assert_eq!(seq_child.next_u64(), jump_child.next_u64());
+        }
     }
 
     #[test]
