@@ -603,6 +603,7 @@ fn finish_plan_full(
             } else {
                 *slot = Some(RateCache::full(net, alloc));
             }
+            // era-lint: allow(panic) — the branch above just seeded the slot unconditionally
             let rates = slot.as_ref().expect("just seeded").rates();
             regret_pass(cfg, net, model, st, rates);
         }
@@ -815,6 +816,7 @@ pub fn plan_era_cached(
         if tol > 0.0 {
             for (k, &i) in wave.iter().enumerate() {
                 if clean[i] {
+                    // era-lint: allow(panic) — `clean` is set only for keys present in the cache
                     let e = cache.entries.get(&keys[i]).expect("clean ⇒ cached");
                     let cur = cohort_bg_fp(
                         cfg,
@@ -891,6 +893,7 @@ pub fn plan_era_cached(
         for (k, &i) in wave.iter().enumerate() {
             let c = &cohorts[i];
             if !resolve[k] {
+                // era-lint: allow(panic) — un-resolved cohorts are exactly the cached ones
                 let e = cache.entries.get(&keys[i]).expect("clean ⇒ cached");
                 // Collision hardening: a dirty insert from an earlier wave
                 // could in principle (p ≈ 2⁻⁶⁴) have overwritten this key
@@ -988,6 +991,7 @@ pub fn plan_era_cached(
     } else {
         cache.rates = Some(RateCache::full(net, alloc));
     }
+    // era-lint: allow(panic) — the if/else above just seeded `cache.rates` unconditionally
     let rc = cache.rates.as_ref().expect("just seeded");
     st.stats.rate_channels_recomputed = rc.last_recompute_channels();
     regret_pass(cfg, net, model, &mut st, rc.rates());

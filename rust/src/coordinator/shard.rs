@@ -322,6 +322,14 @@ pub struct ShardedPlanner {
     m: usize,
 }
 
+/// Exclusive shard access outside the parallel planning section.
+/// `Mutex::get_mut` can only fail when a solver thread panicked while
+/// holding the lock; there is nothing sane to do but propagate the panic.
+fn shard_mut(cell: &mut Mutex<Shard>) -> &mut Shard {
+    // era-lint: allow(panic) — poison means a solver thread already panicked; propagate it
+    cell.get_mut().unwrap()
+}
+
 impl ShardedPlanner {
     pub fn new(
         cfg: &Config,
@@ -357,10 +365,7 @@ impl ShardedPlanner {
     /// `Arrive` churn event).
     pub fn activate(&mut self, source: &ShardSource, user: usize) {
         let ap = self.user_ap[user];
-        self.shards[ap]
-            .get_mut()
-            .unwrap()
-            .activate(user, source, &self.model);
+        shard_mut(&mut self.shards[ap]).activate(user, source, &self.model);
     }
 
     /// Route one churn event. `RateChange` is workload-only — the planner
@@ -371,7 +376,7 @@ impl ShardedPlanner {
             ChurnEventKind::Arrive => self.activate(source, ev.user),
             ChurnEventKind::Depart => {
                 let ap = self.user_ap[ev.user];
-                self.shards[ap].get_mut().unwrap().deactivate(ev.user);
+                shard_mut(&mut self.shards[ap]).deactivate(ev.user);
             }
             ChurnEventKind::RateChange { .. } => {}
             ChurnEventKind::Handoff { ap } => {
@@ -379,12 +384,9 @@ impl ShardedPlanner {
                 if ap == from {
                     return;
                 }
-                self.shards[from].get_mut().unwrap().deactivate(ev.user);
+                shard_mut(&mut self.shards[from]).deactivate(ev.user);
                 self.user_ap[ev.user] = ap;
-                self.shards[ap]
-                    .get_mut()
-                    .unwrap()
-                    .activate(ev.user, source, &self.model);
+                shard_mut(&mut self.shards[ap]).activate(ev.user, source, &self.model);
             }
         }
     }
@@ -405,7 +407,7 @@ impl ShardedPlanner {
             .shards
             .iter_mut()
             .map(|s| {
-                let s = s.get_mut().unwrap();
+                let s = shard_mut(s);
                 (s.up_out.clone(), s.down_out.clone())
             })
             .collect();
@@ -435,7 +437,7 @@ impl ShardedPlanner {
                 .chain(ext.down.iter())
                 .map(|&v| bg_quantize(v, self.tol))
                 .collect();
-            let shard = self.shards[a].get_mut().unwrap();
+            let shard = shard_mut(&mut self.shards[a]);
             if sig != shard.ext_sig {
                 shard.cache.ext = ext;
                 shard.ext_sig = sig;
@@ -448,9 +450,7 @@ impl ShardedPlanner {
         // 3. Plan dirty shards in parallel. Inputs are fully fixed before
         //    this step and each shard is an independent island, so the
         //    result is identical for every thread count.
-        let dirty: Vec<usize> = (0..n)
-            .filter(|&a| self.shards[a].get_mut().unwrap().dirty)
-            .collect();
+        let dirty: Vec<usize> = (0..n).filter(|&a| shard_mut(&mut self.shards[a]).dirty).collect();
         let model = &self.model;
         let warm = self.warm_start;
         let shards = &self.shards;
@@ -465,7 +465,7 @@ impl ShardedPlanner {
             ..ShardEpoch::default()
         };
         for &a in &dirty {
-            let s = self.shards[a].get_mut().unwrap();
+            let s = shard_mut(&mut self.shards[a]);
             report.cohorts_resolved += s.stats.cohorts_resolved;
             report.cohorts_reused += s.stats.cohorts_reused;
         }

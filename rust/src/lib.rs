@@ -23,6 +23,9 @@
 //! * [`sim`], [`trace`] — episode simulation + workload generation.
 //! * [`metrics`], [`figures`] — evaluation metrics and the harness that
 //!   regenerates every figure of the paper's §V through the scenario engine.
+//! * [`lint`] — the repo-invariant static-analysis pass behind `era lint`:
+//!   determinism, NaN-safety, and hot-path purity checked at the source
+//!   level on every push (rules L1–L6, DESIGN.md §2h).
 //!
 //! Python (JAX + Pallas) exists only in the build path (`make artifacts`);
 //! the serving binary is pure Rust once `artifacts/` is populated.
@@ -56,6 +59,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod figures;
 pub mod latency;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod net;

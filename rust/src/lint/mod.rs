@@ -1,0 +1,295 @@
+//! `era lint` — a std-only, repo-invariant static-analysis pass.
+//!
+//! The paper's convergence and approximation-error guarantees are only
+//! reproducible because this codebase pins bit-identical numerics across
+//! threads, shards, and incremental/full planner paths. Those invariants
+//! used to be enforced reactively, by after-the-fact differential tests;
+//! this module checks them at the source level so a violation is flagged
+//! on the push that introduces it:
+//!
+//! * **L1** `float-cmp` — float `partial_cmp` call sites (NaN-unsafe; the
+//!   bug class that recurred in PRs 3, 4, and 5). Use `total_cmp`.
+//! * **L2** `hash-iter` — order-sensitive iteration over `HashMap` /
+//!   `HashSet` in determinism-critical modules.
+//! * **L3** `hot-alloc` — allocation-capable calls inside hot-path
+//!   functions (`*_ws` entry points and `era-lint: hot`-marked fns).
+//! * **L4** `panic` — `unwrap`/`expect`/`panic!` on the planner/serving
+//!   path without a justification.
+//! * **L5** `safety` — `unsafe` without a `// SAFETY:` rationale.
+//! * **L6** `wall-clock` — `SystemTime`/`Instant::now`/ambient RNG in
+//!   deterministic modules.
+//! * **W0** `waiver` — `era-lint: allow(..)` annotations that use an
+//!   unknown key or carry no justification (they suppress nothing).
+//!
+//! A finding is waived by a trailing or directly-preceding comment of the
+//! form `// era-lint: allow(hash-iter) — display-only aggregation`: the
+//! key names the rule, the text after the key is the mandatory
+//! justification. DESIGN.md §2h maps each rule to the dynamic test that
+//! backs it.
+//!
+//! Like `benchkit`, everything here is hand-rolled on `std` only — the
+//! build environment has no network registry, so no `syn`, no `regex`.
+//! The scanner is a masking lexer, not a parser: see [`source`].
+
+mod rules;
+mod source;
+
+pub use rules::{check, ALLOW_KEYS, DETERMINISM_MODULES, PANIC_MODULES};
+pub use source::{token_positions, SourceModel, Waiver, MIN_JUSTIFICATION};
+
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+
+/// Which lint rule produced a finding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleId {
+    /// L1 — float `partial_cmp` call site.
+    FloatCmp,
+    /// L2 — order-sensitive hash-container iteration.
+    HashIter,
+    /// L3 — allocation in a hot-path function.
+    HotAlloc,
+    /// L4 — panic-capable call on the planner/serving path.
+    Panic,
+    /// L5 — `unsafe` without a SAFETY rationale.
+    Safety,
+    /// L6 — wall clock / ambient RNG in a deterministic module.
+    WallClock,
+    /// W0 — malformed or unjustified waiver annotation.
+    Waiver,
+}
+
+impl RuleId {
+    /// Short rule code shown in annotations (`L1` .. `L6`, `W0`).
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleId::FloatCmp => "L1",
+            RuleId::HashIter => "L2",
+            RuleId::HotAlloc => "L3",
+            RuleId::Panic => "L4",
+            RuleId::Safety => "L5",
+            RuleId::WallClock => "L6",
+            RuleId::Waiver => "W0",
+        }
+    }
+
+    /// Stable kebab-case key used in JSON reports and `allow(..)` waivers.
+    pub fn key(self) -> &'static str {
+        match self {
+            RuleId::FloatCmp => "float-cmp",
+            RuleId::HashIter => "hash-iter",
+            RuleId::HotAlloc => "hot-alloc",
+            RuleId::Panic => "panic",
+            RuleId::Safety => "safety",
+            RuleId::WallClock => "wall-clock",
+            RuleId::Waiver => "waiver",
+        }
+    }
+}
+
+/// One lint violation at a specific file and line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the lint root (e.g. `src/sim/mod.rs`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The rule that fired.
+    pub rule: RuleId,
+    /// Human-readable description with the suggested fix.
+    pub message: String,
+}
+
+/// The result of linting a tree: every finding plus scan statistics.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All findings, sorted by file then line.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when the tree is violation-free (the `--gate` condition).
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Lint a single file's text under its root-relative path.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    rules::check(&SourceModel::new(rel_path, text))
+}
+
+/// Lint every `.rs` file under `root/{src,benches,tests}` (sorted walk,
+/// so output order is deterministic).
+pub fn run(root: &Path) -> anyhow::Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in ["src", "benches", "tests"] {
+        collect_rs(&root.join(dir), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        findings.extend(lint_source(&rel_to(root, path), &text));
+    }
+    findings.sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(LintReport {
+        findings,
+        files_scanned: files.len(),
+    })
+}
+
+/// Recursively collect `.rs` files; a missing directory is not an error
+/// (a crate without `benches/` is fine).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let entries = std::fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_to(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Human-readable one-line summary.
+pub fn summary_line(report: &LintReport) -> String {
+    format!(
+        "era lint: {} finding(s) across {} file(s)",
+        report.findings.len(),
+        report.files_scanned
+    )
+}
+
+/// Plain-text rendering: `file:line: [rule] message` per finding.
+pub fn render_text(report: &LintReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule.code(), f.message));
+    }
+    out.push_str(&summary_line(report));
+    out.push('\n');
+    out
+}
+
+/// GitHub annotation rendering (`::error file=..,line=..::msg`), like
+/// `era bench-diff` emits. `prefix` maps crate-relative paths to
+/// repo-relative ones when CI's working directory is `rust/`.
+pub fn render_github(report: &LintReport, prefix: &str) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!(
+            "::error file={prefix}{},line={}::[{}] {}\n",
+            f.file,
+            f.line,
+            f.rule.code(),
+            f.message
+        ));
+    }
+    out
+}
+
+/// `era-lint-v1` JSON report (hand-rolled like `era-bench-v1`; one
+/// finding object per line so the output diffs cleanly).
+pub fn render_json(report: &LintReport) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"format\": \"era-lint-v1\",\n");
+    out.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    out.push_str(&format!("  \"count\": {},\n", report.findings.len()));
+    out.push_str("  \"findings\": [\n");
+    for (i, f) in report.findings.iter().enumerate() {
+        let comma = if i + 1 < report.findings.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"key\": \"{}\", \
+             \"message\": \"{}\"}}{}\n",
+            json_escape(&f.file),
+            f.line,
+            f.rule.code(),
+            f.rule.key(),
+            json_escape(&f.message),
+            comma
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_codes_and_keys_are_stable() {
+        assert_eq!(RuleId::FloatCmp.code(), "L1");
+        assert_eq!(RuleId::WallClock.code(), "L6");
+        assert_eq!(RuleId::Waiver.code(), "W0");
+        assert_eq!(RuleId::HashIter.key(), "hash-iter");
+    }
+
+    #[test]
+    fn renderers_cover_every_finding() {
+        let report = LintReport {
+            findings: vec![Finding {
+                file: "src/x.rs".into(),
+                line: 7,
+                rule: RuleId::FloatCmp,
+                message: "say \"no\" to partial_cmp".into(),
+            }],
+            files_scanned: 3,
+        };
+        let text = render_text(&report);
+        assert!(text.contains("src/x.rs:7: [L1]"));
+        assert!(text.contains("era lint: 1 finding(s) across 3 file(s)"));
+        let gh = render_github(&report, "rust/");
+        assert!(gh.contains("::error file=rust/src/x.rs,line=7::[L1]"));
+        let json = render_json(&report);
+        assert!(json.contains("\"format\": \"era-lint-v1\""));
+        assert!(json.contains("\"rule\": \"L1\""));
+        assert!(json.contains("say \\\"no\\\" to partial_cmp"));
+    }
+
+    #[test]
+    fn run_scans_a_tree_and_sorts_findings() {
+        let root = std::env::temp_dir().join(format!("era-lint-mod-{}", std::process::id()));
+        let src = root.join("src");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(src.join("b.rs"), "unsafe impl Send for X {}\n").unwrap();
+        std::fs::write(src.join("a.rs"), "let o = a.partial_cmp(&b);\n").unwrap();
+        let report = run(&root).unwrap();
+        std::fs::remove_dir_all(&root).unwrap();
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.findings.len(), 2);
+        assert_eq!(report.findings[0].file, "src/a.rs");
+        assert_eq!(report.findings[0].rule, RuleId::FloatCmp);
+        assert_eq!(report.findings[1].file, "src/b.rs");
+        assert_eq!(report.findings[1].rule, RuleId::Safety);
+    }
+}

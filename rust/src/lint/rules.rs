@@ -1,0 +1,569 @@
+//! The `era lint` rule set: L1–L6 plus the W0 waiver audit.
+//!
+//! Each rule encodes an invariant this repo enforces dynamically elsewhere
+//! (differential tests, counting allocator, byte-identity pins) and checks
+//! it at the source level so a violation is caught on the push that
+//! introduces it. DESIGN.md §2h maps every rule to the dynamic test that
+//! backs it and records the deliberate scope cuts.
+
+use super::source::{is_ident_char, token_positions, SourceModel};
+use super::{Finding, RuleId};
+
+/// Modules whose iteration order, RNG, and clock discipline decide
+/// byte-identity of planner/sim output.
+pub const DETERMINISM_MODULES: &[&str] =
+    &["coordinator", "sim", "scenario", "trace", "net", "optimizer"];
+
+/// Modules on the planner/serving path where a panic kills an epoch
+/// (L4). Deliberately narrower than [`DETERMINISM_MODULES`]: `net`,
+/// `trace`, and `scenario` run at setup/teardown where `expect` on
+/// construction errors is the right behavior.
+pub const PANIC_MODULES: &[&str] = &["coordinator", "sim", "optimizer"];
+
+/// Waiver keys the rules understand; anything else is a W0 finding.
+pub const ALLOW_KEYS: &[&str] = &["float-cmp", "hash-iter", "hot-alloc", "panic", "wall-clock"];
+
+/// Allocation-capable tokens banned in hot-path function bodies (L3).
+/// `resize`/`clear`/`extend` are deliberately absent: on pre-reserved
+/// buffers they are the sanctioned capacity-keeping idiom the workspace
+/// pattern is built on, and `tests/alloc_count.rs` catches the case where
+/// they do allocate.
+const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    "Box::new(",
+    "format!",
+    "String::new(",
+    "String::from(",
+    "with_capacity(",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    ".collect(",
+    ".clone(",
+    ".push(",
+];
+
+/// Panic-capable tokens on the planner/serving path (L4). Slice indexing
+/// is deliberately not listed — see DESIGN.md §2h (delegated to debug
+/// builds' bounds checks under the full test suite).
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap()",
+    ".expect(",
+    ".unwrap_unchecked(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+/// Wall-clock / ambient-RNG tokens banned in deterministic modules (L6).
+const CLOCK_RNG_TOKENS: &[&str] = &[
+    "SystemTime",
+    "Instant::now(",
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+    "rand::",
+];
+
+/// Iteration adaptors that observe `HashMap`/`HashSet` order (L2).
+const ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_values()",
+    ".into_keys()",
+];
+
+/// Run every rule over one lexed file.
+pub fn check(model: &SourceModel) -> Vec<Finding> {
+    let mut out = Vec::new();
+    waiver_audit(model, &mut out);
+    l1_float_cmp(model, &mut out);
+    l2_hash_iter(model, &mut out);
+    l3_hot_alloc(model, &mut out);
+    l4_panic(model, &mut out);
+    l5_safety(model, &mut out);
+    l6_wall_clock(model, &mut out);
+    out.sort_by_key(|f| f.line);
+    out
+}
+
+fn finding(model: &SourceModel, idx: usize, rule: RuleId, message: String) -> Finding {
+    Finding {
+        file: model.rel_path.clone(),
+        line: idx + 1,
+        rule,
+        message,
+    }
+}
+
+/// W0 — every `era-lint: allow(...)` must use a known key and carry a
+/// justification; a waiver that fails either test suppresses nothing.
+fn waiver_audit(model: &SourceModel, out: &mut Vec<Finding>) {
+    for idx in 0..model.lines.len() {
+        for w in model.waivers_on(idx) {
+            if !ALLOW_KEYS.contains(&w.key.as_str()) {
+                let msg = format!(
+                    "unknown era-lint allow key `{}` (known: {})",
+                    w.key,
+                    ALLOW_KEYS.join(", ")
+                );
+                out.push(finding(model, idx, RuleId::Waiver, msg));
+            } else if !w.justified {
+                let msg = format!(
+                    "era-lint allow({}) without a justification — add one on the comment line",
+                    w.key
+                );
+                out.push(finding(model, idx, RuleId::Waiver, msg));
+            }
+        }
+    }
+}
+
+/// L1 — float comparisons must use `total_cmp`; a `partial_cmp` call site
+/// in a comparator panics (via the customary `.unwrap()`) or silently
+/// mis-sorts on the first NaN. Applies everywhere, including tests;
+/// `fn partial_cmp` definitions (canonical `PartialOrd` impls delegating
+/// to `Ord`) are exempt.
+fn l1_float_cmp(model: &SourceModel, out: &mut Vec<Finding>) {
+    for (idx, code) in model.code.iter().enumerate() {
+        if code.contains("fn partial_cmp") {
+            continue;
+        }
+        let calls = token_positions(code, ".partial_cmp(").len()
+            + token_positions(code, "::partial_cmp(").len();
+        if calls == 0 || model.allow_covers(idx, "float-cmp") {
+            continue;
+        }
+        let msg = "float `partial_cmp` call site — use `total_cmp` (NaN-safe, total order)";
+        out.push(finding(model, idx, RuleId::FloatCmp, msg.to_string()));
+    }
+}
+
+/// L2 — iterating a `HashMap`/`HashSet` in a determinism-critical module
+/// observes `RandomState` order and breaks byte-identity. Names declared
+/// as hash containers anywhere in the file are tracked and any
+/// order-observing adaptor (or bare `for .. in`) over them is flagged.
+fn l2_hash_iter(model: &SourceModel, out: &mut Vec<Finding>) {
+    if !model.is_src() || !DETERMINISM_MODULES.contains(&model.module()) {
+        return;
+    }
+    let names = hash_container_names(model);
+    if names.is_empty() {
+        return;
+    }
+    for (idx, code) in model.code.iter().enumerate() {
+        if model.is_test_line(idx) {
+            continue;
+        }
+        for name in &names {
+            if !iterates_name(code, name) {
+                continue;
+            }
+            if !model.allow_covers(idx, "hash-iter") {
+                let msg = format!(
+                    "order-sensitive iteration over hash container `{name}` — use a BTree \
+                     collection or sort first"
+                );
+                out.push(finding(model, idx, RuleId::HashIter, msg));
+            }
+            break;
+        }
+    }
+}
+
+/// Collect identifiers bound to `HashMap`/`HashSet` in this file: struct
+/// fields (`name: HashMap<..>`), let bindings (`let name = HashMap::..`),
+/// and fn params (`name: &HashMap<..>`). Call/argument positions are
+/// rejected (parens between the binding site and the type token).
+fn hash_container_names(model: &SourceModel) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for code in &model.code {
+        let t = code.trim_start();
+        if t.starts_with("use ") || t.starts_with("pub use ") {
+            continue;
+        }
+        for tok in ["HashMap", "HashSet"] {
+            for at in token_positions(code, tok) {
+                if let Some(name) = binding_name_before(code, at) {
+                    if !names.iter().any(|n| n == &name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Walk left from a `HashMap`/`HashSet` token to the binding it belongs
+/// to: the nearest single `:` (not `::`) or bare `=` (not a comparison or
+/// `=>`), with any paren on the way meaning "argument position, not a
+/// binding". Returns the identifier left of that delimiter.
+fn binding_name_before(code: &str, at: usize) -> Option<String> {
+    let prefix: Vec<char> = code[..at].chars().collect();
+    let mut i = prefix.len();
+    let mut delim = None;
+    while i > 0 {
+        i -= 1;
+        match prefix[i] {
+            '(' | ')' => return None,
+            ':' => {
+                if i > 0 && prefix[i - 1] == ':' {
+                    i -= 1; // path separator `::`
+                } else {
+                    delim = Some(i);
+                    break;
+                }
+            }
+            '=' => {
+                let prev = if i > 0 { prefix[i - 1] } else { ' ' };
+                let next = prefix.get(i + 1).copied().unwrap_or(' ');
+                if prev == '=' || "<>!".contains(prev) || next == '=' || next == '>' {
+                    if prev == '=' {
+                        i -= 1;
+                    }
+                    continue;
+                }
+                delim = Some(i);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let d = delim?;
+    let mut j = d;
+    while j > 0 && prefix[j - 1].is_whitespace() {
+        j -= 1;
+    }
+    let end = j;
+    while j > 0 && is_ident_char(prefix[j - 1]) {
+        j -= 1;
+    }
+    if j == end {
+        return None;
+    }
+    let name: String = prefix[j..end].iter().collect();
+    const KEYWORDS: &[&str] = &["mut", "let", "pub", "crate", "ref", "in", "where", "dyn"];
+    if KEYWORDS.contains(&name.as_str()) {
+        return None;
+    }
+    Some(name)
+}
+
+/// Does this code line iterate `name` in an order-observing way?
+fn iterates_name(code: &str, name: &str) -> bool {
+    for suffix in ITER_SUFFIXES {
+        if !token_positions(code, &format!("{name}{suffix}")).is_empty() {
+            return true;
+        }
+    }
+    if token_positions(code, "for").is_empty() {
+        return false;
+    }
+    for pat in [
+        format!("in {name}"),
+        format!("in &{name}"),
+        format!("in &mut {name}"),
+        format!("in self.{name}"),
+        format!("in &self.{name}"),
+        format!("in &mut self.{name}"),
+    ] {
+        if !token_positions(code, &pat).is_empty() {
+            return true;
+        }
+    }
+    false
+}
+
+/// L3 — allocation-capable calls inside hot-path functions (`*_ws` names
+/// and anything marked `// era-lint: hot`). Complements the counting
+/// allocator in `tests/alloc_count.rs` with whole-tree, source-level
+/// coverage. Non-interprocedural by design: callees of a hot function are
+/// either hot-marked themselves or covered by the dynamic test.
+fn l3_hot_alloc(model: &SourceModel, out: &mut Vec<Finding>) {
+    for (start, end, name) in hot_fn_spans(model) {
+        for (off, code) in model.code[start..=end].iter().enumerate() {
+            let idx = start + off;
+            let hit = ALLOC_TOKENS.iter().find(|t| !token_positions(code, t).is_empty());
+            let Some(tok) = hit else { continue };
+            if model.allow_covers(idx, "hot-alloc") {
+                continue;
+            }
+            let msg = format!(
+                "allocation-capable `{}` in hot-path fn `{name}` — use workspace scratch",
+                tok.trim_end_matches('(')
+            );
+            out.push(finding(model, idx, RuleId::HotAlloc, msg));
+        }
+    }
+}
+
+/// Find `(first_line, last_line, name)` spans of hot-path function bodies.
+fn hot_fn_spans(model: &SourceModel) -> Vec<(usize, usize, String)> {
+    let mut spans = Vec::new();
+    for (idx, code) in model.code.iter().enumerate() {
+        if model.is_test_line(idx) {
+            continue;
+        }
+        for at in token_positions(code, "fn") {
+            let name: String = code[at + 2..]
+                .trim_start()
+                .chars()
+                .take_while(|&c| is_ident_char(c))
+                .collect();
+            if name.is_empty() {
+                continue; // `fn(..)` pointer type, not an item
+            }
+            if !(name.ends_with("_ws") || model.hot_marked(idx)) {
+                continue;
+            }
+            if let Some(end) = body_end(model, idx) {
+                spans.push((idx, end, name));
+            }
+        }
+    }
+    spans
+}
+
+/// Brace-match a function body starting at its signature line; `None` for
+/// bodyless declarations (trait methods, extern fns).
+fn body_end(model: &SourceModel, fn_line: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    let mut opened = false;
+    for (idx, code) in model.code.iter().enumerate().skip(fn_line) {
+        for ch in code.chars() {
+            match ch {
+                ';' if !opened => return None,
+                '{' => {
+                    opened = true;
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if opened && depth == 0 {
+                        return Some(idx);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// L4 — panic-capable calls on the planner/serving path need an
+/// `allow(panic)` justification. `.lock().unwrap()` / `.lock().expect(..)`
+/// are exempt: propagating mutex poison after another thread already
+/// panicked is the intended behavior, not a new failure mode.
+fn l4_panic(model: &SourceModel, out: &mut Vec<Finding>) {
+    if !model.is_src() || !PANIC_MODULES.contains(&model.module()) {
+        return;
+    }
+    for (idx, code) in model.code.iter().enumerate() {
+        if model.is_test_line(idx) {
+            continue;
+        }
+        let mut hit: Option<&str> = None;
+        'tokens: for tok in PANIC_TOKENS {
+            for at in token_positions(code, tok) {
+                if !lock_exempt(model, idx, code, at) {
+                    hit = Some(tok);
+                    break 'tokens;
+                }
+            }
+        }
+        let Some(tok) = hit else { continue };
+        if model.allow_covers(idx, "panic") {
+            continue;
+        }
+        let msg = format!(
+            "panic-capable `{}` on the planner/serving path — handle the error or justify \
+             with allow(panic)",
+            tok.trim_end_matches('(')
+        );
+        out.push(finding(model, idx, RuleId::Panic, msg));
+    }
+}
+
+/// Is the panic token at `code[at..]` directly chained onto `.lock()`,
+/// either on the same line or as the continuation of the previous line?
+fn lock_exempt(model: &SourceModel, idx: usize, code: &str, at: usize) -> bool {
+    let prefix = code[..at].trim_end();
+    if prefix.ends_with(".lock()") {
+        return true;
+    }
+    if prefix.trim().is_empty() && idx > 0 {
+        return model.code[idx - 1].trim_end().ends_with(".lock()");
+    }
+    false
+}
+
+/// L5 — every `unsafe` item or block carries a `// SAFETY:` rationale on
+/// the same line or directly above (Miri dynamically backs the claims in
+/// CI's nightly job). Applies everywhere, tests included. Function-pointer
+/// *types* (`unsafe fn(..)`) declare a contract rather than discharge one
+/// and are exempt.
+fn l5_safety(model: &SourceModel, out: &mut Vec<Finding>) {
+    for (idx, code) in model.code.iter().enumerate() {
+        let mut discharge_site = false;
+        for at in token_positions(code, "unsafe") {
+            let rest = code[at + "unsafe".len()..].trim_start();
+            let fn_ptr = rest
+                .strip_prefix("fn")
+                .map(str::trim_start)
+                .is_some_and(|a| a.starts_with('('));
+            if !fn_ptr {
+                discharge_site = true;
+            }
+        }
+        if discharge_site && !model.has_safety_comment(idx) {
+            let msg = "`unsafe` without a `// SAFETY:` rationale on or above the line";
+            out.push(finding(model, idx, RuleId::Safety, msg.to_string()));
+        }
+    }
+}
+
+/// L6 — deterministic modules derive all randomness from `util::rng::Pcg32`
+/// seeds and never read the wall clock; `benchkit` and `main` (telemetry,
+/// CLI timing) are exempt by module scope.
+fn l6_wall_clock(model: &SourceModel, out: &mut Vec<Finding>) {
+    if !model.is_src() || !DETERMINISM_MODULES.contains(&model.module()) {
+        return;
+    }
+    for (idx, code) in model.code.iter().enumerate() {
+        if model.is_test_line(idx) {
+            continue;
+        }
+        let hit = CLOCK_RNG_TOKENS.iter().find(|t| !token_positions(code, t).is_empty());
+        let Some(tok) = hit else { continue };
+        if model.allow_covers(idx, "wall-clock") {
+            continue;
+        }
+        let msg = format!(
+            "`{}` in a deterministic module — derive randomness/time from the seeded \
+             episode clock",
+            tok.trim_end_matches('(')
+        );
+        out.push(finding(model, idx, RuleId::WallClock, msg));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> Vec<Finding> {
+        check(&SourceModel::new(path, src))
+    }
+
+    #[test]
+    fn l1_fires_on_call_site_not_definition() {
+        let f = lint("src/util/x.rs", "let o = a.partial_cmp(&b);\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::FloatCmp);
+        assert_eq!(f[0].line, 1);
+        let canonical = "fn partial_cmp(&self, o: &Self) -> Option<Ordering> {\n    \
+                         Some(self.cmp(o))\n}\n";
+        assert!(lint("src/util/x.rs", canonical).is_empty());
+    }
+
+    #[test]
+    fn l2_tracks_declared_names_and_scope() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { slots: HashMap<u32, u32> }\n\
+                   fn f(s: &mut S) { for k in s.slots.keys() { let _ = k; } }\n";
+        let f = lint("src/coordinator/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::HashIter);
+        assert_eq!(f[0].line, 3);
+        // Same source outside a determinism module: clean.
+        assert!(lint("src/util/x.rs", src).is_empty());
+        // Lookup-only use: clean.
+        let lookups = "struct S { slots: std::collections::HashMap<u32, u32> }\n\
+                       fn f(s: &S) -> bool { s.slots.contains_key(&1) }\n";
+        assert!(lint("src/coordinator/x.rs", lookups).is_empty());
+    }
+
+    #[test]
+    fn l3_fires_in_ws_and_hot_marked_fns_only() {
+        let ws = "fn solve_gd_ws(v: &mut Vec<f64>) {\n    let tmp = v.clone();\n    \
+                  let _ = tmp;\n}\n";
+        let f = lint("src/optimizer/x.rs", ws);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::HotAlloc);
+        assert_eq!(f[0].line, 2);
+        let marked = "// era-lint: hot\nfn inner(v: &[f64]) -> Vec<f64> {\n    v.to_vec()\n}\n";
+        let f = lint("src/optimizer/x.rs", marked);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        // Unmarked fn allocating freely: clean.
+        assert!(lint("src/optimizer/x.rs", "fn cold() -> Vec<u8> { vec![0] }\n").is_empty());
+    }
+
+    #[test]
+    fn l4_fires_in_panic_modules_with_lock_exemption() {
+        let f = lint("src/sim/x.rs", "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::Panic);
+        let lock = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n";
+        assert!(lint("src/coordinator/x.rs", lock).is_empty());
+        let net = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert!(lint("src/net/x.rs", net).is_empty());
+    }
+
+    #[test]
+    fn l5_requires_safety_rationale() {
+        let f = lint("src/util/x.rs", "unsafe impl Send for X {}\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::Safety);
+        let documented = "// SAFETY: X owns its pointer exclusively between waves\n\
+                          unsafe impl Send for X {}\n\
+                          unsafe impl Sync for X {}\n";
+        assert!(lint("src/util/x.rs", documented).is_empty());
+        // fn-pointer type is a contract declaration, not a discharge site.
+        let fn_ptr = "struct T { call: unsafe fn(*const (), usize) }\n";
+        assert!(lint("src/util/x.rs", fn_ptr).is_empty());
+    }
+
+    #[test]
+    fn l6_fires_on_wall_clock_in_deterministic_modules() {
+        let src = "fn f() -> std::time::Instant { std::time::Instant::now() }\n";
+        let f = lint("src/trace/x.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::WallClock);
+        assert!(lint("src/benchkit.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waivers_suppress_and_are_audited() {
+        let ok = "fn f(o: Option<u32>) -> u32 {\n    \
+                  // era-lint: allow(panic) — input validated by caller contract\n    \
+                  o.unwrap()\n}\n";
+        assert!(lint("src/sim/x.rs", ok).is_empty());
+        let bare = "fn f(o: Option<u32>) -> u32 {\n    o.unwrap() // era-lint: allow(panic)\n}\n";
+        let f = lint("src/sim/x.rs", bare);
+        assert_eq!(f.len(), 2, "unjustified waiver: W0 plus the undamped L4");
+        assert!(f.iter().any(|x| x.rule == RuleId::Waiver));
+        assert!(f.iter().any(|x| x.rule == RuleId::Panic));
+        let unknown = "let x = 1; // era-lint: allow(everything) — because reasons here\n";
+        let f = lint("src/util/x.rs", unknown);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RuleId::Waiver);
+    }
+
+    #[test]
+    fn test_scope_is_exempt_from_l2_l4_l6() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(o: Option<u32>) -> u32 { o.unwrap() }\n}\n";
+        assert!(lint("src/sim/x.rs", src).is_empty());
+        let t = "fn f(o: Option<u32>) -> u32 { o.unwrap() }\n";
+        assert!(lint("tests/x.rs", t).is_empty());
+    }
+}

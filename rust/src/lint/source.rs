@@ -1,0 +1,552 @@
+//! Source model for `era lint`: a std-only lexer that separates code from
+//! comments/strings while preserving line structure, plus the scope and
+//! annotation lookups the rules share.
+//!
+//! The lexer is deliberately not a Rust parser. It tracks exactly the four
+//! lexical states that matter for masking — line comments, (nested) block
+//! comments, string literals (plain, raw, byte), and char literals — and
+//! replaces masked characters with spaces so every byte keeps its original
+//! line and column. Rules then do token matching against `code` (what the
+//! compiler sees) and annotation matching against `comments` (what the
+//! humans wrote), and can never be fooled by a pattern inside a string or
+//! a doc comment.
+
+/// One `era-lint: allow(<key>)` annotation found in a comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// The key inside `allow(...)`, e.g. `hash-iter`.
+    pub key: String,
+    /// True when the same comment line carries a real justification
+    /// (at least [`MIN_JUSTIFICATION`] alphanumeric characters after the
+    /// closing paren). Unjustified waivers do not suppress anything and
+    /// are themselves reported as W0 findings.
+    pub justified: bool,
+}
+
+/// Minimum alphanumeric characters required after `allow(<key>)` for the
+/// waiver to count as justified.
+pub const MIN_JUSTIFICATION: usize = 8;
+
+/// How many annotation-ish lines (comment-only, attribute-only) a waiver
+/// or SAFETY lookup will walk upward before giving up.
+const WALK_UP_LIMIT: usize = 30;
+
+/// A lexed source file: raw lines plus masked views and per-line scopes.
+pub struct SourceModel {
+    /// Path relative to the lint root, e.g. `src/sim/mod.rs`.
+    pub rel_path: String,
+    /// Raw source lines (without trailing newline).
+    pub lines: Vec<String>,
+    /// Code view: comments and string/char literals blanked to spaces.
+    pub code: Vec<String>,
+    /// Comment view: everything except comment text blanked to spaces.
+    pub comments: Vec<String>,
+    /// True for lines inside a `#[cfg(test)]` region (or anywhere in a
+    /// `tests/` / `benches/` file).
+    in_test: Vec<bool>,
+    /// Waivers parsed per line from the comment view.
+    waivers: Vec<Vec<Waiver>>,
+    /// Lines whose comment carries an `era-lint: hot` marker.
+    hot_marks: Vec<bool>,
+}
+
+/// True for characters that can appear in a Rust identifier.
+pub fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+impl SourceModel {
+    /// Lex `text` into masked views and per-line scopes.
+    pub fn new(rel_path: &str, text: &str) -> SourceModel {
+        let (code_text, comment_text) = mask(text);
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let code: Vec<String> = code_text.lines().map(str::to_string).collect();
+        let comments: Vec<String> = comment_text.lines().map(str::to_string).collect();
+        let whole_file = rel_path.starts_with("tests/") || rel_path.starts_with("benches/");
+        let in_test = test_regions(&code, whole_file);
+        let mut waivers = Vec::with_capacity(comments.len());
+        let mut hot_marks = Vec::with_capacity(comments.len());
+        for c in &comments {
+            let (w, hot) = parse_annotations(c);
+            waivers.push(w);
+            hot_marks.push(hot);
+        }
+        SourceModel {
+            rel_path: rel_path.to_string(),
+            lines,
+            code,
+            comments,
+            in_test,
+            waivers,
+            hot_marks,
+        }
+    }
+
+    /// First path segment under `src/` (`src/sim/mod.rs` -> `sim`,
+    /// `src/benchkit.rs` -> `benchkit`); the top directory otherwise
+    /// (`tests/lint_self.rs` -> `tests`).
+    pub fn module(&self) -> &str {
+        let rest = self.rel_path.strip_prefix("src/").unwrap_or(&self.rel_path);
+        let seg = rest.split('/').next().unwrap_or(rest);
+        seg.strip_suffix(".rs").unwrap_or(seg)
+    }
+
+    /// True when the file lives under `src/` (rules scoped to shipping
+    /// code use this to skip `tests/` and `benches/` trees entirely).
+    pub fn is_src(&self) -> bool {
+        self.rel_path.starts_with("src/")
+    }
+
+    /// True when `idx` (0-based) is inside test scope.
+    pub fn is_test_line(&self, idx: usize) -> bool {
+        self.in_test.get(idx).copied().unwrap_or(false)
+    }
+
+    /// All waivers parsed on line `idx`.
+    pub fn waivers_on(&self, idx: usize) -> &[Waiver] {
+        self.waivers.get(idx).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// True when a justified `allow(key)` waiver covers line `idx`: either
+    /// on the line itself (trailing comment) or on a comment/attribute
+    /// line directly above it.
+    pub fn allow_covers(&self, idx: usize, key: &str) -> bool {
+        let hit = |i: usize| self.waivers_on(i).iter().any(|w| w.key == key && w.justified);
+        if hit(idx) {
+            return true;
+        }
+        self.walk_up(idx, false).any(hit)
+    }
+
+    /// True when line `idx` is covered by an `era-lint: hot` marker (same
+    /// line or a comment/attribute line directly above).
+    pub fn hot_marked(&self, idx: usize) -> bool {
+        if self.hot_marks.get(idx).copied().unwrap_or(false) {
+            return true;
+        }
+        self.walk_up(idx, false)
+            .any(|i| self.hot_marks.get(i).copied().unwrap_or(false))
+    }
+
+    /// True when a `SAFETY:` comment covers line `idx`. The walk-up also
+    /// skips one-line `unsafe impl` code lines so a single comment can
+    /// cover an adjacent `Send`/`Sync` pair.
+    pub fn has_safety_comment(&self, idx: usize) -> bool {
+        let hit = |i: usize| self.comments.get(i).is_some_and(|c| c.contains("SAFETY:"));
+        if hit(idx) {
+            return true;
+        }
+        self.walk_up(idx, true).any(hit)
+    }
+
+    /// Iterator over annotation-ish lines above `idx`: comment-only and
+    /// attribute-only lines (plus, when `skip_unsafe_impl` is set,
+    /// one-line `unsafe impl` items). Stops at the first other code line.
+    fn walk_up(&self, idx: usize, skip_unsafe_impl: bool) -> impl Iterator<Item = usize> + '_ {
+        let mut i = idx;
+        let mut steps = 0;
+        std::iter::from_fn(move || {
+            if i == 0 || steps >= WALK_UP_LIMIT {
+                return None;
+            }
+            i -= 1;
+            steps += 1;
+            let code = self.code[i].trim();
+            let annotationish = code.is_empty()
+                || code.starts_with("#[")
+                || code.starts_with("#![")
+                || (skip_unsafe_impl && code.starts_with("unsafe impl"));
+            if annotationish {
+                Some(i)
+            } else {
+                None
+            }
+        })
+    }
+}
+
+/// Parse an `era-lint:` annotation out of one comment line. Returns the
+/// waivers found plus whether the line carries a `hot` marker.
+///
+/// Only an annotation at the *start* of the comment counts (nothing but
+/// whitespace and comment decoration before it) — prose that merely
+/// mentions the syntax, like this doc comment, is never parsed as a
+/// live annotation.
+fn parse_annotations(comment: &str) -> (Vec<Waiver>, bool) {
+    let mut waivers = Vec::new();
+    let mut hot = false;
+    let Some(pos) = comment.find("era-lint:") else {
+        return (waivers, hot);
+    };
+    let decoration_only = comment[..pos]
+        .chars()
+        .all(|c| c.is_whitespace() || matches!(c, '/' | '*' | '!'));
+    if !decoration_only {
+        return (waivers, hot);
+    }
+    let rest = comment[pos + "era-lint:".len()..].trim_start();
+    if rest.starts_with("hot") {
+        hot = true;
+    } else if let Some(inner) = rest.strip_prefix("allow(") {
+        if let Some(close) = inner.find(')') {
+            let key = inner[..close].trim().to_string();
+            let after = &inner[close + 1..];
+            let alnum = after.chars().filter(|c| c.is_alphanumeric()).count();
+            waivers.push(Waiver {
+                key,
+                justified: alnum >= MIN_JUSTIFICATION,
+            });
+        }
+    }
+    (waivers, hot)
+}
+
+/// Track `#[cfg(test)]` brace regions over the masked code lines.
+fn test_regions(code: &[String], whole_file: bool) -> Vec<bool> {
+    let mut out = Vec::with_capacity(code.len());
+    let mut depth = 0usize;
+    let mut pending = false;
+    let mut region_depth: Option<usize> = None;
+    for line in code {
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        out.push(whole_file || region_depth.is_some() || pending);
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if pending {
+                        region_depth = region_depth.or(Some(depth));
+                        pending = false;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if region_depth.is_some_and(|d| depth <= d) {
+                        region_depth = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Byte offsets in `hay` where `needle` occurs as a standalone token: a
+/// needle starting (ending) with an identifier character must not be
+/// preceded (followed) by one.
+pub fn token_positions(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    if needle.is_empty() {
+        return out;
+    }
+    let check_start = needle.chars().next().is_some_and(is_ident_char);
+    let check_end = needle.chars().next_back().is_some_and(is_ident_char);
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(needle) {
+        let at = from + rel;
+        from = at + needle.len().max(1);
+        if check_start && hay[..at].chars().next_back().is_some_and(is_ident_char) {
+            continue;
+        }
+        let after = &hay[at + needle.len()..];
+        if check_end && after.chars().next().is_some_and(is_ident_char) {
+            continue;
+        }
+        out.push(at);
+    }
+    out
+}
+
+/// Split `text` into a code view and a comment view of identical shape:
+/// every masked character becomes a space, newlines are preserved, so a
+/// byte at `(line, col)` in either view sits at `(line, col)` in `text`.
+fn mask(text: &str) -> (String, String) {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut code = vec![' '; n];
+    let mut comment = vec![' '; n];
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            code[i] = '\n';
+            comment[i] = '\n';
+            i += 1;
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                comment[i] = chars[i];
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            i = skip_block_comment(&chars, i, &mut code, &mut comment);
+        } else if is_raw_string_start(&chars, i) {
+            i = skip_raw_string(&chars, i, &mut code);
+        } else if c == '"' {
+            i = skip_string(&chars, i, &mut code);
+        } else if c == '\'' && is_char_literal(&chars, i) {
+            i = skip_char_literal(&chars, i);
+        } else {
+            code[i] = c;
+            i += 1;
+        }
+    }
+    (code.into_iter().collect(), comment.into_iter().collect())
+}
+
+/// Mask a (nested) block comment starting at `i`; returns the index after.
+fn skip_block_comment(
+    chars: &[char],
+    start: usize,
+    code: &mut [char],
+    comment: &mut [char],
+) -> usize {
+    let n = chars.len();
+    let mut depth = 0;
+    let mut i = start;
+    while i < n {
+        if chars[i] == '\n' {
+            code[i] = '\n';
+            comment[i] = '\n';
+            i += 1;
+        } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+            depth += 1;
+            comment[i] = '/';
+            comment[i + 1] = '*';
+            i += 2;
+        } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+            depth -= 1;
+            comment[i] = '*';
+            comment[i + 1] = '/';
+            i += 2;
+            if depth == 0 {
+                break;
+            }
+        } else {
+            comment[i] = chars[i];
+            i += 1;
+        }
+    }
+    i
+}
+
+/// True when position `i` starts a raw (byte) string literal: `r"`,
+/// `r#"`, `br"`, ... — and the `r`/`b` is not the tail of an identifier.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if i > 0 && is_ident_char(chars[i - 1]) {
+        return false;
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j >= chars.len() || chars[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < chars.len() && chars[j] == '#' {
+        j += 1;
+    }
+    j < chars.len() && chars[j] == '"'
+}
+
+/// Mask a raw string starting at `i`; returns the index after it.
+fn skip_raw_string(chars: &[char], i: usize, code: &mut [char]) -> usize {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    j += 1; // the `r`
+    let mut hashes = 0;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // opening quote
+    while j < chars.len() {
+        if chars[j] == '\n' {
+            code[j] = '\n';
+            j += 1;
+        } else if chars[j] == '"' && chars[j + 1..].iter().take(hashes).all(|&c| c == '#') {
+            return j + 1 + hashes;
+        } else {
+            j += 1;
+        }
+    }
+    j
+}
+
+/// Mask a plain/byte string starting at the `"` at `i` (the `b` prefix, if
+/// any, was already emitted as code — harmless); returns the index after.
+fn skip_string(chars: &[char], i: usize, code: &mut [char]) -> usize {
+    let mut j = i + 1;
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => {
+                // A `\` line continuation must keep its newline in both
+                // views or every later line number would shift.
+                if chars.get(j + 1) == Some(&'\n') {
+                    code[j + 1] = '\n';
+                }
+                j += 2;
+            }
+            '"' => return j + 1,
+            '\n' => {
+                code[j] = '\n';
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Distinguish a char literal from a lifetime at a `'`: it is a literal
+/// when followed by an escape, or when the character after next closes it.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Mask a char literal starting at `i`; returns the index after it.
+fn skip_char_literal(chars: &[char], i: usize) -> usize {
+    let mut j = i + 1;
+    if chars.get(j) == Some(&'\\') {
+        j += 2;
+        // `'\u{1F600}'`: skip to the closing brace of the escape.
+        if chars.get(i + 2) == Some(&'u') {
+            while j < chars.len() && chars[j] != '}' {
+                j += 1;
+            }
+            j += 1;
+        }
+    } else {
+        j += 1;
+    }
+    // Now expect the closing quote.
+    if chars.get(j) == Some(&'\'') {
+        j + 1
+    } else {
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_and_block_comments() {
+        let m = SourceModel::new("src/x.rs", "let a = 1; // trailing\n/* b */ let c = 2;\n");
+        assert_eq!(m.code[0].trim_end(), "let a = 1;");
+        assert!(m.comments[0].contains("trailing"));
+        assert_eq!(m.code[1].trim(), "let c = 2;");
+        assert!(m.comments[1].contains("b"));
+    }
+
+    #[test]
+    fn masks_nested_block_comments() {
+        let m = SourceModel::new("src/x.rs", "/* outer /* inner */ still */ let x = 1;\n");
+        assert_eq!(m.code[0].trim(), "let x = 1;");
+    }
+
+    #[test]
+    fn masks_strings_and_keeps_columns() {
+        let src = "let s = \"// not a comment\"; let t = 1;\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert!(!m.code[0].contains("not a comment"));
+        assert!(m.comments[0].trim().is_empty());
+        let at = m.code[0].find("let t").unwrap();
+        assert_eq!(&src[at..at + 5], "let t");
+    }
+
+    #[test]
+    fn masks_raw_strings_with_hashes() {
+        let src = "let s = r#\"has \"quotes\" and // slashes\"#; let u = 2;\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert!(!m.code[0].contains("slashes"));
+        assert!(m.code[0].contains("let u = 2;"));
+    }
+
+    #[test]
+    fn string_line_continuation_keeps_line_count() {
+        let src = "let s = \"one\\\n    two\";\nlet after = 3;\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert_eq!(m.code.len(), m.lines.len());
+        assert!(m.code[2].contains("let after = 3;"));
+    }
+
+    #[test]
+    fn distinguishes_lifetimes_from_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert!(m.code[0].contains("'a str"));
+        assert!(!m.code[0].contains("'x'"));
+        let escaped = SourceModel::new("src/x.rs", "let c = '\\n'; let d = 1;\n");
+        assert!(escaped.code[0].contains("let d = 1;"));
+    }
+
+    #[test]
+    fn tracks_cfg_test_regions() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert!(!m.is_test_line(0));
+        assert!(m.is_test_line(3));
+        assert!(!m.is_test_line(5));
+    }
+
+    #[test]
+    fn whole_file_test_scope_for_tests_dir() {
+        let m = SourceModel::new("tests/x.rs", "fn anything() {}\n");
+        assert!(m.is_test_line(0));
+    }
+
+    #[test]
+    fn parses_waiver_justification() {
+        let good = "x // era-lint: allow(hash-iter) — display-only aggregation\n";
+        let m = SourceModel::new("src/x.rs", good);
+        assert!(m.allow_covers(0, "hash-iter"));
+        let bad = "x // era-lint: allow(hash-iter)\n";
+        let m = SourceModel::new("src/x.rs", bad);
+        assert!(!m.allow_covers(0, "hash-iter"));
+        assert_eq!(m.waivers_on(0).len(), 1);
+        assert!(!m.waivers_on(0)[0].justified);
+    }
+
+    #[test]
+    fn waiver_walks_up_over_comments_and_attrs() {
+        let src = "// era-lint: allow(panic) — poison propagation only\n#[inline]\nfn f() {}\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert!(m.allow_covers(2, "panic"));
+        assert!(!m.allow_covers(2, "hash-iter"));
+    }
+
+    #[test]
+    fn safety_walkup_skips_unsafe_impl_lines() {
+        let src = "// SAFETY: raw pointer only read while workers parked\n\
+                   unsafe impl Send for X {}\n\
+                   unsafe impl Sync for X {}\n";
+        let m = SourceModel::new("src/x.rs", src);
+        assert!(m.has_safety_comment(1));
+        assert!(m.has_safety_comment(2));
+    }
+
+    #[test]
+    fn token_positions_respect_identifier_boundaries() {
+        assert_eq!(token_positions("my_unsafe unsafe", "unsafe"), vec![10]);
+        assert_eq!(token_positions("a.unwrap() b.unwrap()", ".unwrap()").len(), 2);
+        assert!(token_positions("unsafer", "unsafe").is_empty());
+    }
+
+    #[test]
+    fn module_extraction() {
+        assert_eq!(SourceModel::new("src/sim/mod.rs", "").module(), "sim");
+        assert_eq!(SourceModel::new("src/benchkit.rs", "").module(), "benchkit");
+        assert_eq!(SourceModel::new("tests/lint_self.rs", "").module(), "tests");
+    }
+}

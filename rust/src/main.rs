@@ -8,6 +8,7 @@
 //!   era ligd-demo                                     Li-GD vs cold GD iterations
 //!   era scale   [--preset P] [--users N] [--threads N] [--rss-ceiling-mb M]
 //!   era bench-diff --base A.json --new B.json         diff era-bench-v1 records
+//!   era lint    [--gate] [--json PATH] [--root DIR] [--prefix P]
 //!   era info                                          model zoo / scenario presets
 //!
 //! Every experiment path goes through the scenario engine
@@ -51,10 +52,11 @@ fn main() {
         "ligd-demo" => cmd_ligd_demo(&flags),
         "scale" => cmd_scale(&flags),
         "bench-diff" => cmd_bench_diff(&flags),
+        "lint" => cmd_lint(&flags),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: era <run|figures|plan|serve|ligd-demo|scale|bench-diff|info> [flags]\n\
+                "usage: era <run|figures|plan|serve|ligd-demo|scale|bench-diff|lint|info> [flags]\n\
                  run        --scenario FILE|PRESET --threads N --out PATH --md\n\
                  figures    --fig N --scale S --out PATH   regenerate paper figures\n\
                  plan       --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N --threads N\n\
@@ -63,6 +65,7 @@ fn main() {
                  scale      --preset metro --users N --aps N --channels N --replan D --threads N\n\
                             --rss-ceiling-mb M (exit 1 over ceiling) --quiet\n\
                  bench-diff --base BENCH.json --new BENCH.json --warn-pct 25 [--gate]\n\
+                 lint       [--gate] [--json PATH] [--root DIR] [--prefix P]  repo-invariant lints\n\
                  info                                      model zoo + scenario presets"
             );
             Ok(())
@@ -581,6 +584,30 @@ fn cmd_bench_diff(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         if flags.contains_key("gate") {
             anyhow::bail!("perf gate failed");
         }
+    }
+    Ok(())
+}
+
+/// `era lint [--gate] [--json PATH] [--root DIR] [--prefix P]`: run the
+/// repo-invariant static-analysis pass (determinism, NaN-safety, hot-path
+/// purity — see `era::lint` and DESIGN.md §2h) over `{src,benches,tests}`
+/// under `--root` (default `.`, the crate directory). Findings print as
+/// GitHub `::error` annotations; `--prefix rust/` maps crate-relative
+/// paths to repo-relative ones when CI's working directory is `rust/`.
+/// `--gate` exits 1 on any finding; `--json` writes an `era-lint-v1`
+/// report alongside.
+fn cmd_lint(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let root = flags.get("root").map(String::as_str).unwrap_or(".");
+    let prefix = flags.get("prefix").map(String::as_str).unwrap_or("");
+    let report = era::lint::run(std::path::Path::new(root))?;
+    print!("{}", era::lint::render_github(&report, prefix));
+    eprintln!("{}", era::lint::summary_line(&report));
+    if let Some(path) = flags.get("json") {
+        std::fs::write(path, era::lint::render_json(&report))
+            .map_err(|e| anyhow::anyhow!("failed to write {path}: {e}"))?;
+    }
+    if flags.contains_key("gate") && !report.is_clean() {
+        anyhow::bail!("lint gate failed: {} finding(s)", report.findings.len());
     }
     Ok(())
 }

@@ -10,8 +10,20 @@
 use super::cohort::{CohortProblem, CohortVars, SicOrders};
 use super::utility::{eval, Evald};
 use crate::latency::dlambda_dr;
+use std::cell::RefCell;
 
 const LN2: f64 = std::f64::consts::LN_2;
+
+thread_local! {
+    /// Per-thread adjoint scratch for [`backward`]: the rate-node adjoint
+    /// rows grow to the largest cohort the thread has seen and are then
+    /// reused for every later backward pass. Before this existed, the two
+    /// `vec![0.0; nu]` rows allocated on every accepted GD step — the
+    /// exact bug class `tests/alloc_count.rs` pins at zero for the solve
+    /// loop (era-lint L3 caught it on the first whole-tree sweep).
+    static ADJ_SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// Evaluate Γ and ∇Γ. Returns the forward intermediates and writes the
 /// gradient (same layout as `CohortVars::x`) into `grad`.
@@ -29,6 +41,7 @@ pub fn eval_grad(
 /// Backward-only entry: reuse a forward `Evald` already computed at `v`
 /// (the GD loop's accepted trial point — §Perf: saves one forward per
 /// accepted step).
+// era-lint: hot
 pub fn grad_from_eval(
     p: &CohortProblem,
     v: &CohortVars,
@@ -48,6 +61,7 @@ pub fn grad_from_eval(
     backward(p, v, orders, ev, grad);
 }
 
+// era-lint: hot
 fn backward(
     p: &CohortProblem,
     v: &CohortVars,
@@ -55,10 +69,32 @@ fn backward(
     ev: &Evald,
     grad: &mut [f64],
 ) {
+    ADJ_SCRATCH.with(|s| {
+        let (a_rate_up, a_rate_down) = &mut *s.borrow_mut();
+        backward_with(p, v, orders, ev, grad, a_rate_up, a_rate_down);
+    });
+}
+
+/// The actual adjoint sweep, with the two per-user rate-adjoint rows
+/// passed in as reusable scratch (zeroed/resized in place — capacity is
+/// kept across calls, so steady-state backward passes never allocate).
+// era-lint: hot
+#[allow(clippy::too_many_arguments)]
+fn backward_with(
+    p: &CohortProblem,
+    v: &CohortVars,
+    orders: &SicOrders,
+    ev: &Evald,
+    grad: &mut [f64],
+    a_rate_up: &mut Vec<f64>,
+    a_rate_down: &mut Vec<f64>,
+) {
     let (nu, nc) = (p.n_users, p.n_channels);
     // Per-user adjoints of the rate nodes.
-    let mut a_rate_up = vec![0.0; nu];
-    let mut a_rate_down = vec![0.0; nu];
+    a_rate_up.clear();
+    a_rate_up.resize(nu, 0.0);
+    a_rate_down.clear();
+    a_rate_down.resize(nu, 0.0);
 
     for i in 0..nu {
         let offloads = p.f_edge[i] > 0.0;

@@ -10,6 +10,7 @@ use super::cohort::{CohortProblem, CohortVars};
 
 /// Euclidean projection of `row` onto the probability simplex
 /// {x : x ≥ 0, Σx = 1} (Held–Wolfe–Crowder / sorted-threshold algorithm).
+// era-lint: hot
 pub fn project_simplex(row: &mut [f64]) {
     let n = row.len();
     if n == 0 {
@@ -28,6 +29,7 @@ pub fn project_simplex(row: &mut [f64]) {
         buf[..n].copy_from_slice(row);
         &mut buf[..n]
     } else {
+        // era-lint: allow(hot-alloc) — M > 32 fallback, never hit by cohort-sized rows
         heap = row.to_vec();
         &mut heap
     };
@@ -59,6 +61,7 @@ pub fn project_simplex(row: &mut [f64]) {
 /// Hot path: called twice per GD backtracking probe (on workspace-owned
 /// buffers — see `optimizer::workspace`); the simplex projection below is
 /// allocation-free for cohort-sized rows, so the whole projection is too.
+// era-lint: hot
 pub fn project(v: &mut CohortVars, p: &CohortProblem) {
     let (nu, nc) = (v.n_users, v.n_channels);
     for u in 0..nu {

@@ -86,6 +86,7 @@ pub fn eval(p: &CohortProblem, v: &CohortVars, orders: &SicOrders) -> Evald {
 }
 
 /// Forward pass into a caller-owned workspace.
+// era-lint: hot
 pub fn eval_into(p: &CohortProblem, v: &CohortVars, orders: &SicOrders, ev: &mut Evald) {
     let (nu, nc) = (p.n_users, p.n_channels);
     debug_assert_eq!(ev.s_up.len(), nu * nc);

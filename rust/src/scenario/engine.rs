@@ -365,6 +365,7 @@ pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::
     let model = zoo::by_name(&cfg.workload.model)
         .ok_or_else(|| anyhow::anyhow!("unknown model `{}`", cfg.workload.model))?;
 
+    // era-lint: allow(wall-clock) — planner wall-time telemetry only, never steers results
     let t0 = std::time::Instant::now();
     let (ds, info) = strat.decide_with_stats(cfg, net, &model);
     let plan_wall_s = t0.elapsed().as_secs_f64();

@@ -411,6 +411,7 @@ impl DesCore {
     /// [`run_des`] loop).
     fn drain_until(&mut self, t_lim: f64) {
         while self.heap.peek_t().is_some_and(|t| t < t_lim) {
+            // era-lint: allow(panic) — the loop guard just peeked a head element
             let ev = self.heap.pop().expect("peeked");
             match ev.kind {
                 EvKind::EdgeArrive { req } => {
@@ -707,6 +708,7 @@ pub fn run_dynamic_opts(
             next_ev += 1;
         }
         let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
+        // era-lint: allow(wall-clock) — planner wall-time telemetry only, never steers the sim
         let tp = std::time::Instant::now();
         let (ds, info) = match cache.as_mut() {
             Some(c) => strat.decide_incremental(cfg, net_e, model, &active, c),
@@ -731,6 +733,7 @@ pub fn run_dynamic_opts(
                 } else {
                     serve_rates = Some(crate::net::RateCache::full(net_e, alloc));
                 }
+                // era-lint: allow(panic) — the if/else above just seeded `serve_rates`
                 let r = serve_rates.as_ref().expect("just seeded").rates();
                 (r.up.clone(), r.down.clone())
             }
@@ -879,6 +882,7 @@ pub fn run_dynamic_streamed(
             }
         }
         let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
+        // era-lint: allow(wall-clock) — planner wall-time telemetry only, never steers the sim
         let tp = std::time::Instant::now();
         let (ds, info) = match cache.as_mut() {
             Some(c) => strat.decide_incremental(cfg, net_e, model, &active, c),
@@ -903,6 +907,7 @@ pub fn run_dynamic_streamed(
                 } else {
                     serve_rates = Some(crate::net::RateCache::full(net_e, alloc));
                 }
+                // era-lint: allow(panic) — the if/else above just seeded `serve_rates`
                 let r = serve_rates.as_ref().expect("just seeded").rates();
                 (r.up.clone(), r.down.clone())
             }

@@ -138,10 +138,12 @@ pub fn run_scale(
         let n_events = batch.events.len();
         planner.apply_events(&source, &batch.events);
 
+        // era-lint: allow(wall-clock) — epoch wall-time telemetry only, never steers the plan
         let tp = std::time::Instant::now();
         let ep = planner.plan_epoch(opts.threads);
         let plan_wall_s = tp.elapsed().as_secs_f64();
 
+        // era-lint: allow(wall-clock) — serve-loop wall-time telemetry only
         let ts = std::time::Instant::now();
         let n_reqs = batch.requests.len();
         for rq in batch.requests {

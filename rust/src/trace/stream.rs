@@ -27,7 +27,7 @@
 use super::{ChurnEvent, ChurnEventKind, Request};
 use crate::config::Config;
 use crate::util::rng::Pcg32;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Lazy replay of [`ChurnSchedule::generate`]: same seed stream (0xC4E2),
 /// same draw order, events surfaced incrementally by time horizon.
@@ -281,7 +281,11 @@ pub struct EpisodeStream {
     /// Generated churn events not yet released to the planner (their trace
     /// effects are applied to the cursors at generation time).
     planner_queue: std::collections::VecDeque<ChurnEvent>,
-    cursors: HashMap<usize, UserCursor>,
+    /// Keyed by user id. A `BTreeMap` (not `HashMap`) on purpose: the
+    /// horizon-extension loop iterates it, and iteration order must be
+    /// deterministic for the stream to stay byte-identical with the
+    /// materialized generators (era-lint L2).
+    cursors: BTreeMap<usize, UserCursor>,
     /// Pristine root of the 0xD19A trace stream; cursor `u` clones it,
     /// advances `2u` steps and splits — identical to `u` sequential splits.
     root: Pcg32,
@@ -296,7 +300,7 @@ impl EpisodeStream {
     pub fn new(cfg: &Config, user_ap: &[usize], churn_seed: u64, trace_seed: u64) -> Self {
         let churn = ChurnStream::new(cfg, user_ap, churn_seed);
         let root = Pcg32::new(trace_seed, 0xD19A);
-        let mut cursors = HashMap::new();
+        let mut cursors = BTreeMap::new();
         for (u, &a) in churn.initial_active().iter().enumerate() {
             if a {
                 cursors.insert(u, Self::make_cursor(&root, u, true));

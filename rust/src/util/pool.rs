@@ -74,7 +74,7 @@ struct TaskState {
     idle_cv: Condvar,
 }
 
-// Safety: `data` is only dereferenced under the protocol above, which the
+// SAFETY: `data` is only dereferenced under the protocol above, which the
 // owner's shutdown handshake makes data-race-free; the closure itself is
 // required to be Sync by `run_indexed`; all other fields are Sync
 // primitives.
@@ -90,6 +90,9 @@ impl TaskState {
     }
 }
 
+// SAFETY: (caller contract) `data` must point to a live `F` outliving the call;
+// `run_indexed` guarantees this by erasing a stack-borrowed closure and not
+// returning until every helper has exited the task protocol.
 unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
     (*(data as *const F))(i)
 }
@@ -103,7 +106,7 @@ fn drain(task: &TaskState) {
         if i >= task.n {
             break;
         }
-        // Safety: see TaskState — the owner keeps the closure alive until
+        // SAFETY: see TaskState — the owner keeps the closure alive until
         // every helper has exited the protocol.
         let run = || unsafe { (task.call)(task.data, i) };
         if let Err(payload) = catch_unwind(AssertUnwindSafe(run)) {

@@ -1,0 +1,360 @@
+//! Self-tests for the `era lint` static-analysis pass (ISSUE 8).
+//!
+//! Three layers:
+//!
+//! * per-rule firing fixtures through [`era::lint::lint_source`] — every
+//!   rule L1–L6 plus the W0 waiver audit must fire on a minimal bad
+//!   fixture and stay silent once the idiomatic fix (or a justified
+//!   waiver) is applied;
+//! * the repo gate: linting this crate's own tree must be clean, because
+//!   CI runs `era lint --gate` and a red gate would block every PR;
+//! * the binary contract: `--gate` exit codes, `--json` report emission,
+//!   and the GitHub annotation format, driven through the real `era`
+//!   executable.
+//!
+//! All bad-code fixtures live inside string literals; the lexer masks
+//! string contents, so this file cannot trip the very rules it seeds.
+
+use std::path::Path;
+use std::process::Command;
+
+use era::lint::{lint_source, run};
+
+fn codes(findings: &[era::lint::Finding]) -> Vec<(&'static str, usize)> {
+    findings.iter().map(|f| (f.rule.code(), f.line)).collect()
+}
+
+// ---------------------------------------------------------------- L1 ----
+
+#[test]
+fn l1_fires_on_partial_cmp_call() {
+    let src = "pub fn pick(a: f64, b: f64) -> bool {\n\
+               \x20   a.partial_cmp(&b).is_some()\n\
+               }\n";
+    let f = lint_source("src/optimizer/pick.rs", src);
+    assert_eq!(codes(&f), vec![("L1", 2)]);
+    assert!(f[0].message.contains("total_cmp"));
+}
+
+#[test]
+fn l1_fires_even_in_test_code() {
+    // NaN-safe comparison is a correctness property of tests too.
+    let src = "#[cfg(test)]\n\
+               mod tests {\n\
+               \x20   fn t(a: f64, b: f64) { a.partial_cmp(&b); }\n\
+               }\n";
+    assert_eq!(codes(&lint_source("src/qoe.rs", src)), vec![("L1", 3)]);
+}
+
+#[test]
+fn l1_ignores_comments_and_trait_impls() {
+    let src = "// partial_cmp is mentioned here, and in a string: \"x.partial_cmp(y)\"\n\
+               impl PartialOrd for Ev {\n\
+               \x20   fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+               \x20       Some(self.cmp(other))\n\
+               \x20   }\n\
+               }\n";
+    assert!(lint_source("src/sim/ev.rs", src).is_empty());
+}
+
+#[test]
+fn l1_waivable_with_justification() {
+    let src = "fn pick(a: f64, b: f64) {\n\
+               \x20   // era-lint: allow(float-cmp) — inputs proven finite by the caller\n\
+               \x20   let _ = a.partial_cmp(&b);\n\
+               }\n";
+    assert!(lint_source("src/optimizer/pick.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- L2 ----
+
+#[test]
+fn l2_fires_on_hash_iteration_in_determinism_module() {
+    let src = "use std::collections::HashMap;\n\
+               fn plan() {\n\
+               \x20   let m: HashMap<u32, u32> = HashMap::new();\n\
+               \x20   for k in m.keys() {\n\
+               \x20       let _ = k;\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_source("src/coordinator/plan.rs", src);
+    assert_eq!(codes(&f), vec![("L2", 4)]);
+    assert!(f[0].message.contains('m'));
+}
+
+#[test]
+fn l2_silent_outside_determinism_modules_and_on_btree() {
+    let src = "use std::collections::HashMap;\n\
+               fn report() {\n\
+               \x20   let m: HashMap<u32, u32> = HashMap::new();\n\
+               \x20   for k in m.keys() {}\n\
+               }\n";
+    // `report` is not a determinism module: ordering only affects output
+    // cosmetics there, and the rule stays scoped to where it is load-bearing.
+    assert!(lint_source("src/report/summary.rs", src).is_empty());
+
+    let src = "use std::collections::BTreeMap;\n\
+               fn plan() {\n\
+               \x20   let m: BTreeMap<u32, u32> = BTreeMap::new();\n\
+               \x20   for k in m.keys() {}\n\
+               }\n";
+    assert!(lint_source("src/coordinator/plan.rs", src).is_empty());
+}
+
+#[test]
+fn l2_waivable_and_lookup_only_use_is_fine() {
+    let src = "use std::collections::HashMap;\n\
+               fn plan() {\n\
+               \x20   let m: HashMap<u32, u32> = HashMap::new();\n\
+               \x20   // era-lint: allow(hash-iter) — folded through an order-insensitive sum\n\
+               \x20   let s: u32 = m.values().sum();\n\
+               \x20   let _ = (s, m.get(&3));\n\
+               }\n";
+    assert!(lint_source("src/sim/fold.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- L3 ----
+
+#[test]
+fn l3_fires_on_allocation_in_ws_suffixed_fn() {
+    let src = "pub fn solve_step_ws(out: &mut [f64]) {\n\
+               \x20   let tmp = vec![0.0; out.len()];\n\
+               \x20   out.copy_from_slice(&tmp);\n\
+               }\n";
+    let f = lint_source("src/optimizer/solve.rs", src);
+    assert_eq!(codes(&f), vec![("L3", 2)]);
+}
+
+#[test]
+fn l3_fires_on_marked_hot_fn_and_respects_waiver() {
+    let src = "// era-lint: hot\n\
+               fn project(row: &mut [f64]) {\n\
+               \x20   let s = format!(\"{row:?}\");\n\
+               \x20   drop(s);\n\
+               }\n";
+    assert_eq!(codes(&lint_source("src/optimizer/p.rs", src)), vec![("L3", 3)]);
+
+    let src = "// era-lint: hot\n\
+               fn project(row: &mut [f64]) {\n\
+               \x20   // era-lint: allow(hot-alloc) — cold fallback for oversized rows\n\
+               \x20   let v = row.to_vec();\n\
+               \x20   drop(v);\n\
+               }\n";
+    assert!(lint_source("src/optimizer/p.rs", src).is_empty());
+}
+
+#[test]
+fn l3_silent_on_unmarked_fns_and_sanctioned_reuse() {
+    // Plain functions may allocate; `resize`/`clear` on caller-owned
+    // buffers is the sanctioned workspace idiom even in hot functions.
+    let src = "fn build() -> Vec<f64> {\n\
+               \x20   vec![0.0; 8]\n\
+               }\n\
+               // era-lint: hot\n\
+               fn step_ws(buf: &mut Vec<f64>, n: usize) {\n\
+               \x20   buf.clear();\n\
+               \x20   buf.resize(n, 0.0);\n\
+               }\n";
+    assert!(lint_source("src/optimizer/b.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- L4 ----
+
+#[test]
+fn l4_fires_on_unwrap_in_planner_path() {
+    let src = "fn route(xs: &[u32]) -> u32 {\n\
+               \x20   *xs.first().unwrap()\n\
+               }\n";
+    let f = lint_source("src/coordinator/route.rs", src);
+    assert_eq!(codes(&f), vec![("L4", 2)]);
+}
+
+#[test]
+fn l4_exempts_lock_poison_and_tests_and_other_modules() {
+    let src = "use std::sync::Mutex;\n\
+               fn shared(m: &Mutex<u32>) -> u32 {\n\
+               \x20   *m.lock().unwrap()\n\
+               }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+               \x20   fn t(xs: &[u32]) { xs.first().unwrap(); }\n\
+               }\n";
+    assert!(lint_source("src/sim/shared.rs", src).is_empty());
+    // `net` is a determinism module but not a planner/serving path.
+    let src = "fn parse(xs: &[u32]) -> u32 { *xs.first().unwrap() }\n";
+    assert!(lint_source("src/net/parse.rs", src).is_empty());
+}
+
+#[test]
+fn l4_waivable_with_justification() {
+    let src = "fn seeded(x: &Option<u32>) -> u32 {\n\
+               \x20   // era-lint: allow(panic) — seeded unconditionally two lines above\n\
+               \x20   x.expect(\"just seeded\")\n\
+               }\n";
+    assert!(lint_source("src/coordinator/c.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- L5 ----
+
+#[test]
+fn l5_fires_on_unsafe_without_safety_comment() {
+    let src = "fn read(p: *const u32) -> u32 {\n\
+               \x20   unsafe { *p }\n\
+               }\n";
+    let f = lint_source("src/util/raw.rs", src);
+    assert_eq!(codes(&f), vec![("L5", 2)]);
+}
+
+#[test]
+fn l5_satisfied_by_safety_comment_including_impl_pairs() {
+    let src = "// SAFETY: all access is serialized behind the owner's mutex\n\
+               unsafe impl Send for T {}\n\
+               unsafe impl Sync for T {}\n";
+    assert!(lint_source("src/util/t.rs", src).is_empty());
+}
+
+#[test]
+fn l5_exempts_fn_pointer_types() {
+    let src = "struct Task {\n\
+               \x20   call: unsafe fn(*const (), usize),\n\
+               }\n";
+    assert!(lint_source("src/util/task.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- L6 ----
+
+#[test]
+fn l6_fires_on_wall_clock_in_determinism_module() {
+    let src = "fn stamp() -> std::time::Instant {\n\
+               \x20   std::time::Instant::now()\n\
+               }\n";
+    let f = lint_source("src/sim/stamp.rs", src);
+    assert_eq!(codes(&f), vec![("L6", 2)]);
+}
+
+#[test]
+fn l6_silent_in_benchkit_and_waivable() {
+    let src = "fn stamp() { let _ = std::time::Instant::now(); }\n";
+    assert!(lint_source("src/benchkit/stamp.rs", src).is_empty());
+
+    let src = "fn stamp() {\n\
+               \x20   // era-lint: allow(wall-clock) — telemetry only, never steers the sim\n\
+               \x20   let _ = std::time::Instant::now();\n\
+               }\n";
+    assert!(lint_source("src/sim/stamp.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- W0 ----
+
+#[test]
+fn w0_unjustified_waiver_reports_and_does_not_suppress() {
+    let src = "fn route(xs: &[u32]) -> u32 {\n\
+               \x20   // era-lint: allow(panic)\n\
+               \x20   *xs.first().unwrap()\n\
+               }\n";
+    let f = lint_source("src/coordinator/route.rs", src);
+    assert_eq!(codes(&f), vec![("W0", 2), ("L4", 3)]);
+}
+
+#[test]
+fn w0_short_justification_and_unknown_key_report() {
+    let src = "// era-lint: allow(panic) — ok\n\
+               fn f() {}\n";
+    let f = lint_source("src/coordinator/x.rs", src);
+    assert_eq!(codes(&f), vec![("W0", 1)]);
+
+    let src = "// era-lint: allow(speed) — the justification is long enough here\n\
+               fn f() {}\n";
+    let f = lint_source("src/coordinator/x.rs", src);
+    assert_eq!(codes(&f), vec![("W0", 1)]);
+    assert!(f[0].message.contains("unknown"));
+}
+
+#[test]
+fn waiver_syntax_in_prose_is_not_a_live_annotation() {
+    // Doc prose describing the syntax must not register waivers (W0 spam)
+    // or hot-marks; only an annotation at the start of a comment counts.
+    let src = "//! Write `// era-lint: allow(panic) — reason` above the line.\n\
+               //! Mark hot functions with `// era-lint: hot`.\n\
+               fn f() {\n\
+               \x20   let v = vec![0u8; 4];\n\
+               \x20   drop(v);\n\
+               }\n";
+    assert!(lint_source("src/coordinator/doc.rs", src).is_empty());
+}
+
+// ------------------------------------------------- the repo gate --------
+
+#[test]
+fn lint_gate_clean_on_this_tree() {
+    // CI runs `era lint --gate`; this is the same check in-process so a
+    // violation fails `cargo test` locally before it fails the gate.
+    let report = run(Path::new(".")).expect("lint walk");
+    assert!(report.files_scanned > 40, "scanned {}", report.files_scanned);
+    let rendered = era::lint::render_text(&report);
+    assert!(report.is_clean(), "era lint found violations:\n{rendered}");
+}
+
+// ------------------------------------------------- binary contract ------
+
+fn write_tree(name: &str, files: &[(&str, &str)]) -> std::path::PathBuf {
+    let root = std::env::temp_dir().join(format!("era-lint-self-{}-{name}", std::process::id()));
+    for (rel, text) in files {
+        let path = root.join(rel);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, text).unwrap();
+    }
+    root
+}
+
+fn era_lint(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_era"))
+        .arg("lint")
+        .args(args)
+        .output()
+        .expect("spawn era")
+}
+
+#[test]
+fn gate_exit_codes_and_reports() {
+    let clean = write_tree("clean", &[("src/ok.rs", "pub fn ok() -> u32 {\n    1\n}\n")]);
+    let out = era_lint(&["--root", clean.to_str().unwrap(), "--gate"]);
+    assert!(out.status.success(), "clean tree must pass the gate");
+
+    let bad = "pub fn pick(a: f64, b: f64) -> bool {\n    a.partial_cmp(&b).is_some()\n}\n";
+    let dirty = write_tree("dirty", &[("src/sim/pick.rs", bad)]);
+    let json = dirty.join("lint.json");
+    let out = era_lint(&[
+        "--root",
+        dirty.to_str().unwrap(),
+        "--json",
+        json.to_str().unwrap(),
+        "--gate",
+    ]);
+    assert!(!out.status.success(), "dirty tree must fail the gate");
+
+    // GitHub annotation on stdout, machine report on disk.
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("::error file=src/sim/pick.rs,line=2::[L1]"), "got: {stdout}");
+    let report = std::fs::read_to_string(&json).unwrap();
+    assert!(report.contains("\"format\": \"era-lint-v1\""), "got: {report}");
+    assert!(report.contains("\"rule\": \"L1\""));
+
+    // Without --gate the same tree reports but exits 0 (advisory mode).
+    let out = era_lint(&["--root", dirty.to_str().unwrap()]);
+    assert!(out.status.success(), "advisory run must exit 0");
+
+    for dir in [clean, dirty] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn prefix_flag_rewrites_annotation_paths() {
+    let bad = "fn read(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+    let tree = write_tree("prefix", &[("src/util/raw.rs", bad)]);
+    let out = era_lint(&["--root", tree.to_str().unwrap(), "--prefix", "rust/"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("::error file=rust/src/util/raw.rs,line=2::[L5]"), "got: {stdout}");
+    let _ = std::fs::remove_dir_all(tree);
+}
