@@ -22,6 +22,7 @@ pub struct Config {
     pub optimizer: OptimizerConfig,
     pub workload: WorkloadConfig,
     pub churn: ChurnConfig,
+    pub faults: FaultConfig,
     pub seed: u64,
 }
 
@@ -168,6 +169,73 @@ pub struct ChurnConfig {
     pub handoff_hz: f64,
 }
 
+/// Fault-injection model for the dynamic serving engine (DESIGN.md §2i):
+/// a seeded CTMC over per-AP health states drives AP outages/recoveries,
+/// edge-pool capacity loss, and per-link SNR degradation. The defaults
+/// describe a fault-free system, which keeps every legacy scenario
+/// byte-identical (the engine only enters the faulted epoch loop when a
+/// fault mechanism is configured).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-up-AP outage rate (1/s). An outage strands the AP's users until
+    /// the next epoch boundary force-rehomes them to a surviving AP.
+    pub ap_outage_rate_hz: f64,
+    /// Per-down-AP recovery rate (1/s).
+    pub ap_recovery_rate_hz: f64,
+    /// Per-AP edge-pool capacity-loss rate (1/s).
+    pub capacity_loss_rate_hz: f64,
+    /// Fraction of the edge pool remaining while a capacity loss is active.
+    pub capacity_loss_frac: f64,
+    /// Per-degraded-AP capacity recovery rate (1/s).
+    pub capacity_recovery_rate_hz: f64,
+    /// Per-AP link (SNR) degradation rate (1/s).
+    pub snr_degrade_rate_hz: f64,
+    /// Depth of the SNR loss in dB while a degradation is active; realized
+    /// link rates of the AP's users are derated by `10^(-dB/20)`.
+    pub snr_degrade_db: f64,
+    /// Per-degraded-AP SNR recovery rate (1/s).
+    pub snr_recovery_rate_hz: f64,
+    /// Bounded re-admission attempts for requests refused at admission
+    /// (down AP / exhausted pool). 0 = drop immediately with the precise
+    /// reason (`ApDown` / `CapacityExhausted`).
+    pub max_retries: usize,
+    /// Backoff between re-admission attempts (s).
+    pub retry_backoff_s: f64,
+    /// Per-epoch solver deadline budget in gradient-descent iterations
+    /// (the deterministic proxy for wall time — wall-clock deadlines would
+    /// break byte-identity and thread invariance). An epoch whose re-plan
+    /// exceeds the budget serves the last-good plan instead. 0 = off.
+    pub plan_deadline_iters: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            ap_outage_rate_hz: 0.0,
+            ap_recovery_rate_hz: 1.0,
+            capacity_loss_rate_hz: 0.0,
+            capacity_loss_frac: 0.5,
+            capacity_recovery_rate_hz: 1.0,
+            snr_degrade_rate_hz: 0.0,
+            snr_degrade_db: 6.0,
+            snr_recovery_rate_hz: 1.0,
+            max_retries: 2,
+            retry_backoff_s: 0.05,
+            plan_deadline_iters: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when any fault mechanism is configured (a default config is a
+    /// fault-free system).
+    pub fn any(&self) -> bool {
+        self.ap_outage_rate_hz > 0.0
+            || self.capacity_loss_rate_hz > 0.0
+            || self.snr_degrade_rate_hz > 0.0
+    }
+}
+
 /// Workload generation (§V.C/V.D sweeps).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadConfig {
@@ -308,6 +376,7 @@ impl Default for Config {
             optimizer: OptimizerConfig::default(),
             workload: WorkloadConfig::default(),
             churn: ChurnConfig::default(),
+            faults: FaultConfig::default(),
             seed: 20240710,
         }
     }
@@ -434,6 +503,19 @@ impl Config {
             ("churn", "rate_factor_lo") => self.churn.rate_factor_lo = f!(),
             ("churn", "rate_factor_hi") => self.churn.rate_factor_hi = f!(),
             ("churn", "handoff_hz") => self.churn.handoff_hz = f!(),
+            ("faults", "ap_outage_rate_hz") => self.faults.ap_outage_rate_hz = f!(),
+            ("faults", "ap_recovery_rate_hz") => self.faults.ap_recovery_rate_hz = f!(),
+            ("faults", "capacity_loss_rate_hz") => self.faults.capacity_loss_rate_hz = f!(),
+            ("faults", "capacity_loss_frac") => self.faults.capacity_loss_frac = f!(),
+            ("faults", "capacity_recovery_rate_hz") => {
+                self.faults.capacity_recovery_rate_hz = f!()
+            }
+            ("faults", "snr_degrade_rate_hz") => self.faults.snr_degrade_rate_hz = f!(),
+            ("faults", "snr_degrade_db") => self.faults.snr_degrade_db = f!(),
+            ("faults", "snr_recovery_rate_hz") => self.faults.snr_recovery_rate_hz = f!(),
+            ("faults", "max_retries") => self.faults.max_retries = u!(),
+            ("faults", "retry_backoff_s") => self.faults.retry_backoff_s = f!(),
+            ("faults", "plan_deadline_iters") => self.faults.plan_deadline_iters = u!(),
             _ => anyhow::bail!("unknown config key"),
         }
         Ok(())
@@ -529,7 +611,41 @@ impl Config {
         s.push_str(&format!("rate_change_hz = {}\n", f(ch.rate_change_hz)));
         s.push_str(&format!("rate_factor_lo = {}\n", f(ch.rate_factor_lo)));
         s.push_str(&format!("rate_factor_hi = {}\n", f(ch.rate_factor_hi)));
-        s.push_str(&format!("handoff_hz = {}\n", f(ch.handoff_hz)));
+        s.push_str(&format!("handoff_hz = {}\n\n", f(ch.handoff_hz)));
+        let ft = &self.faults;
+        s.push_str("[faults]\n");
+        s.push_str(&format!("ap_outage_rate_hz = {}\n", f(ft.ap_outage_rate_hz)));
+        s.push_str(&format!(
+            "ap_recovery_rate_hz = {}\n",
+            f(ft.ap_recovery_rate_hz)
+        ));
+        s.push_str(&format!(
+            "capacity_loss_rate_hz = {}\n",
+            f(ft.capacity_loss_rate_hz)
+        ));
+        s.push_str(&format!(
+            "capacity_loss_frac = {}\n",
+            f(ft.capacity_loss_frac)
+        ));
+        s.push_str(&format!(
+            "capacity_recovery_rate_hz = {}\n",
+            f(ft.capacity_recovery_rate_hz)
+        ));
+        s.push_str(&format!(
+            "snr_degrade_rate_hz = {}\n",
+            f(ft.snr_degrade_rate_hz)
+        ));
+        s.push_str(&format!("snr_degrade_db = {}\n", f(ft.snr_degrade_db)));
+        s.push_str(&format!(
+            "snr_recovery_rate_hz = {}\n",
+            f(ft.snr_recovery_rate_hz)
+        ));
+        s.push_str(&format!("max_retries = {}\n", ft.max_retries));
+        s.push_str(&format!("retry_backoff_s = {}\n", f(ft.retry_backoff_s)));
+        s.push_str(&format!(
+            "plan_deadline_iters = {}\n",
+            ft.plan_deadline_iters
+        ));
         s
     }
 
@@ -578,6 +694,28 @@ impl Config {
         anyhow::ensure!(
             ch.rate_factor_lo > 0.0 && ch.rate_factor_lo <= ch.rate_factor_hi,
             "churn rate factors must satisfy 0 < lo <= hi"
+        );
+        let ft = &self.faults;
+        anyhow::ensure!(
+            ft.ap_outage_rate_hz >= 0.0
+                && ft.ap_recovery_rate_hz >= 0.0
+                && ft.capacity_loss_rate_hz >= 0.0
+                && ft.capacity_recovery_rate_hz >= 0.0
+                && ft.snr_degrade_rate_hz >= 0.0
+                && ft.snr_recovery_rate_hz >= 0.0,
+            "fault rates must be >= 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&ft.capacity_loss_frac),
+            "faults.capacity_loss_frac must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            ft.snr_degrade_db >= 0.0 && ft.snr_degrade_db.is_finite(),
+            "faults.snr_degrade_db must be a finite number >= 0"
+        );
+        anyhow::ensure!(
+            ft.retry_backoff_s >= 0.0 && ft.retry_backoff_s.is_finite(),
+            "faults.retry_backoff_s must be a finite number >= 0"
         );
         Ok(())
     }
@@ -664,8 +802,36 @@ mod tests {
         cfg.churn.departure_rate_hz = 0.125;
         cfg.churn.rate_change_hz = 0.2;
         cfg.churn.handoff_hz = 0.0625;
+        cfg.faults.ap_outage_rate_hz = 0.25;
+        cfg.faults.ap_recovery_rate_hz = 1.5;
+        cfg.faults.capacity_loss_rate_hz = 0.125;
+        cfg.faults.capacity_loss_frac = 0.375;
+        cfg.faults.capacity_recovery_rate_hz = 2.0;
+        cfg.faults.snr_degrade_rate_hz = 0.0625;
+        cfg.faults.snr_degrade_db = 9.0;
+        cfg.faults.snr_recovery_rate_hz = 0.75;
+        cfg.faults.max_retries = 3;
+        cfg.faults.retry_backoff_s = 0.025;
+        cfg.faults.plan_deadline_iters = 5000;
         let parsed = Config::from_str(&cfg.to_toml()).unwrap();
         assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn fault_defaults_are_off_and_bad_values_rejected() {
+        let cfg = Config::default();
+        assert!(!cfg.faults.any(), "default config injects no faults");
+        let c = Config::from_str("[faults]\nap_outage_rate_hz = 0.5\n").unwrap();
+        assert!(c.faults.any());
+        assert_eq!(c.faults.max_retries, 2, "retry knobs keep defaults");
+        let e = Config::from_str("[faults]\ncapacity_loss_frac = 1.5\n").unwrap_err();
+        assert!(e.to_string().contains("capacity_loss_frac"), "{e}");
+        let e = Config::from_str("[faults]\nap_outage_rate_hz = -1.0\n").unwrap_err();
+        assert!(e.to_string().contains("fault rates"), "{e}");
+        let e = Config::from_str("[faults]\nsnr_degrade_db = -3.0\n").unwrap_err();
+        assert!(e.to_string().contains("snr_degrade_db"), "{e}");
+        let e = Config::from_str("[faults]\nnope = 1\n").unwrap_err();
+        assert!(e.to_string().contains("unknown"), "{e}");
     }
 
     #[test]

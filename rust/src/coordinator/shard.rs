@@ -502,6 +502,36 @@ impl ShardedPlanner {
         })
     }
 
+    /// Global ids of the users currently *active* in shard `ap`, ascending
+    /// — the §2i outage path force-rehomes exactly these. Inactive
+    /// residents keep device-only decisions and are left where they are;
+    /// moving them would materialize rows in the surviving shards and
+    /// break the O(active) memory bound.
+    pub fn active_users_of(&self, ap: usize) -> Vec<usize> {
+        let s = self.shards[ap].lock().unwrap();
+        let mut users: Vec<usize> = s
+            .global_of
+            .iter()
+            .enumerate()
+            .filter(|&(slot, _)| s.active[slot])
+            .map(|(_, &g)| g)
+            .collect();
+        users.sort_unstable();
+        users
+    }
+
+    /// Per-AP active-user counts in one sweep (the §2i rehoming target
+    /// choice reads these to balance evacuees across survivors).
+    pub fn active_counts(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                s.active.iter().filter(|&&a| a).count()
+            })
+            .collect()
+    }
+
     /// Currently-active user count across all shards.
     pub fn active_users(&self) -> usize {
         self.shards
@@ -639,6 +669,48 @@ mod tests {
         assert_eq!(p.user_ap[user], to);
         // the moved user keeps a decision in its new shard
         let _ = p.decision_of(user);
+    }
+
+    /// §2i locality pin: an AP outage is a mass handoff — the engine
+    /// rehomes every stranded user of the dead AP via the same `Handoff`
+    /// events, so even a whole-cell evacuation dirties exactly the source
+    /// and destination shards, never the bystanders.
+    #[test]
+    fn ap_outage_mass_rehome_dirties_only_touched_shards() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_aps = 4;
+        cfg.network.num_users = 48;
+        cfg.optimizer.bg_tolerance = 1e9; // exchange never re-dirties
+        let net = Network::generate(&cfg, 5);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let all_active = vec![true; cfg.network.num_users];
+        let mut p = planner_for(&cfg, &source, &model, &all_active);
+        p.plan_epoch(2);
+        assert_eq!(p.plan_epoch(2).planned, 0, "settled before the outage");
+
+        // AP 0 goes down: every one of its users is force-rehomed to AP 1
+        let stranded: Vec<usize> = (0..cfg.network.num_users)
+            .filter(|&u| p.user_ap[u] == 0)
+            .collect();
+        assert!(stranded.len() > 1, "a mass flood, not a single handoff");
+        for &u in &stranded {
+            p.apply_event(
+                &source,
+                &ChurnEvent {
+                    t_s: 0.1,
+                    user: u,
+                    kind: ChurnEventKind::Handoff { ap: 1 },
+                },
+            );
+        }
+        let after = p.plan_epoch(2);
+        assert_eq!(after.planned, 2, "outage dirties exactly src + dst");
+        assert_eq!(after.skipped, cfg.network.num_aps - 2);
+        for &u in &stranded {
+            assert_eq!(p.user_ap[u], 1);
+            let _ = p.decision_of(u);
+        }
     }
 
     /// Departed users fall back to device-only decisions and return to

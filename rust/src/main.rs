@@ -429,12 +429,12 @@ fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     if !flags.contains_key("quiet") {
         println!(
-            "{:>5} {:>9} {:>9} {:>7} {:>7} {:>8} {:>8} {:>10} {:>10}",
-            "epoch", "active", "resident", "events", "reqs", "planned", "skipped", "plan(ms)", "serve(ms)"
+            "{:>5} {:>9} {:>9} {:>7} {:>7} {:>8} {:>8} {:>7} {:>7} {:>10} {:>10}",
+            "epoch", "active", "resident", "events", "reqs", "planned", "skipped", "dropped", "rehomed", "plan(ms)", "serve(ms)"
         );
         for e in &rep.epochs {
             println!(
-                "{:>5} {:>9} {:>9} {:>7} {:>7} {:>8} {:>8} {:>10.2} {:>10.2}",
+                "{:>5} {:>9} {:>9} {:>7} {:>7} {:>8} {:>8} {:>7} {:>7} {:>10.2} {:>10.2}",
                 e.epoch,
                 e.active_users,
                 e.resident_users,
@@ -442,6 +442,8 @@ fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 e.requests,
                 e.planned_shards,
                 e.skipped_shards,
+                e.dropped,
+                e.rehomed,
                 e.plan_wall_s * 1e3,
                 e.serve_wall_s * 1e3
             );
@@ -462,6 +464,11 @@ fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         rep.outcome.completions.len(),
         rep.outcome.dropped.len()
     );
+    let rehomed: usize = rep.epochs.iter().map(|e| e.rehomed).sum();
+    let retries: usize = rep.epochs.iter().map(|e| e.retries).sum();
+    if rehomed > 0 || retries > 0 {
+        println!("degradation      : {rehomed} users rehomed, {retries} retry attempts");
+    }
     if !rep.outcome.completions.is_empty() {
         let mean_s: f64 = rep
             .outcome

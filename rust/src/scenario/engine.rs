@@ -150,11 +150,15 @@ impl RunRecord {
     /// aligned with the tail of [`RunRecord::to_csv_row_dynamic`]. The
     /// `dyn_cohorts_*` / `dyn_cache_hit_frac` columns aggregate the
     /// incremental re-planner's per-epoch cache statistics (all-resolved /
-    /// 0.0 on the full re-plan path).
+    /// 0.0 on the full re-plan path); `dyn_dropped_traj` is the per-epoch
+    /// drop trajectory and the `dyn_rehomed` / `dyn_plan_fallbacks` /
+    /// `dyn_retries` totals aggregate the fault-injection resilience
+    /// counters (all zero on fault-free cells).
     pub fn csv_dynamics_columns() -> &'static str {
         "ep_dropped,dyn_epochs,dyn_peak_active,dyn_mean_active,\
          dyn_arrivals,dyn_departures,dyn_rate_changes,dyn_handoffs,\
-         dyn_cohorts_reused,dyn_cohorts_resolved,dyn_cache_hit_frac,dyn_qoe_miss_traj"
+         dyn_cohorts_reused,dyn_cohorts_resolved,dyn_cache_hit_frac,dyn_qoe_miss_traj,\
+         dyn_dropped_traj,dyn_rehomed,dyn_plan_fallbacks,dyn_retries"
     }
 
     /// Header for grids with dynamic-serving cells.
@@ -175,15 +179,20 @@ impl RunRecord {
             Some(d) => {
                 let traj: Vec<String> =
                     d.epochs.iter().map(|e| f(e.qoe_miss_frac)).collect();
+                let drop_traj: Vec<String> =
+                    d.epochs.iter().map(|e| e.dropped.to_string()).collect();
                 let reused: usize = d.epochs.iter().map(|e| e.cohorts_reused).sum();
                 let resolved: usize = d.epochs.iter().map(|e| e.cohorts_resolved).sum();
+                let rehomed: usize = d.epochs.iter().map(|e| e.rehomed).sum();
+                let fallbacks: usize = d.epochs.iter().map(|e| e.plan_fallbacks).sum();
+                let retries: usize = d.epochs.iter().map(|e| e.retries).sum();
                 let hit = if reused + resolved == 0 {
                     0.0
                 } else {
                     reused as f64 / (reused + resolved) as f64
                 };
                 format!(
-                    "{},{},{},{},{},{},{},{},{},{},{}",
+                    "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                     d.epochs.len(),
                     d.peak_active,
                     f(d.mean_active),
@@ -194,10 +203,14 @@ impl RunRecord {
                     reused,
                     resolved,
                     f(hit),
-                    traj.join(";")
+                    traj.join(";"),
+                    drop_traj.join(";"),
+                    rehomed,
+                    fallbacks,
+                    retries
                 )
             }
-            None => "-,-,-,-,-,-,-,-,-,-,-".to_string(),
+            None => "-,-,-,-,-,-,-,-,-,-,-,-,-,-,-".to_string(),
         };
         format!("{},{},{}", self.to_csv_row(), ep_dropped, tail)
     }
@@ -415,19 +428,31 @@ pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::
                 )
             };
             let delta = spec.replan_interval_s.unwrap_or(cfg.workload.episode_s);
-            let dy = crate::sim::run_dynamic_opts(
-                cfg,
-                net,
-                &model,
-                strat.as_ref(),
-                &schedule,
-                &trace,
-                &crate::sim::DynamicOptions {
-                    replan_interval_s: delta,
-                    incremental: spec.incremental,
-                    full_rescan_every: spec.full_rescan_every,
-                },
-            );
+            let opts = crate::sim::DynamicOptions {
+                replan_interval_s: delta,
+                incremental: spec.incremental,
+                full_rescan_every: spec.full_rescan_every,
+            };
+            // Fault injection only engages on `episode.faults` cells: the
+            // fault seed is decorrelated from both the trace and churn
+            // streams, and faults-off cells keep calling the legacy driver
+            // so their rows stay byte-identical to pre-fault builds.
+            let dy = if spec.episode_faults {
+                let faults =
+                    crate::trace::FaultSchedule::generate(cfg, trace_seed ^ 0x00FA_1757);
+                crate::sim::run_dynamic_faulted(
+                    cfg,
+                    net,
+                    &model,
+                    strat.as_ref(),
+                    &schedule,
+                    &faults,
+                    &trace,
+                    &opts,
+                )
+            } else {
+                crate::sim::run_dynamic_opts(cfg, net, &model, strat.as_ref(), &schedule, &trace, &opts)
+            };
             let st = crate::sim::stats(&dy.outcome.completions, cfg.workload.episode_s);
             let (arrivals, departures, rate_changes, handoffs) = schedule.counts();
             let peak_active = dy.epochs.iter().map(|e| e.active_users).max().unwrap_or(0);
@@ -715,10 +740,82 @@ mod tests {
         let header = dcsv.lines().next().unwrap().to_string();
         assert_eq!(header, RunRecord::csv_header_dynamic());
         assert!(header.contains("dyn_qoe_miss_traj"));
+        assert!(header.contains("dyn_dropped_traj"));
         let cols = header.split(',').count();
         for line in dcsv.lines() {
             assert_eq!(line.split(',').count(), cols, "{line}");
         }
+    }
+
+    #[test]
+    fn static_csv_is_byte_identical_to_the_legacy_format() {
+        // The fault/resilience columns ride on the dynamics tail only —
+        // a static grid must not mention them anywhere in its bytes.
+        let spec = tiny_spec();
+        let recs = Engine::new(1).run(&spec).unwrap();
+        let csv = to_csv(&recs);
+        assert_eq!(csv.lines().next().unwrap(), RunRecord::csv_header());
+        for token in ["dyn_", "dropped_traj", "rehomed", "retries"] {
+            assert!(!csv.contains(token), "static CSV leaks `{token}`");
+        }
+        // Re-running the identical spec reproduces the document exactly.
+        let again = to_csv(&Engine::new(2).run(&spec).unwrap());
+        assert_eq!(csv, again, "static CSV must be byte-stable");
+    }
+
+    #[test]
+    fn faulted_cells_emit_drop_trajectory_and_conserve() {
+        let mut base = presets::smoke();
+        base.network.num_users = 10;
+        base.optimizer.max_iters = 20;
+        base.workload.episode_s = 0.5;
+        base.workload.arrival_rate_hz = 30.0;
+        base.churn.initial_active_frac = 0.5;
+        base.churn.arrival_rate_hz = 2.0;
+        base.churn.departure_rate_hz = 0.2;
+        base.faults.ap_outage_rate_hz = 6.0;
+        base.faults.ap_recovery_rate_hz = 4.0;
+        base.faults.max_retries = 1;
+        let mut spec = ScenarioSpec::new("chaos-cell", base).with_strategies(&["neurosurgeon"]);
+        spec.episode = true;
+        spec.episode_churn = true;
+        spec.replan_interval_s = Some(0.125);
+        spec.episode_faults = true;
+        spec.trace_seed = Some(55);
+        let rec = Engine::new(1).run_one(&spec).unwrap();
+        let ep = rec.episode.expect("episode record");
+        let dy = rec.dynamics.expect("dynamics record");
+        let total: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(total, ep.n + ep.dropped, "faulted epochs conserve the trace");
+        let epoch_drops: usize = dy.epochs.iter().map(|e| e.dropped).sum();
+        assert_eq!(epoch_drops, ep.dropped, "drop trajectory sums to ep_dropped");
+        let csv = to_csv(&[rec.clone()]);
+        let header = csv.lines().next().unwrap();
+        assert_eq!(header, RunRecord::csv_header_dynamic());
+        let cols = header.split(',').count();
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+
+        // Faults off (zero rates) on the same dynamic spec: the dispatcher
+        // falls through to the legacy driver, so the record matches a cell
+        // that never mentioned `episode.faults` byte-for-byte.
+        let mut quiet = spec.clone();
+        quiet.base.faults = crate::config::FaultConfig::default();
+        let mut legacy = quiet.clone();
+        legacy.episode_faults = false;
+        let mut a = Engine::new(1).run_one(&quiet).unwrap();
+        let mut b = Engine::new(1).run_one(&legacy).unwrap();
+        a.plan_wall_s = 0.0;
+        b.plan_wall_s = 0.0;
+        if let Some(d) = a.dynamics.as_mut() {
+            d.epochs.iter_mut().for_each(|e| e.plan_wall_s = 0.0);
+        }
+        if let Some(d) = b.dynamics.as_mut() {
+            d.epochs.iter_mut().for_each(|e| e.plan_wall_s = 0.0);
+        }
+        assert_eq!(a, b, "faults-off cells ride the legacy dynamic path");
+        assert_eq!(a.to_csv_row_dynamic(), b.to_csv_row_dynamic());
     }
 
     #[test]

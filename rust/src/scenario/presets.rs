@@ -14,6 +14,7 @@ pub const NAMES: &[&str] = &[
     "churn",
     "churn-incremental",
     "churn-stable",
+    "chaos",
     "ligd",
 ];
 
@@ -129,6 +130,30 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
             spec.base.optimizer.slot_compact_frac = 0.25;
             Some(spec)
         }
+        // The churn-stable serving scenario under seeded fault injection
+        // (DESIGN.md §2i): AP outages force-rehome stranded users, capacity
+        // loss shrinks the shared edge pool, SNR degradation derates link
+        // rates, and a bounded retry queue re-admits refused requests. The
+        // plan-deadline budget exercises the last-good-plan fallback. The
+        // axis sweeps the outage rate (calm → hostile) so the resilience
+        // trajectory (`dyn_dropped_traj`, `dyn_rehomed`) has a gradient.
+        "chaos" => {
+            let mut spec = by_name("churn-stable")?;
+            spec.name = "chaos".into();
+            spec.axes.clear();
+            spec.episode_faults = true;
+            spec.base.faults.ap_outage_rate_hz = 0.3;
+            spec.base.faults.ap_recovery_rate_hz = 1.0;
+            spec.base.faults.capacity_loss_rate_hz = 0.2;
+            spec.base.faults.capacity_loss_frac = 0.5;
+            spec.base.faults.capacity_recovery_rate_hz = 1.0;
+            spec.base.faults.snr_degrade_rate_hz = 0.2;
+            spec.base.faults.snr_degrade_db = 6.0;
+            spec.base.faults.snr_recovery_rate_hz = 1.0;
+            spec.base.faults.max_retries = 2;
+            spec.base.faults.retry_backoff_s = 0.05;
+            Some(spec.with_axis_f64("faults.ap_outage_rate_hz", &[0.3, 1.5]))
+        }
         // Li-GD vs cold-start GD iteration comparison (Corollary 4).
         "ligd" => Some(
             ScenarioSpec::new("ligd", cfg::smoke()).with_strategies(&["era", "era-cold"]),
@@ -195,6 +220,32 @@ mod tests {
         let inc = by_name("churn-incremental").unwrap();
         assert_eq!(spec.full_rescan_every, inc.full_rescan_every);
         assert_eq!(spec.replan_interval_s, inc.replan_interval_s);
+        // round-trips through the TOML grammar
+        let text = spec.to_toml();
+        let reparsed = ScenarioSpec::from_str(&text).unwrap();
+        assert_eq!(reparsed, spec);
+    }
+
+    #[test]
+    fn chaos_preset_layers_faults_on_churn_stable() {
+        let spec = by_name("chaos").unwrap();
+        assert!(spec.episode && spec.episode_churn && spec.incremental);
+        assert!(spec.episode_faults, "chaos cells run the faulted driver");
+        assert!(spec.is_dynamic());
+        // faults actually configured: the schedule will be non-empty
+        assert!(spec.base.faults.any());
+        assert!(spec.base.faults.ap_outage_rate_hz > 0.0);
+        assert!(spec.base.faults.max_retries > 0);
+        // same planner identity settings as churn-stable
+        let stable = by_name("churn-stable").unwrap();
+        assert_eq!(
+            spec.base.optimizer.stable_cohorts,
+            stable.base.optimizer.stable_cohorts
+        );
+        assert_eq!(spec.replan_interval_s, stable.replan_interval_s);
+        // the sweep axis is the outage rate
+        assert_eq!(spec.axes.len(), 1);
+        assert_eq!(spec.axes[0].key, "faults.ap_outage_rate_hz");
         // round-trips through the TOML grammar
         let text = spec.to_toml();
         let reparsed = ScenarioSpec::from_str(&text).unwrap();

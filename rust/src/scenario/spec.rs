@@ -90,6 +90,11 @@ pub struct ScenarioSpec {
     /// `episode.full_rescan_every`; 0 = never force, 1 = every epoch ≡
     /// the non-incremental path).
     pub full_rescan_every: usize,
+    /// Dynamic serving: inject the seeded fault schedule sampled from the
+    /// base config's `[faults]` section (TOML key `episode.faults`). The
+    /// cell runs through `sim::run_dynamic_faulted`; with the `[faults]`
+    /// rates at zero this is byte-identical to the legacy dynamic path.
+    pub episode_faults: bool,
     /// Axis key whose value index additionally offsets the cell's network
     /// seed (paper figures that re-draw the network per sweep point).
     pub seed_axis: Option<String>,
@@ -111,6 +116,7 @@ const TOP_KEYS: &[&str] = &[
     "episode.replan_interval_s",
     "episode.incremental",
     "episode.full_rescan_every",
+    "episode.faults",
     "seed_axis",
     "trace_seed",
     "plan_threads",
@@ -132,6 +138,7 @@ impl ScenarioSpec {
             replan_interval_s: None,
             incremental: false,
             full_rescan_every: 0,
+            episode_faults: false,
             seed_axis: None,
             trace_seed: None,
             plan_threads: 1,
@@ -141,7 +148,10 @@ impl ScenarioSpec {
     /// True when the episode runs through the dynamic serving engine
     /// (`sim::run_dynamic`) rather than the legacy static path.
     pub fn is_dynamic(&self) -> bool {
-        self.episode_churn || self.replan_interval_s.is_some() || self.incremental
+        self.episode_churn
+            || self.replan_interval_s.is_some()
+            || self.incremental
+            || self.episode_faults
     }
 
     /// Replace the strategy list.
@@ -301,6 +311,11 @@ impl ScenarioSpec {
             );
             spec.full_rescan_every = f as usize;
         }
+        if let Some(v) = top.get("episode.faults") {
+            spec.episode_faults = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("episode.faults must be a boolean"))?;
+        }
         if let Some(v) = top.get("seed_axis") {
             spec.seed_axis = Some(
                 v.as_str()
@@ -401,7 +416,7 @@ impl ScenarioSpec {
         if self.is_dynamic() {
             anyhow::ensure!(
                 self.episode,
-                "episode.churn / episode.replan_interval_s / episode.incremental require episode = true"
+                "episode.churn / episode.replan_interval_s / episode.incremental / episode.faults require episode = true"
             );
         }
         anyhow::ensure!(
@@ -444,6 +459,9 @@ impl ScenarioSpec {
                 "episode.full_rescan_every = {}\n",
                 self.full_rescan_every
             ));
+        }
+        if self.episode_faults {
+            s.push_str("episode.faults = true\n");
         }
         if let Some(k) = &self.seed_axis {
             s.push_str(&format!("seed_axis = {k:?}\n"));
@@ -572,6 +590,26 @@ mod tests {
     }
 
     #[test]
+    fn faults_key_parses_and_requires_episode() {
+        let spec = ScenarioSpec::from_str(
+            "episode = true\nepisode.faults = true\n[faults]\nap_outage_rate_hz = 0.5\n",
+        )
+        .unwrap();
+        assert!(spec.episode_faults);
+        assert!(spec.is_dynamic(), "faulted cells run the dynamic engine");
+        assert_eq!(spec.base.faults.ap_outage_rate_hz, 0.5, "overlay applied");
+        // default stays off and non-dynamic
+        let plain = ScenarioSpec::from_str("episode = true\n").unwrap();
+        assert!(!plain.episode_faults);
+        // faults without episode is rejected
+        let e = ScenarioSpec::from_str("episode.faults = true\n").unwrap_err();
+        assert!(e.to_string().contains("require episode = true"), "{e}");
+        // non-boolean is a clear error
+        let e = ScenarioSpec::from_str("episode = true\nepisode.faults = 3\n").unwrap_err();
+        assert!(e.to_string().contains("must be a boolean"), "{e}");
+    }
+
+    #[test]
     fn stable_cohort_keys_flow_through_the_scenario_overlay() {
         // `optimizer.stable_cohorts` / `optimizer.bg_tolerance` are plain
         // config keys: scenario files reach them via the `[optimizer]`
@@ -606,6 +644,7 @@ mod tests {
         spec.replan_interval_s = Some(0.125);
         spec.incremental = true;
         spec.full_rescan_every = 4;
+        spec.episode_faults = true;
         spec.seed_axis = Some("network.num_users".into());
         spec.trace_seed = Some(12);
         spec.plan_threads = 2;

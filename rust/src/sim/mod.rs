@@ -20,7 +20,7 @@ use crate::baselines::{Decision, Strategy};
 use crate::config::Config;
 use crate::models::ModelProfile;
 use crate::net::Network;
-use crate::trace::{ChurnEventKind, ChurnSchedule, EpisodeStream, Request};
+use crate::trace::{ChurnEventKind, ChurnSchedule, EpisodeStream, FaultSchedule, FaultState, Request};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -55,6 +55,15 @@ pub enum DropReason {
     /// never finish, so it is rejected up front instead of corrupting the
     /// event heap or starving in the pool queue.
     NonFinitePhase,
+    /// The request's target AP was down at admission and retries are
+    /// disabled (`faults.max_retries = 0`).
+    ApDown,
+    /// The request's edge demand exceeds the degraded pool limit
+    /// (capacity-loss fault) and retries are disabled.
+    CapacityExhausted,
+    /// The bounded retry-with-backoff queue gave up: every re-admission
+    /// attempt found the target AP down or the pool exhausted.
+    RetriesExhausted,
 }
 
 /// A request that was explicitly rejected (never silently lost).
@@ -152,6 +161,19 @@ struct Phases {
     r: f64,
     ap: usize,
     offloads: bool,
+}
+
+impl Phases {
+    /// Mirror of the DES admission finiteness test. The faulted drivers
+    /// consult it *before* the fault-refusal check so a NaN-phase request
+    /// keeps its legacy `NonFinitePhase` drop instead of cycling through
+    /// the retry queue it could never leave.
+    fn finite_with(&self, arrival_s: f64) -> bool {
+        arrival_s.is_finite()
+            && self.pre_edge_s.is_finite()
+            && (!self.offloads
+                || (self.edge_s.is_finite() && self.post_edge_s.is_finite() && self.r.is_finite()))
+    }
 }
 
 /// Phase durations of one request under a concrete decision + link rates.
@@ -366,8 +388,19 @@ impl DesCore {
     /// non-finite phases drop explicitly, device-only completes
     /// immediately, offloaders enter the event heap).
     fn admit(&mut self, cfg: &Config, rq: Request, ph: Phases) {
+        let start_s = rq.arrival_s;
+        self.admit_at(cfg, rq, ph, start_s);
+    }
+
+    /// [`DesCore::admit`] with an explicit service start time — the
+    /// retry-with-backoff path (§2i) re-admits a request at its retry
+    /// instant while keeping the *original* arrival time on the
+    /// completion, so latency and `queue_s` honestly include the backoff
+    /// wait. The plain admission path passes `start_s = rq.arrival_s`.
+    fn admit_at(&mut self, cfg: &Config, rq: Request, ph: Phases, start_s: f64) {
         let idx = self.phases.len();
         let finite = rq.arrival_s.is_finite()
+            && start_s.is_finite()
             && ph.pre_edge_s.is_finite()
             && (!ph.offloads
                 || (ph.edge_s.is_finite() && ph.post_edge_s.is_finite() && ph.r.is_finite()));
@@ -390,14 +423,14 @@ impl DesCore {
         );
         if ph.offloads {
             self.heap
-                .push(rq.arrival_s + ph.pre_edge_s, EvKind::EdgeArrive { req: idx });
+                .push(start_s + ph.pre_edge_s, EvKind::EdgeArrive { req: idx });
         } else {
             self.completions.push(Completion {
                 id: rq.id,
                 req: idx,
                 user: rq.user,
                 arrival_s: rq.arrival_s,
-                finish_s: rq.arrival_s + ph.pre_edge_s,
+                finish_s: start_s + ph.pre_edge_s,
                 service_s: ph.pre_edge_s,
                 queue_s: 0.0,
             });
@@ -405,6 +438,60 @@ impl DesCore {
         self.phases.push(ph);
         self.reqs.push(rq);
         self.edge_start.push(0.0);
+    }
+
+    /// Record an explicit admission-layer rejection (fault injection,
+    /// §2i): the request joins `dropped` with `reason` and consumes an
+    /// admission slot so conservation still counts it exactly once.
+    fn reject(&mut self, rq: Request, reason: DropReason) {
+        let idx = self.phases.len();
+        self.dropped.push(DroppedRequest {
+            id: rq.id,
+            req: idx,
+            user: rq.user,
+            arrival_s: rq.arrival_s,
+            reason,
+        });
+        self.phases.push(Phases {
+            pre_edge_s: 0.0,
+            edge_s: 0.0,
+            post_edge_s: 0.0,
+            r: 0.0,
+            ap: 0,
+            offloads: false,
+        });
+        self.reqs.push(rq);
+        self.edge_start.push(0.0);
+    }
+
+    /// Shift AP `ap`'s pool by `delta_units` (capacity-loss faults, §2i).
+    /// A loss may drive the free count transiently negative — in-flight
+    /// work keeps its units and nothing new is granted until releases
+    /// climb back above zero, exactly a counting semaphore resized under
+    /// load. A restoration admits waiters that now fit, at `now_s`.
+    fn adjust_capacity(&mut self, ap: usize, delta_units: f64, now_s: f64) {
+        if delta_units == 0.0 {
+            return;
+        }
+        self.pool[ap] += delta_units;
+        if delta_units > 0.0 {
+            while let Some(&next) = self.waiting[ap].front() {
+                let np = &self.phases[next];
+                if self.pool[ap] >= np.r {
+                    self.waiting[ap].pop_front();
+                    self.pool[ap] -= np.r;
+                    self.edge_start[next] = now_s;
+                    self.heap.push(now_s + np.edge_s, EvKind::EdgeDone { req: next });
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Requests dropped so far (per-epoch deltas feed the scale report).
+    fn dropped_len(&self) -> usize {
+        self.dropped.len()
     }
 
     /// Process events strictly before `t_lim` (same event semantics as the
@@ -545,6 +632,16 @@ pub struct EpochRecord {
     /// Fraction of this epoch's completions exceeding the user's QoE
     /// threshold — the QoE-violation trajectory across epochs.
     pub qoe_miss_frac: f64,
+    /// APs without power at this epoch's start (fault injection, §2i;
+    /// 0 on the fault-free paths).
+    pub aps_down: usize,
+    /// Users force-rehomed off down APs at this epoch's start.
+    pub rehomed: usize,
+    /// 1 when this epoch served the last-good plan because the re-plan
+    /// exceeded `faults.plan_deadline_iters`.
+    pub plan_fallbacks: usize,
+    /// Retry re-admission attempts processed this epoch.
+    pub retries: usize,
 }
 
 /// Result of a dynamic (epoch-driven) episode.
@@ -775,6 +872,10 @@ pub fn run_dynamic_opts(
             mean_latency_s: 0.0,
             mean_queue_s: 0.0,
             qoe_miss_frac: 0.0,
+            aps_down: 0,
+            rehomed: 0,
+            plan_fallbacks: 0,
+            retries: 0,
         });
     }
     debug_assert_eq!(next_req, trace.len(), "last epoch captures all arrivals");
@@ -944,6 +1045,10 @@ pub fn run_dynamic_streamed(
             mean_latency_s: 0.0,
             mean_queue_s: 0.0,
             qoe_miss_frac: 0.0,
+            aps_down: 0,
+            rehomed: 0,
+            plan_fallbacks: 0,
+            retries: 0,
         });
     }
 
@@ -951,6 +1056,611 @@ pub fn run_dynamic_streamed(
 
     // Bucket per-epoch serving stats by arrival epoch (same reduction as
     // `run_dynamic_opts`; QoE thresholds live on the immutable base net).
+    let mut lat_sum = vec![0.0f64; n_epochs];
+    let mut queue_sum = vec![0.0f64; n_epochs];
+    let mut miss = vec![0usize; n_epochs];
+    for c in &outcome.completions {
+        let e = epoch_of_pos[c.req];
+        epochs[e].completed += 1;
+        lat_sum[e] += c.latency();
+        queue_sum[e] += c.queue_s;
+        if c.latency() > net.users[c.user].qoe_threshold_s {
+            miss[e] += 1;
+        }
+    }
+    for d in &outcome.dropped {
+        epochs[epoch_of_pos[d.req]].dropped += 1;
+    }
+    for (e, rec) in epochs.iter_mut().enumerate() {
+        if rec.completed > 0 {
+            rec.mean_latency_s = lat_sum[e] / rec.completed as f64;
+            rec.mean_queue_s = queue_sum[e] / rec.completed as f64;
+            rec.qoe_miss_frac = miss[e] as f64 / rec.completed as f64;
+        }
+    }
+
+    DynamicOutcome { outcome, epochs }
+}
+
+/// A request waiting in the bounded retry-with-backoff queue (§2i): it
+/// was refused admission (down AP / exhausted pool) and re-tries under
+/// the then-current plan at `next_t`, up to `tries_left` more times.
+struct Pending {
+    rq: Request,
+    tries_left: usize,
+    next_t: f64,
+}
+
+/// Force-rehome every user homed on a down AP to the best surviving AP
+/// (least-loaded, ties to the lowest index) — the §2i reuse of the
+/// `Handoff` machinery: only the user→AP association changes, so the
+/// sharded planner dirties exactly the touched shards. Returns the number
+/// of users moved (0 when every AP is down — stranded users then drop
+/// through the retry ladder instead).
+fn rehome_stranded(net_dyn: &mut Network, fs: &FaultState) -> usize {
+    let n_aps = fs.ap_up.len();
+    let mut homed = vec![0usize; n_aps];
+    for &a in &net_dyn.topo.user_ap {
+        homed[a] += 1;
+    }
+    let mut moved = 0usize;
+    for u in 0..net_dyn.topo.user_ap.len() {
+        let a = net_dyn.topo.user_ap[u];
+        if fs.ap_up[a] {
+            continue;
+        }
+        if let Some(b) = fs.best_surviving_ap(&homed) {
+            homed[a] -= 1;
+            homed[b] += 1;
+            net_dyn.topo.user_ap[u] = b;
+            moved += 1;
+        } else {
+            break;
+        }
+    }
+    moved
+}
+
+/// Time-to-QoE-recovery after each outage (§2i telemetry): for every
+/// epoch that force-rehomed users, the delay in seconds (epoch
+/// granularity) until `qoe_miss_frac` first returns to the pre-outage
+/// level (the epoch just before the outage; an epoch-0 outage recovers at
+/// the first miss-free epoch). `None` = no recovery within the episode.
+pub fn qoe_recovery_s(epochs: &[EpochRecord], delta_s: f64) -> Vec<(usize, Option<f64>)> {
+    let mut out = Vec::new();
+    for e in 0..epochs.len() {
+        if epochs[e].rehomed == 0 {
+            continue;
+        }
+        let baseline = if e == 0 { 0.0 } else { epochs[e - 1].qoe_miss_frac };
+        let rec = epochs[e..]
+            .iter()
+            .position(|r| r.qoe_miss_frac <= baseline + 1e-12)
+            .map(|k| k as f64 * delta_s);
+        out.push((e, rec));
+    }
+    out
+}
+
+/// [`run_dynamic_opts`] under an injected [`FaultSchedule`] (DESIGN.md
+/// §2i). With no fault events and no solver deadline budget this *is* the
+/// legacy path — fault-free runs stay byte-identical by construction.
+///
+/// Degradation ladder, applied at each epoch boundary: (1) replay fault
+/// events and force-rehome users stranded on down APs to the best
+/// surviving AP; (2) resize degraded edge pools (in-flight work keeps its
+/// units); (3) re-plan, serving the last-good plan instead when the solve
+/// exceeds `faults.plan_deadline_iters`; (4) derate the realized link
+/// rates of SNR-degraded APs; (5) admit — a request aimed at a dead AP or
+/// an exhausted pool enters a bounded retry-with-backoff queue and drops
+/// with a precise reason (`ApDown` / `CapacityExhausted` /
+/// `RetriesExhausted`) when out of retries. Requests already in flight at
+/// a degraded AP drain normally — the fault surface is admission, the
+/// realistic failure edge of a serving system. Conservation
+/// (`completed + dropped == traced`) holds under every fault mix.
+#[allow(clippy::too_many_arguments)]
+pub fn run_dynamic_faulted(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    strat: &dyn Strategy,
+    schedule: &ChurnSchedule,
+    faults: &FaultSchedule,
+    trace: &[Request],
+    opts: &DynamicOptions,
+) -> DynamicOutcome {
+    if !faults.any() && cfg.faults.plan_deadline_iters == 0 {
+        return run_dynamic_opts(cfg, net, model, strat, schedule, trace, opts);
+    }
+    let episode_s = cfg.workload.episode_s.max(1e-9);
+    let replan_interval_s = opts.replan_interval_s;
+    let delta = if replan_interval_s.is_finite() && replan_interval_s > 0.0 {
+        replan_interval_s.min(episode_s)
+    } else {
+        episode_s
+    };
+    let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
+    assert!(
+        trace
+            .windows(2)
+            .all(|w| w[0].arrival_s.total_cmp(&w[1].arrival_s) != Ordering::Greater),
+        "run_dynamic requires a trace sorted by arrival_s"
+    );
+    let n_aps = cfg.network.num_aps;
+    let mut net_dyn: Option<Network> = None;
+    let mut cache = if opts.incremental {
+        let mut c = crate::coordinator::PlanCache::new(
+            opts.full_rescan_every,
+            cfg.optimizer.replan_layer_window,
+        );
+        c.trust_static = true;
+        Some(c)
+    } else {
+        None
+    };
+    let mut serve_rates: Option<crate::net::RateCache> = None;
+    let mut des = DesCore::new(cfg, n_aps);
+    let mut fs = FaultState::new(n_aps);
+    let mut applied_frac = vec![1.0f64; n_aps];
+    let mut retryq: std::collections::VecDeque<Pending> = Default::default();
+    let mut last_good: Option<Vec<Decision>> = None;
+    let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
+    let mut epoch_of_pos: Vec<usize> = Vec::with_capacity(trace.len());
+    let mut next_req = 0usize;
+    let mut next_ev = 0usize;
+    let mut active = schedule.initial_active.clone();
+    let max_retries = cfg.faults.max_retries;
+    let backoff = cfg.faults.retry_backoff_s;
+    let pool_units = cfg.compute.edge_pool_units;
+    for e in 0..n_epochs {
+        let t0 = e as f64 * delta;
+        let t1 = if e + 1 == n_epochs {
+            f64::INFINITY
+        } else {
+            t0 + delta
+        };
+        while next_ev < schedule.events.len() && schedule.events[next_ev].t_s <= t0 {
+            let ev = &schedule.events[next_ev];
+            match ev.kind {
+                ChurnEventKind::Arrive => active[ev.user] = true,
+                ChurnEventKind::Depart => active[ev.user] = false,
+                ChurnEventKind::RateChange { .. } => {}
+                ChurnEventKind::Handoff { ap } => {
+                    net_dyn.get_or_insert_with(|| net.clone()).topo.user_ap[ev.user] = ap;
+                }
+            }
+            next_ev += 1;
+        }
+        fs.advance(faults, t0);
+        let mut rehomed = 0usize;
+        if fs.aps_down() > 0 {
+            rehomed = rehome_stranded(net_dyn.get_or_insert_with(|| net.clone()), &fs);
+        }
+        for ap in 0..n_aps {
+            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pool_units;
+            if delta_u != 0.0 {
+                des.adjust_capacity(ap, delta_u, t0);
+                applied_frac[ap] = fs.pool_frac[ap];
+            }
+        }
+        let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
+        // era-lint: allow(wall-clock) — planner wall-time telemetry only, never steers the sim
+        let tp = std::time::Instant::now();
+        let (ds_new, info) = match cache.as_mut() {
+            Some(c) => strat.decide_incremental(cfg, net_e, model, &active, c),
+            None => strat.decide_masked(cfg, net_e, model, &active),
+        };
+        let plan_wall_s = tp.elapsed().as_secs_f64();
+        let budget = cfg.faults.plan_deadline_iters;
+        let mut plan_fallbacks = 0usize;
+        let over_budget = budget > 0 && info.gd_iters > budget;
+        let ds = if over_budget {
+            match last_good.take() {
+                Some(lg) => {
+                    plan_fallbacks = 1;
+                    last_good = Some(lg.clone());
+                    lg
+                }
+                None => {
+                    // nothing cached yet: the fresh plan is the best we have
+                    last_good = Some(ds_new.clone());
+                    ds_new
+                }
+            }
+        } else {
+            last_good = Some(ds_new.clone());
+            ds_new
+        };
+        let (mut up, mut down) = match strat.channel_model() {
+            crate::baselines::ChannelModel::Noma => {
+                let alloc: Vec<crate::net::LinkAssignment> = ds
+                    .iter()
+                    .map(|d| crate::net::LinkAssignment {
+                        up_ch: d.up_ch,
+                        down_ch: d.down_ch,
+                        p_up: d.p_up,
+                        p_down: d.p_down,
+                        r: d.r,
+                        split: d.split,
+                    })
+                    .collect();
+                if let Some(rc) = serve_rates.as_mut() {
+                    rc.update(net_e, &alloc);
+                } else {
+                    serve_rates = Some(crate::net::RateCache::full(net_e, alloc));
+                }
+                // era-lint: allow(panic) — the if/else above just seeded `serve_rates`
+                let r = serve_rates.as_ref().expect("just seeded").rates();
+                (r.up.clone(), r.down.clone())
+            }
+            cm => crate::metrics::rates_for(cfg, net_e, &ds, cm),
+        };
+        for u in 0..up.len() {
+            let d = fs.derate[net_e.topo.user_ap[u]];
+            if d != 1.0 {
+                up[u] *= d;
+                down[u] *= d;
+            }
+        }
+        let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
+        // bounded retry-with-backoff: one examination per pending entry
+        // per epoch (re-queued entries land at the back, past the
+        // countdown, so the final infinite epoch cannot loop)
+        let mut retries = 0usize;
+        for _ in 0..retryq.len() {
+            let Some(mut p) = retryq.pop_front() else { break };
+            if p.next_t >= t1 {
+                retryq.push_back(p);
+                continue;
+            }
+            retries += 1;
+            let rq = p.rq;
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let refused = ph.finite_with(rq.arrival_s)
+                && ph.offloads
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+            if !refused {
+                let start = p.next_t.max(rq.arrival_s);
+                epoch_of_pos.push(e);
+                des.admit_at(cfg, rq, ph, start);
+            } else if p.tries_left <= 1 {
+                epoch_of_pos.push(e);
+                des.reject(rq, DropReason::RetriesExhausted);
+            } else {
+                p.tries_left -= 1;
+                p.next_t = p.next_t.max(t0) + backoff;
+                retryq.push_back(p);
+            }
+        }
+        let start_req = next_req;
+        let last = e + 1 == n_epochs;
+        while next_req < trace.len() && (last || trace[next_req].arrival_s < t1) {
+            let rq = trace[next_req];
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let refused = ph.finite_with(rq.arrival_s)
+                && ph.offloads
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+            if !refused {
+                epoch_of_pos.push(e);
+                des.admit(cfg, rq, ph);
+            } else if max_retries == 0 {
+                let reason = if !fs.ap_up[ph.ap] {
+                    DropReason::ApDown
+                } else {
+                    DropReason::CapacityExhausted
+                };
+                epoch_of_pos.push(e);
+                des.reject(rq, reason);
+            } else {
+                retryq.push_back(Pending {
+                    rq,
+                    tries_left: max_retries,
+                    next_t: rq.arrival_s + backoff,
+                });
+            }
+            next_req += 1;
+        }
+        des.drain_until(t1);
+        let planned = info.cohorts_reused + info.cohorts_resolved;
+        epochs.push(EpochRecord {
+            epoch: e,
+            t_start_s: t0,
+            active_users: active.iter().filter(|&&a| a).count(),
+            offloaders,
+            cohorts: info.cohorts,
+            gd_iters: info.gd_iters,
+            cohorts_reused: info.cohorts_reused,
+            cohorts_resolved: info.cohorts_resolved,
+            cache_hit_frac: if planned == 0 {
+                0.0
+            } else {
+                info.cohorts_reused as f64 / planned as f64
+            },
+            window_fallbacks: info.window_fallbacks,
+            plan_wall_s,
+            requests: next_req - start_req,
+            completed: 0,
+            dropped: 0,
+            mean_latency_s: 0.0,
+            mean_queue_s: 0.0,
+            qoe_miss_frac: 0.0,
+            aps_down: fs.aps_down(),
+            rehomed,
+            plan_fallbacks,
+            retries,
+        });
+    }
+    debug_assert_eq!(next_req, trace.len(), "last epoch captures all arrivals");
+    // pending retries that never found a healthy target give up here —
+    // conservation still counts every traced request exactly once
+    while let Some(p) = retryq.pop_front() {
+        epoch_of_pos.push(n_epochs - 1);
+        des.reject(p.rq, DropReason::RetriesExhausted);
+    }
+
+    let outcome = des.finish();
+    assert_eq!(
+        outcome.completions.len() + outcome.dropped.len(),
+        trace.len(),
+        "faulted DES must conserve the trace"
+    );
+
+    let mut lat_sum = vec![0.0f64; n_epochs];
+    let mut queue_sum = vec![0.0f64; n_epochs];
+    let mut miss = vec![0usize; n_epochs];
+    for c in &outcome.completions {
+        let e = epoch_of_pos[c.req];
+        epochs[e].completed += 1;
+        lat_sum[e] += c.latency();
+        queue_sum[e] += c.queue_s;
+        if c.latency() > net.users[c.user].qoe_threshold_s {
+            miss[e] += 1;
+        }
+    }
+    for d in &outcome.dropped {
+        epochs[epoch_of_pos[d.req]].dropped += 1;
+    }
+    for (e, rec) in epochs.iter_mut().enumerate() {
+        if rec.completed > 0 {
+            rec.mean_latency_s = lat_sum[e] / rec.completed as f64;
+            rec.mean_queue_s = queue_sum[e] / rec.completed as f64;
+            rec.qoe_miss_frac = miss[e] as f64 / rec.completed as f64;
+        }
+    }
+
+    DynamicOutcome { outcome, epochs }
+}
+
+/// [`run_dynamic_streamed`] under an injected [`FaultSchedule`] — the
+/// lazy-generation counterpart of [`run_dynamic_faulted`], byte-identical
+/// to it on the same seeds (the fault list is materialized either way: it
+/// is O(#faults), not O(users), so streaming gains nothing). Falls back
+/// to the legacy streamed driver when no fault mechanism is live.
+pub fn run_dynamic_streamed_faulted(
+    cfg: &Config,
+    net: &Network,
+    model: &ModelProfile,
+    strat: &dyn Strategy,
+    churn_seed: u64,
+    trace_seed: u64,
+    faults: &FaultSchedule,
+    opts: &DynamicOptions,
+) -> DynamicOutcome {
+    if !faults.any() && cfg.faults.plan_deadline_iters == 0 {
+        return run_dynamic_streamed(cfg, net, model, strat, churn_seed, trace_seed, opts);
+    }
+    let episode_s = cfg.workload.episode_s.max(1e-9);
+    let replan_interval_s = opts.replan_interval_s;
+    let delta = if replan_interval_s.is_finite() && replan_interval_s > 0.0 {
+        replan_interval_s.min(episode_s)
+    } else {
+        episode_s
+    };
+    let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
+    let n_aps = cfg.network.num_aps;
+
+    let mut stream = EpisodeStream::new(cfg, &net.topo.user_ap, churn_seed, trace_seed);
+    let mut active = stream.initial_active().to_vec();
+    let mut net_dyn: Option<Network> = None;
+    let mut cache = if opts.incremental {
+        let mut c = crate::coordinator::PlanCache::new(
+            opts.full_rescan_every,
+            cfg.optimizer.replan_layer_window,
+        );
+        c.trust_static = true;
+        Some(c)
+    } else {
+        None
+    };
+    let mut serve_rates: Option<crate::net::RateCache> = None;
+    let mut des = DesCore::new(cfg, n_aps);
+    let mut fs = FaultState::new(n_aps);
+    let mut applied_frac = vec![1.0f64; n_aps];
+    let mut retryq: std::collections::VecDeque<Pending> = Default::default();
+    let mut last_good: Option<Vec<Decision>> = None;
+    let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
+    let mut epoch_of_pos: Vec<usize> = Vec::new();
+    let max_retries = cfg.faults.max_retries;
+    let backoff = cfg.faults.retry_backoff_s;
+    let pool_units = cfg.compute.edge_pool_units;
+
+    for e in 0..n_epochs {
+        let t0 = e as f64 * delta;
+        let t1 = if e + 1 == n_epochs {
+            f64::INFINITY
+        } else {
+            t0 + delta
+        };
+        let batch = stream.epoch(t0, t1);
+        for ev in &batch.events {
+            match ev.kind {
+                ChurnEventKind::Arrive => active[ev.user] = true,
+                ChurnEventKind::Depart => active[ev.user] = false,
+                ChurnEventKind::RateChange { .. } => {}
+                ChurnEventKind::Handoff { ap } => {
+                    net_dyn.get_or_insert_with(|| net.clone()).topo.user_ap[ev.user] = ap;
+                }
+            }
+        }
+        fs.advance(faults, t0);
+        let mut rehomed = 0usize;
+        if fs.aps_down() > 0 {
+            rehomed = rehome_stranded(net_dyn.get_or_insert_with(|| net.clone()), &fs);
+        }
+        for ap in 0..n_aps {
+            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pool_units;
+            if delta_u != 0.0 {
+                des.adjust_capacity(ap, delta_u, t0);
+                applied_frac[ap] = fs.pool_frac[ap];
+            }
+        }
+        let net_e: &Network = net_dyn.as_ref().unwrap_or(net);
+        // era-lint: allow(wall-clock) — planner wall-time telemetry only, never steers the sim
+        let tp = std::time::Instant::now();
+        let (ds_new, info) = match cache.as_mut() {
+            Some(c) => strat.decide_incremental(cfg, net_e, model, &active, c),
+            None => strat.decide_masked(cfg, net_e, model, &active),
+        };
+        let plan_wall_s = tp.elapsed().as_secs_f64();
+        let budget = cfg.faults.plan_deadline_iters;
+        let mut plan_fallbacks = 0usize;
+        let over_budget = budget > 0 && info.gd_iters > budget;
+        let ds = if over_budget {
+            match last_good.take() {
+                Some(lg) => {
+                    plan_fallbacks = 1;
+                    last_good = Some(lg.clone());
+                    lg
+                }
+                None => {
+                    last_good = Some(ds_new.clone());
+                    ds_new
+                }
+            }
+        } else {
+            last_good = Some(ds_new.clone());
+            ds_new
+        };
+        let (mut up, mut down) = match strat.channel_model() {
+            crate::baselines::ChannelModel::Noma => {
+                let alloc: Vec<crate::net::LinkAssignment> = ds
+                    .iter()
+                    .map(|d| crate::net::LinkAssignment {
+                        up_ch: d.up_ch,
+                        down_ch: d.down_ch,
+                        p_up: d.p_up,
+                        p_down: d.p_down,
+                        r: d.r,
+                        split: d.split,
+                    })
+                    .collect();
+                if let Some(rc) = serve_rates.as_mut() {
+                    rc.update(net_e, &alloc);
+                } else {
+                    serve_rates = Some(crate::net::RateCache::full(net_e, alloc));
+                }
+                // era-lint: allow(panic) — the if/else above just seeded `serve_rates`
+                let r = serve_rates.as_ref().expect("just seeded").rates();
+                (r.up.clone(), r.down.clone())
+            }
+            cm => crate::metrics::rates_for(cfg, net_e, &ds, cm),
+        };
+        for u in 0..up.len() {
+            let d = fs.derate[net_e.topo.user_ap[u]];
+            if d != 1.0 {
+                up[u] *= d;
+                down[u] *= d;
+            }
+        }
+        let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
+        let mut retries = 0usize;
+        for _ in 0..retryq.len() {
+            let Some(mut p) = retryq.pop_front() else { break };
+            if p.next_t >= t1 {
+                retryq.push_back(p);
+                continue;
+            }
+            retries += 1;
+            let rq = p.rq;
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let refused = ph.finite_with(rq.arrival_s)
+                && ph.offloads
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+            if !refused {
+                let start = p.next_t.max(rq.arrival_s);
+                epoch_of_pos.push(e);
+                des.admit_at(cfg, rq, ph, start);
+            } else if p.tries_left <= 1 {
+                epoch_of_pos.push(e);
+                des.reject(rq, DropReason::RetriesExhausted);
+            } else {
+                p.tries_left -= 1;
+                p.next_t = p.next_t.max(t0) + backoff;
+                retryq.push_back(p);
+            }
+        }
+        let n_reqs = batch.requests.len();
+        for rq in batch.requests {
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let refused = ph.finite_with(rq.arrival_s)
+                && ph.offloads
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+            if !refused {
+                epoch_of_pos.push(e);
+                des.admit(cfg, rq, ph);
+            } else if max_retries == 0 {
+                let reason = if !fs.ap_up[ph.ap] {
+                    DropReason::ApDown
+                } else {
+                    DropReason::CapacityExhausted
+                };
+                epoch_of_pos.push(e);
+                des.reject(rq, reason);
+            } else {
+                retryq.push_back(Pending {
+                    rq,
+                    tries_left: max_retries,
+                    next_t: rq.arrival_s + backoff,
+                });
+            }
+        }
+        des.drain_until(t1);
+        let planned = info.cohorts_reused + info.cohorts_resolved;
+        epochs.push(EpochRecord {
+            epoch: e,
+            t_start_s: t0,
+            active_users: active.iter().filter(|&&a| a).count(),
+            offloaders,
+            cohorts: info.cohorts,
+            gd_iters: info.gd_iters,
+            cohorts_reused: info.cohorts_reused,
+            cohorts_resolved: info.cohorts_resolved,
+            cache_hit_frac: if planned == 0 {
+                0.0
+            } else {
+                info.cohorts_reused as f64 / planned as f64
+            },
+            window_fallbacks: info.window_fallbacks,
+            plan_wall_s,
+            requests: n_reqs,
+            completed: 0,
+            dropped: 0,
+            mean_latency_s: 0.0,
+            mean_queue_s: 0.0,
+            qoe_miss_frac: 0.0,
+            aps_down: fs.aps_down(),
+            rehomed,
+            plan_fallbacks,
+            retries,
+        });
+    }
+    while let Some(p) = retryq.pop_front() {
+        epoch_of_pos.push(n_epochs - 1);
+        des.reject(p.rq, DropReason::RetriesExhausted);
+    }
+
+    let outcome = des.finish();
+
     let mut lat_sum = vec![0.0f64; n_epochs];
     let mut queue_sum = vec![0.0f64; n_epochs];
     let mut miss = vec![0usize; n_epochs];
@@ -1575,5 +2285,404 @@ mod tests {
             assert_eq!(a.finish_s, b.finish_s);
         }
         assert_eq!(st.epochs.len(), mat.epochs.len());
+    }
+
+    use crate::trace::{FaultEvent, FaultEventKind};
+
+    fn assert_same_outcome(a: &DynamicOutcome, b: &DynamicOutcome) {
+        assert_eq!(a.outcome.completions.len(), b.outcome.completions.len());
+        for (x, y) in a
+            .outcome
+            .completions
+            .iter()
+            .zip(b.outcome.completions.iter())
+        {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.req, y.req);
+            assert_eq!(x.user, y.user);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.finish_s, y.finish_s);
+            assert_eq!(x.service_s, y.service_s);
+            assert_eq!(x.queue_s, y.queue_s);
+        }
+        assert_eq!(a.outcome.dropped.len(), b.outcome.dropped.len());
+        for (x, y) in a.outcome.dropped.iter().zip(b.outcome.dropped.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.req, y.req);
+            assert_eq!(x.user, y.user);
+            assert_eq!(x.reason, y.reason);
+        }
+        assert_eq!(a.epochs.len(), b.epochs.len());
+        for (x, y) in a.epochs.iter().zip(b.epochs.iter()) {
+            let mut x = x.clone();
+            let mut y = y.clone();
+            x.plan_wall_s = 0.0;
+            y.plan_wall_s = 0.0;
+            assert_eq!(x, y);
+        }
+    }
+
+    /// §2i acceptance (sim layer): faults-off is the legacy path. The
+    /// no-fault dispatch is literal, and even the faulted epoch loop —
+    /// forced on by a non-zero (but never-binding) deadline budget — must
+    /// reproduce the legacy engine byte for byte under churn + handoffs.
+    #[test]
+    fn faults_off_matches_legacy_byte_for_byte() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 1.0;
+        cfg.workload.arrival_rate_hz = 15.0;
+        cfg.churn.initial_active_frac = 0.6;
+        cfg.churn.arrival_rate_hz = 5.0;
+        cfg.churn.departure_rate_hz = 0.4;
+        cfg.churn.rate_change_hz = 0.3;
+        cfg.churn.handoff_hz = 0.25;
+        let strat = Neurosurgeon;
+        let opts = DynamicOptions {
+            replan_interval_s: 0.25,
+            incremental: true,
+            full_rescan_every: 0,
+        };
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, 0x51A9);
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 0x7B4C);
+        let legacy = run_dynamic_opts(&cfg, &net, &model, &strat, &sched, &tr, &opts);
+        let none = FaultSchedule::none();
+        let dispatched =
+            run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &none, &tr, &opts);
+        assert_same_outcome(&dispatched, &legacy);
+        // non-zero deadline forces the faulted loop; a budget this large
+        // never binds, so the loop must replay the legacy engine exactly
+        let mut cfg_loop = cfg.clone();
+        cfg_loop.faults.plan_deadline_iters = usize::MAX;
+        let looped =
+            run_dynamic_faulted(&cfg_loop, &net, &model, &strat, &sched, &none, &tr, &opts);
+        assert_same_outcome(&looped, &legacy);
+    }
+
+    #[test]
+    fn ap_outage_rehomes_users_and_conserves() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 17);
+        let faults = FaultSchedule {
+            events: vec![
+                FaultEvent {
+                    t_s: 0.05,
+                    ap: 0,
+                    kind: FaultEventKind::ApDown,
+                },
+                FaultEvent {
+                    t_s: 0.30,
+                    ap: 0,
+                    kind: FaultEventKind::ApUp,
+                },
+            ],
+        };
+        let opts = DynamicOptions {
+            replan_interval_s: 0.125,
+            ..DynamicOptions::default()
+        };
+        let strat = Neurosurgeon;
+        let dynr = run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &faults, &tr, &opts);
+        assert_eq!(
+            dynr.outcome.completions.len() + dynr.outcome.dropped.len(),
+            tr.len(),
+            "conservation under an outage"
+        );
+        let stranded = net.topo.users_of_ap(0).len();
+        assert!(stranded > 0);
+        // the outage lands at the e=1 boundary: every user of AP 0 moves
+        assert_eq!(dynr.epochs[1].aps_down, 1);
+        assert_eq!(dynr.epochs[1].rehomed, stranded);
+        // still down at e=2 but nobody left to move; recovered by e=3
+        assert_eq!(dynr.epochs[2].aps_down, 1);
+        assert_eq!(dynr.epochs[2].rehomed, 0);
+        assert_eq!(dynr.epochs[3].aps_down, 0);
+        // rehomed users are served by the surviving AP — nothing drops
+        assert!(dynr.outcome.dropped.is_empty());
+        // the outage epoch appears in the recovery telemetry
+        let rec = qoe_recovery_s(&dynr.epochs, 0.125);
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].0, 1);
+        // determinism of the whole faulted pipeline
+        let again = run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &faults, &tr, &opts);
+        assert_same_outcome(&dynr, &again);
+    }
+
+    /// With every AP down and retries disabled, stranded offloaders drop
+    /// as `ApDown`; with retries enabled they exhaust the backoff ladder
+    /// and drop as `RetriesExhausted`. Conservation holds either way.
+    #[test]
+    fn total_outage_drops_with_precise_reasons() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 40.0;
+        cfg.faults.max_retries = 0;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 29);
+        let events: Vec<FaultEvent> = (0..cfg.network.num_aps)
+            .map(|ap| FaultEvent {
+                t_s: 0.01,
+                ap,
+                kind: FaultEventKind::ApDown,
+            })
+            .collect();
+        let faults = FaultSchedule { events };
+        let opts = DynamicOptions {
+            replan_interval_s: 0.125,
+            ..DynamicOptions::default()
+        };
+        let strat = Neurosurgeon;
+        let dynr = run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &faults, &tr, &opts);
+        assert_eq!(
+            dynr.outcome.completions.len() + dynr.outcome.dropped.len(),
+            tr.len()
+        );
+        assert!(!dynr.outcome.dropped.is_empty(), "offloaders must drop");
+        assert!(dynr
+            .outcome
+            .dropped
+            .iter()
+            .all(|d| d.reason == DropReason::ApDown));
+        // no survivor exists: nobody is rehomed, everything stays down
+        assert!(dynr.epochs[1..].iter().all(|e| {
+            e.aps_down == cfg.network.num_aps && e.rehomed == 0
+        }));
+
+        let mut cfg_retry = cfg.clone();
+        cfg_retry.faults.max_retries = 2;
+        cfg_retry.faults.retry_backoff_s = 0.05;
+        let retry =
+            run_dynamic_faulted(&cfg_retry, &net, &model, &strat, &sched, &faults, &tr, &opts);
+        assert_eq!(
+            retry.outcome.completions.len() + retry.outcome.dropped.len(),
+            tr.len(),
+            "conservation through the retry queue"
+        );
+        assert!(!retry.outcome.dropped.is_empty());
+        assert!(retry
+            .outcome
+            .dropped
+            .iter()
+            .all(|d| d.reason == DropReason::RetriesExhausted));
+        let retries: usize = retry.epochs.iter().map(|e| e.retries).sum();
+        assert!(retries > 0, "the backoff ladder was exercised");
+        // both runs drop exactly the same requests — only the reason (and
+        // the retry work spent) differs
+        assert_eq!(retry.outcome.dropped.len(), dynr.outcome.dropped.len());
+    }
+
+    #[test]
+    fn capacity_collapse_refuses_as_capacity_exhausted() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 40.0;
+        cfg.faults.max_retries = 0;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 53);
+        let events: Vec<FaultEvent> = (0..cfg.network.num_aps)
+            .map(|ap| FaultEvent {
+                t_s: 0.01,
+                ap,
+                kind: FaultEventKind::CapacityLoss { frac: 0.0 },
+            })
+            .collect();
+        let faults = FaultSchedule { events };
+        let opts = DynamicOptions {
+            replan_interval_s: 0.125,
+            ..DynamicOptions::default()
+        };
+        let strat = Neurosurgeon;
+        let dynr = run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &faults, &tr, &opts);
+        assert_eq!(
+            dynr.outcome.completions.len() + dynr.outcome.dropped.len(),
+            tr.len()
+        );
+        assert!(!dynr.outcome.dropped.is_empty());
+        assert!(dynr
+            .outcome
+            .dropped
+            .iter()
+            .all(|d| d.reason == DropReason::CapacityExhausted));
+        // APs keep power — capacity loss rehomes nobody
+        assert!(dynr.epochs.iter().all(|e| e.aps_down == 0 && e.rehomed == 0));
+    }
+
+    /// `plan_deadline_iters` falls back to the last-good plan: with a
+    /// 1-iteration budget the ERA solver blows the deadline every epoch,
+    /// so every epoch after the first serves epoch 0's plan.
+    #[test]
+    fn plan_deadline_falls_back_to_last_good_plan() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.optimizer.max_iters = 60;
+        cfg.faults.plan_deadline_iters = 1;
+        let sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, 19);
+        let strat = crate::coordinator::EraStrategy::default();
+        let opts = DynamicOptions {
+            replan_interval_s: 0.125,
+            ..DynamicOptions::default()
+        };
+        let none = FaultSchedule::none();
+        let dynr = run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &none, &tr, &opts);
+        assert_eq!(dynr.epochs.len(), 4);
+        assert!(dynr.epochs[0].gd_iters > 1, "the budget must actually bind");
+        // epoch 0 has nothing cached — its fresh plan is served and cached
+        assert_eq!(dynr.epochs[0].plan_fallbacks, 0);
+        assert!(dynr.epochs[1..].iter().all(|e| e.plan_fallbacks == 1));
+        assert_eq!(
+            dynr.outcome.completions.len() + dynr.outcome.dropped.len(),
+            tr.len()
+        );
+        // the served plan is frozen: the offloader mix never moves
+        assert!(dynr
+            .epochs
+            .iter()
+            .all(|e| e.offloaders == dynr.epochs[0].offloaders));
+    }
+
+    /// §2i: the streamed faulted engine matches the materialized one byte
+    /// for byte under a generated fault mix (outages + capacity + SNR)
+    /// layered on live churn, retries included.
+    #[test]
+    fn faulted_streamed_matches_materialized() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 1.0;
+        cfg.workload.arrival_rate_hz = 15.0;
+        cfg.churn.initial_active_frac = 0.6;
+        cfg.churn.arrival_rate_hz = 5.0;
+        cfg.churn.departure_rate_hz = 0.4;
+        cfg.churn.rate_change_hz = 0.3;
+        cfg.churn.handoff_hz = 0.25;
+        cfg.faults.ap_outage_rate_hz = 2.0;
+        cfg.faults.ap_recovery_rate_hz = 3.0;
+        cfg.faults.capacity_loss_rate_hz = 1.0;
+        cfg.faults.capacity_loss_frac = 0.25;
+        cfg.faults.snr_degrade_rate_hz = 1.0;
+        cfg.faults.snr_degrade_db = 12.0;
+        let churn_seed = 0x51A9;
+        let trace_seed = 0x7B4C;
+        let faults = FaultSchedule::generate(&cfg, 0x00FA_1757);
+        assert!(faults.any(), "these rates produce events over 1 s");
+        let strat = Neurosurgeon;
+        let opts = DynamicOptions {
+            replan_interval_s: 0.25,
+            incremental: true,
+            full_rescan_every: 0,
+        };
+        let sched = ChurnSchedule::generate(&cfg, &net.topo.user_ap, churn_seed);
+        let tr = crate::trace::dynamic_trace(&cfg, &sched, trace_seed);
+        let mat = run_dynamic_faulted(&cfg, &net, &model, &strat, &sched, &faults, &tr, &opts);
+        let st = run_dynamic_streamed_faulted(
+            &cfg, &net, &model, &strat, churn_seed, trace_seed, &faults, &opts,
+        );
+        assert_same_outcome(&st, &mat);
+        assert_eq!(
+            mat.outcome.completions.len() + mat.outcome.dropped.len(),
+            tr.len(),
+            "conservation under the full fault mix"
+        );
+    }
+
+    /// Satellite: a mass-handoff flood — every user of one AP moved in a
+    /// single epoch — conserves the trace across ALL strategies, on both
+    /// the churn-handoff path and the outage-rehoming path.
+    #[test]
+    fn mass_handoff_flood_conserves_across_all_strategies() {
+        let (mut cfg, net, model) = setup();
+        cfg.workload.episode_s = 0.5;
+        cfg.workload.arrival_rate_hz = 20.0;
+        cfg.optimizer.max_iters = 40;
+        let flood_users = net.topo.users_of_ap(0);
+        assert!(!flood_users.is_empty());
+        let sched = ChurnSchedule {
+            initial_active: vec![true; net.num_users()],
+            events: flood_users
+                .iter()
+                .map(|&u| crate::trace::ChurnEvent {
+                    t_s: 0.05,
+                    user: u,
+                    kind: ChurnEventKind::Handoff { ap: 1 },
+                })
+                .collect(),
+        };
+        let static_sched = ChurnSchedule::static_all(net.num_users());
+        let tr = crate::trace::dynamic_trace(&cfg, &static_sched, 61);
+        let outage = FaultSchedule {
+            events: vec![FaultEvent {
+                t_s: 0.05,
+                ap: 0,
+                kind: FaultEventKind::ApDown,
+            }],
+        };
+        let opts = DynamicOptions {
+            replan_interval_s: 0.125,
+            ..DynamicOptions::default()
+        };
+        for strat in crate::strategies::all() {
+            let s: &dyn Strategy = strat.as_ref();
+            let flood = run_dynamic_opts(&cfg, &net, &model, s, &sched, &tr, &opts);
+            assert_eq!(
+                flood.outcome.completions.len() + flood.outcome.dropped.len(),
+                tr.len(),
+                "churn flood conservation ({})",
+                strat.name()
+            );
+            let faulted = run_dynamic_faulted(
+                &cfg, &net, &model, s, &static_sched, &outage, &tr, &opts,
+            );
+            assert_eq!(
+                faulted.outcome.completions.len() + faulted.outcome.dropped.len(),
+                tr.len(),
+                "outage flood conservation ({})",
+                strat.name()
+            );
+            assert_eq!(faulted.epochs[1].rehomed, flood_users.len());
+        }
+    }
+
+    #[test]
+    fn qoe_recovery_reports_time_to_baseline() {
+        let rec = |epoch: usize, qoe: f64, rehomed: usize| EpochRecord {
+            epoch,
+            t_start_s: epoch as f64 * 0.125,
+            active_users: 0,
+            offloaders: 0,
+            cohorts: 0,
+            gd_iters: 0,
+            cohorts_reused: 0,
+            cohorts_resolved: 0,
+            cache_hit_frac: 0.0,
+            window_fallbacks: 0,
+            plan_wall_s: 0.0,
+            requests: 0,
+            completed: 0,
+            dropped: 0,
+            mean_latency_s: 0.0,
+            mean_queue_s: 0.0,
+            qoe_miss_frac: qoe,
+            aps_down: 0,
+            rehomed,
+            plan_fallbacks: 0,
+            retries: 0,
+        };
+        // outage at e=1 spikes the miss rate; baseline (e=0 level 0.0) is
+        // reached again at e=3 → two epochs later
+        let epochs = vec![
+            rec(0, 0.0, 0),
+            rec(1, 0.4, 5),
+            rec(2, 0.2, 0),
+            rec(3, 0.0, 0),
+        ];
+        let out = qoe_recovery_s(&epochs, 0.125);
+        assert_eq!(out, vec![(1, Some(0.25))]);
+        // a miss rate that never returns to baseline reports None
+        let stuck = vec![rec(0, 0.0, 0), rec(1, 0.5, 3), rec(2, 0.5, 0)];
+        assert_eq!(qoe_recovery_s(&stuck, 0.125), vec![(1, None)]);
+        // fault-free trajectories report nothing
+        assert!(qoe_recovery_s(&[rec(0, 0.3, 0)], 0.125).is_empty());
     }
 }

@@ -14,12 +14,12 @@
 //! Driven by `era scale` (see `main.rs`), which also reports `VmHWM` so CI
 //! can pin a population-independent memory ceiling.
 
-use super::{phases_from_parts, DesCore, EpisodeOutcome};
+use super::{phases_from_parts, DesCore, DropReason, EpisodeOutcome, Pending, Phases};
 use crate::config::Config;
 use crate::coordinator::{ShardSource, ShardedPlanner};
-use crate::models;
+use crate::models::{self, ModelProfile};
 use crate::net::UserArena;
-use crate::trace::EpisodeStream;
+use crate::trace::{ChurnEvent, ChurnEventKind, EpisodeStream, FaultSchedule, FaultState};
 
 /// Knobs of one scale episode.
 #[derive(Clone, Copy, Debug)]
@@ -65,6 +65,15 @@ pub struct ScaleEpoch {
     pub plan_wall_s: f64,
     /// Wall-clock of admission + DES drain.
     pub serve_wall_s: f64,
+    /// Requests whose drop was recorded this epoch (any `DropReason`) —
+    /// the degradation signal the 100k-user CI run watches (§2i).
+    pub dropped: usize,
+    /// Users force-rehomed off down APs at this epoch's start.
+    pub rehomed: usize,
+    /// APs without power at this epoch's start.
+    pub aps_down: usize,
+    /// Retry re-admission attempts processed this epoch.
+    pub retries: usize,
 }
 
 /// Outcome of one scale episode.
@@ -124,8 +133,23 @@ pub fn run_scale(
         episode_s
     };
     let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
-    let mut des = DesCore::new(cfg, cfg.network.num_aps);
+    let n_aps = cfg.network.num_aps;
+    let mut des = DesCore::new(cfg, n_aps);
     let mut epochs = Vec::with_capacity(n_epochs);
+
+    // §2i fault injection: the schedule is O(#faults), not O(population),
+    // so the scale path materializes it even though churn and trace
+    // stream. Fault-free configs generate an empty schedule and every
+    // reaction below degenerates to a no-op — the legacy path, byte for
+    // byte. The fault seed is decorrelated from the trace stream exactly
+    // like the engine's churn/trace split.
+    let faults = FaultSchedule::generate(cfg, trace_seed ^ 0x00FA_1757);
+    let mut fs = FaultState::new(n_aps);
+    let mut applied_frac = vec![1.0f64; n_aps];
+    let mut retryq: std::collections::VecDeque<Pending> = Default::default();
+    let max_retries = cfg.faults.max_retries;
+    let backoff = cfg.faults.retry_backoff_s;
+    let pool_units = cfg.compute.edge_pool_units;
 
     for e in 0..n_epochs {
         let t0 = e as f64 * delta;
@@ -138,6 +162,42 @@ pub fn run_scale(
         let n_events = batch.events.len();
         planner.apply_events(&source, &batch.events);
 
+        // Fault replay + rehoming: every *active* user of a down AP moves
+        // to the least-loaded survivor through ordinary `Handoff` events,
+        // so an outage dirties exactly the touched shards (pinned by the
+        // shard locality test). Inactive residents stay put — moving them
+        // would materialize rows in the survivors and break O(active).
+        fs.advance(&faults, t0);
+        let mut rehomed = 0usize;
+        if fs.aps_down() > 0 {
+            let mut homed = planner.active_counts();
+            let mut moves: Vec<ChurnEvent> = Vec::new();
+            for ap in 0..n_aps {
+                if fs.ap_up[ap] {
+                    continue;
+                }
+                for u in planner.active_users_of(ap) {
+                    let Some(b) = fs.best_surviving_ap(&homed) else { break };
+                    homed[ap] -= 1;
+                    homed[b] += 1;
+                    moves.push(ChurnEvent {
+                        t_s: t0,
+                        user: u,
+                        kind: ChurnEventKind::Handoff { ap: b },
+                    });
+                }
+            }
+            rehomed = moves.len();
+            planner.apply_events(&source, &moves);
+        }
+        for ap in 0..n_aps {
+            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pool_units;
+            if delta_u != 0.0 {
+                des.adjust_capacity(ap, delta_u, t0);
+                applied_frac[ap] = fs.pool_frac[ap];
+            }
+        }
+
         // era-lint: allow(wall-clock) — epoch wall-time telemetry only, never steers the plan
         let tp = std::time::Instant::now();
         let ep = planner.plan_epoch(opts.threads);
@@ -145,21 +205,54 @@ pub fn run_scale(
 
         // era-lint: allow(wall-clock) — serve-loop wall-time telemetry only
         let ts = std::time::Instant::now();
+        let dropped_before = des.dropped_len();
+        let mut retries = 0usize;
+        // bounded retry-with-backoff (§2i): one examination per pending
+        // entry per epoch — re-queued entries land past the countdown
+        for _ in 0..retryq.len() {
+            let Some(mut p) = retryq.pop_front() else { break };
+            if p.next_t >= t1 {
+                retryq.push_back(p);
+                continue;
+            }
+            retries += 1;
+            let ph = faulted_phases(cfg, &model, &planner, &arena, &fs, p.rq.user);
+            let refused = ph.finite_with(p.rq.arrival_s)
+                && ph.offloads
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+            if !refused {
+                let start = p.next_t.max(p.rq.arrival_s);
+                des.admit_at(cfg, p.rq, ph, start);
+            } else if p.tries_left <= 1 {
+                des.reject(p.rq, DropReason::RetriesExhausted);
+            } else {
+                p.tries_left -= 1;
+                p.next_t = p.next_t.max(t0) + backoff;
+                retryq.push_back(p);
+            }
+        }
         let n_reqs = batch.requests.len();
         for rq in batch.requests {
-            let d = planner.decision_of(rq.user);
-            let (up_rate, down_rate) = planner.rates_of(rq.user).unwrap_or((0.0, 0.0));
-            let rec = arena.user(rq.user);
-            let ph = phases_from_parts(
-                cfg,
-                &model,
-                &d,
-                rec.profile.device_flops,
-                planner.ap_of(rq.user),
-                up_rate,
-                down_rate,
-            );
-            des.admit(cfg, rq, ph);
+            let ph = faulted_phases(cfg, &model, &planner, &arena, &fs, rq.user);
+            let refused = ph.finite_with(rq.arrival_s)
+                && ph.offloads
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+            if !refused {
+                des.admit(cfg, rq, ph);
+            } else if max_retries == 0 {
+                let reason = if !fs.ap_up[ph.ap] {
+                    DropReason::ApDown
+                } else {
+                    DropReason::CapacityExhausted
+                };
+                des.reject(rq, reason);
+            } else {
+                retryq.push_back(Pending {
+                    rq,
+                    tries_left: max_retries,
+                    next_t: rq.arrival_s + backoff,
+                });
+            }
         }
         des.drain_until(t1);
         let serve_wall_s = ts.elapsed().as_secs_f64();
@@ -177,7 +270,21 @@ pub fn run_scale(
             cohorts_reused: ep.cohorts_reused,
             plan_wall_s,
             serve_wall_s,
+            dropped: des.dropped_len() - dropped_before,
+            rehomed,
+            aps_down: fs.aps_down(),
+            retries,
         });
+    }
+    // pending retries that never found a healthy target give up here —
+    // conservation still counts every streamed request exactly once
+    let mut flushed = 0usize;
+    while let Some(p) = retryq.pop_front() {
+        des.reject(p.rq, DropReason::RetriesExhausted);
+        flushed += 1;
+    }
+    if let Some(last) = epochs.last_mut() {
+        last.dropped += flushed;
     }
 
     Ok(ScaleReport {
@@ -186,6 +293,33 @@ pub fn run_scale(
         population: cfg.network.num_users,
         peak_rss_mb: peak_rss_mb(),
     })
+}
+
+/// Phase durations of one request on the arena path, with the §2i SNR
+/// derate applied to the realized link rates (1.0 — bit-identical —
+/// when the AP's link is healthy).
+fn faulted_phases(
+    cfg: &Config,
+    model: &ModelProfile,
+    planner: &ShardedPlanner,
+    arena: &UserArena,
+    fs: &FaultState,
+    user: usize,
+) -> Phases {
+    let d = planner.decision_of(user);
+    let (up_rate, down_rate) = planner.rates_of(user).unwrap_or((0.0, 0.0));
+    let ap = planner.ap_of(user);
+    let dr = fs.derate[ap];
+    let rec = arena.user(user);
+    phases_from_parts(
+        cfg,
+        model,
+        &d,
+        rec.profile.device_flops,
+        ap,
+        up_rate * dr,
+        down_rate * dr,
+    )
 }
 
 #[cfg(test)]
@@ -228,6 +362,12 @@ mod tests {
                 "every shard is either planned or skipped"
             );
         }
+        // faults-off: the resilience telemetry reads all-healthy
+        for e in &rep.epochs {
+            assert_eq!(e.aps_down, 0);
+            assert_eq!(e.rehomed, 0);
+            assert_eq!(e.retries, 0);
+        }
         // determinism (wall clocks aside)
         let again = run_scale(&cfg, 0xA1, 0xB2, &ScaleOptions::default()).unwrap();
         assert_eq!(
@@ -242,6 +382,80 @@ mod tests {
         {
             assert_eq!(a.id, b.id);
             assert_eq!(a.finish_s, b.finish_s);
+        }
+    }
+
+    /// §2i at scale: injected outages + capacity loss conserve every
+    /// streamed request, surface per-epoch degradation counts, and stay
+    /// byte-identical across thread counts for a fixed fault seed.
+    #[test]
+    fn scale_faults_conserve_and_are_thread_invariant() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_users = 500;
+        cfg.churn.initial_active_frac = 0.2;
+        cfg.churn.arrival_rate_hz = 2.0;
+        cfg.churn.departure_rate_hz = 0.2;
+        cfg.churn.handoff_hz = 0.1;
+        cfg.workload.episode_s = 1.0;
+        cfg.workload.arrival_rate_hz = 5.0;
+        // outages strike fast and never heal: by the second epoch the
+        // whole cell field is down and every offloader walks the retry
+        // ladder to a drop
+        cfg.faults.ap_outage_rate_hz = 40.0;
+        cfg.faults.ap_recovery_rate_hz = 0.0;
+        let rep = run_scale(&cfg, 0xA1, 0xB2, &ScaleOptions::default()).unwrap();
+        let total_req: usize = rep.epochs.iter().map(|e| e.requests).sum();
+        assert_eq!(
+            total_req,
+            rep.outcome.completions.len() + rep.outcome.dropped.len(),
+            "conservation under injected faults"
+        );
+        let total_drop: usize = rep.epochs.iter().map(|e| e.dropped).sum();
+        assert_eq!(total_drop, rep.outcome.dropped.len());
+        assert!(
+            rep.epochs.iter().any(|e| e.aps_down > 0),
+            "the outage schedule must actually bite"
+        );
+        assert_eq!(
+            rep.epochs.last().unwrap().aps_down,
+            cfg.network.num_aps,
+            "no recovery configured — everything stays down"
+        );
+
+        let rep4 = run_scale(
+            &cfg,
+            0xA1,
+            0xB2,
+            &ScaleOptions {
+                threads: 4,
+                ..ScaleOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            rep.outcome.completions.len(),
+            rep4.outcome.completions.len()
+        );
+        for (a, b) in rep
+            .outcome
+            .completions
+            .iter()
+            .zip(rep4.outcome.completions.iter())
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.finish_s, b.finish_s);
+            assert_eq!(a.queue_s, b.queue_s);
+        }
+        assert_eq!(rep.outcome.dropped.len(), rep4.outcome.dropped.len());
+        for (a, b) in rep.outcome.dropped.iter().zip(rep4.outcome.dropped.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.reason, b.reason);
+        }
+        for (a, b) in rep.epochs.iter().zip(rep4.epochs.iter()) {
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.rehomed, b.rehomed);
+            assert_eq!(a.aps_down, b.aps_down);
+            assert_eq!(a.retries, b.retries);
         }
     }
 

@@ -1,0 +1,396 @@
+//! Deterministic fault injection for the dynamic serving engine
+//! (DESIGN.md §2i): a seeded continuous-time Markov chain over per-AP
+//! health states emits AP outages/recoveries, edge-pool capacity loss, and
+//! per-link SNR degradation as first-class epoch events — the same
+//! schedule shape as [`crate::trace::ChurnSchedule`], so the epoch loops
+//! replay faults with the identical sorted-cursor pattern they already use
+//! for churn.
+
+use crate::config::Config;
+use crate::util::rng::Pcg32;
+
+/// One fault event. Each AP carries three independent health bits (power,
+/// pool capacity, link quality); events flip exactly one bit and are only
+/// ever emitted from the legal source state (no double-down, no recovery
+/// of a healthy AP).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEventKind {
+    /// AP loses power: its users are stranded until the next epoch
+    /// boundary force-rehomes them to a surviving AP.
+    ApDown,
+    /// AP recovers (users do not move back automatically — churn handoffs
+    /// and later outages redistribute them).
+    ApUp,
+    /// Edge pool degrades to `frac` of its configured units.
+    CapacityLoss { frac: f64 },
+    /// Edge pool returns to full capacity.
+    CapacityRestore,
+    /// Link SNR drops by `db`; realized rates of the AP's users are
+    /// derated by `10^(-db/20)` while active.
+    SnrDegrade { db: f64 },
+    /// Link SNR returns to nominal.
+    SnrRestore,
+}
+
+/// A timestamped per-AP fault event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub t_s: f64,
+    pub ap: usize,
+    pub kind: FaultEventKind,
+}
+
+/// Deterministic fault schedule over one episode: a time-sorted event
+/// list. All APs start healthy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSchedule {
+    /// Sorted ascending by `t_s` (generation emits them in time order).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// The fault-free system: nothing ever breaks.
+    pub fn none() -> Self {
+        Self { events: Vec::new() }
+    }
+
+    /// True when the schedule injects anything at all.
+    pub fn any(&self) -> bool {
+        !self.events.is_empty()
+    }
+
+    /// Sample a schedule from `cfg.faults` as a CTMC with competing
+    /// exponential clocks: per-up-AP outages vs per-down-AP recoveries,
+    /// and likewise for capacity and SNR health. Deterministic in
+    /// `(cfg, seed)`.
+    pub fn generate(cfg: &Config, seed: u64) -> Self {
+        let ft = &cfg.faults;
+        let n_aps = cfg.network.num_aps;
+        if n_aps == 0 || !ft.any() {
+            return Self::none();
+        }
+        let mut rng = Pcg32::new(seed, 0xFA17);
+        let mut up = vec![true; n_aps];
+        let mut cap_ok = vec![true; n_aps];
+        let mut snr_ok = vec![true; n_aps];
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            let n_up = up.iter().filter(|&&a| a).count();
+            let n_cap_ok = cap_ok.iter().filter(|&&a| a).count();
+            let n_snr_ok = snr_ok.iter().filter(|&&a| a).count();
+            let r_out = ft.ap_outage_rate_hz * n_up as f64;
+            let r_rec = ft.ap_recovery_rate_hz * (n_aps - n_up) as f64;
+            let r_cl = ft.capacity_loss_rate_hz * n_cap_ok as f64;
+            let r_cr = ft.capacity_recovery_rate_hz * (n_aps - n_cap_ok) as f64;
+            let r_sl = ft.snr_degrade_rate_hz * n_snr_ok as f64;
+            let r_sr = ft.snr_recovery_rate_hz * (n_aps - n_snr_ok) as f64;
+            let total = r_out + r_rec + r_cl + r_cr + r_sl + r_sr;
+            if total <= 0.0 {
+                break;
+            }
+            t += rng.exponential(total);
+            if t >= cfg.workload.episode_s {
+                break;
+            }
+            let pick = rng.f64() * total;
+            if pick < r_out {
+                let ap = super::nth_with(&up, true, rng.below(n_up));
+                up[ap] = false;
+                events.push(FaultEvent {
+                    t_s: t,
+                    ap,
+                    kind: FaultEventKind::ApDown,
+                });
+            } else if pick < r_out + r_rec {
+                let ap = super::nth_with(&up, false, rng.below(n_aps - n_up));
+                up[ap] = true;
+                events.push(FaultEvent {
+                    t_s: t,
+                    ap,
+                    kind: FaultEventKind::ApUp,
+                });
+            } else if pick < r_out + r_rec + r_cl {
+                let ap = super::nth_with(&cap_ok, true, rng.below(n_cap_ok));
+                cap_ok[ap] = false;
+                events.push(FaultEvent {
+                    t_s: t,
+                    ap,
+                    kind: FaultEventKind::CapacityLoss {
+                        frac: ft.capacity_loss_frac,
+                    },
+                });
+            } else if pick < r_out + r_rec + r_cl + r_cr {
+                let ap = super::nth_with(&cap_ok, false, rng.below(n_aps - n_cap_ok));
+                cap_ok[ap] = true;
+                events.push(FaultEvent {
+                    t_s: t,
+                    ap,
+                    kind: FaultEventKind::CapacityRestore,
+                });
+            } else if pick < r_out + r_rec + r_cl + r_cr + r_sl {
+                let ap = super::nth_with(&snr_ok, true, rng.below(n_snr_ok));
+                snr_ok[ap] = false;
+                events.push(FaultEvent {
+                    t_s: t,
+                    ap,
+                    kind: FaultEventKind::SnrDegrade {
+                        db: ft.snr_degrade_db,
+                    },
+                });
+            } else {
+                let ap = super::nth_with(&snr_ok, false, rng.below(n_aps - n_snr_ok));
+                snr_ok[ap] = true;
+                events.push(FaultEvent {
+                    t_s: t,
+                    ap,
+                    kind: FaultEventKind::SnrRestore,
+                });
+            }
+        }
+        Self { events }
+    }
+
+    /// Event tallies `(outages, recoveries, capacity_losses, snr_degrades)`.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for e in &self.events {
+            match e.kind {
+                FaultEventKind::ApDown => c.0 += 1,
+                FaultEventKind::ApUp => c.1 += 1,
+                FaultEventKind::CapacityLoss { .. } => c.2 += 1,
+                FaultEventKind::SnrDegrade { .. } => c.3 += 1,
+                FaultEventKind::CapacityRestore | FaultEventKind::SnrRestore => {}
+            }
+        }
+        c
+    }
+
+    /// True when any event takes an AP down (the only fault class that
+    /// moves users between shards).
+    pub fn has_outages(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultEventKind::ApDown))
+    }
+}
+
+/// Live per-AP health replayed from a [`FaultSchedule`] by the epoch
+/// loops: a sorted-event cursor (the same pattern the engine uses for
+/// churn events) plus the degradation state each epoch reads.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    /// AP has power.
+    pub ap_up: Vec<bool>,
+    /// Fraction of the edge pool available (1.0 = healthy).
+    pub pool_frac: Vec<f64>,
+    /// Multiplicative link-rate derate (1.0 = healthy; `10^(-dB/20)`
+    /// while SNR-degraded).
+    pub derate: Vec<f64>,
+    next_ev: usize,
+}
+
+impl FaultState {
+    pub fn new(n_aps: usize) -> Self {
+        Self {
+            ap_up: vec![true; n_aps],
+            pool_frac: vec![1.0; n_aps],
+            derate: vec![1.0; n_aps],
+            next_ev: 0,
+        }
+    }
+
+    /// Apply every event with `t_s <= t0`; returns the APs that went down
+    /// in this step (still down at `t0`) so the caller can force-rehome
+    /// their users. Call with non-decreasing `t0` only.
+    pub fn advance(&mut self, faults: &FaultSchedule, t0: f64) -> Vec<usize> {
+        let mut downed: Vec<usize> = Vec::new();
+        while self.next_ev < faults.events.len() && faults.events[self.next_ev].t_s <= t0 {
+            let ev = &faults.events[self.next_ev];
+            match ev.kind {
+                FaultEventKind::ApDown => {
+                    self.ap_up[ev.ap] = false;
+                    if !downed.contains(&ev.ap) {
+                        downed.push(ev.ap);
+                    }
+                }
+                FaultEventKind::ApUp => {
+                    self.ap_up[ev.ap] = true;
+                    downed.retain(|&a| a != ev.ap);
+                }
+                FaultEventKind::CapacityLoss { frac } => self.pool_frac[ev.ap] = frac,
+                FaultEventKind::CapacityRestore => self.pool_frac[ev.ap] = 1.0,
+                FaultEventKind::SnrDegrade { db } => {
+                    self.derate[ev.ap] = 10f64.powf(-db / 20.0)
+                }
+                FaultEventKind::SnrRestore => self.derate[ev.ap] = 1.0,
+            }
+            self.next_ev += 1;
+        }
+        downed
+    }
+
+    /// Number of APs currently without power.
+    pub fn aps_down(&self) -> usize {
+        self.ap_up.iter().filter(|&&a| !a).count()
+    }
+
+    /// The surviving AP with the fewest homed users (ties to the lowest
+    /// index) — the deterministic "best surviving AP" rehoming target.
+    /// `None` when every AP is down.
+    pub fn best_surviving_ap(&self, homed: &[usize]) -> Option<usize> {
+        (0..self.ap_up.len())
+            .filter(|&a| self.ap_up[a])
+            .min_by_key(|&a| (homed[a], a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn faulty_cfg() -> Config {
+        let mut cfg = presets::smoke();
+        cfg.workload.episode_s = 4.0;
+        cfg.faults.ap_outage_rate_hz = 0.5;
+        cfg.faults.ap_recovery_rate_hz = 1.0;
+        cfg.faults.capacity_loss_rate_hz = 0.3;
+        cfg.faults.snr_degrade_rate_hz = 0.3;
+        cfg.faults.snr_recovery_rate_hz = 0.8;
+        cfg
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_legal() {
+        let cfg = faulty_cfg();
+        let a = FaultSchedule::generate(&cfg, 11);
+        let b = FaultSchedule::generate(&cfg, 11);
+        assert_eq!(a, b);
+        let c = FaultSchedule::generate(&cfg, 12);
+        assert_ne!(a, c);
+        assert!(a.any(), "these rates produce events over 4 s");
+        // events sorted, in-episode, and every transition from the legal
+        // source state
+        let n = cfg.network.num_aps;
+        let mut up = vec![true; n];
+        let mut cap_ok = vec![true; n];
+        let mut snr_ok = vec![true; n];
+        let mut last = 0.0;
+        for e in &a.events {
+            assert!(e.t_s >= last && e.t_s < cfg.workload.episode_s);
+            last = e.t_s;
+            assert!(e.ap < n);
+            match e.kind {
+                FaultEventKind::ApDown => {
+                    assert!(up[e.ap], "outage of a down AP");
+                    up[e.ap] = false;
+                }
+                FaultEventKind::ApUp => {
+                    assert!(!up[e.ap], "recovery of an up AP");
+                    up[e.ap] = true;
+                }
+                FaultEventKind::CapacityLoss { frac } => {
+                    assert!(cap_ok[e.ap]);
+                    assert_eq!(frac, cfg.faults.capacity_loss_frac);
+                    cap_ok[e.ap] = false;
+                }
+                FaultEventKind::CapacityRestore => {
+                    assert!(!cap_ok[e.ap]);
+                    cap_ok[e.ap] = true;
+                }
+                FaultEventKind::SnrDegrade { db } => {
+                    assert!(snr_ok[e.ap]);
+                    assert_eq!(db, cfg.faults.snr_degrade_db);
+                    snr_ok[e.ap] = false;
+                }
+                FaultEventKind::SnrRestore => {
+                    assert!(!snr_ok[e.ap]);
+                    snr_ok[e.ap] = true;
+                }
+            }
+        }
+        let (o, r, cl, sd) = a.counts();
+        assert!(o > 0, "outages configured");
+        assert!(a.has_outages());
+        assert!(o + r + cl + sd <= a.events.len());
+    }
+
+    #[test]
+    fn fault_free_config_generates_nothing() {
+        let cfg = presets::smoke();
+        assert!(!cfg.faults.any());
+        let s = FaultSchedule::generate(&cfg, 7);
+        assert_eq!(s, FaultSchedule::none());
+        assert!(!s.any() && !s.has_outages());
+    }
+
+    #[test]
+    fn fault_state_replays_health_and_reports_downed() {
+        let mut st = FaultState::new(3);
+        let sched = FaultSchedule {
+            events: vec![
+                FaultEvent {
+                    t_s: 0.1,
+                    ap: 1,
+                    kind: FaultEventKind::ApDown,
+                },
+                FaultEvent {
+                    t_s: 0.2,
+                    ap: 0,
+                    kind: FaultEventKind::CapacityLoss { frac: 0.25 },
+                },
+                FaultEvent {
+                    t_s: 0.3,
+                    ap: 2,
+                    kind: FaultEventKind::SnrDegrade { db: 20.0 },
+                },
+                FaultEvent {
+                    t_s: 0.6,
+                    ap: 1,
+                    kind: FaultEventKind::ApUp,
+                },
+            ],
+        };
+        let downed = st.advance(&sched, 0.35);
+        assert_eq!(downed, vec![1]);
+        assert!(!st.ap_up[1] && st.ap_up[0] && st.ap_up[2]);
+        assert_eq!(st.aps_down(), 1);
+        assert_eq!(st.pool_frac[0], 0.25);
+        assert!((st.derate[2] - 0.1).abs() < 1e-12, "20 dB = 10^-1 derate");
+        // AP1 is down: best surviving ignores it even when least loaded
+        assert_eq!(st.best_surviving_ap(&[5, 0, 5]), Some(0));
+        let downed = st.advance(&sched, 1.0);
+        assert!(downed.is_empty(), "recovery inside the step cancels it");
+        assert!(st.ap_up[1]);
+        assert_eq!(st.aps_down(), 0);
+    }
+
+    #[test]
+    fn down_up_within_one_step_is_not_reported_as_downed() {
+        let mut st = FaultState::new(2);
+        let sched = FaultSchedule {
+            events: vec![
+                FaultEvent {
+                    t_s: 0.1,
+                    ap: 0,
+                    kind: FaultEventKind::ApDown,
+                },
+                FaultEvent {
+                    t_s: 0.2,
+                    ap: 0,
+                    kind: FaultEventKind::ApUp,
+                },
+            ],
+        };
+        assert!(st.advance(&sched, 0.5).is_empty());
+        assert!(st.ap_up[0]);
+    }
+
+    #[test]
+    fn all_aps_down_has_no_surviving_target() {
+        let mut st = FaultState::new(2);
+        st.ap_up = vec![false, false];
+        assert_eq!(st.best_surviving_ap(&[0, 0]), None);
+    }
+}

@@ -7,7 +7,9 @@
 use crate::config::Config;
 use crate::util::rng::Pcg32;
 
+pub mod faults;
 pub mod stream;
+pub use faults::{FaultEvent, FaultEventKind, FaultSchedule, FaultState};
 pub use stream::{ChurnStream, EpisodeStream, EpochBatch};
 
 /// One inference request.
@@ -238,9 +240,10 @@ impl ChurnSchedule {
     }
 }
 
-/// Index of the `k`-th user whose mask equals `val` (panics if absent —
-/// callers pick `k` below the respective population count).
-fn nth_with(mask: &[bool], val: bool, k: usize) -> usize {
+/// Index of the `k`-th entry whose mask equals `val` (panics if absent —
+/// callers pick `k` below the respective population count). Shared with
+/// the fault-schedule CTMC (`faults.rs`), which picks APs the same way.
+pub(crate) fn nth_with(mask: &[bool], val: bool, k: usize) -> usize {
     mask.iter()
         .enumerate()
         .filter(|(_, &m)| m == val)
