@@ -162,14 +162,14 @@ pub(crate) mod helpers {
     pub fn est_up_rate(cfg: &Config, net: &Network, user: usize, ch: usize) -> f64 {
         let g = net.channels.up_gain(&net.topo, user, ch);
         let p = crate::util::dbm_to_watt(cfg.network.max_tx_power_dbm);
-        net.subchannel_bw_hz * log2_1p(p * g / net.noise_w)
+        net.bw_of(user) * log2_1p(p * g / net.noise_of(user))
     }
 
     /// Estimated single-user downlink rate.
     pub fn est_down_rate(cfg: &Config, net: &Network, user: usize, ch: usize) -> f64 {
         let g = net.channels.down_gain(&net.topo, user, ch);
         let p = crate::util::dbm_to_watt(cfg.network.ap_tx_power_dbm) / 4.0;
-        net.subchannel_bw_hz * log2_1p(p * g / net.noise_w)
+        net.bw_of(user) * log2_1p(p * g / net.noise_of(user))
     }
 
     /// Round-robin channel assignment within each cell: user k of cell n
@@ -186,7 +186,10 @@ pub(crate) mod helpers {
     }
 
     /// Equal share of the per-AP resource pool among offloading users,
-    /// clamped to [r_min, r_max].
+    /// clamped to [r_min, r_max]. Deliberately uses the *global* pool size
+    /// even under a heterogeneous fleet: the baselines model an operator
+    /// who provisions by the nominal spec, and the DES still enforces each
+    /// AP's real (profile-resolved) pool at admission.
     pub fn equal_share_r(cfg: &Config, n_offloaders: usize) -> f64 {
         if n_offloaders == 0 {
             return cfg.compute.r_max;

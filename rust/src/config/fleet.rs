@@ -1,0 +1,410 @@
+//! Heterogeneous AP fleets (DESIGN.md §2j).
+//!
+//! A `[fleet.<name>]` section declares a *profile*: a named override bundle
+//! over the global `ComputeConfig`/`NetworkConfig` knobs that are physically
+//! per-AP — edge pool size, attached-device capability range, total
+//! bandwidth (and hence per-subchannel bandwidth), antenna gain, and cell
+//! radius. Profiles claim AP index ranges either explicitly
+//! (`assignment = "lo..hi"`, half-open) or by `count = k` (the next k
+//! unclaimed slots, profiles scanned in stored name order); `count = 0`
+//! with no assignment claims the remainder. A config with no `[fleet.*]`
+//! sections is a homogeneous fleet: one implicit profile carrying exactly
+//! the global values, so every pre-fleet scenario resolves to per-AP values
+//! bit-equal to the globals it used before.
+//!
+//! Profiles are kept sorted by name: `Config::apply` receives sections from
+//! a `BTreeMap` (already alphabetical), and `to_toml` emits them in stored
+//! order, so parse → serialize → parse is the identity.
+
+use super::{Config, TomlValue};
+
+/// One named `[fleet.<name>]` override bundle (unresolved: `None` fields
+/// fall back to the global config at resolution time).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FleetProfile {
+    pub name: String,
+    /// Number of APs this profile claims (the next `count` unclaimed slots,
+    /// profiles scanned in stored order). Ignored when `assignment` is set;
+    /// `0` with no assignment claims every slot left over.
+    pub count: usize,
+    /// Explicit half-open AP index range `lo..hi` (claimed before any
+    /// count-based profile fills).
+    pub assignment: Option<(usize, usize)>,
+    /// Override of `compute.edge_pool_units` for this profile's APs.
+    pub edge_pool_units: Option<f64>,
+    /// Override of `compute.device_flops_lo` for users homed on these APs.
+    pub device_flops_lo: Option<f64>,
+    /// Override of `compute.device_flops_hi` for users homed on these APs.
+    pub device_flops_hi: Option<f64>,
+    /// Override of `network.bandwidth_hz` (per-subchannel bandwidth is this
+    /// divided by the global `network.num_subchannels`).
+    pub bandwidth_hz: Option<f64>,
+    /// Antenna/feeder gain in dB applied to this AP's link path loss
+    /// (power domain: `10^(dB/10)`). Absent ⇒ exactly 1.0.
+    pub gain_db: Option<f64>,
+    /// Override of `network.cell_radius_m` for users homed on these APs.
+    pub cell_radius_m: Option<f64>,
+}
+
+impl FleetProfile {
+    /// Apply one `key = value` line of a `[fleet.<name>]` section.
+    pub(super) fn apply_key(&mut self, key: &str, val: &TomlValue) -> anyhow::Result<()> {
+        macro_rules! f {
+            () => {
+                Some(
+                    val.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("expected number, got {val:?}"))?,
+                )
+            };
+        }
+        match key {
+            "count" => {
+                self.count = val
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("expected integer, got {val:?}"))?
+                    as usize
+            }
+            "assignment" => {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("expected \"lo..hi\" string"))?;
+                self.assignment = Some(parse_assignment(s)?);
+            }
+            "edge_pool_units" => self.edge_pool_units = f!(),
+            "device_flops_lo" => self.device_flops_lo = f!(),
+            "device_flops_hi" => self.device_flops_hi = f!(),
+            "bandwidth_hz" => self.bandwidth_hz = f!(),
+            "gain_db" => self.gain_db = f!(),
+            "cell_radius_m" => self.cell_radius_m = f!(),
+            _ => anyhow::bail!("unknown fleet key"),
+        }
+        Ok(())
+    }
+
+    /// Render this profile as a `[fleet.<name>]` section (no trailing
+    /// blank line). Lossless: only explicitly-set fields are emitted.
+    pub(super) fn to_toml_section(&self) -> String {
+        let f = |v: f64| TomlValue::Float(v).to_toml();
+        let mut s = format!("[fleet.{}]\n", self.name);
+        if self.count != 0 {
+            s.push_str(&format!("count = {}\n", self.count));
+        }
+        if let Some((lo, hi)) = self.assignment {
+            s.push_str(&format!("assignment = \"{lo}..{hi}\"\n"));
+        }
+        if let Some(v) = self.edge_pool_units {
+            s.push_str(&format!("edge_pool_units = {}\n", f(v)));
+        }
+        if let Some(v) = self.device_flops_lo {
+            s.push_str(&format!("device_flops_lo = {}\n", f(v)));
+        }
+        if let Some(v) = self.device_flops_hi {
+            s.push_str(&format!("device_flops_hi = {}\n", f(v)));
+        }
+        if let Some(v) = self.bandwidth_hz {
+            s.push_str(&format!("bandwidth_hz = {}\n", f(v)));
+        }
+        if let Some(v) = self.gain_db {
+            s.push_str(&format!("gain_db = {}\n", f(v)));
+        }
+        if let Some(v) = self.cell_radius_m {
+            s.push_str(&format!("cell_radius_m = {}\n", f(v)));
+        }
+        s
+    }
+}
+
+fn parse_assignment(s: &str) -> anyhow::Result<(usize, usize)> {
+    let (lo, hi) = s
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("assignment must be \"lo..hi\", got {s:?}"))?;
+    let lo: usize = lo
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad assignment lower bound {s:?}"))?;
+    let hi: usize = hi
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad assignment upper bound {s:?}"))?;
+    anyhow::ensure!(lo < hi, "assignment {s:?} is empty (need lo < hi)");
+    Ok((lo, hi))
+}
+
+/// One AP's fully-resolved parameters: profile overrides materialized over
+/// the global config. Every field is a concrete value — downstream layers
+/// (network generation, the DES pool, shard configs) index this by AP and
+/// never re-derive from globals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApProfile {
+    /// Name of the profile this AP resolved from ("" for the implicit
+    /// homogeneous default).
+    pub name: String,
+    pub edge_pool_units: f64,
+    pub device_flops_lo: f64,
+    pub device_flops_hi: f64,
+    /// Total carrier bandwidth in Hz at this AP (the raw value, kept so a
+    /// shard's single-AP config can carry it bit-exactly).
+    pub bandwidth_hz: f64,
+    /// Per-subchannel bandwidth in Hz (profile `bandwidth_hz` — or the
+    /// global — divided by the global subchannel count).
+    pub subchannel_bw_hz: f64,
+    /// Per-subchannel noise power in W at this AP's subchannel width
+    /// (σ² = N₀·B/M — a wider carrier admits more noise).
+    pub noise_w: f64,
+    /// Linear power gain applied to this AP's link path loss (1.0 when no
+    /// `gain_db` override — multiplying by it is then bit-exact identity).
+    pub gain: f64,
+    pub cell_radius_m: f64,
+}
+
+impl ApProfile {
+    /// The implicit homogeneous profile: exactly the global values.
+    fn default_of(cfg: &Config) -> Self {
+        Self {
+            name: String::new(),
+            edge_pool_units: cfg.compute.edge_pool_units,
+            device_flops_lo: cfg.compute.device_flops_lo,
+            device_flops_hi: cfg.compute.device_flops_hi,
+            bandwidth_hz: cfg.network.bandwidth_hz,
+            subchannel_bw_hz: cfg.subchannel_bw_hz(),
+            noise_w: cfg.noise_power_w(),
+            gain: 1.0,
+            cell_radius_m: cfg.network.cell_radius_m,
+        }
+    }
+
+    fn from_profile(cfg: &Config, p: &FleetProfile) -> Self {
+        let nsc = cfg.network.num_subchannels as f64;
+        let bw = p.bandwidth_hz.unwrap_or(cfg.network.bandwidth_hz);
+        Self {
+            name: p.name.clone(),
+            edge_pool_units: p.edge_pool_units.unwrap_or(cfg.compute.edge_pool_units),
+            device_flops_lo: p.device_flops_lo.unwrap_or(cfg.compute.device_flops_lo),
+            device_flops_hi: p.device_flops_hi.unwrap_or(cfg.compute.device_flops_hi),
+            bandwidth_hz: bw,
+            subchannel_bw_hz: bw / nsc,
+            // same op order as Config::noise_power_w — a non-overridden
+            // bandwidth yields the bit-identical global noise power
+            noise_w: crate::util::dbm_to_watt(cfg.network.noise_psd_dbm_hz) * bw / nsc,
+            gain: match p.gain_db {
+                // 1.0 exactly — the no-override path must stay bit-identical.
+                None => 1.0,
+                Some(db) => 10f64.powf(db / 10.0),
+            },
+            cell_radius_m: p.cell_radius_m.unwrap_or(cfg.network.cell_radius_m),
+        }
+    }
+}
+
+/// Resolve the fleet into one [`ApProfile`] per AP index, checking value
+/// sanity and that profile assignments cover `0..num_aps` exactly once.
+pub fn resolve(cfg: &Config) -> anyhow::Result<Vec<ApProfile>> {
+    let n = cfg.network.num_aps;
+    if cfg.fleet.is_empty() {
+        return Ok(vec![ApProfile::default_of(cfg); n]);
+    }
+    for p in &cfg.fleet {
+        check_profile(cfg, p)
+            .map_err(|e| anyhow::anyhow!("fleet profile {:?}: {e}", p.name))?;
+    }
+    let mut owner: Vec<Option<usize>> = vec![None; n];
+    // Pass 1: explicit ranges claim their slots first.
+    for (i, p) in cfg.fleet.iter().enumerate() {
+        if let Some((lo, hi)) = p.assignment {
+            anyhow::ensure!(
+                hi <= n,
+                "fleet profile {:?}: assignment {lo}..{hi} exceeds num_aps = {n}",
+                p.name
+            );
+            for a in lo..hi {
+                if let Some(prev) = owner[a] {
+                    anyhow::bail!(
+                        "fleet profiles {:?} and {:?} both claim AP {a}",
+                        cfg.fleet[prev].name,
+                        p.name
+                    );
+                }
+                owner[a] = Some(i);
+            }
+        }
+    }
+    // Pass 2: counted profiles fill unclaimed slots in stored order.
+    let mut cursor = 0usize;
+    for (i, p) in cfg.fleet.iter().enumerate() {
+        if p.assignment.is_none() && p.count > 0 {
+            let mut left = p.count;
+            while left > 0 {
+                while cursor < n && owner[cursor].is_some() {
+                    cursor += 1;
+                }
+                anyhow::ensure!(
+                    cursor < n,
+                    "fleet profile {:?}: count = {} exceeds the unclaimed APs",
+                    p.name,
+                    p.count
+                );
+                owner[cursor] = Some(i);
+                left -= 1;
+            }
+        }
+    }
+    // Pass 3: at most one remainder profile takes everything left.
+    let remainders: Vec<usize> = cfg
+        .fleet
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.assignment.is_none() && p.count == 0)
+        .map(|(i, _)| i)
+        .collect();
+    anyhow::ensure!(
+        remainders.len() <= 1,
+        "at most one fleet profile may omit both count and assignment (got {})",
+        remainders.len()
+    );
+    if let Some(&i) = remainders.first() {
+        for slot in owner.iter_mut() {
+            if slot.is_none() {
+                *slot = Some(i);
+            }
+        }
+    }
+    if let Some(a) = owner.iter().position(|o| o.is_none()) {
+        anyhow::bail!("fleet profiles leave AP {a} uncovered (of {n})");
+    }
+    let resolved: Vec<ApProfile> = cfg
+        .fleet
+        .iter()
+        .map(|p| ApProfile::from_profile(cfg, p))
+        .collect();
+    Ok(owner
+        .into_iter()
+        .map(|o| resolved[o.unwrap()].clone())
+        .collect())
+}
+
+fn check_profile(cfg: &Config, p: &FleetProfile) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !p.name.is_empty() && !p.name.contains('.'),
+        "profile name must be non-empty and dot-free"
+    );
+    if let Some(v) = p.edge_pool_units {
+        anyhow::ensure!(v > 0.0 && v.is_finite(), "edge_pool_units must be > 0");
+    }
+    let lo = p.device_flops_lo.unwrap_or(cfg.compute.device_flops_lo);
+    let hi = p.device_flops_hi.unwrap_or(cfg.compute.device_flops_hi);
+    anyhow::ensure!(
+        lo > 0.0 && lo <= hi && hi.is_finite(),
+        "device FLOPs range must satisfy 0 < lo <= hi"
+    );
+    if let Some(v) = p.bandwidth_hz {
+        anyhow::ensure!(v > 0.0 && v.is_finite(), "bandwidth_hz must be > 0");
+    }
+    if let Some(v) = p.gain_db {
+        anyhow::ensure!(v.is_finite(), "gain_db must be finite");
+    }
+    if let Some(v) = p.cell_radius_m {
+        anyhow::ensure!(
+            v.is_finite() && v > cfg.network.min_distance_m,
+            "cell_radius_m must exceed network.min_distance_m"
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with(fleet_toml: &str) -> anyhow::Result<Config> {
+        Config::from_str(&format!("[network]\nnum_aps = 5\n{fleet_toml}"))
+    }
+
+    #[test]
+    fn empty_fleet_resolves_to_globals() {
+        let cfg = Config::default();
+        let aps = resolve(&cfg).unwrap();
+        assert_eq!(aps.len(), cfg.network.num_aps);
+        for p in &aps {
+            assert_eq!(p.edge_pool_units, cfg.compute.edge_pool_units);
+            assert_eq!(p.device_flops_lo, cfg.compute.device_flops_lo);
+            assert_eq!(p.device_flops_hi, cfg.compute.device_flops_hi);
+            assert_eq!(p.bandwidth_hz, cfg.network.bandwidth_hz);
+            assert_eq!(p.subchannel_bw_hz, cfg.subchannel_bw_hz());
+            assert_eq!(p.noise_w, cfg.noise_power_w());
+            assert_eq!(p.gain, 1.0);
+            assert_eq!(p.cell_radius_m, cfg.network.cell_radius_m);
+        }
+    }
+
+    #[test]
+    fn counts_fill_in_name_order_and_remainder_takes_the_rest() {
+        let cfg = cfg_with(
+            "[fleet.a_small]\ncount = 2\nedge_pool_units = 8.0\n\
+             [fleet.b_macro]\nedge_pool_units = 128.0\n",
+        )
+        .unwrap();
+        let aps = cfg.ap_profiles().unwrap();
+        assert_eq!(aps[0].name, "a_small");
+        assert_eq!(aps[1].name, "a_small");
+        assert_eq!(aps[0].edge_pool_units, 8.0);
+        for p in &aps[2..] {
+            assert_eq!(p.name, "b_macro");
+            assert_eq!(p.edge_pool_units, 128.0);
+        }
+    }
+
+    #[test]
+    fn explicit_assignment_claims_before_counts() {
+        let cfg = cfg_with(
+            "[fleet.mid]\nassignment = \"1..3\"\ngain_db = 3.0\n\
+             [fleet.rest]\ncount = 3\n",
+        )
+        .unwrap();
+        let aps = cfg.ap_profiles().unwrap();
+        let names: Vec<&str> = aps.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["rest", "mid", "mid", "rest", "rest"]);
+        assert!((aps[1].gain - 10f64.powf(0.3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_uncovered_and_overflow_are_rejected() {
+        let e = cfg_with(
+            "[fleet.a]\nassignment = \"0..3\"\n[fleet.b]\nassignment = \"2..5\"\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("both claim"), "{e}");
+        let e = cfg_with("[fleet.a]\ncount = 2\n").unwrap_err();
+        assert!(e.to_string().contains("uncovered"), "{e}");
+        let e = cfg_with("[fleet.a]\ncount = 9\n").unwrap_err();
+        assert!(e.to_string().contains("exceeds the unclaimed"), "{e}");
+        let e = cfg_with("[fleet.a]\nassignment = \"0..9\"\n").unwrap_err();
+        assert!(e.to_string().contains("exceeds num_aps"), "{e}");
+        let e = cfg_with("[fleet.a]\ncount = 2\n[fleet.b]\n[fleet.c]\n").unwrap_err();
+        assert!(e.to_string().contains("at most one"), "{e}");
+    }
+
+    #[test]
+    fn bad_values_are_rejected_with_the_profile_named() {
+        let e = cfg_with("[fleet.a]\nedge_pool_units = -1.0\n").unwrap_err();
+        assert!(e.to_string().contains('a'), "{e}");
+        assert!(e.to_string().contains("edge_pool_units"), "{e}");
+        let e =
+            cfg_with("[fleet.a]\ndevice_flops_lo = 9e9\ndevice_flops_hi = 1e9\n").unwrap_err();
+        assert!(e.to_string().contains("lo <= hi"), "{e}");
+        let e = cfg_with("[fleet.a]\nassignment = \"3..3\"\n").unwrap_err();
+        assert!(e.to_string().contains("empty"), "{e}");
+        let e = cfg_with("[fleet.a]\nnope = 1\n").unwrap_err();
+        assert!(e.to_string().contains("unknown fleet key"), "{e}");
+    }
+
+    #[test]
+    fn overrides_fall_back_to_globals_per_field() {
+        let cfg = cfg_with("[fleet.a]\nbandwidth_hz = 40e6\n").unwrap();
+        let aps = cfg.ap_profiles().unwrap();
+        let nsc = cfg.network.num_subchannels as f64;
+        assert_eq!(aps[0].subchannel_bw_hz, 40e6 / nsc);
+        // untouched fields come from the globals
+        assert_eq!(aps[0].edge_pool_units, cfg.compute.edge_pool_units);
+        assert_eq!(aps[0].cell_radius_m, cfg.network.cell_radius_m);
+    }
+}

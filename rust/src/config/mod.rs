@@ -5,9 +5,11 @@
 //! integer / float / string / bool values, `#` comments). Every knob the
 //! paper's evaluation sweeps (Section V.A) is here, with the paper's defaults.
 
+pub mod fleet;
 mod parse;
 pub mod presets;
 
+pub use fleet::{ApProfile, FleetProfile};
 pub use parse::{parse_toml_subset, TomlValue};
 
 use std::collections::BTreeMap;
@@ -23,6 +25,10 @@ pub struct Config {
     pub workload: WorkloadConfig,
     pub churn: ChurnConfig,
     pub faults: FaultConfig,
+    /// Heterogeneous AP fleet profiles (`[fleet.<name>]` sections, kept
+    /// sorted by name — DESIGN.md §2j). Empty = homogeneous fleet: every
+    /// AP resolves to exactly the global values above.
+    pub fleet: Vec<FleetProfile>,
     pub seed: u64,
 }
 
@@ -377,6 +383,7 @@ impl Default for Config {
             workload: WorkloadConfig::default(),
             churn: ChurnConfig::default(),
             faults: FaultConfig::default(),
+            fleet: Vec::new(),
             seed: 20240710,
         }
     }
@@ -416,14 +423,52 @@ impl Config {
 
     /// Set one knob by dotted path (`"network.num_users"`, `"workload.model"`,
     /// or top-level `"seed"`). This is the sweep-axis entry point of the
-    /// scenario engine: axis keys are exactly config paths.
+    /// scenario engine: axis keys are exactly config paths. Fleet knobs use
+    /// three segments (`"fleet.<name>.<key>"` — the section name itself
+    /// contains a dot, so the split is at the *last* dot).
     pub fn set_path(&mut self, path: &str, val: &TomlValue) -> anyhow::Result<()> {
-        let (section, key) = path.split_once('.').unwrap_or(("", path));
+        let (section, key) = if path.starts_with("fleet.") {
+            path.rsplit_once('.').unwrap_or(("", path))
+        } else {
+            path.split_once('.').unwrap_or(("", path))
+        };
         self.apply_one(section, key, val)
             .map_err(|e| anyhow::anyhow!("config key {path}: {e}"))
     }
 
+    /// The per-AP resolution of the fleet: one concrete [`ApProfile`] per
+    /// AP index (see [`fleet::resolve`]). An empty fleet yields the
+    /// implicit homogeneous profile carrying exactly the global values.
+    pub fn ap_profiles(&self) -> anyhow::Result<Vec<ApProfile>> {
+        fleet::resolve(self)
+    }
+
     fn apply_one(&mut self, section: &str, key: &str, val: &TomlValue) -> anyhow::Result<()> {
+        if let Some(name) = section.strip_prefix("fleet.") {
+            anyhow::ensure!(
+                !name.is_empty() && !name.contains('.'),
+                "bad fleet section name {name:?}"
+            );
+            let idx = match self.fleet.iter().position(|p| p.name == name) {
+                Some(i) => i,
+                None => {
+                    // Keep the list name-sorted so `to_toml` round-trips
+                    // regardless of the order sections were applied in.
+                    let at = self
+                        .fleet
+                        .partition_point(|p| p.name.as_str() < name);
+                    self.fleet.insert(
+                        at,
+                        FleetProfile {
+                            name: name.to_string(),
+                            ..FleetProfile::default()
+                        },
+                    );
+                    at
+                }
+            };
+            return self.fleet[idx].apply_key(key, val);
+        }
         macro_rules! f {
             () => {
                 val.as_f64()
@@ -523,8 +568,9 @@ impl Config {
 
     /// Render the full config as TOML-subset text. The inverse of
     /// [`Config::from_str`]: `Config::from_str(&cfg.to_toml()) == cfg`.
-    /// Kept field-for-field in sync with [`Config::apply_one`] (the
-    /// `to_toml_round_trips` test enforces this).
+    /// Drift against [`Config::apply_one`] is a test failure, not a review
+    /// convention: `round_trip_holds_for_every_preset_and_fleet_section`
+    /// pins the property over all presets and `[fleet.*]` sections.
     pub fn to_toml(&self) -> String {
         let f = |v: f64| TomlValue::Float(v).to_toml();
         let n = &self.network;
@@ -646,6 +692,12 @@ impl Config {
             "plan_deadline_iters = {}\n",
             ft.plan_deadline_iters
         ));
+        // Fleet sections last, in stored (name-sorted) order. A flat config
+        // (empty fleet) emits nothing here — byte-identical to before.
+        for p in &self.fleet {
+            s.push('\n');
+            s.push_str(&p.to_toml_section());
+        }
         s
     }
 
@@ -717,6 +769,8 @@ impl Config {
             ft.retry_backoff_s >= 0.0 && ft.retry_backoff_s.is_finite(),
             "faults.retry_backoff_s must be a finite number >= 0"
         );
+        // Fleet profiles: value sanity plus exact coverage of 0..num_aps.
+        fleet::resolve(self)?;
         Ok(())
     }
 
@@ -881,6 +935,61 @@ mod tests {
         assert_eq!(cfg.seed, 5);
         let err = cfg.set_path("network.nope", &TomlValue::Int(1)).unwrap_err();
         assert!(err.to_string().contains("network.nope"), "{err}");
+    }
+
+    #[test]
+    fn fleet_sections_parse_sorted_and_set_path_reaches_them() {
+        let c = Config::from_str(
+            "[network]\nnum_aps = 4\n\
+             [fleet.small]\ncount = 3\nedge_pool_units = 8.0\n\
+             [fleet.big]\nedge_pool_units = 96.0\ngain_db = 3.0\n",
+        )
+        .unwrap();
+        // BTreeMap section order ⇒ stored name-sorted
+        assert_eq!(c.fleet[0].name, "big");
+        assert_eq!(c.fleet[1].name, "small");
+        assert_eq!(c.fleet[1].edge_pool_units, Some(8.0));
+        let mut c = c;
+        c.set_path("fleet.small.edge_pool_units", &TomlValue::Float(12.0))
+            .unwrap();
+        assert_eq!(c.fleet[1].edge_pool_units, Some(12.0));
+        // set_path can introduce a profile too (inserted in name order)
+        c.set_path("fleet.mid.count", &TomlValue::Int(1)).unwrap();
+        assert_eq!(c.fleet[1].name, "mid");
+        let e = c
+            .set_path("fleet.small.nope", &TomlValue::Int(1))
+            .unwrap_err();
+        assert!(e.to_string().contains("fleet.small.nope"), "{e}");
+    }
+
+    #[test]
+    fn flat_configs_serialize_byte_identically() {
+        // A config with no [fleet.*] sections must emit exactly the
+        // pre-fleet text: no fleet section, same trailing shape.
+        let toml = Config::default().to_toml();
+        assert!(!toml.contains("[fleet"));
+        assert!(toml.ends_with("plan_deadline_iters = 0\n"));
+    }
+
+    #[test]
+    fn round_trip_holds_for_every_preset_and_fleet_section() {
+        // The satellite property: parse ∘ serialize = id over every preset
+        // (heterogeneous fleets included) — apply_one/to_toml drift becomes
+        // a test failure here instead of a code-review convention.
+        for &name in presets::NAMES {
+            let cfg = presets::by_name(name).unwrap();
+            let parsed = Config::from_str(&cfg.to_toml()).unwrap();
+            assert_eq!(parsed, cfg, "preset {name}");
+        }
+        // and over a config exercising every fleet key at once
+        let mut cfg = presets::fleet();
+        cfg.fleet[0].assignment = Some((0, 4));
+        cfg.fleet[0].count = 2; // count alongside assignment round-trips too
+        cfg.fleet[1].bandwidth_hz = Some(20e6);
+        cfg.fleet[1].gain_db = Some(-2.5);
+        cfg.validate().unwrap();
+        let parsed = Config::from_str(&cfg.to_toml()).unwrap();
+        assert_eq!(parsed, cfg, "full fleet key set");
     }
 
     #[test]

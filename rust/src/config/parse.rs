@@ -1,10 +1,11 @@
 //! TOML-subset parser (the offline registry has no `toml` crate).
 //!
-//! Supported: `[section]` headers, `key = value` with integer, float,
-//! string ("..."), boolean, and flat-array (`[1, 2.5, "x"]`) values,
-//! `#` comments, blank lines. Keys may contain dots (`network.num_users`)
-//! — the scenario sweep grammar relies on this. Unsupported (rejected):
-//! nested tables, nested arrays, multi-line strings.
+//! Supported: `[section]` headers (dotted names like `[fleet.macro]` are
+//! flat sections whose name contains the dot — the fleet grammar relies on
+//! this), `key = value` with integer, float, string ("..."), boolean, and
+//! flat-array (`[1, 2.5, "x"]`) values, `#` comments, blank lines. Keys may
+//! contain dots (`network.num_users`) — the scenario sweep grammar relies
+//! on this. Unsupported (rejected): nested arrays, multi-line strings.
 
 use std::collections::BTreeMap;
 
@@ -80,12 +81,13 @@ pub fn parse_toml_subset(
             continue;
         }
         if line.starts_with('[') && line.ends_with(']') && !line.contains('=') {
+            let name = line[1..line.len() - 1].trim().to_string();
             anyhow::ensure!(
-                !line.contains('.'),
-                "line {}: bad section header {line:?} (nested tables unsupported)",
+                !name.is_empty() && name.split('.').all(|seg| !seg.trim().is_empty()),
+                "line {}: bad section header {line:?} (empty section name)",
                 lineno + 1
             );
-            section = line[1..line.len() - 1].trim().to_string();
+            section = name;
             continue;
         }
         let (k, v) = line
@@ -313,9 +315,17 @@ mod tests {
     }
 
     #[test]
+    fn dotted_section_headers_are_flat_sections() {
+        let doc = parse_toml_subset("[fleet.macro]\ncount = 2\n").unwrap();
+        assert_eq!(doc["fleet.macro"]["count"], TomlValue::Int(2));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(parse_toml_subset("no equals sign").is_err());
-        assert!(parse_toml_subset("[a.b]\n").is_err());
+        assert!(parse_toml_subset("[]\n").is_err());
+        assert!(parse_toml_subset("[a.]\n").is_err());
+        assert!(parse_toml_subset("[.b]\n").is_err());
         assert!(parse_toml_subset("x = [[1],[2]]\n").is_err());
         assert!(parse_toml_subset("x = [1, }\n").is_err());
     }

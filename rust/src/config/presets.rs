@@ -1,6 +1,6 @@
 //! Named scenario presets used by the CLI, examples, and the figure harness.
 
-use super::Config;
+use super::{Config, FleetProfile};
 
 /// Paper §V.A full-scale setup: 5 APs, 1250 users, 250 subchannels.
 pub fn paper_full() -> Config {
@@ -56,8 +56,51 @@ pub fn metro() -> Config {
     c.workload.episode_s = 2.0;
     // Cohort identity must survive churn for the shard caches to pay off.
     c.optimizer.stable_cohorts = true;
+    // An explicit (homogeneous) fleet section: every AP resolves to exactly
+    // the global values above, so behavior is byte-identical to the
+    // pre-fleet metro — but the preset exercises the §2j grammar end to end.
+    c.fleet = vec![FleetProfile {
+        name: "cell".into(),
+        ..FleetProfile::default()
+    }];
     c
 }
+
+/// Heterogeneous fleet scenario (DESIGN.md §2j): a metro-style deployment
+/// mixing a few macro sites (big pool, wide carrier, antenna gain, large
+/// cells) with a remainder of dense small cells (small pool, cheaper
+/// attached devices, short range). Sized down from metro so a sharded
+/// heterogeneous episode fits a CI smoke job.
+pub fn fleet() -> Config {
+    let mut c = metro();
+    c.network.num_aps = 20;
+    c.network.num_users = 20_000;
+    c.churn.arrival_rate_hz = 20.0;
+    c.fleet = vec![
+        // kept sorted by name ("macro" < "small")
+        FleetProfile {
+            name: "macro".into(),
+            count: 4,
+            edge_pool_units: Some(128.0),
+            bandwidth_hz: Some(80e6),
+            gain_db: Some(6.0),
+            cell_radius_m: Some(4_000.0),
+            ..FleetProfile::default()
+        },
+        FleetProfile {
+            name: "small".into(),
+            edge_pool_units: Some(32.0),
+            device_flops_lo: Some(10e9),
+            device_flops_hi: Some(20e9),
+            cell_radius_m: Some(800.0),
+            ..FleetProfile::default()
+        },
+    ];
+    c
+}
+
+/// Canonical preset names (one per distinct config; aliases omitted).
+pub const NAMES: &[&str] = &["paper", "smoke", "medium", "metro", "fleet"];
 
 /// Look up a preset by name.
 pub fn by_name(name: &str) -> Option<Config> {
@@ -66,18 +109,43 @@ pub fn by_name(name: &str) -> Option<Config> {
         "smoke" | "small" => Some(smoke()),
         "medium" | "bench" => Some(medium()),
         "metro" | "scale" => Some(metro()),
+        "fleet" | "hetero" => Some(fleet()),
         _ => None,
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::NAMES;
+
     #[test]
     fn presets_validate() {
-        for name in ["paper", "smoke", "medium", "metro"] {
+        for &name in NAMES {
             super::by_name(name).unwrap().validate().unwrap();
         }
         assert!(super::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn fleet_preset_is_heterogeneous() {
+        let c = super::fleet();
+        let aps = c.ap_profiles().unwrap();
+        let names: std::collections::BTreeSet<&str> =
+            aps.iter().map(|p| p.name.as_str()).collect();
+        assert!(names.len() >= 2, "fleet preset must mix >= 2 profiles");
+        // macro sites claim the first slots; small cells take the rest
+        assert_eq!(aps[0].name, "macro");
+        assert_eq!(aps[19].name, "small");
+        assert!(aps[0].edge_pool_units > aps[19].edge_pool_units);
+        assert!(aps[0].subchannel_bw_hz > aps[19].subchannel_bw_hz);
+        // metro's explicit fleet section stays homogeneous: resolved values
+        // bit-equal the globals
+        let m = super::metro();
+        assert_eq!(m.fleet.len(), 1);
+        let maps = m.ap_profiles().unwrap();
+        assert_eq!(maps[0].edge_pool_units, m.compute.edge_pool_units);
+        assert_eq!(maps[0].subchannel_bw_hz, m.subchannel_bw_hz());
+        assert_eq!(maps[0].gain, 1.0);
     }
 
     #[test]

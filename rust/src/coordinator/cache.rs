@@ -252,6 +252,11 @@ pub(crate) fn bg_quantize(v: f64, tol: f64) -> i64 {
 pub(crate) fn cohort_fingerprint(net: &Network, ap: usize, users: &[usize]) -> u64 {
     let mut h = Fnv::new();
     h.u64(ap as u64);
+    // the AP's resolved fleet parameters (DESIGN.md §2j) are solver inputs
+    // too: a profile bandwidth or noise change dirties every cohort at
+    // that AP — and only there.
+    h.f64(net.subchannel_bw[ap]);
+    h.f64(net.noise[ap]);
     h.u64(users.len() as u64);
     for &u in users {
         h.u64(u as u64);
@@ -287,6 +292,13 @@ mod tests {
         let mut net2 = net.clone();
         net2.users[users[0]].qoe_threshold_s *= 2.0;
         assert_ne!(fp, cohort_fingerprint(&net2, 0, &users));
+        // per-AP fleet parameter change (§2j) → different fingerprint
+        let mut net3 = net.clone();
+        net3.subchannel_bw[0] *= 2.0;
+        assert_ne!(fp, cohort_fingerprint(&net3, 0, &users));
+        let mut net4 = net.clone();
+        net4.noise[0] *= 2.0;
+        assert_ne!(fp, cohort_fingerprint(&net4, 0, &users));
     }
 
     #[test]

@@ -53,7 +53,7 @@ use std::sync::Mutex;
 use super::cache::{bg_quantize, ExtBackground};
 use super::{plan_era_cached, PlanCache, PlanOptions, PlanStats};
 use crate::baselines::Decision;
-use crate::config::Config;
+use crate::config::{ApProfile, Config};
 use crate::models::ModelProfile;
 use crate::net::{ap_attenuation_of, ChannelState, Network, Pos, Topology, UserArena, UserProfile};
 use crate::trace::{ChurnEvent, ChurnEventKind};
@@ -131,8 +131,12 @@ struct Shard {
     ap: usize,
     /// Single-cell config: `num_aps = 1`, `num_users` tracks the local
     /// slot count, `stable_cohorts` forced on (member-set identity is what
-    /// makes churn inside the shard O(touched cohorts)).
+    /// makes churn inside the shard O(touched cohorts)). Carries this AP's
+    /// resolved fleet parameters (§2j) — pool size, device-FLOPs range,
+    /// bandwidth, cell radius — in place of the globals.
     cfg: Config,
+    /// The resolved fleet profile this shard was provisioned from.
+    profile: ApProfile,
     /// Append-only single-AP network of ever-admitted members.
     net: Network,
     cache: PlanCache,
@@ -158,13 +162,38 @@ struct Shard {
     dirty: bool,
 }
 
+/// Overwrite a shard config's per-AP knobs with one resolved profile.
+/// A homogeneous fleet resolves to values bit-equal to the globals, so
+/// this is then the identity — shard behavior (and its cache
+/// fingerprints) are byte-identical to the pre-fleet planner.
+fn apply_profile(cfg: &mut Config, p: &ApProfile) {
+    cfg.compute.edge_pool_units = p.edge_pool_units;
+    cfg.compute.device_flops_lo = p.device_flops_lo;
+    cfg.compute.device_flops_hi = p.device_flops_hi;
+    cfg.network.bandwidth_hz = p.bandwidth_hz;
+    cfg.network.cell_radius_m = p.cell_radius_m;
+}
+
 impl Shard {
-    fn new(global_cfg: &Config, ap: usize, ap_pos: Pos, full_rescan_every: usize) -> Self {
+    fn new(
+        global_cfg: &Config,
+        ap: usize,
+        ap_pos: Pos,
+        profile: &ApProfile,
+        full_rescan_every: usize,
+    ) -> Self {
         let m = global_cfg.network.num_subchannels;
         let mut cfg = global_cfg.clone();
         cfg.network.num_aps = 1;
         cfg.network.num_users = 0;
         cfg.optimizer.stable_cohorts = true;
+        // The shard *is* one resolved profile: its single-AP config and
+        // network carry the profile's values directly (and no [fleet.*]
+        // sections of their own), so everything downstream — the DES
+        // pool, cohort formation, cache fingerprints — sees this AP's
+        // parameters without re-deriving from the globals.
+        cfg.fleet.clear();
+        apply_profile(&mut cfg, profile);
         let net = Network {
             topo: Topology {
                 ap_pos: vec![ap_pos],
@@ -178,14 +207,15 @@ impl Shard {
                 num_subchannels: m,
             },
             users: Vec::new(),
-            subchannel_bw_hz: global_cfg.subchannel_bw_hz(),
-            noise_w: global_cfg.noise_power_w(),
+            subchannel_bw: vec![profile.subchannel_bw_hz],
+            noise: vec![profile.noise_w],
         };
         let mut cache = PlanCache::new(full_rescan_every, cfg.optimizer.replan_layer_window);
         cache.trust_static = true;
         Self {
             ap,
             cfg,
+            profile: profile.clone(),
             net,
             cache,
             active: Vec::new(),
@@ -339,8 +369,16 @@ impl ShardedPlanner {
         warm_start: bool,
     ) -> Self {
         let ap_pos = source.ap_positions();
+        // one fleet resolution for the whole planner; each shard keeps its
+        // own AP's profile (§2j)
+        let profiles = cfg
+            .ap_profiles()
+            .expect("fleet resolution checked by Config::validate");
+        debug_assert_eq!(profiles.len(), source.num_aps());
         let shards = (0..source.num_aps())
-            .map(|ap| Mutex::new(Shard::new(cfg, ap, ap_pos[ap], full_rescan_every)))
+            .map(|ap| {
+                Mutex::new(Shard::new(cfg, ap, ap_pos[ap], &profiles[ap], full_rescan_every))
+            })
             .collect();
         Self {
             shards,
@@ -359,6 +397,50 @@ impl ShardedPlanner {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The resolved fleet profile shard `ap` is currently provisioned with.
+    pub fn profile_of(&self, ap: usize) -> ApProfile {
+        self.shards[ap].lock().unwrap().profile.clone()
+    }
+
+    /// Re-provision one AP in place (a §2j fleet re-profile: pool upgrade,
+    /// carrier re-assignment, antenna swap). Applies the profile to the
+    /// shard's single-AP config and network, rescales the admitted
+    /// members' resident gain rows by the antenna-gain ratio (rows fold
+    /// the gain in at materialization), and drops the shard's plan cache —
+    /// every cached solve was computed under the old parameters, and
+    /// trust-static fingerprints trust membership alone, so a stale entry
+    /// would otherwise replay verbatim. Exactly this shard goes dirty;
+    /// neighbors re-plan only if the lagged exchange later observes a
+    /// material committed-power drift (the usual §2e criterion).
+    pub fn set_profile(&mut self, ap: usize, profile: &ApProfile) {
+        let m = self.m;
+        let s = shard_mut(&mut self.shards[ap]);
+        let scale = profile.gain / s.profile.gain;
+        if scale != 1.0 {
+            for rows in s
+                .net
+                .channels
+                .up
+                .iter_mut()
+                .chain(s.net.channels.down.iter_mut())
+            {
+                for g in rows[0].iter_mut() {
+                    *g *= scale;
+                }
+            }
+        }
+        apply_profile(&mut s.cfg, profile);
+        s.net.subchannel_bw[0] = profile.subchannel_bw_hz;
+        s.net.noise[0] = profile.noise_w;
+        s.profile = profile.clone();
+        let mut cache = PlanCache::new(s.cache.full_rescan_every, s.cache.window);
+        cache.trust_static = true;
+        s.cache = cache;
+        // all-zero ext signature, matching the fresh cache's zero ext
+        s.ext_sig = vec![i64::MIN; 2 * m];
+        s.dirty = true;
     }
 
     /// Activate `user` in its current shard (initial population, or an
@@ -711,6 +793,112 @@ mod tests {
             assert_eq!(p.user_ap[u], 1);
             let _ = p.decision_of(u);
         }
+    }
+
+    /// §2j locality pin: re-provisioning one AP's fleet profile dirties
+    /// exactly that shard — with the cache dropped, its cohorts all
+    /// re-solve once, and nothing else in the system re-plans.
+    #[test]
+    fn profile_edit_dirties_exactly_that_shard() {
+        let mut cfg = presets::smoke();
+        cfg.network.num_aps = 4;
+        cfg.network.num_users = 48;
+        cfg.optimizer.bg_tolerance = 1e9; // exchange never re-dirties
+        let net = Network::generate(&cfg, 5);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let all_active = vec![true; cfg.network.num_users];
+        let mut p = planner_for(&cfg, &source, &model, &all_active);
+        p.plan_epoch(2);
+        assert_eq!(p.plan_epoch(2).planned, 0, "settled before the re-profile");
+
+        // pick a provably-populated shard (user 0 lives there)
+        let ap = p.user_ap[0];
+        let row_before = p.shards[ap].lock().unwrap().net.channels.up[0][0].clone();
+        let mut prof = p.profile_of(ap);
+        prof.edge_pool_units *= 4.0;
+        prof.bandwidth_hz *= 2.0;
+        prof.subchannel_bw_hz *= 2.0;
+        prof.noise_w *= 2.0;
+        prof.gain *= 10.0;
+        p.set_profile(ap, &prof);
+
+        let after = p.plan_epoch(2);
+        assert_eq!(after.planned, 1, "profile edit dirties exactly its shard");
+        assert_eq!(after.skipped, cfg.network.num_aps - 1);
+        assert_eq!(after.cohorts_reused, 0, "cache dropped ⇒ no stale replays");
+        assert!(after.cohorts_resolved >= 1, "the shard's cohorts re-solved");
+        {
+            let s = p.shards[ap].lock().unwrap();
+            assert_eq!(s.cfg.compute.edge_pool_units, prof.edge_pool_units);
+            assert_eq!(s.net.subchannel_bw[0], prof.subchannel_bw_hz);
+            assert_eq!(s.net.noise[0], prof.noise_w);
+            // resident gain rows rescaled by the antenna-gain ratio
+            for (a, b) in row_before.iter().zip(&s.net.channels.up[0][0]) {
+                assert!((b / a - 10.0).abs() < 1e-9, "row not rescaled: {a} → {b}");
+            }
+        }
+        // quiet again: the huge tolerance swallows the power drift
+        assert_eq!(p.plan_epoch(2).planned, 0);
+    }
+
+    /// §2j cross-profile handoff pin: moving a user between APs of
+    /// *different* profiles re-plans exactly source + destination, and the
+    /// destination plans the newcomer under its own parameters (its
+    /// profile's bandwidth/noise/pool, not the source's).
+    #[test]
+    fn cross_profile_handoff_replans_under_destination_parameters() {
+        let mut cfg = presets::smoke(); // 2 APs
+        cfg.optimizer.bg_tolerance = 1e9;
+        cfg.fleet = vec![
+            crate::config::FleetProfile {
+                name: "a_wide".into(),
+                count: 1,
+                bandwidth_hz: Some(40e6),
+                edge_pool_units: Some(64.0),
+                ..crate::config::FleetProfile::default()
+            },
+            crate::config::FleetProfile {
+                name: "b_narrow".into(),
+                bandwidth_hz: Some(10e6),
+                edge_pool_units: Some(16.0),
+                ..crate::config::FleetProfile::default()
+            },
+        ];
+        cfg.validate().unwrap();
+        let net = Network::generate(&cfg, 5);
+        let source = ShardSource::Net(&net);
+        let model = models::zoo::by_name("nin").unwrap();
+        let all_active = vec![true; cfg.network.num_users];
+        let mut p = planner_for(&cfg, &source, &model, &all_active);
+        p.plan_epoch(1);
+        assert_eq!(p.plan_epoch(1).planned, 0, "settled before the handoff");
+        assert!(p.profile_of(0).subchannel_bw_hz > p.profile_of(1).subchannel_bw_hz);
+
+        let user = (0..cfg.network.num_users)
+            .find(|&u| p.user_ap[u] == 0)
+            .expect("AP 0 has a member");
+        p.apply_event(
+            &source,
+            &ChurnEvent {
+                t_s: 0.1,
+                user,
+                kind: ChurnEventKind::Handoff { ap: 1 },
+            },
+        );
+        let after = p.plan_epoch(1);
+        assert_eq!(after.planned, 2, "cross-profile handoff dirties src + dst");
+        assert_eq!(p.ap_of(user), 1);
+        let _ = p.decision_of(user);
+        // the destination shard plans the newcomer under its own profile
+        let s = p.shards[1].lock().unwrap();
+        assert_eq!(s.profile.name, "b_narrow");
+        assert_eq!(s.cfg.compute.edge_pool_units, 16.0);
+        assert_eq!(s.cfg.network.bandwidth_hz, 10e6);
+        assert_eq!(
+            s.net.subchannel_bw[0],
+            10e6 / cfg.network.num_subchannels as f64
+        );
     }
 
     /// Departed users fall back to device-only decisions and return to

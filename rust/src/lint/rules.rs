@@ -10,9 +10,19 @@ use super::source::{is_ident_char, token_positions, SourceModel};
 use super::{Finding, RuleId};
 
 /// Modules whose iteration order, RNG, and clock discipline decide
-/// byte-identity of planner/sim output.
-pub const DETERMINISM_MODULES: &[&str] =
-    &["coordinator", "sim", "scenario", "trace", "net", "optimizer"];
+/// byte-identity of planner/sim output. `config` joined the list with the
+/// fleet layer (§2j): `[fleet.*]` parse/resolve order decides per-AP
+/// values, so hash-iteration or clock leaks there break round-trip and
+/// flat-config byte-identity just as surely as a planner-side leak.
+pub const DETERMINISM_MODULES: &[&str] = &[
+    "config",
+    "coordinator",
+    "sim",
+    "scenario",
+    "trace",
+    "net",
+    "optimizer",
+];
 
 /// Modules on the planner/serving path where a panic kills an epoch
 /// (L4). Deliberately narrower than [`DETERMINISM_MODULES`]: `net`,

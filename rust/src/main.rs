@@ -6,7 +6,7 @@
 //!   era plan    [--model M] [--preset P] [--seed N] [--threads N]
 //!   era serve   [--model M] [--preset P] [--strategy S] [--workers N]
 //!   era ligd-demo                                     Li-GD vs cold GD iterations
-//!   era scale   [--preset P] [--users N] [--threads N] [--rss-ceiling-mb M]
+//!   era scale   [--spec <file|preset>] [--preset P] [--users N] [--threads N] [--rss-ceiling-mb M]
 //!   era bench-diff --base A.json --new B.json         diff era-bench-v1 records
 //!   era lint    [--gate] [--json PATH] [--root DIR] [--prefix P]
 //!   era info                                          model zoo / scenario presets
@@ -62,8 +62,8 @@ fn main() {
                  plan       --model nin|yolov2|vgg16 --preset smoke|medium|paper --seed N --threads N\n\
                  serve      --model M --preset P --strategy S --workers N --artifacts DIR --tasks K\n\
                  ligd-demo                                 Li-GD vs cold-start GD\n\
-                 scale      --preset metro --users N --aps N --channels N --replan D --threads N\n\
-                            --rss-ceiling-mb M (exit 1 over ceiling) --quiet\n\
+                 scale      --spec FILE|PRESET | --preset metro --users N --aps N --channels N\n\
+                            --replan D --threads N --rss-ceiling-mb M (exit 1 over ceiling) --quiet\n\
                  bench-diff --base BENCH.json --new BENCH.json --warn-pct 25 [--gate]\n\
                  lint       [--gate] [--json PATH] [--root DIR] [--prefix P]  repo-invariant lints\n\
                  info                                      model zoo + scenario presets"
@@ -383,11 +383,46 @@ fn cmd_ligd_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 /// `era scale`: one arena-backed, shard-planned, stream-fed dynamic
 /// episode (DESIGN.md §2g) with per-epoch telemetry and a peak-RSS
-/// reading, sized by `--users/--aps/--channels` on top of any preset.
+/// reading, sized by `--users/--aps/--channels` on top of any preset —
+/// or described declaratively by `--spec <file|preset>` (the same
+/// scenario an `episode.sharded` grid cell runs).
 /// `--rss-ceiling-mb M` turns the run into a memory gate: exit 1 when
 /// `VmHWM` exceeds the ceiling (the CI flat-memory smoke).
 fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    let mut cfg = cfg_from_flags(flags)?;
+    // `--spec <file|preset>` resolves a full scenario and reuses its base
+    // config, episode knobs, and engine seed composition — one source of
+    // truth for a CLI scale run and the equivalent `episode.sharded` grid
+    // cell, instead of this command re-deriving its own topology. Without
+    // `--spec` the legacy flag-built config is kept (its seed split
+    // predates the engine's and is pinned by existing CI invocations).
+    // Explicit sizing flags override either base.
+    let spec = flags
+        .get("spec")
+        .map(|arg| ScenarioSpec::resolve(arg))
+        .transpose()?;
+    let (mut cfg, mut opts, seeds) = match &spec {
+        Some(sp) => {
+            anyhow::ensure!(
+                sp.episode && sp.episode_churn,
+                "--spec scenarios must set episode = true and episode.churn = true \
+                 to drive the scale path"
+            );
+            let cfg = sp.base.clone();
+            let opts = era::sim::scale::ScaleOptions {
+                replan_interval_s: sp.replan_interval_s.unwrap_or(cfg.workload.episode_s),
+                full_rescan_every: sp.full_rescan_every,
+                threads: sp.plan_threads,
+                warm_start: true,
+            };
+            let trace_seed = sp.trace_seed.unwrap_or(cfg.seed + 1);
+            (cfg, opts, Some((trace_seed ^ 0x00C4_52A7, trace_seed)))
+        }
+        None => (
+            cfg_from_flags(flags)?,
+            era::sim::scale::ScaleOptions::default(),
+            None,
+        ),
+    };
     if let Some(v) = flags.get("users") {
         cfg.network.num_users = v.parse()?;
     }
@@ -401,7 +436,6 @@ fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         cfg.workload.episode_s = v.parse()?;
     }
     cfg.validate()?;
-    let mut opts = era::sim::scale::ScaleOptions::default();
     if let Some(v) = flags.get("replan") {
         opts.replan_interval_s = v.parse()?;
     }
@@ -413,8 +447,7 @@ fn cmd_scale(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     // Decorrelate the two event streams from the topology seed the same way
     // the scenario engine does for dynamic cells.
-    let churn_seed = cfg.seed ^ 0xC4E2;
-    let trace_seed = cfg.seed ^ 0xD19A;
+    let (churn_seed, trace_seed) = seeds.unwrap_or((cfg.seed ^ 0xC4E2, cfg.seed ^ 0xD19A));
     eprintln!(
         "scale: {} users / {} APs / {} subchannels, episode {} s, Δ = {} s, {} threads",
         cfg.network.num_users,

@@ -159,9 +159,9 @@ pub fn orthogonal_rates(
         let ap = net.topo.user_ap[u];
         if let Some(ch) = d.up_ch {
             let g = net.channels.up[u][ap][ch];
-            let sinr = d.p_up * g / (up_inter[ap][ch] + net.noise_w);
+            let sinr = d.p_up * g / (up_inter[ap][ch] + net.noise[ap]);
             let share = up_count[ap][ch].max(1) as f64;
-            up[u] = net.subchannel_bw_hz * crate::util::log2_1p(sinr) / share;
+            up[u] = net.subchannel_bw[ap] * crate::util::log2_1p(sinr) / share;
         }
         if let Some(ch) = d.down_ch {
             let mut inter = 0.0;
@@ -171,9 +171,9 @@ pub fn orthogonal_rates(
                 }
             }
             let g = net.channels.down[u][ap][ch];
-            let sinr = d.p_down * g / (inter + net.noise_w);
+            let sinr = d.p_down * g / (inter + net.noise[ap]);
             let share = down_count[ap][ch].max(1) as f64;
-            down[u] = net.subchannel_bw_hz * crate::util::log2_1p(sinr) / share;
+            down[u] = net.subchannel_bw[ap] * crate::util::log2_1p(sinr) / share;
         }
     }
     (up, down)

@@ -20,7 +20,7 @@
 //! path must avoid). Both universes share the same distributions, ring
 //! deployment, and path-loss model.
 
-use crate::config::Config;
+use crate::config::{ApProfile, Config};
 use crate::net::topology::{path_loss, Pos};
 use crate::net::UserProfile;
 use crate::util::rng::Pcg32;
@@ -38,16 +38,15 @@ pub struct UserArena {
     /// Subchannel count of the gain rows.
     pub num_subchannels: usize,
     alpha: f64,
-    cell_radius_m: f64,
     min_distance_m: f64,
-    device_flops_lo: f64,
-    device_flops_hi: f64,
     qoe_mean_s: f64,
     qoe_jitter: f64,
     /// Ring deployment, same geometry as `Topology::generate`.
     pub ap_pos: Vec<Pos>,
-    pub subchannel_bw_hz: f64,
-    pub noise_w: f64,
+    /// Resolved per-AP fleet profiles (DESIGN.md §2j): cell radius,
+    /// device-FLOPs range, gain, bandwidth, noise, pool size. Homogeneous
+    /// fleets fill every slot with exactly the global values.
+    pub profiles: Vec<ApProfile>,
 }
 
 /// One materialized user: everything a shard stores while the user is a
@@ -83,16 +82,19 @@ impl UserArena {
             n_aps: n,
             num_subchannels: cfg.network.num_subchannels,
             alpha: cfg.network.path_loss_exp,
-            cell_radius_m: cfg.network.cell_radius_m,
             min_distance_m: cfg.network.min_distance_m,
-            device_flops_lo: cfg.compute.device_flops_lo,
-            device_flops_hi: cfg.compute.device_flops_hi,
             qoe_mean_s: cfg.qoe.expected_finish_mean_s,
             qoe_jitter: cfg.qoe.expected_finish_jitter,
             ap_pos,
-            subchannel_bw_hz: cfg.subchannel_bw_hz(),
-            noise_w: cfg.noise_power_w(),
+            profiles: cfg
+                .ap_profiles()
+                .expect("fleet resolution checked by Config::validate"),
         }
+    }
+
+    /// The resolved fleet profile of AP `ap`.
+    pub fn profile(&self, ap: usize) -> &ApProfile {
+        &self.profiles[ap]
     }
 
     pub fn num_users(&self) -> usize {
@@ -135,15 +137,18 @@ impl UserArena {
         } else {
             rng.below(self.n_aps)
         };
+        // per-AP parameters from the home cell's fleet profile — same draw
+        // count as before, so the (seed, user) streams stay aligned
+        let p = &self.profiles[home];
         let rr = self.min_distance_m
-            + (self.cell_radius_m - self.min_distance_m) * rng.f64().sqrt();
+            + (p.cell_radius_m - self.min_distance_m) * rng.f64().sqrt();
         let th = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
         let pos = Pos {
             x: self.ap_pos[home].x + rr * th.cos(),
             y: self.ap_pos[home].y + rr * th.sin(),
         };
         let q = self.qoe_mean_s * rng.uniform(1.0 - self.qoe_jitter, 1.0 + self.qoe_jitter);
-        let device_flops = rng.uniform(self.device_flops_lo, self.device_flops_hi);
+        let device_flops = rng.uniform(p.device_flops_lo, p.device_flops_hi);
         UserRecord {
             home_ap: home,
             pos,
@@ -160,7 +165,9 @@ impl UserArena {
     pub fn link_to(&self, user: usize, pos: &Pos, ap: usize) -> (Vec<f64>, Vec<f64>) {
         let mut rng = self.user_rng(user, STREAM_LINK ^ ((ap as u64) << 16));
         let d = pos.dist(&self.ap_pos[ap]).max(self.min_distance_m);
-        let pl = path_loss(d, self.alpha);
+        // fold in the AP's antenna gain (exactly 1.0 without an override —
+        // multiplying is then the bit-exact identity)
+        let pl = path_loss(d, self.alpha) * self.profiles[ap].gain;
         let m = self.num_subchannels;
         let mut up = Vec::with_capacity(m);
         let mut down = Vec::with_capacity(m);
@@ -268,6 +275,78 @@ mod tests {
         let (up1, _) = ar.link_to(0, &r.pos, 1);
         assert_ne!(up0, up1, "independent fading per AP");
         assert!(up0.windows(2).any(|w| w[0] != w[1]), "fading per channel");
+    }
+
+    #[test]
+    fn homogeneous_fleet_arena_is_byte_identical() {
+        let flat = presets::smoke();
+        let mut fleet = flat.clone();
+        fleet.fleet = vec![crate::config::FleetProfile {
+            name: "all".into(),
+            ..crate::config::FleetProfile::default()
+        }];
+        fleet.validate().unwrap();
+        let a = UserArena::new(&flat, 42);
+        let b = UserArena::new(&fleet, 42);
+        for u in 0..flat.network.num_users {
+            let (ra, rb) = (a.user(u), b.user(u));
+            assert_eq!(ra.home_ap, rb.home_ap);
+            assert_eq!(ra.pos, rb.pos);
+            assert_eq!(ra.profile.device_flops, rb.profile.device_flops);
+            let (up_a, dn_a) = a.link_to(u, &ra.pos, ra.home_ap);
+            let (up_b, dn_b) = b.link_to(u, &rb.pos, rb.home_ap);
+            assert_eq!(up_a, up_b);
+            assert_eq!(dn_a, dn_b);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_shapes_arena_records() {
+        let mut cfg = presets::smoke(); // 2 APs
+        cfg.network.num_users = 200;
+        cfg.fleet = vec![
+            crate::config::FleetProfile {
+                name: "a_small".into(),
+                count: 1,
+                cell_radius_m: Some(50.0),
+                device_flops_lo: Some(5e9),
+                device_flops_hi: Some(6e9),
+                gain_db: Some(10.0),
+                ..crate::config::FleetProfile::default()
+            },
+            crate::config::FleetProfile {
+                name: "b_rest".into(),
+                ..crate::config::FleetProfile::default()
+            },
+        ];
+        cfg.validate().unwrap();
+        let flat = {
+            let mut c = cfg.clone();
+            c.fleet.clear();
+            UserArena::new(&c, 9)
+        };
+        let ar = UserArena::new(&cfg, 9);
+        for u in 0..cfg.network.num_users {
+            let r = ar.user(u);
+            if r.home_ap == 0 {
+                assert!(r.pos.dist(&ar.ap_pos[0]) <= 50.0 + 1e-9, "small cell");
+                assert!(r.profile.device_flops >= 5e9 && r.profile.device_flops <= 6e9);
+                // the 10 dB gain scales AP 0's fading rows by ~10× versus
+                // the flat universe at the same position (same seed/stream,
+                // rayleigh_power is linear in its path-loss scale)
+                assert_eq!(flat.user(u).home_ap, 0, "home draw unchanged");
+                let (up_h, _) = ar.link_to(u, &r.pos, 0);
+                let (up_f, _) = flat.link_to(u, &r.pos, 0);
+                for (h, f) in up_h.iter().zip(&up_f) {
+                    assert!((h / f - 10.0).abs() < 1e-9, "h={h} f={f}");
+                }
+            } else {
+                assert!(
+                    r.profile.device_flops >= cfg.compute.device_flops_lo
+                        && r.profile.device_flops <= cfg.compute.device_flops_hi
+                );
+            }
+        }
     }
 
     #[test]

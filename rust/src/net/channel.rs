@@ -21,16 +21,30 @@ pub struct ChannelState {
 }
 
 impl ChannelState {
-    /// Draw one coherence block of i.i.d. Rayleigh fading.
+    /// Draw one coherence block of i.i.d. Rayleigh fading (unit AP gain).
     pub fn generate(cfg: &NetworkConfig, topo: &Topology, rng: &mut Pcg32) -> Self {
+        Self::generate_gains(cfg, topo, &vec![1.0; topo.num_aps()], rng)
+    }
+
+    /// Draw one coherence block with a per-AP linear power gain folded into
+    /// every link touching that AP (fleet antenna gains, DESIGN.md §2j).
+    /// A gain of exactly 1.0 multiplies bit-identically, so homogeneous
+    /// fleets reproduce [`ChannelState::generate`] byte for byte.
+    pub fn generate_gains(
+        cfg: &NetworkConfig,
+        topo: &Topology,
+        gains: &[f64],
+        rng: &mut Pcg32,
+    ) -> Self {
         let u = topo.num_users();
         let n = topo.num_aps();
         let m = cfg.num_subchannels;
+        debug_assert_eq!(gains.len(), n);
         let mut up = vec![vec![vec![0.0; m]; n]; u];
         let mut down = vec![vec![vec![0.0; m]; n]; u];
         for i in 0..u {
             for a in 0..n {
-                let pl = path_loss(topo.dist[i][a], cfg.path_loss_exp);
+                let pl = path_loss(topo.dist[i][a], cfg.path_loss_exp) * gains[a];
                 for c in 0..m {
                     up[i][a][c] = rng.rayleigh_power(pl);
                     down[i][a][c] = rng.rayleigh_power(pl);

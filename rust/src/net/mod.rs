@@ -26,32 +26,47 @@ pub struct UserProfile {
 }
 
 /// The full generated network: geometry, channels, user profiles.
+///
+/// Bandwidth and noise are stored **per AP** (resolved from the fleet,
+/// DESIGN.md §2j): a homogeneous fleet fills every entry with exactly the
+/// global value, so indexing by AP is bit-identical to the old scalars.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub topo: Topology,
     pub channels: ChannelState,
     pub users: Vec<UserProfile>,
-    /// Per-subchannel bandwidth (Hz) and noise power (W) — cached from cfg.
-    pub subchannel_bw_hz: f64,
-    pub noise_w: f64,
+    /// Per-AP per-subchannel bandwidth (Hz).
+    pub subchannel_bw: Vec<f64>,
+    /// Per-AP per-subchannel noise power (W).
+    pub noise: Vec<f64>,
 }
 
 impl Network {
     /// Generate the whole network from a config + seed (deterministic).
+    /// Fleet profiles shape the per-AP draw parameters (cell radius,
+    /// antenna gain, attached-device FLOPs range) without changing the
+    /// draw *count*, so a homogeneous fleet is byte-identical to the
+    /// pre-fleet generator.
     pub fn generate(cfg: &Config, seed: u64) -> Self {
+        let profiles = cfg
+            .ap_profiles()
+            .expect("fleet resolution checked by Config::validate");
         let mut rng = Pcg32::new(seed, 0xA11C);
-        let topo = Topology::generate(&cfg.network, &mut rng);
-        let channels = ChannelState::generate(&cfg.network, &topo, &mut rng);
+        let radii: Vec<f64> = profiles.iter().map(|p| p.cell_radius_m).collect();
+        let topo = Topology::generate_radii(&cfg.network, &radii, &mut rng);
+        let gains: Vec<f64> = profiles.iter().map(|p| p.gain).collect();
+        let channels = ChannelState::generate_gains(&cfg.network, &topo, &gains, &mut rng);
         let users = (0..cfg.network.num_users)
-            .map(|_| {
+            .map(|i| {
                 let q = cfg.qoe.expected_finish_mean_s
                     * rng.uniform(
                         1.0 - cfg.qoe.expected_finish_jitter,
                         1.0 + cfg.qoe.expected_finish_jitter,
                     );
+                // capability range of the *associated* AP's profile
+                let p = &profiles[topo.user_ap[i]];
                 UserProfile {
-                    device_flops: rng
-                        .uniform(cfg.compute.device_flops_lo, cfg.compute.device_flops_hi),
+                    device_flops: rng.uniform(p.device_flops_lo, p.device_flops_hi),
                     qoe_threshold_s: q,
                 }
             })
@@ -60,13 +75,25 @@ impl Network {
             topo,
             channels,
             users,
-            subchannel_bw_hz: cfg.subchannel_bw_hz(),
-            noise_w: cfg.noise_power_w(),
+            subchannel_bw: profiles.iter().map(|p| p.subchannel_bw_hz).collect(),
+            noise: profiles.iter().map(|p| p.noise_w).collect(),
         }
     }
 
     pub fn num_users(&self) -> usize {
         self.topo.num_users()
+    }
+
+    /// Per-subchannel bandwidth (Hz) at `user`'s associated AP.
+    #[inline]
+    pub fn bw_of(&self, user: usize) -> f64 {
+        self.subchannel_bw[self.topo.user_ap[user]]
+    }
+
+    /// Per-subchannel noise power (W) at `user`'s associated AP.
+    #[inline]
+    pub fn noise_of(&self, user: usize) -> f64 {
+        self.noise[self.topo.user_ap[user]]
     }
 
     /// Compute link rates for a concrete allocation.
@@ -75,8 +102,8 @@ impl Network {
             &self.topo,
             &self.channels,
             alloc,
-            self.subchannel_bw_hz,
-            self.noise_w,
+            &self.subchannel_bw,
+            &self.noise,
         )
     }
 }
@@ -108,5 +135,64 @@ mod tests {
         assert_eq!(a.channels.up[0][0], b.channels.up[0][0]);
         let c = Network::generate(&cfg, 43);
         assert_ne!(a.channels.up[0][0], c.channels.up[0][0]);
+    }
+
+    #[test]
+    fn homogeneous_fleet_is_byte_identical_to_flat_config() {
+        // An explicit [fleet.*] profile with no overrides resolves to the
+        // global values bit-for-bit, so generation must not change at all.
+        let flat = presets::smoke();
+        let mut fleet = flat.clone();
+        fleet.fleet = vec![crate::config::FleetProfile {
+            name: "all".into(),
+            ..crate::config::FleetProfile::default()
+        }];
+        fleet.validate().unwrap();
+        let a = Network::generate(&flat, 42);
+        let b = Network::generate(&fleet, 42);
+        assert_eq!(a.topo.user_pos, b.topo.user_pos);
+        assert_eq!(a.topo.user_ap, b.topo.user_ap);
+        assert_eq!(a.channels.up, b.channels.up);
+        assert_eq!(a.channels.down, b.channels.down);
+        for (x, y) in a.users.iter().zip(&b.users) {
+            assert_eq!(x.device_flops, y.device_flops);
+            assert_eq!(x.qoe_threshold_s, y.qoe_threshold_s);
+        }
+        assert_eq!(a.subchannel_bw, b.subchannel_bw);
+        assert_eq!(a.noise, b.noise);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_shapes_per_ap_draws() {
+        let mut cfg = presets::smoke(); // 2 APs
+        cfg.fleet = vec![
+            crate::config::FleetProfile {
+                name: "a_boost".into(),
+                count: 1,
+                gain_db: Some(10.0),
+                bandwidth_hz: Some(20e6),
+                device_flops_lo: Some(5e9),
+                device_flops_hi: Some(6e9),
+                ..crate::config::FleetProfile::default()
+            },
+            crate::config::FleetProfile {
+                name: "b_rest".into(),
+                ..crate::config::FleetProfile::default()
+            },
+        ];
+        cfg.validate().unwrap();
+        let net = Network::generate(&cfg, 7);
+        // per-AP bandwidth/noise resolved from the profiles
+        assert!(net.subchannel_bw[0] > net.subchannel_bw[1]);
+        assert!(net.noise[0] > net.noise[1], "wider subchannel, more noise");
+        // users associated with AP 0 draw from its capability range
+        for (u, profile) in net.users.iter().enumerate() {
+            if net.topo.user_ap[u] == 0 {
+                assert!(profile.device_flops >= 5e9 && profile.device_flops <= 6e9);
+                assert_eq!(net.bw_of(u), net.subchannel_bw[0]);
+            } else {
+                assert!(profile.device_flops >= cfg.compute.device_flops_lo);
+            }
+        }
     }
 }

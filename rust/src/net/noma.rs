@@ -58,14 +58,17 @@ pub struct LinkRates {
 
 /// Compute per-user uplink and downlink rates under a concrete allocation.
 ///
-/// `bw_hz` is the per-subchannel bandwidth B/M; `noise_w` is σ² per
-/// subchannel.
+/// `bw` is the per-subchannel bandwidth B/M and `noise` the per-subchannel
+/// noise power σ², both indexed by AP (fleet profiles make them per-AP; a
+/// homogeneous fleet passes the same value everywhere). Links use the
+/// serving AP's entries — uplink noise is at the AP's receiver, downlink
+/// noise at the user's receiver tuned to that AP's subchannel width.
 pub fn compute_rates(
     topo: &Topology,
     ch: &ChannelState,
     alloc: &[LinkAssignment],
-    bw_hz: f64,
-    noise_w: f64,
+    bw: &[f64],
+    noise: &[f64],
 ) -> LinkRates {
     let u = topo.num_users();
     let n_aps = topo.num_aps();
@@ -102,7 +105,7 @@ pub fn compute_rates(
             if members.is_empty() {
                 continue;
             }
-            let bg = inter_up(a, m) + noise_w;
+            let bg = inter_up(a, m) + noise[a];
             // SIC order: strongest first.
             let mut order = members.clone();
             // total order: NaN-safe (rate computation runs every epoch)
@@ -114,7 +117,7 @@ pub fn compute_rates(
                 let sig = alloc[i].p_up * ch.up[i][a][m];
                 let sinr = sig / (weaker + bg);
                 up_sinr[i] = sinr;
-                up[i] = bw_hz * crate::util::log2_1p(sinr);
+                up[i] = bw[a] * crate::util::log2_1p(sinr);
                 weaker += sig;
             }
         }
@@ -162,9 +165,9 @@ pub fn compute_rates(
                     }
                 }
                 let sinr =
-                    alloc[i].p_down * g / (stronger_power[idx] * g + inter + noise_w);
+                    alloc[i].p_down * g / (stronger_power[idx] * g + inter + noise[a]);
                 down_sinr[i] = sinr;
-                down[i] = bw_hz * crate::util::log2_1p(sinr);
+                down[i] = bw[a] * crate::util::log2_1p(sinr);
             }
         }
     }
@@ -213,7 +216,7 @@ mod tests {
     fn rates_positive_finite_when_assigned() {
         let (_, topo, ch) = setup(12, 4);
         let alloc = uniform_alloc(12, 4);
-        let r = compute_rates(&topo, &ch, &alloc, 40e3, 1e-16);
+        let r = compute_rates(&topo, &ch, &alloc, &[40e3; 2], &[1e-16; 2]);
         for i in 0..12 {
             assert!(r.up[i].is_finite() && r.up[i] > 0.0, "up[{i}]={}", r.up[i]);
             assert!(r.down[i].is_finite() && r.down[i] > 0.0);
@@ -225,7 +228,7 @@ mod tests {
         let (_, topo, ch) = setup(4, 2);
         let mut alloc = uniform_alloc(4, 2);
         alloc[0] = LinkAssignment::device_only(9);
-        let r = compute_rates(&topo, &ch, &alloc, 40e3, 1e-16);
+        let r = compute_rates(&topo, &ch, &alloc, &[40e3; 2], &[1e-16; 2]);
         assert!(r.up[0].is_infinite());
         assert!(r.down[0].is_infinite());
     }
@@ -255,7 +258,7 @@ mod tests {
             split: 3,
         };
         alloc[b] = alloc[a];
-        let both = compute_rates(&topo, &ch, &alloc, 40e3, 1e-16);
+        let both = compute_rates(&topo, &ch, &alloc, &[40e3; 2], &[1e-16; 2]);
         let strong = if ch.up_gain(&topo, a, 0) > ch.up_gain(&topo, b, 0) {
             a
         } else {
@@ -263,7 +266,7 @@ mod tests {
         };
         let weak = if strong == a { b } else { a };
         alloc[weak] = LinkAssignment::device_only(9);
-        let solo = compute_rates(&topo, &ch, &alloc, 40e3, 1e-16);
+        let solo = compute_rates(&topo, &ch, &alloc, &[40e3; 2], &[1e-16; 2]);
         assert!(solo.up[strong] > both.up[strong]);
         // and the weak user's rate was unaffected by the strong one (SIC
         // already cancelled it)
@@ -279,7 +282,7 @@ mod tests {
                 r: 1.0,
                 split: 3,
             };
-            compute_rates(&topo, &ch, &alloc2, 40e3, 1e-16).up[weak]
+            compute_rates(&topo, &ch, &alloc2, &[40e3; 2], &[1e-16; 2]).up[weak]
         })
         .abs()
             < 1e-6);
@@ -289,11 +292,11 @@ mod tests {
     fn more_power_more_rate() {
         let (_, topo, ch) = setup(6, 3);
         let mut alloc = uniform_alloc(6, 3);
-        let r1 = compute_rates(&topo, &ch, &alloc, 40e3, 1e-16);
+        let r1 = compute_rates(&topo, &ch, &alloc, &[40e3; 2], &[1e-16; 2]);
         for a in alloc.iter_mut() {
             a.p_up *= 2.0;
         }
-        let r2 = compute_rates(&topo, &ch, &alloc, 40e3, 1e-16);
+        let r2 = compute_rates(&topo, &ch, &alloc, &[40e3; 2], &[1e-16; 2]);
         // The last-decoded user in each cluster sees only background noise +
         // inter-cell (which also doubled), but rates should not collapse;
         // at least the single-user clusters strictly improve.

@@ -213,8 +213,10 @@ impl RateCache {
     pub fn apply_delta(&mut self, net: &Network, deltas: &[ChannelDelta]) -> &LinkRates {
         let n_aps = net.topo.num_aps();
         let ch = &net.channels;
-        let bw = net.subchannel_bw_hz;
-        let noise = net.noise_w;
+        // per-AP bandwidth/noise (fleet profiles): indexed inside the AP
+        // loops below, mirroring compute_rates exactly
+        let bw = &net.subchannel_bw;
+        let noise = &net.noise;
         let mut cluster: Vec<usize> = Vec::new();
         for &d in deltas {
             match d {
@@ -236,7 +238,7 @@ impl RateCache {
                         if cluster.is_empty() {
                             continue;
                         }
-                        let bg = inter + noise;
+                        let bg = inter + noise[a];
                         cluster.sort_by(|&x, &y| ch.up[y][a][m].total_cmp(&ch.up[x][a][m]));
                         let mut weaker = 0.0;
                         for idx in (0..cluster.len()).rev() {
@@ -244,7 +246,7 @@ impl RateCache {
                             let sig = self.alloc[i].p_up * ch.up[i][a][m];
                             let sinr = sig / (weaker + bg);
                             self.rates.up_sinr[i] = sinr;
-                            self.rates.up[i] = bw * crate::util::log2_1p(sinr);
+                            self.rates.up[i] = bw[a] * crate::util::log2_1p(sinr);
                             weaker += sig;
                         }
                     }
@@ -284,9 +286,9 @@ impl RateCache {
                                 }
                             }
                             let sinr = self.alloc[i].p_down * g
-                                / (stronger_power[idx] * g + inter + noise);
+                                / (stronger_power[idx] * g + inter + noise[a]);
                             self.rates.down_sinr[i] = sinr;
-                            self.rates.down[i] = bw * crate::util::log2_1p(sinr);
+                            self.rates.down[i] = bw[a] * crate::util::log2_1p(sinr);
                         }
                     }
                 }

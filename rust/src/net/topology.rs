@@ -33,10 +33,20 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Generate a deployment from the config and an RNG stream.
+    /// Generate a homogeneous deployment (every cell at the global radius).
     pub fn generate(cfg: &NetworkConfig, rng: &mut Pcg32) -> Self {
+        Self::generate_radii(cfg, &vec![cfg.cell_radius_m; cfg.num_aps], rng)
+    }
+
+    /// Generate a deployment with per-AP cell radii (fleet profiles,
+    /// DESIGN.md §2j): each user's drop disk uses its home AP's radius.
+    /// The AP ring itself stays on the global `cell_radius_m` so profile
+    /// edits never move the deployment, and with every radius equal to the
+    /// global this draws bit-identically to [`Topology::generate`].
+    pub fn generate_radii(cfg: &NetworkConfig, radii: &[f64], rng: &mut Pcg32) -> Self {
         let n = cfg.num_aps;
         let u = cfg.num_users;
+        debug_assert_eq!(radii.len(), n);
         // APs on a ring with inter-site distance ≈ 1.5 cell radii (overlap
         // so inter-cell interference is material, as the paper requires).
         let ring_r = if n == 1 {
@@ -54,12 +64,13 @@ impl Topology {
             })
             .collect();
 
-        // Users uniform in the disk of a uniformly chosen AP.
+        // Users uniform in the disk of a uniformly chosen AP (disk radius
+        // from the home AP's profile).
         let mut user_pos = Vec::with_capacity(u);
         for _ in 0..u {
             let home = rng.below(n);
             let rr = cfg.min_distance_m
-                + (cfg.cell_radius_m - cfg.min_distance_m) * rng.f64().sqrt();
+                + (radii[home] - cfg.min_distance_m) * rng.f64().sqrt();
             let th = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
             user_pos.push(Pos {
                 x: ap_pos[home].x + rr * th.cos(),

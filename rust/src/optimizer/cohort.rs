@@ -84,8 +84,10 @@ impl CohortProblem {
         Self {
             n_users: nu,
             n_channels: nc,
-            bw_hz: net.subchannel_bw_hz,
-            noise_w: net.noise_w,
+            // cohort users share one cell: the first member's AP stands in
+            // for the whole cohort's link parameters
+            bw_hz: net.bw_of(users[0]),
+            noise_w: net.noise_of(users[0]),
             g_up,
             g_down,
             bg_up,

@@ -13,7 +13,7 @@
 //! produced rows are byte-identical for every engine thread count.
 //! `tests/scenario.rs` asserts this.
 
-use super::spec::{Axis, ScenarioSpec};
+use super::spec::{Axis, ScenarioSpec, SHARDED_AXIS};
 use crate::baselines::{DeviceOnly, EdgeOnly, Strategy};
 use crate::config::Config;
 use crate::metrics::{evaluate, rates_for};
@@ -36,6 +36,11 @@ pub struct Cell {
     pub sweep_idx: Vec<usize>,
     /// Per-axis `(key, value)` display pairs.
     pub sweep: Vec<(String, String)>,
+    /// Run this cell through the sharded scale composition
+    /// (`sim::scale::run_scale`) instead of the monolithic dynamic
+    /// drivers. Seeded from the spec's `episode.sharded` flag, overridden
+    /// per cell by the special `episode.sharded` sweep axis.
+    pub sharded: bool,
 }
 
 /// Discrete-event episode aggregates for one cell.
@@ -312,9 +317,18 @@ pub fn expand(spec: &ScenarioSpec) -> anyhow::Result<Vec<Cell>> {
         }
         let mut cfg0 = spec.base.clone();
         let mut sweep = Vec::with_capacity(spec.axes.len());
+        let mut sharded = spec.sharded;
         for (a, axis) in spec.axes.iter().enumerate() {
             let v = &axis.values[idx[a]];
-            cfg0.set_path(&axis.key, v)?;
+            if axis.key == SHARDED_AXIS {
+                // spec-level execution toggle, not a config path (validated
+                // boolean by `ScenarioSpec::validate`)
+                sharded = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("{SHARDED_AXIS} axis values must be booleans"))?;
+            } else {
+                cfg0.set_path(&axis.key, v)?;
+            }
             sweep.push((axis.key.clone(), Axis::display(v)));
         }
         cfg0.validate()?;
@@ -331,11 +345,85 @@ pub fn expand(spec: &ScenarioSpec) -> anyhow::Result<Vec<Cell>> {
                     net_seed: seed + seed_off,
                     sweep_idx: idx.clone(),
                     sweep: sweep.clone(),
+                    sharded,
                 });
             }
         }
     }
     Ok(cells)
+}
+
+/// Bridge a [`crate::sim::scale::ScaleReport`] into the engine's per-epoch
+/// [`crate::sim::EpochRecord`] schema, so sharded cells emit exactly the
+/// CSV columns of the monolithic dynamic path.
+///
+/// Completions are bucketed by the epoch of their DES admission slot
+/// ([`ScaleReport::slot_epochs`](crate::sim::scale::ScaleReport) — the
+/// scale driver's equivalent of the monolithic drivers' `epoch_of_pos`).
+/// Drops stay attributed to the epoch that recorded them, matching the
+/// `ScaleEpoch::dropped` trajectory the scale tests pin. Plan-shape
+/// counters with no shard-level equivalent (`offloaders`, `cohorts`,
+/// `gd_iters`, `window_fallbacks`, `plan_fallbacks`) read zero; none of
+/// them feed the dynamics CSV columns.
+fn scale_epoch_records(
+    net: &Network,
+    rep: &crate::sim::scale::ScaleReport,
+) -> Vec<crate::sim::EpochRecord> {
+    let n_epochs = rep.epochs.len();
+    let mut recs: Vec<crate::sim::EpochRecord> = rep
+        .epochs
+        .iter()
+        .map(|se| {
+            let planned = se.cohorts_reused + se.cohorts_resolved;
+            crate::sim::EpochRecord {
+                epoch: se.epoch,
+                t_start_s: se.t_start_s,
+                active_users: se.active_users,
+                offloaders: 0,
+                cohorts: 0,
+                gd_iters: 0,
+                cohorts_reused: se.cohorts_reused,
+                cohorts_resolved: se.cohorts_resolved,
+                cache_hit_frac: if planned == 0 {
+                    0.0
+                } else {
+                    se.cohorts_reused as f64 / planned as f64
+                },
+                window_fallbacks: 0,
+                plan_wall_s: se.plan_wall_s,
+                requests: se.requests,
+                completed: 0,
+                dropped: se.dropped,
+                mean_latency_s: 0.0,
+                mean_queue_s: 0.0,
+                qoe_miss_frac: 0.0,
+                aps_down: se.aps_down,
+                rehomed: se.rehomed,
+                plan_fallbacks: 0,
+                retries: se.retries,
+            }
+        })
+        .collect();
+    let mut lat_sum = vec![0.0f64; n_epochs];
+    let mut queue_sum = vec![0.0f64; n_epochs];
+    let mut miss = vec![0usize; n_epochs];
+    for c in &rep.outcome.completions {
+        let e = rep.slot_epochs[c.req];
+        recs[e].completed += 1;
+        lat_sum[e] += c.latency();
+        queue_sum[e] += c.queue_s;
+        if c.latency() > net.users[c.user].qoe_threshold_s {
+            miss[e] += 1;
+        }
+    }
+    for (e, rec) in recs.iter_mut().enumerate() {
+        if rec.completed > 0 {
+            rec.mean_latency_s = lat_sum[e] / rec.completed as f64;
+            rec.mean_queue_s = queue_sum[e] / rec.completed as f64;
+            rec.qoe_miss_frac = miss[e] as f64 / rec.completed as f64;
+        }
+    }
+    recs
 }
 
 /// Execute one cell standalone: generate its network, then delegate to
@@ -404,7 +492,54 @@ pub fn run_cell_net(spec: &ScenarioSpec, cell: &Cell, net: &Network) -> anyhow::
 
     let (episode, dynamics) = if spec.episode {
         let trace_seed = spec.trace_seed.unwrap_or(cfg.seed + 1);
-        if spec.is_dynamic() {
+        if cell.sharded {
+            // Sharded scale composition (DESIGN.md §2g + §2j): the episode
+            // runs through per-AP planning islands over a lazy arena fed by
+            // a streamed churn/trace. Seed composition matches the
+            // monolithic churn path (churn = trace ^ 0x00C4_52A7; run_scale
+            // derives the fault seed as trace ^ 0x00FA_1757 itself), so a
+            // sharded cell IS the `run_scale` outcome byte for byte —
+            // bridged into the engine's epoch/CSV schema below.
+            let opts = crate::sim::scale::ScaleOptions {
+                replan_interval_s: spec.replan_interval_s.unwrap_or(cfg.workload.episode_s),
+                full_rescan_every: spec.full_rescan_every,
+                threads: spec.plan_threads,
+                warm_start: strat.name() != "era-cold",
+            };
+            let rep =
+                crate::sim::scale::run_scale(cfg, trace_seed ^ 0x00C4_52A7, trace_seed, &opts)?;
+            let st = crate::sim::stats(&rep.outcome.completions, cfg.workload.episode_s);
+            let epochs = scale_epoch_records(net, &rep);
+            let peak_active = epochs.iter().map(|e| e.active_users).max().unwrap_or(0);
+            let mean_active = if epochs.is_empty() {
+                0.0
+            } else {
+                epochs.iter().map(|e| e.active_users).sum::<usize>() as f64
+                    / epochs.len() as f64
+            };
+            let [arrivals, departures, rate_changes, handoffs] = rep.churn_counts;
+            (
+                Some(EpisodeRecord {
+                    n: st.n,
+                    mean_latency_s: st.mean_latency_s,
+                    p50_latency_s: st.p50_latency_s,
+                    p99_latency_s: st.p99_latency_s,
+                    mean_queue_s: st.mean_queue_s,
+                    throughput_rps: st.throughput_rps,
+                    qoe_miss_frac: crate::metrics::qoe_miss_frac(&rep.outcome.completions, net),
+                    dropped: rep.outcome.dropped.len(),
+                }),
+                Some(DynamicsRecord {
+                    epochs,
+                    peak_active,
+                    mean_active,
+                    churn_arrivals: arrivals,
+                    churn_departures: departures,
+                    churn_rate_changes: rate_changes,
+                    churn_handoffs: handoffs,
+                }),
+            )
+        } else if spec.is_dynamic() {
             // Dynamic serving through `sim::run_dynamic`. With churn the
             // trace is churn-aware Poisson (`workload.arrival_rate_hz`);
             // with only a re-plan interval set, the legacy fixed-count
@@ -816,6 +951,160 @@ mod tests {
         }
         assert_eq!(a, b, "faults-off cells ride the legacy dynamic path");
         assert_eq!(a.to_csv_row_dynamic(), b.to_csv_row_dynamic());
+    }
+
+    /// Tentpole pin (§2j): a homogeneous-fleet `episode.sharded` cell IS
+    /// the `run_scale` composition — checked at the plan layer (per-epoch
+    /// shard cache statistics), the sim layer (completion log aggregates),
+    /// and the CSV layer (schema + byte stability).
+    #[test]
+    fn sharded_cells_match_run_scale_at_plan_sim_and_csv_layers() {
+        let mut base = presets::smoke();
+        base.network.num_users = 30;
+        base.optimizer.max_iters = 20;
+        base.workload.episode_s = 0.5;
+        base.workload.arrival_rate_hz = 10.0;
+        base.churn.initial_active_frac = 0.5;
+        base.churn.arrival_rate_hz = 2.0;
+        base.churn.departure_rate_hz = 0.2;
+        base.churn.handoff_hz = 0.1;
+        let mut spec = ScenarioSpec::new("sharded-id", base.clone()).with_strategies(&["era"]);
+        spec.episode = true;
+        spec.episode_churn = true;
+        spec.sharded = true;
+        spec.replan_interval_s = Some(0.125);
+        spec.trace_seed = Some(77);
+        let rec = Engine::new(1).run_one(&spec).unwrap();
+        let ep = rec.episode.expect("episode record");
+        let dy = rec.dynamics.clone().expect("dynamics record");
+
+        // Reference: the raw scale driver under the engine's seed
+        // composition (churn = trace ^ 0x00C4_52A7).
+        let opts = crate::sim::scale::ScaleOptions {
+            replan_interval_s: 0.125,
+            full_rescan_every: 0,
+            threads: 1,
+            warm_start: true,
+        };
+        let rep =
+            crate::sim::scale::run_scale(&base, 77 ^ 0x00C4_52A7, 77, &opts).unwrap();
+
+        // plan layer: per-epoch shard cache statistics carried verbatim
+        assert_eq!(dy.epochs.len(), rep.epochs.len());
+        for (a, b) in dy.epochs.iter().zip(rep.epochs.iter()) {
+            assert_eq!(a.cohorts_resolved, b.cohorts_resolved);
+            assert_eq!(a.cohorts_reused, b.cohorts_reused);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.active_users, b.active_users);
+            assert_eq!(a.dropped, b.dropped);
+        }
+
+        // sim layer: the completion log is the run_scale outcome
+        assert_eq!(ep.n, rep.outcome.completions.len());
+        assert_eq!(ep.dropped, rep.outcome.dropped.len());
+        let st = crate::sim::stats(&rep.outcome.completions, base.workload.episode_s);
+        assert_eq!(ep.mean_latency_s, st.mean_latency_s);
+        assert_eq!(ep.p99_latency_s, st.p99_latency_s);
+        assert_eq!(ep.throughput_rps, st.throughput_rps);
+        let completed: usize = dy.epochs.iter().map(|e| e.completed).sum();
+        assert_eq!(completed, ep.n, "slot bucketing conserves completions");
+
+        // CSV layer: dynamic schema, well-formed, byte-stable across runs
+        // (wall clocks are excluded from rows by construction)
+        let csv = to_csv(std::slice::from_ref(&rec));
+        assert_eq!(csv.lines().next().unwrap(), RunRecord::csv_header_dynamic());
+        let cols = RunRecord::csv_header_dynamic().split(',').count();
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+        let again = Engine::new(1).run_one(&spec).unwrap();
+        assert_eq!(to_csv(&[again]), csv, "sharded CSV rows are byte-stable");
+    }
+
+    /// The `episode.sharded` sweep axis toggles execution path per cell
+    /// while leaving the config untouched, so one grid compares monolithic
+    /// vs sharded serving on otherwise-identical cells.
+    #[test]
+    fn sharded_axis_runs_monolithic_and_sharded_cells_in_one_grid() {
+        use crate::config::TomlValue;
+        let mut base = presets::smoke();
+        base.network.num_users = 20;
+        base.optimizer.max_iters = 20;
+        base.workload.episode_s = 0.25;
+        base.workload.arrival_rate_hz = 10.0;
+        base.churn.initial_active_frac = 0.5;
+        base.churn.arrival_rate_hz = 2.0;
+        let mut spec = ScenarioSpec::new("mono-vs-shard", base).with_strategies(&["era"]);
+        spec.episode = true;
+        spec.episode_churn = true;
+        spec.replan_interval_s = Some(0.125);
+        spec.trace_seed = Some(9);
+        spec.axes.push(Axis {
+            key: super::SHARDED_AXIS.into(),
+            values: vec![TomlValue::Bool(false), TomlValue::Bool(true)],
+        });
+        let cells = expand(&spec).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(!cells[0].sharded && cells[1].sharded);
+        assert_eq!(
+            cells[0].cfg.to_toml(),
+            cells[1].cfg.to_toml(),
+            "the axis toggles the execution path, not the config"
+        );
+        let recs = Engine::new(1).run(&spec).unwrap();
+        for r in &recs {
+            let ep = r.episode.as_ref().expect("episode");
+            let dy = r.dynamics.as_ref().expect("dynamics");
+            let total: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+            assert_eq!(total, ep.n + ep.dropped, "both paths conserve the trace");
+            assert_eq!(dy.epochs.len(), 2, "0.25 s / 0.125 s");
+        }
+        let csv = to_csv(&recs);
+        assert!(csv.contains("episode.sharded=false"));
+        assert!(csv.contains("episode.sharded=true"));
+    }
+
+    /// A heterogeneous fleet (two profiles) runs the sharded path end to
+    /// end: per-shard pools and bandwidths differ, and the episode still
+    /// conserves every streamed request.
+    #[test]
+    fn sharded_heterogeneous_fleet_cell_conserves() {
+        use crate::config::FleetProfile;
+        let mut base = presets::smoke();
+        base.network.num_users = 24;
+        base.optimizer.max_iters = 20;
+        base.workload.episode_s = 0.25;
+        base.workload.arrival_rate_hz = 10.0;
+        base.churn.initial_active_frac = 0.5;
+        base.churn.arrival_rate_hz = 2.0;
+        base.fleet = vec![
+            FleetProfile {
+                name: "macro".into(),
+                count: 1,
+                edge_pool_units: Some(64.0),
+                bandwidth_hz: Some(40e6),
+                ..FleetProfile::default()
+            },
+            FleetProfile {
+                name: "small".into(),
+                edge_pool_units: Some(8.0),
+                cell_radius_m: Some(200.0),
+                ..FleetProfile::default()
+            },
+        ];
+        let mut spec = ScenarioSpec::new("hetero-shard", base).with_strategies(&["era"]);
+        spec.episode = true;
+        spec.episode_churn = true;
+        spec.sharded = true;
+        spec.replan_interval_s = Some(0.125);
+        spec.trace_seed = Some(31);
+        let rec = Engine::new(1).run_one(&spec).unwrap();
+        let ep = rec.episode.expect("episode");
+        let dy = rec.dynamics.expect("dynamics");
+        let total: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(total, ep.n + ep.dropped, "heterogeneous sharded cells conserve");
+        let reqs: usize = dy.epochs.iter().map(|e| e.requests).sum();
+        assert_eq!(reqs, ep.n + ep.dropped, "every streamed request is accounted");
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Named scenario presets for `era run --scenario <name>` — the multi-axis
 //! grids the paper's evaluation (§V) is built from, plus a fast smoke grid.
 
+use super::spec::SHARDED_AXIS;
 use super::ScenarioSpec;
 use crate::config::presets as cfg;
+use crate::config::{FleetProfile, TomlValue};
 
 /// Known preset names (CLI error messages list these).
 pub const NAMES: &[&str] = &[
@@ -15,6 +17,7 @@ pub const NAMES: &[&str] = &[
     "churn-incremental",
     "churn-stable",
     "chaos",
+    "fleet",
     "ligd",
 ];
 
@@ -154,6 +157,59 @@ pub fn by_name(name: &str) -> Option<ScenarioSpec> {
             spec.base.faults.retry_backoff_s = 0.05;
             Some(spec.with_axis_f64("faults.ap_outage_rate_hz", &[0.3, 1.5]))
         }
+        // Heterogeneous AP fleets (DESIGN.md §2j): the churn serving
+        // scenario over a mixed macro/small-cell deployment. One axis
+        // sweeps the fleet composition (how many of the 4 APs are macro
+        // cells — the remainder resolve to the `small` profile), the other
+        // sweeps `episode.sharded`, so every composition runs both through
+        // the monolithic incremental planner and through the per-AP
+        // ShardedPlanner/DesCore scale path on byte-identical configs.
+        "fleet" => {
+            let mut base = cfg::smoke();
+            base.network.num_aps = 4;
+            base.network.num_users = 40;
+            base.optimizer.max_iters = 60;
+            base.compute.edge_pool_units = 16.0;
+            base.workload.episode_s = 1.0;
+            base.workload.arrival_rate_hz = 25.0;
+            base.churn.initial_active_frac = 0.4;
+            base.churn.arrival_rate_hz = 6.0;
+            base.churn.departure_rate_hz = 0.25;
+            base.churn.rate_change_hz = 0.2;
+            base.churn.handoff_hz = 0.1;
+            base.fleet = vec![
+                // kept sorted by name ("macro" < "small")
+                FleetProfile {
+                    name: "macro".into(),
+                    count: 1,
+                    edge_pool_units: Some(48.0),
+                    bandwidth_hz: Some(40e6),
+                    gain_db: Some(3.0),
+                    ..FleetProfile::default()
+                },
+                // remainder profile: every AP the macro count doesn't claim
+                FleetProfile {
+                    name: "small".into(),
+                    edge_pool_units: Some(8.0),
+                    cell_radius_m: Some(400.0),
+                    ..FleetProfile::default()
+                },
+            ];
+            // axes in alphabetical key order — the canonical form the TOML
+            // grammar round-trips to
+            let mut spec = ScenarioSpec::new("fleet", base)
+                .with_strategies(&["era"])
+                .with_axis(
+                    SHARDED_AXIS,
+                    vec![TomlValue::Bool(false), TomlValue::Bool(true)],
+                )
+                .with_axis_usize("fleet.macro.count", &[1, 2]);
+            spec.episode = true;
+            spec.episode_churn = true;
+            spec.replan_interval_s = Some(0.125);
+            spec.trace_seed = Some(4242);
+            Some(spec)
+        }
         // Li-GD vs cold-start GD iteration comparison (Corollary 4).
         "ligd" => Some(
             ScenarioSpec::new("ligd", cfg::smoke()).with_strategies(&["era", "era-cold"]),
@@ -248,6 +304,35 @@ mod tests {
         assert_eq!(spec.axes[0].key, "faults.ap_outage_rate_hz");
         // round-trips through the TOML grammar
         let text = spec.to_toml();
+        let reparsed = ScenarioSpec::from_str(&text).unwrap();
+        assert_eq!(reparsed, spec);
+    }
+
+    #[test]
+    fn fleet_preset_sweeps_composition_and_sharding_on_the_same_cells() {
+        let spec = by_name("fleet").unwrap();
+        assert!(spec.episode && spec.episode_churn);
+        assert!(spec.sharded_anywhere(), "monolithic-vs-sharded is an axis");
+        // ≥ 2 distinct AP profiles, resolvable on the base config
+        assert!(spec.base.fleet.len() >= 2);
+        let aps = spec.base.ap_profiles().unwrap();
+        assert!(
+            aps.iter().any(|p| p.name != aps[0].name),
+            "fleet must actually be heterogeneous"
+        );
+        // the two axes: execution path × fleet composition
+        assert_eq!(spec.axes.len(), 2);
+        assert_eq!(spec.axes[0].key, SHARDED_AXIS);
+        assert_eq!(spec.axes[1].key, "fleet.macro.count");
+        // sharded validation constraints hold by construction
+        spec.validate().unwrap();
+        let cells = super::super::engine::expand(&spec).unwrap();
+        assert_eq!(cells.len(), spec.num_cells());
+        assert!(cells.iter().any(|c| c.sharded));
+        assert!(cells.iter().any(|c| !c.sharded));
+        // round-trips through the TOML grammar, fleet sections included
+        let text = spec.to_toml();
+        assert!(text.contains("[fleet.macro]"), "{text}");
         let reparsed = ScenarioSpec::from_str(&text).unwrap();
         assert_eq!(reparsed, spec);
     }

@@ -19,6 +19,7 @@
 //! episode = true                     # run the DES episode per cell
 //! episode.churn = true               # dynamic serving: churn-driven trace
 //! episode.replan_interval_s = 0.25   # dynamic serving: re-plan epoch length
+//! episode.sharded = true             # dynamic serving: per-AP sharded scale path
 //! seed_axis = "workload.model"       # offset net seed by this axis' index
 //! trace_seed = 301                   # fixed episode trace seed
 //! seed = 42                          # base config seed
@@ -95,6 +96,16 @@ pub struct ScenarioSpec {
     /// cell runs through `sim::run_dynamic_faulted`; with the `[faults]`
     /// rates at zero this is byte-identical to the legacy dynamic path.
     pub episode_faults: bool,
+    /// Route the cell through the sharded scale composition
+    /// (`sim::scale::run_scale` — per-AP planning islands over a lazy
+    /// [`crate::net::UserArena`] fed by a streamed trace; TOML key
+    /// `episode.sharded`). Requires `episode.churn = true` and an
+    /// ERA-family strategy (the shard planner *is* the ERA planner).
+    /// Shards always re-plan incrementally, so `episode.incremental` is
+    /// redundant on sharded cells. Also available as the special sweep
+    /// axis `episode.sharded = [false, true]`, which compares monolithic
+    /// vs sharded execution on otherwise-identical cells.
+    pub sharded: bool,
     /// Axis key whose value index additionally offsets the cell's network
     /// seed (paper figures that re-draw the network per sweep point).
     pub seed_axis: Option<String>,
@@ -117,11 +128,18 @@ const TOP_KEYS: &[&str] = &[
     "episode.incremental",
     "episode.full_rescan_every",
     "episode.faults",
+    "episode.sharded",
     "seed_axis",
     "trace_seed",
     "plan_threads",
     "seed",
 ];
+
+/// The sweep-axis key that toggles cells between monolithic and sharded
+/// execution. It is a spec-level knob, not a config path: [`expand`]
+/// (`super::engine::expand`) resolves it onto [`Cell::sharded`]
+/// (`super::engine::Cell`) instead of `Config::set_path`.
+pub const SHARDED_AXIS: &str = "episode.sharded";
 
 impl ScenarioSpec {
     /// A single-cell spec: one strategy ("era"), no axes, one seed.
@@ -139,6 +157,7 @@ impl ScenarioSpec {
             incremental: false,
             full_rescan_every: 0,
             episode_faults: false,
+            sharded: false,
             seed_axis: None,
             trace_seed: None,
             plan_threads: 1,
@@ -152,6 +171,14 @@ impl ScenarioSpec {
             || self.replan_interval_s.is_some()
             || self.incremental
             || self.episode_faults
+            || self.sharded
+    }
+
+    /// True when any cell of this spec runs the sharded scale path —
+    /// either globally (`episode.sharded = true`) or through the special
+    /// [`SHARDED_AXIS`] sweep axis.
+    pub fn sharded_anywhere(&self) -> bool {
+        self.sharded || self.axes.iter().any(|a| a.key == SHARDED_AXIS)
     }
 
     /// Replace the strategy list.
@@ -223,7 +250,10 @@ impl ScenarioSpec {
                     .as_str()
                     .ok_or_else(|| anyhow::anyhow!("preset must be a string"))?;
                 cfg_presets::by_name(name).ok_or_else(|| {
-                    anyhow::anyhow!("unknown config preset `{name}` (known: paper, smoke, medium)")
+                    anyhow::anyhow!(
+                        "unknown config preset `{name}` (known: {})",
+                        cfg_presets::NAMES.join(", ")
+                    )
                 })?
             }
             None => Config::default(),
@@ -316,6 +346,11 @@ impl ScenarioSpec {
                 .as_bool()
                 .ok_or_else(|| anyhow::anyhow!("episode.faults must be a boolean"))?;
         }
+        if let Some(v) = top.get("episode.sharded") {
+            spec.sharded = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("episode.sharded must be a boolean"))?;
+        }
         if let Some(v) = top.get("seed_axis") {
             spec.seed_axis = Some(
                 v.as_str()
@@ -397,6 +432,17 @@ impl ScenarioSpec {
         let mut probe = self.base.clone();
         for a in &self.axes {
             anyhow::ensure!(!a.values.is_empty(), "sweep axis `{}` is empty", a.key);
+            if a.key == SHARDED_AXIS {
+                // Spec-level toggle, not a config path: expansion resolves
+                // it onto the cell, so only the value type is checked here.
+                for v in &a.values {
+                    anyhow::ensure!(
+                        v.as_bool().is_some(),
+                        "sweep axis `{SHARDED_AXIS}` values must be booleans"
+                    );
+                }
+                continue;
+            }
             for v in &a.values {
                 probe.set_path(&a.key, v)?;
             }
@@ -420,9 +466,29 @@ impl ScenarioSpec {
             );
         }
         anyhow::ensure!(
-            self.full_rescan_every == 0 || self.incremental,
-            "episode.full_rescan_every requires episode.incremental = true"
+            self.full_rescan_every == 0 || self.incremental || self.sharded_anywhere(),
+            "episode.full_rescan_every requires episode.incremental = true (or episode.sharded)"
         );
+        if self.sharded_anywhere() {
+            anyhow::ensure!(
+                self.episode && self.episode_churn,
+                "episode.sharded requires episode = true and episode.churn = true \
+                 (the scale path streams a churn-driven trace)"
+            );
+            for s in &self.strategies {
+                anyhow::ensure!(
+                    s == "era" || s == "era-cold",
+                    "episode.sharded cells plan through the per-AP shard planner, \
+                     which is ERA — strategy `{s}` cannot run sharded"
+                );
+            }
+            anyhow::ensure!(
+                self.seed_axis.is_none(),
+                "episode.sharded is incompatible with seed_axis: the arena draws \
+                 from the config seed, so an offset network seed would desynchronize \
+                 the cell's static half from its episode"
+            );
+        }
         self.base.validate()?;
         Ok(())
     }
@@ -462,6 +528,9 @@ impl ScenarioSpec {
         }
         if self.episode_faults {
             s.push_str("episode.faults = true\n");
+        }
+        if self.sharded {
+            s.push_str("episode.sharded = true\n");
         }
         if let Some(k) = &self.seed_axis {
             s.push_str(&format!("seed_axis = {k:?}\n"));
@@ -630,6 +699,71 @@ mod tests {
         assert_eq!(spec.axes.len(), 1);
         assert_eq!(spec.axes[0].key, "optimizer.bg_tolerance");
         assert_eq!(spec.num_cells(), 2);
+    }
+
+    #[test]
+    fn sharded_key_parses_and_validates() {
+        let spec = ScenarioSpec::from_str(
+            "episode = true\nepisode.churn = true\nepisode.sharded = true\n",
+        )
+        .unwrap();
+        assert!(spec.sharded);
+        assert!(spec.sharded_anywhere());
+        assert!(spec.is_dynamic(), "sharded cells run the dynamic engine");
+        // default stays off
+        let plain = ScenarioSpec::from_str("episode = true\n").unwrap();
+        assert!(!plain.sharded);
+        assert!(!plain.sharded_anywhere());
+        // sharded without churn is rejected (the scale trace is streamed
+        // from the churn process)
+        let e = ScenarioSpec::from_str("episode = true\nepisode.sharded = true\n").unwrap_err();
+        assert!(e.to_string().contains("episode.churn = true"), "{e}");
+        // non-ERA strategies cannot run the shard planner
+        let e = ScenarioSpec::from_str(
+            "strategies = [\"neurosurgeon\"]\nepisode = true\nepisode.churn = true\nepisode.sharded = true\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("cannot run sharded"), "{e}");
+        // full_rescan_every is meaningful on the sharded path without
+        // episode.incremental
+        let spec = ScenarioSpec::from_str(
+            "episode = true\nepisode.churn = true\nepisode.sharded = true\nepisode.full_rescan_every = 4\n",
+        )
+        .unwrap();
+        assert_eq!(spec.full_rescan_every, 4);
+        // round-trips through the text form
+        let text = spec.to_toml();
+        assert!(text.contains("episode.sharded = true"));
+        let parsed = ScenarioSpec::from_str(&text)
+            .unwrap_or_else(|e| panic!("re-parse failed: {e}\n{text}"));
+        assert_eq!(parsed, spec);
+    }
+
+    #[test]
+    fn sharded_axis_validates_as_booleans_and_guards() {
+        // the special axis needs the same episode/churn/strategy guards as
+        // the global flag, plus boolean-typed values
+        let ok = ScenarioSpec::from_str(
+            "episode = true\nepisode.churn = true\n[sweep]\nepisode.sharded = [false, true]\n",
+        )
+        .unwrap();
+        assert!(!ok.sharded, "the global flag stays off; cells toggle");
+        assert!(ok.sharded_anywhere());
+        assert_eq!(ok.num_cells(), 2);
+        let e = ScenarioSpec::from_str(
+            "episode = true\nepisode.churn = true\n[sweep]\nepisode.sharded = [1, 2]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("must be booleans"), "{e}");
+        let e = ScenarioSpec::from_str("[sweep]\nepisode.sharded = [true]\n").unwrap_err();
+        assert!(e.to_string().contains("episode.churn = true"), "{e}");
+        // seed_axis cannot point at a sharded grid's network seed
+        let e = ScenarioSpec::from_str(
+            "episode = true\nepisode.churn = true\nepisode.sharded = true\n\
+             seed_axis = \"network.num_users\"\n[sweep]\nnetwork.num_users = [8, 12]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("incompatible with seed_axis"), "{e}");
     }
 
     #[test]

@@ -176,9 +176,21 @@ impl Phases {
     }
 }
 
+/// Per-AP edge pool sizes from the resolved fleet (DESIGN.md §2j). A
+/// homogeneous fleet fills every slot with exactly the global
+/// `edge_pool_units`, bit-identical to the pre-fleet scalar pool. Drivers
+/// resolve once per episode, never per request.
+fn ap_pool_units(cfg: &Config) -> Vec<f64> {
+    cfg.ap_profiles()
+        .expect("fleet resolution checked by Config::validate")
+        .iter()
+        .map(|p| p.edge_pool_units)
+        .collect()
+}
+
 /// Phase durations of one request under a concrete decision + link rates.
-/// The edge resource demand is clamped to `[r_min, edge_pool_units]` at
-/// admission: a demand above the whole pool could otherwise never be
+/// The edge resource demand is clamped to `[r_min, pool of the user's AP]`
+/// at admission: a demand above the whole pool could otherwise never be
 /// granted and the request would starve in the FIFO queue forever.
 fn phases_for(
     cfg: &Config,
@@ -188,20 +200,25 @@ fn phases_for(
     user: usize,
     rates_up: &[f64],
     rates_down: &[f64],
+    pools: &[f64],
 ) -> Phases {
+    let ap = net.topo.user_ap[user];
     phases_from_parts(
         cfg,
         model,
         d,
         net.users[user].device_flops,
-        net.topo.user_ap[user],
+        ap,
         rates_up[user],
         rates_down[user],
+        pools[ap],
     )
 }
 
 /// [`phases_for`] from raw per-user parts — the arena-driven scale path
-/// has no dense [`Network`] to index into.
+/// has no dense [`Network`] to index into. `pool_units` is the serving
+/// AP's resolved pool size (§2j).
+#[allow(clippy::too_many_arguments)]
 fn phases_from_parts(
     cfg: &Config,
     model: &ModelProfile,
@@ -210,14 +227,12 @@ fn phases_from_parts(
     ap: usize,
     up_rate: f64,
     down_rate: f64,
+    pool_units: f64,
 ) -> Phases {
     let sc = model.split_constants(d.split);
     let dev = crate::latency::device_delay(&sc, device_flops);
     let up = crate::latency::uplink_delay(sc.cut_bits, up_rate);
-    let r = d
-        .r
-        .max(cfg.compute.r_min)
-        .min(cfg.compute.edge_pool_units);
+    let r = d.r.max(cfg.compute.r_min).min(pool_units);
     let edge = crate::latency::server_delay(&sc, r, &cfg.compute);
     let down = crate::latency::downlink_delay(
         cfg.compute.result_bits,
@@ -240,7 +255,9 @@ fn phases_from_parts(
 fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome {
     debug_assert_eq!(phases.len(), trace.len());
     let n_aps = cfg.network.num_aps;
-    let mut pool = vec![cfg.compute.edge_pool_units; n_aps];
+    let cap = ap_pool_units(cfg);
+    debug_assert_eq!(cap.len(), n_aps);
+    let mut pool = cap.clone();
     let mut waiting: Vec<std::collections::VecDeque<usize>> = vec![Default::default(); n_aps];
     let mut heap = EventQueue::default();
     let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
@@ -264,8 +281,8 @@ fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome
             continue;
         }
         debug_assert!(
-            !ph.offloads || ph.r <= cfg.compute.edge_pool_units,
-            "admission must clamp r to the pool size"
+            !ph.offloads || ph.r <= cap[ph.ap],
+            "admission must clamp r to the serving AP's pool size"
         );
         if ph.offloads {
             heap.push(rq.arrival_s + ph.pre_edge_s, EvKind::EdgeArrive { req: idx });
@@ -359,6 +376,10 @@ fn run_des(cfg: &Config, phases: &[Phases], trace: &[Request]) -> EpisodeOutcome
 /// that never affects conservation.
 struct DesCore {
     pool: Vec<f64>,
+    /// Initial (undegraded) per-AP capacities — the §2j resolved pools.
+    /// `pool` drifts with grants/releases and capacity faults; `cap` is
+    /// the admission-clamp invariant.
+    cap: Vec<f64>,
     waiting: Vec<std::collections::VecDeque<usize>>,
     heap: EventQueue,
     /// Admitted requests + phases, indexed by admission order (which for
@@ -371,9 +392,13 @@ struct DesCore {
 }
 
 impl DesCore {
-    fn new(cfg: &Config, n_aps: usize) -> Self {
+    /// One pool entry per AP (the §2j resolved fleet pools; a homogeneous
+    /// fleet passes the global value in every slot).
+    fn new(pools: Vec<f64>) -> Self {
+        let n_aps = pools.len();
         Self {
-            pool: vec![cfg.compute.edge_pool_units; n_aps],
+            pool: pools.clone(),
+            cap: pools,
             waiting: vec![Default::default(); n_aps],
             heap: EventQueue::default(),
             phases: Vec::new(),
@@ -387,9 +412,9 @@ impl DesCore {
     /// Admit one request (same admission semantics as [`run_des`]:
     /// non-finite phases drop explicitly, device-only completes
     /// immediately, offloaders enter the event heap).
-    fn admit(&mut self, cfg: &Config, rq: Request, ph: Phases) {
+    fn admit(&mut self, rq: Request, ph: Phases) {
         let start_s = rq.arrival_s;
-        self.admit_at(cfg, rq, ph, start_s);
+        self.admit_at(rq, ph, start_s);
     }
 
     /// [`DesCore::admit`] with an explicit service start time — the
@@ -397,7 +422,7 @@ impl DesCore {
     /// instant while keeping the *original* arrival time on the
     /// completion, so latency and `queue_s` honestly include the backoff
     /// wait. The plain admission path passes `start_s = rq.arrival_s`.
-    fn admit_at(&mut self, cfg: &Config, rq: Request, ph: Phases, start_s: f64) {
+    fn admit_at(&mut self, rq: Request, ph: Phases, start_s: f64) {
         let idx = self.phases.len();
         let finite = rq.arrival_s.is_finite()
             && start_s.is_finite()
@@ -418,8 +443,8 @@ impl DesCore {
             return;
         }
         debug_assert!(
-            !ph.offloads || ph.r <= cfg.compute.edge_pool_units,
-            "admission must clamp r to the pool size"
+            !ph.offloads || ph.r <= self.cap[ph.ap],
+            "admission must clamp r to the serving AP's pool size"
         );
         if ph.offloads {
             self.heap
@@ -592,9 +617,21 @@ pub fn run_episode(
     rates_down: &[f64],
     trace: &[Request],
 ) -> EpisodeOutcome {
+    let pools = ap_pool_units(cfg);
     let phases: Vec<Phases> = trace
         .iter()
-        .map(|rq| phases_for(cfg, net, model, &decisions[rq.user], rq.user, rates_up, rates_down))
+        .map(|rq| {
+            phases_for(
+                cfg,
+                net,
+                model,
+                &decisions[rq.user],
+                rq.user,
+                rates_up,
+                rates_down,
+                &pools,
+            )
+        })
         .collect();
     run_des(cfg, &phases, trace)
 }
@@ -752,6 +789,7 @@ pub fn run_dynamic_opts(
         None
     };
 
+    let pools = ap_pool_units(cfg);
     let mut phases: Vec<Phases> = Vec::with_capacity(trace.len());
     // Epoch of each request, indexed by trace position (the trace is
     // sorted and consumed by the forward cursor below — no id lookup
@@ -845,7 +883,7 @@ pub fn run_dynamic_opts(
         let last = e + 1 == n_epochs;
         while next_req < trace.len() && (last || trace[next_req].arrival_s < t1) {
             let rq = &trace[next_req];
-            phases.push(phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down));
+            phases.push(phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down, &pools));
             epoch_of_pos.push(e);
             next_req += 1;
         }
@@ -958,7 +996,8 @@ pub fn run_dynamic_streamed(
         None
     };
     let mut serve_rates: Option<crate::net::RateCache> = None;
-    let mut des = DesCore::new(cfg, cfg.network.num_aps);
+    let pools = ap_pool_units(cfg);
+    let mut des = DesCore::new(pools.clone());
     let mut epochs: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
     // Arrival epoch by admission index (== trace position; the stream
     // yields requests in global trace order).
@@ -1017,9 +1056,9 @@ pub fn run_dynamic_streamed(
         let offloaders = ds.iter().filter(|d| d.offloads(model)).count();
         let n_reqs = batch.requests.len();
         for rq in batch.requests {
-            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down, &pools);
             epoch_of_pos.push(e);
-            des.admit(cfg, rq, ph);
+            des.admit(rq, ph);
         }
         des.drain_until(t1);
         let planned = info.cohorts_reused + info.cohorts_resolved;
@@ -1199,7 +1238,8 @@ pub fn run_dynamic_faulted(
         None
     };
     let mut serve_rates: Option<crate::net::RateCache> = None;
-    let mut des = DesCore::new(cfg, n_aps);
+    let pools = ap_pool_units(cfg);
+    let mut des = DesCore::new(pools.clone());
     let mut fs = FaultState::new(n_aps);
     let mut applied_frac = vec![1.0f64; n_aps];
     let mut retryq: std::collections::VecDeque<Pending> = Default::default();
@@ -1211,7 +1251,6 @@ pub fn run_dynamic_faulted(
     let mut active = schedule.initial_active.clone();
     let max_retries = cfg.faults.max_retries;
     let backoff = cfg.faults.retry_backoff_s;
-    let pool_units = cfg.compute.edge_pool_units;
     for e in 0..n_epochs {
         let t0 = e as f64 * delta;
         let t1 = if e + 1 == n_epochs {
@@ -1237,7 +1276,7 @@ pub fn run_dynamic_faulted(
             rehomed = rehome_stranded(net_dyn.get_or_insert_with(|| net.clone()), &fs);
         }
         for ap in 0..n_aps {
-            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pool_units;
+            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pools[ap];
             if delta_u != 0.0 {
                 des.adjust_capacity(ap, delta_u, t0);
                 applied_frac[ap] = fs.pool_frac[ap];
@@ -1315,14 +1354,14 @@ pub fn run_dynamic_faulted(
             }
             retries += 1;
             let rq = p.rq;
-            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down, &pools);
             let refused = ph.finite_with(rq.arrival_s)
                 && ph.offloads
-                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pools[ph.ap]);
             if !refused {
                 let start = p.next_t.max(rq.arrival_s);
                 epoch_of_pos.push(e);
-                des.admit_at(cfg, rq, ph, start);
+                des.admit_at(rq, ph, start);
             } else if p.tries_left <= 1 {
                 epoch_of_pos.push(e);
                 des.reject(rq, DropReason::RetriesExhausted);
@@ -1336,13 +1375,13 @@ pub fn run_dynamic_faulted(
         let last = e + 1 == n_epochs;
         while next_req < trace.len() && (last || trace[next_req].arrival_s < t1) {
             let rq = trace[next_req];
-            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down, &pools);
             let refused = ph.finite_with(rq.arrival_s)
                 && ph.offloads
-                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pools[ph.ap]);
             if !refused {
                 epoch_of_pos.push(e);
-                des.admit(cfg, rq, ph);
+                des.admit(rq, ph);
             } else if max_retries == 0 {
                 let reason = if !fs.ap_up[ph.ap] {
                     DropReason::ApDown
@@ -1473,7 +1512,8 @@ pub fn run_dynamic_streamed_faulted(
         None
     };
     let mut serve_rates: Option<crate::net::RateCache> = None;
-    let mut des = DesCore::new(cfg, n_aps);
+    let pools = ap_pool_units(cfg);
+    let mut des = DesCore::new(pools.clone());
     let mut fs = FaultState::new(n_aps);
     let mut applied_frac = vec![1.0f64; n_aps];
     let mut retryq: std::collections::VecDeque<Pending> = Default::default();
@@ -1482,7 +1522,6 @@ pub fn run_dynamic_streamed_faulted(
     let mut epoch_of_pos: Vec<usize> = Vec::new();
     let max_retries = cfg.faults.max_retries;
     let backoff = cfg.faults.retry_backoff_s;
-    let pool_units = cfg.compute.edge_pool_units;
 
     for e in 0..n_epochs {
         let t0 = e as f64 * delta;
@@ -1508,7 +1547,7 @@ pub fn run_dynamic_streamed_faulted(
             rehomed = rehome_stranded(net_dyn.get_or_insert_with(|| net.clone()), &fs);
         }
         for ap in 0..n_aps {
-            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pool_units;
+            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pools[ap];
             if delta_u != 0.0 {
                 des.adjust_capacity(ap, delta_u, t0);
                 applied_frac[ap] = fs.pool_frac[ap];
@@ -1582,14 +1621,14 @@ pub fn run_dynamic_streamed_faulted(
             }
             retries += 1;
             let rq = p.rq;
-            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down, &pools);
             let refused = ph.finite_with(rq.arrival_s)
                 && ph.offloads
-                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pools[ph.ap]);
             if !refused {
                 let start = p.next_t.max(rq.arrival_s);
                 epoch_of_pos.push(e);
-                des.admit_at(cfg, rq, ph, start);
+                des.admit_at(rq, ph, start);
             } else if p.tries_left <= 1 {
                 epoch_of_pos.push(e);
                 des.reject(rq, DropReason::RetriesExhausted);
@@ -1601,13 +1640,13 @@ pub fn run_dynamic_streamed_faulted(
         }
         let n_reqs = batch.requests.len();
         for rq in batch.requests {
-            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down);
+            let ph = phases_for(cfg, net_e, model, &ds[rq.user], rq.user, &up, &down, &pools);
             let refused = ph.finite_with(rq.arrival_s)
                 && ph.offloads
-                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pools[ph.ap]);
             if !refused {
                 epoch_of_pos.push(e);
-                des.admit(cfg, rq, ph);
+                des.admit(rq, ph);
             } else if max_retries == 0 {
                 let reason = if !fs.ap_up[ph.ap] {
                     DropReason::ApDown

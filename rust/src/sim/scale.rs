@@ -14,7 +14,7 @@
 //! Driven by `era scale` (see `main.rs`), which also reports `VmHWM` so CI
 //! can pin a population-independent memory ceiling.
 
-use super::{phases_from_parts, DesCore, DropReason, EpisodeOutcome, Pending, Phases};
+use super::{ap_pool_units, phases_from_parts, DesCore, DropReason, EpisodeOutcome, Pending, Phases};
 use crate::config::Config;
 use crate::coordinator::{ShardSource, ShardedPlanner};
 use crate::models::{self, ModelProfile};
@@ -84,6 +84,19 @@ pub struct ScaleReport {
     /// Population size (for context; resident memory must not scale
     /// with it).
     pub population: usize,
+    /// Churn event totals by kind — arrivals, departures, rate changes,
+    /// handoffs — so grid cells on the sharded path report the same
+    /// schedule summary as the monolithic drivers without materializing
+    /// the stream twice. Fault-driven rehoming moves are *not* counted
+    /// here (they are telemetry on [`ScaleEpoch::rehomed`]).
+    pub churn_counts: [usize; 4],
+    /// Epoch of each DES admission slot, indexed by
+    /// [`Completion::req`](super::Completion) — the same bucketing the
+    /// monolithic drivers keep as `epoch_of_pos`, recorded here because
+    /// retry-with-backoff re-admissions take their slot in the retry
+    /// epoch, not the arrival epoch. O(requests), like the completion log
+    /// itself.
+    pub slot_epochs: Vec<usize>,
     /// `VmHWM` at the end of the run, when procfs is available.
     pub peak_rss_mb: Option<f64>,
 }
@@ -134,7 +147,8 @@ pub fn run_scale(
     };
     let n_epochs = ((episode_s / delta).ceil() as usize).max(1);
     let n_aps = cfg.network.num_aps;
-    let mut des = DesCore::new(cfg, n_aps);
+    let pools = ap_pool_units(cfg);
+    let mut des = DesCore::new(pools.clone());
     let mut epochs = Vec::with_capacity(n_epochs);
 
     // §2i fault injection: the schedule is O(#faults), not O(population),
@@ -149,7 +163,8 @@ pub fn run_scale(
     let mut retryq: std::collections::VecDeque<Pending> = Default::default();
     let max_retries = cfg.faults.max_retries;
     let backoff = cfg.faults.retry_backoff_s;
-    let pool_units = cfg.compute.edge_pool_units;
+    let mut churn_counts = [0usize; 4];
+    let mut slot_epochs: Vec<usize> = Vec::new();
 
     for e in 0..n_epochs {
         let t0 = e as f64 * delta;
@@ -160,6 +175,15 @@ pub fn run_scale(
         };
         let batch = stream.epoch(t0, t1);
         let n_events = batch.events.len();
+        for ev in &batch.events {
+            let k = match ev.kind {
+                ChurnEventKind::Arrive => 0,
+                ChurnEventKind::Depart => 1,
+                ChurnEventKind::RateChange { .. } => 2,
+                ChurnEventKind::Handoff { .. } => 3,
+            };
+            churn_counts[k] += 1;
+        }
         planner.apply_events(&source, &batch.events);
 
         // Fault replay + rehoming: every *active* user of a down AP moves
@@ -191,7 +215,7 @@ pub fn run_scale(
             planner.apply_events(&source, &moves);
         }
         for ap in 0..n_aps {
-            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pool_units;
+            let delta_u = (fs.pool_frac[ap] - applied_frac[ap]) * pools[ap];
             if delta_u != 0.0 {
                 des.adjust_capacity(ap, delta_u, t0);
                 applied_frac[ap] = fs.pool_frac[ap];
@@ -216,14 +240,16 @@ pub fn run_scale(
                 continue;
             }
             retries += 1;
-            let ph = faulted_phases(cfg, &model, &planner, &arena, &fs, p.rq.user);
+            let ph = faulted_phases(cfg, &model, &planner, &arena, &fs, p.rq.user, &pools);
             let refused = ph.finite_with(p.rq.arrival_s)
                 && ph.offloads
-                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pools[ph.ap]);
             if !refused {
                 let start = p.next_t.max(p.rq.arrival_s);
-                des.admit_at(cfg, p.rq, ph, start);
+                slot_epochs.push(e);
+                des.admit_at(p.rq, ph, start);
             } else if p.tries_left <= 1 {
+                slot_epochs.push(e);
                 des.reject(p.rq, DropReason::RetriesExhausted);
             } else {
                 p.tries_left -= 1;
@@ -233,18 +259,20 @@ pub fn run_scale(
         }
         let n_reqs = batch.requests.len();
         for rq in batch.requests {
-            let ph = faulted_phases(cfg, &model, &planner, &arena, &fs, rq.user);
+            let ph = faulted_phases(cfg, &model, &planner, &arena, &fs, rq.user, &pools);
             let refused = ph.finite_with(rq.arrival_s)
                 && ph.offloads
-                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pool_units);
+                && (!fs.ap_up[ph.ap] || ph.r > fs.pool_frac[ph.ap] * pools[ph.ap]);
             if !refused {
-                des.admit(cfg, rq, ph);
+                slot_epochs.push(e);
+                des.admit(rq, ph);
             } else if max_retries == 0 {
                 let reason = if !fs.ap_up[ph.ap] {
                     DropReason::ApDown
                 } else {
                     DropReason::CapacityExhausted
                 };
+                slot_epochs.push(e);
                 des.reject(rq, reason);
             } else {
                 retryq.push_back(Pending {
@@ -280,6 +308,7 @@ pub fn run_scale(
     // conservation still counts every streamed request exactly once
     let mut flushed = 0usize;
     while let Some(p) = retryq.pop_front() {
+        slot_epochs.push(n_epochs - 1);
         des.reject(p.rq, DropReason::RetriesExhausted);
         flushed += 1;
     }
@@ -291,6 +320,8 @@ pub fn run_scale(
         epochs,
         outcome: des.finish(),
         population: cfg.network.num_users,
+        churn_counts,
+        slot_epochs,
         peak_rss_mb: peak_rss_mb(),
     })
 }
@@ -298,6 +329,7 @@ pub fn run_scale(
 /// Phase durations of one request on the arena path, with the §2i SNR
 /// derate applied to the realized link rates (1.0 — bit-identical —
 /// when the AP's link is healthy).
+#[allow(clippy::too_many_arguments)]
 fn faulted_phases(
     cfg: &Config,
     model: &ModelProfile,
@@ -305,6 +337,7 @@ fn faulted_phases(
     arena: &UserArena,
     fs: &FaultState,
     user: usize,
+    pools: &[f64],
 ) -> Phases {
     let d = planner.decision_of(user);
     let (up_rate, down_rate) = planner.rates_of(user).unwrap_or((0.0, 0.0));
@@ -319,6 +352,7 @@ fn faulted_phases(
         ap,
         up_rate * dr,
         down_rate * dr,
+        pools[ap],
     )
 }
 

@@ -420,6 +420,40 @@ fn churn_stable_preset_runs_end_to_end() {
 }
 
 #[test]
+fn fleet_preset_runs_end_to_end_sharded_and_heterogeneous() {
+    // CI-sized `era run --scenario fleet` (DESIGN.md §2j): a heterogeneous
+    // macro/small fleet swept across composition (`fleet.macro.count`) and
+    // execution path (`episode.sharded`) on the same cells. Every cell —
+    // monolithic and sharded alike — must conserve requests, and the whole
+    // grid must be byte-identical across engine thread counts.
+    let mut spec = ScenarioSpec::from_preset("fleet").unwrap();
+    spec.base.network.num_users = 16;
+    spec.base.optimizer.max_iters = 25;
+    spec.base.workload.episode_s = 0.5;
+    spec.base.workload.arrival_rate_hz = 15.0;
+    // ≥ 2 distinct AP profiles resolve on the base config
+    let aps = spec.base.ap_profiles().unwrap();
+    assert!(aps.iter().any(|p| p.name != aps[0].name), "heterogeneous");
+    let records = Engine::new(2).run(&spec).unwrap();
+    assert_eq!(records.len(), spec.num_cells());
+    let csv = to_csv(&records);
+    assert_eq!(csv.lines().next().unwrap(), RunRecord::csv_header_dynamic());
+    assert!(csv.contains("episode.sharded=false"), "monolithic cells ran");
+    assert!(csv.contains("episode.sharded=true"), "sharded cells ran");
+    for r in &records {
+        let ep = r.episode.as_ref().expect("episode");
+        let dy = r.dynamics.as_ref().expect("dynamics");
+        assert_eq!(dy.epochs.len(), 4, "0.5 s episode / 0.125 s epochs");
+        let requests: usize = dy.epochs.iter().map(|e| e.requests).sum();
+        let accounted: usize = dy.epochs.iter().map(|e| e.completed + e.dropped).sum();
+        assert_eq!(requests, accounted, "cell {}: epoch conservation", r.cell);
+        assert_eq!(requests, ep.n + ep.dropped, "cell {}: total conservation", r.cell);
+    }
+    let again = Engine::new(1).run(&spec).unwrap();
+    assert_eq!(csv, to_csv(&again), "thread invariance");
+}
+
+#[test]
 fn churn_incremental_preset_runs_end_to_end() {
     // CI-sized `era run --scenario churn-incremental`: the dirty-cohort
     // planner survives real churn (arrivals, departures, handoffs), keeps
